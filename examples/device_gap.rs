@@ -1,0 +1,75 @@
+//! Device gap: the paper's §4.4 observation quantified across hardware.
+//!
+//! ```bash
+//! cargo run --release --example device_gap
+//! ```
+//!
+//! Projects per-step fine-tuning time for the paper's two models across
+//! every device preset (phone, low-end phone, Raspberry Pi, GPU server),
+//! shows the ~1000x phone-vs-GPU gap, and demonstrates the thermal
+//! throttling trajectory of a long session on the Reno 6 — the §6.3
+//! limitation made concrete.
+
+use pocketllm::device::{spec::preset, spec::preset_names, ComputeModel,
+                        ModelDims, OptimizerFamily};
+use pocketllm::report;
+use pocketllm::telemetry::Table;
+
+fn main() {
+    // per-device projection table
+    for (dims, batch, seq) in [
+        (ModelDims::roberta_large(), 8, report::SST2_SEQ),
+        (ModelDims::opt_1_3b(), report::OPT_BATCH, report::OPT_SEQ),
+    ] {
+        let mut t = Table::new(&format!(
+            "MeZO s/step — {} (batch {batch}, seq {seq})", dims.name
+        ))
+        .header(&["device", "s/step", "vs reno6"]);
+        let reno = ComputeModel::new(preset("oppo-reno6").unwrap())
+            .step_time(&dims, OptimizerFamily::DerivativeFree, batch, seq)
+            .total_s();
+        for name in preset_names() {
+            let s = ComputeModel::new(preset(name).unwrap())
+                .step_time(&dims, OptimizerFamily::DerivativeFree, batch,
+                           seq)
+                .total_s();
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", s),
+                format!("{:.1}x", reno / s),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // the paper's §4.3/4.4 summary
+    println!("{}", report::opt13b().render());
+
+    // thermal throttling trajectory on a long session
+    let mut cm = ComputeModel::new(preset("oppo-reno6").unwrap());
+    let dims = ModelDims::roberta_large();
+    let mut t = Table::new(
+        "Thermal throttling — RoBERTa-large MeZO steps back-to-back on \
+         Reno 6",
+    )
+    .header(&["step", "elapsed min", "s/step", "throttle"]);
+    let mut elapsed = 0.0;
+    for step in 0..12 {
+        let st = cm.step_time(&dims, OptimizerFamily::DerivativeFree, 8,
+                              report::SST2_SEQ);
+        let factor = cm.spec().thermal.factor(cm.sustained_s());
+        if step % 2 == 0 {
+            t.row(&[
+                step.to_string(),
+                format!("{:.0}", elapsed / 60.0),
+                format!("{:.0}", st.total_s()),
+                format!("{:.0}%", factor * 100.0),
+            ]);
+        }
+        cm.advance(st.total_s());
+        elapsed += st.total_s();
+    }
+    println!("{}", t.render());
+    println!("cooling down resets the clock (the scheduler exploits this \
+              between policy windows)");
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver: the full system on a real (synthetic-data) training
+//! workload — the run recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train
+//! # knobs: E2E_STEPS_MEZO (default 300), E2E_STEPS_ADAM (default 150)
+//! ```
+//!
+//! Trains the pocket-roberta classifier (5.8M params) on synthetic SST-2
+//! with BOTH optimizers through the whole stack — Pallas/JAX-lowered HLO
+//! on PJRT driven by the Rust session loop under a simulated OPPO Reno 6
+//! envelope — and writes the Fig.-1-style loss curves to
+//! `e2e_loss_curves.csv`.  Exit code is non-zero if either optimizer
+//! fails to learn (so this doubles as a long-running CI check).
+
+use pocketllm::device::Device;
+use pocketllm::optim::{OptimizerKind, Schedule};
+use pocketllm::prelude::*;
+use pocketllm::report;
+use pocketllm::telemetry::bench::env_u64;
+use pocketllm::telemetry::MetricLog;
+
+fn main() -> anyhow::Result<()> {
+    let mezo_steps = env_u64("E2E_STEPS_MEZO", 300);
+    let adam_steps = env_u64("E2E_STEPS_ADAM", 150);
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let rt = Runtime::new(manifest)?;
+    let mut log = MetricLog::new();
+    let mut summary = Vec::new();
+
+    for (kind, steps, lr) in [
+        (OptimizerKind::MeZo, mezo_steps, 1e-4),
+        (OptimizerKind::Adam, adam_steps, 1e-3),
+    ] {
+        let label = kind.label();
+        println!("=== {label}: {steps} steps on pocket-roberta/sst2 ===");
+        let mut session = SessionBuilder::new(&rt, "pocket-roberta")
+            .optimizer(kind)
+            .task(TaskKind::Sst2)
+            .lr(Schedule::Constant(lr))
+            .seed(2024)
+            .device(Device::preset("oppo-reno6").unwrap())
+            .dataset_size(1024, 256)
+            .build()?;
+
+        let acc0 = session.eval_accuracy()?;
+        let t0 = std::time::Instant::now();
+        let mut chunk = 0;
+        while chunk < steps {
+            let n = 25.min(steps - chunk);
+            let stats = session.run_steps(n)?;
+            chunk += n;
+            println!(
+                "  step {:>4}  loss {:.4}  {:.0} ms/step (host)  \
+                 {:.1} s/step (reno6 sim)",
+                session.step, stats.last_loss,
+                stats.mean_host_step_s * 1e3, stats.mean_sim_step_s
+            );
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let acc1 = session.eval_accuracy()?;
+        let curve = session.metrics.get("loss").unwrap().clone();
+        for &(s, v) in &curve.points {
+            log.record(&format!("{label}.loss"), s, v);
+        }
+
+        let head = curve.head_mean(20);
+        let tail = curve.tail_mean(20);
+        println!(
+            "{label}: loss head {head:.4} -> tail {tail:.4}; accuracy \
+             {acc0:.3} -> {acc1:.3}; {wall:.0}s wall"
+        );
+        println!("  {}", report::sparkline(&curve.points, 70));
+        let peak = session.device.as_ref().unwrap().ledger.peak();
+        println!(
+            "  simulated reno6 peak memory: {}",
+            pocketllm::util::bytes::fmt_gb(peak)
+        );
+        summary.push((label, head, tail, acc0, acc1));
+    }
+
+    log.save_csv(std::path::Path::new("e2e_loss_curves.csv"))?;
+    println!("\nloss curves -> e2e_loss_curves.csv");
+
+    // Fig. 1 shape assertions: both descend; Adam descends further in
+    // half the steps ("not as rapidly as with Adam" for MeZO).
+    let (_, mh, mt, _, macc) = summary[0];
+    let (_, ah, at, _, aacc) = summary[1];
+    anyhow::ensure!(mt < mh, "MeZO failed to descend: {mh} -> {mt}");
+    anyhow::ensure!(at < ah, "Adam failed to descend: {ah} -> {at}");
+    anyhow::ensure!(
+        (ah - at) > (mh - mt),
+        "expected Adam to descend faster (adam {ah}->{at}, mezo {mh}->{mt})"
+    );
+    // NB: MeZO needs orders of magnitude more steps to move *accuracy*
+    // (the MeZO paper trains 10k-100k steps); a few hundred steps moves
+    // the loss visibly (the paper's Fig. 1 shows exactly this) while
+    // accuracy is still near chance.  Gate on sanity, not convergence.
+    anyhow::ensure!(macc > 0.40, "MeZO accuracy collapsed: {macc}");
+    anyhow::ensure!(aacc > 0.8, "Adam accuracy too low: {aacc}");
+    println!("\nE2E OK: Fig. 1 shape reproduced on the full stack");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Personalization: the paper's motivating scenario end-to-end.
+//!
+//! ```bash
+//! cargo run --release --example personalization
+//! ```
+//!
+//! A user's (synthetic) message history personalizes the pocket-opt
+//! causal LM with MeZO, orchestrated by the *coordinator* under the
+//! overnight policy — fine-tuning runs only in admitted windows
+//! (charging, screen off, cool, memory-rich), exactly how a phone would
+//! deploy this.  Reports held-out perplexity before/after and the
+//! policy-denial breakdown over the simulated day.
+
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, Event, JobSpec};
+use pocketllm::optim::OptimizerKind;
+use pocketllm::prelude::*;
+use pocketllm::scheduler::Policy;
+use pocketllm::tuner::eval::perplexity;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+
+    // baseline perplexity on the user's held-out messages
+    let base = SessionBuilder::new(&rt, "pocket-opt")
+        .task(TaskKind::ChatLm)
+        .seed(777)
+        .build()?;
+    let loss_before = base.eval_loss()?;
+    println!(
+        "perplexity on user's messages before personalization: {:.1}",
+        perplexity(loss_before)
+    );
+    drop(base);
+
+    // the coordinator personalizes overnight
+    let cfg = CoordinatorConfig {
+        device_preset: "oppo-reno6".into(),
+        policy: Policy::overnight(),
+        steps_per_window: 8,
+        trace_step_minutes: 20.0,
+        max_windows: 400,
+        trace_seed: 11,
+    };
+    let mut coord = Coordinator::new(&rt, cfg);
+    let job = JobSpec::new("pocket-opt", TaskKind::ChatLm,
+                           OptimizerKind::MeZo)
+        .steps(64)
+        .seed(777);
+    println!("queueing personalization job (64 MeZO steps, overnight \
+              policy)...");
+    let outcome = coord.run_job(0, &job)?;
+    println!(
+        "job {:?}: {} steps over {} admitted windows ({} denied)",
+        outcome.status, outcome.steps_done, outcome.windows_used,
+        outcome.windows_denied
+    );
+    let mut denials = std::collections::BTreeMap::new();
+    for e in &coord.events {
+        if let Event::Denied { reason, .. } = e {
+            *denials.entry(*reason).or_insert(0usize) += 1;
+        }
+    }
+    for (reason, n) in &denials {
+        println!("  window denied {n:>3}x: {reason}");
+    }
+
+    // final perplexity: re-train an identical session to get the
+    // personalized params (the coordinator's job was policy-driven; this
+    // mirrors it deterministically)
+    let mut tuned = SessionBuilder::new(&rt, "pocket-opt")
+        .task(TaskKind::ChatLm)
+        .optimizer(OptimizerKind::MeZo)
+        .seed(777)
+        .build()?;
+    tuned.run_steps(outcome.steps_done)?;
+    let loss_after = tuned.eval_loss()?;
+    println!(
+        "perplexity after personalization: {:.1} (was {:.1})",
+        perplexity(loss_after),
+        perplexity(loss_before)
+    );
+    anyhow::ensure!(
+        loss_after < loss_before,
+        "personalization should reduce held-out loss"
+    );
+    println!("personalization OK — all data stayed on device");
+    Ok(())
+}

@@ -1,0 +1,233 @@
+"""AOT pipeline: lower every (config, program, batch) to HLO text + manifest.
+
+This is the ONLY place Python runs in the whole system, and it runs once:
+``make artifacts`` invokes it, after which the Rust binary is self-contained.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs, under ``--out`` (default ../artifacts):
+
+    manifest.json                     — the complete calling convention:
+                                        configs, param specs, program I/O
+    <config>/<program>_bs<B>.hlo.txt  — one XLA program per step variant
+    <config>/init_params.bin          — deterministic init, raw f32 LE
+                                        concatenated in param_specs order
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, steps
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_io(cfg, suffix=""):
+    return [_io_entry(s.name + suffix, s.shape, "f32")
+            for s in model.param_specs(cfg)]
+
+
+def program_signature(cfg: model.ModelConfig, kind: str, batch: int):
+    """(jax callable, example arg specs, input io list, output io list)."""
+    s = cfg.max_seq
+    ids = _spec((batch, s), jnp.int32)
+    mask = _spec((batch, s), jnp.float32)
+    if cfg.kind == "encoder":
+        labels = _spec((batch,), jnp.int32)
+        labels_io = _io_entry("labels", (batch,), "i32")
+    else:
+        labels = _spec((batch, s), jnp.int32)
+        labels_io = _io_entry("labels", (batch, s), "i32")
+    pspecs = [_spec(p.shape, jnp.float32) for p in model.param_specs(cfg)]
+    data_io = [_io_entry("ids", (batch, s), "i32"),
+               _io_entry("mask", (batch, s), "f32")]
+    scalar = lambda n, d: _io_entry(n, (1,), d)
+
+    if kind in ("mezo_step", "mezo_step_naive") or \
+            kind.startswith("mezo_step_q"):
+        if kind == "mezo_step":
+            step_fn = steps.mezo_step
+        elif kind == "mezo_step_naive":
+            step_fn = steps.mezo_step_naive
+        else:
+            k = int(kind.removeprefix("mezo_step_q"))
+
+            def step_fn(cfg_, params_, i_, m_, l_, seed_, lr_, eps_, _k=k):
+                return steps.mezo_step_multi(cfg_, params_, i_, m_, l_,
+                                             seed_, lr_, eps_, _k)
+
+        def fn(*args):
+            n = len(pspecs)
+            params, (i, m, l, seed, lr, eps) = args[:n], args[n:]
+            return step_fn(cfg, params, i, m, l, seed, lr, eps)
+
+        args = pspecs + [ids, mask, labels, _spec((1,), jnp.uint32),
+                         _spec((1,), jnp.float32), _spec((1,), jnp.float32)]
+        ins = (_param_io(cfg) + data_io
+               + [labels_io, scalar("seed", "u32"), scalar("lr", "f32"),
+                  scalar("eps", "f32")])
+        outs = _param_io(cfg) + [_io_entry("loss", (), "f32")]
+    elif kind == "adam_step":
+        def fn(*args):
+            n = len(pspecs)
+            params = args[:n]
+            m_st = args[n:2 * n]
+            v_st = args[2 * n:3 * n]
+            i, m, l, t, lr = args[3 * n:]
+            return steps.adam_step(cfg, params, m_st, v_st, i, m, l, t, lr)
+
+        args = (pspecs + pspecs + pspecs
+                + [ids, mask, labels, _spec((1,), jnp.float32),
+                   _spec((1,), jnp.float32)])
+        ins = (_param_io(cfg) + _param_io(cfg, ".m") + _param_io(cfg, ".v")
+               + data_io + [labels_io, scalar("t", "f32"),
+                            scalar("lr", "f32")])
+        outs = (_param_io(cfg) + _param_io(cfg, ".m") + _param_io(cfg, ".v")
+                + [_io_entry("loss", (), "f32")])
+    elif kind == "eval":
+        def fn(*args):
+            n = len(pspecs)
+            return steps.eval_step(cfg, args[:n], args[n], args[n + 1])
+
+        args = pspecs + [ids, mask]
+        ins = _param_io(cfg) + data_io
+        if cfg.kind == "encoder":
+            outs = [_io_entry("logits", (batch, cfg.n_classes), "f32")]
+        else:
+            outs = [_io_entry("logits", (batch, s, cfg.vocab), "f32")]
+    elif kind == "loss_eval":
+        def fn(*args):
+            n = len(pspecs)
+            return steps.loss_eval_step(cfg, args[:n], args[n], args[n + 1],
+                                        args[n + 2])
+
+        args = pspecs + [ids, mask, labels]
+        ins = _param_io(cfg) + data_io + [labels_io]
+        outs = [_io_entry("loss", (), "f32")]
+    else:
+        raise ValueError(kind)
+    return fn, args, ins, outs
+
+
+# What gets lowered.  (config, program kinds, batch sizes.)
+# pocket-tiny runs the Pallas-kernel path; MeZO needs no AD so the
+# forward-only programs are exactly what zeroth-order buys us there.
+# The -fast twin (identical dims, XLA-native ops) carries adam_step, and
+# the training-scale configs carry the full grid used by the benches.
+DEFAULT_PLAN = [
+    ("pocket-tiny", ["mezo_step", "eval", "loss_eval"], [4]),
+    ("pocket-tiny-fast", ["mezo_step", "adam_step", "eval", "loss_eval"],
+     [4]),
+    ("pocket-roberta", ["mezo_step", "adam_step", "eval", "loss_eval"],
+     [8, 64]),
+    # perf-ablation artifact (fused vs naive restore+update; §Perf L2)
+    # + §6.3 extension: k-query SPSA (variance/compute trade)
+    ("pocket-roberta", ["mezo_step_naive", "mezo_step_q4"], [8]),
+    ("pocket-opt", ["mezo_step", "adam_step", "eval", "loss_eval"], [8]),
+]
+
+
+def build(out_dir: str, plan=None, verbose: bool = True) -> dict:
+    plan = plan or DEFAULT_PLAN
+    os.makedirs(out_dir, exist_ok=True)
+    # merge into an existing manifest so `--configs X` partial rebuilds
+    # don't orphan the other configs' artifacts
+    manifest = {"format": 1, "configs": {}, "programs": []}
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("format") == 1:
+            rebuilt = {name for name, _, _ in plan}
+            manifest["configs"] = {k: v for k, v in old["configs"].items()
+                                   if k not in rebuilt}
+            manifest["programs"] = [p for p in old["programs"]
+                                    if p["config"] not in rebuilt]
+
+    for cfg_name, kinds, batches in plan:
+        cfg = model.CONFIGS[cfg_name]
+        cfg_dir = os.path.join(out_dir, cfg_name)
+        os.makedirs(cfg_dir, exist_ok=True)
+
+        manifest["configs"][cfg_name] = {
+            "kind": cfg.kind, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "n_classes": cfg.n_classes, "use_pallas": cfg.use_pallas,
+            "n_params": model.num_params(cfg),
+            "params": [{"name": p.name, "shape": list(p.shape),
+                        "offset": p.offset}
+                       for p in model.param_specs(cfg)],
+        }
+
+        # deterministic init the rust side loads as the pre-trained model
+        params = model.init_params(cfg, seed=0)
+        with open(os.path.join(cfg_dir, "init_params.bin"), "wb") as f:
+            for w in params:
+                f.write(np.ascontiguousarray(w, np.float32).tobytes())
+
+        for kind in kinds:
+            for batch in batches:
+                t0 = time.time()
+                fn, args, ins, outs = program_signature(cfg, kind, batch)
+                text = to_hlo_text(jax.jit(fn).lower(*args))
+                rel = f"{cfg_name}/{kind}_bs{batch}.hlo.txt"
+                with open(os.path.join(out_dir, rel), "w") as f:
+                    f.write(text)
+                manifest["programs"].append({
+                    "config": cfg_name, "kind": kind, "batch": batch,
+                    "file": rel, "inputs": ins, "outputs": outs,
+                })
+                if verbose:
+                    print(f"  {rel:48s} {len(text)/1e6:6.2f} MB "
+                          f"{time.time()-t0:6.1f}s", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="subset of config names to build")
+    args = ap.parse_args()
+    plan = DEFAULT_PLAN
+    if args.configs:
+        plan = [p for p in DEFAULT_PLAN if p[0] in args.configs]
+    t0 = time.time()
+    m = build(args.out, plan)
+    print(f"wrote {len(m['programs'])} programs to {args.out} "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

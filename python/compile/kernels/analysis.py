@@ -1,0 +1,134 @@
+"""Analytical performance model for the Pallas kernels (L1 perf pass).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+optimization target is *structural*: VMEM working set per grid cell (must
+fit the ~16 MiB scratchpad with headroom for double-buffering) and MXU
+tile utilization (how much of each 128x128 systolic pass is real work).
+This module computes both for every kernel's BlockSpec, and `report()`
+prints the table recorded in EXPERIMENTS.md §Perf.
+
+Run:  python -m compile.kernels.analysis
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU = 128                      # systolic array edge
+
+
+@dataclasses.dataclass
+class KernelProfile:
+    name: str
+    vmem_bytes: int
+    mxu_utilization: float     # 0..1; 1.0 = every MXU pass fully used
+    arithmetic_intensity: float  # flops per HBM byte
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    def fits(self, double_buffered: bool = True) -> bool:
+        k = 2 if double_buffered else 1
+        return self.vmem_bytes * k <= VMEM_BYTES
+
+
+def _tile_util(dim: int, tile: int = MXU) -> float:
+    """Fraction of an MXU pass doing useful work along one axis."""
+    if dim >= tile:
+        full = dim // tile
+        rem = dim % tile
+        passes = full + (1 if rem else 0)
+        return dim / (passes * tile)
+    return dim / tile
+
+
+def linear_profile(m: int, n: int, k: int, bm: int = 128, bn: int = 128,
+                   bk: int = 512) -> KernelProfile:
+    """Fused linear kernel: grid (m/bm, n/bn, k/bk), f32 acc in scratch."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    vmem = 4 * (bm * bk + bk * bn + bm * bn + bn) + 4 * (bm * bn)  # +acc
+    util = _tile_util(bm) * _tile_util(bn) * _tile_util(min(bk, MXU))
+    flops = 2.0 * m * n * k
+    hbm = 4.0 * (m * k * (n // bn) + k * n * (m // bm) + m * n)
+    return KernelProfile("linear", vmem, util, flops / hbm)
+
+
+def attention_profile(seq: int, d_head: int, bq: int = 128,
+                      bk: int = 128) -> KernelProfile:
+    """Flash attention: q block resident, kv streamed, O(block) memory."""
+    bq, bk = min(bq, seq), min(bk, seq)
+    vmem = 4 * (bq * d_head        # q block
+                + 2 * bk * d_head  # k, v blocks
+                + bk               # mask
+                + bq * bk          # scores tile
+                + bq * d_head      # acc scratch
+                + 2 * bq)          # m, l scratch
+    util = _tile_util(bq) * _tile_util(min(d_head, MXU))
+    flops = 4.0 * seq * seq * d_head  # qk^T + pv per head
+    hbm = 4.0 * (3 * seq * d_head + seq * d_head)  # q,k,v in; o out
+    return KernelProfile("flash_attention", vmem, util, flops / hbm)
+
+
+def layernorm_profile(d: int, bm: int = 256) -> KernelProfile:
+    vmem = 4 * (bm * d * 2 + 2 * d)
+    # VPU-bound (no MXU); utilization = lane occupancy of the last axis
+    util = _tile_util(d, 128)
+    return KernelProfile("layernorm", vmem, util, 9.0 / 8.0)
+
+
+def mezo_profile(block: int = 4096) -> KernelProfile:
+    """Perturb/update kernel: pure streaming axpy with on-the-fly RNG."""
+    vmem = 4 * (block * 2)  # w block in, out block
+    # z never touches HBM: ~12 uint32 ops + Box-Muller per element, all
+    # in-register; intensity = flops / (read w + write w)
+    flops_per_elem = 20.0
+    return KernelProfile("mezo_perturb", vmem, _tile_util(block, 128),
+                         flops_per_elem / 8.0)
+
+
+def xent_profile(v: int, bm: int = 0, n: int = 1 << 20) -> KernelProfile:
+    if bm == 0:
+        # mirror the kernel's adaptive block (see softmax_xent.pick_bm)
+        bm = max(1, (4 * 1024 * 1024) // (4 * v))
+        bm = min(bm, n)
+    vmem = 4 * (bm * v + 2 * bm + 2)
+    return KernelProfile("softmax_xent", vmem, _tile_util(v, 128), 5.0 / 4.0)
+
+
+def profiles_for(d_model: int, d_ff: int, seq: int, heads: int,
+                 vocab: int, batch: int):
+    """The kernel set as instantiated by one model config."""
+    tokens = batch * seq
+    return [
+        linear_profile(tokens, d_ff, d_model),
+        linear_profile(tokens, d_model, d_ff),
+        attention_profile(seq, d_model // heads),
+        layernorm_profile(d_model),
+        mezo_profile(),
+        xent_profile(vocab),
+    ]
+
+
+def report(d_model=1024, d_ff=4096, seq=128, heads=16, vocab=50265,
+           batch=8) -> str:
+    rows = [f"kernel profiles @ d={d_model} ff={d_ff} seq={seq} "
+            f"heads={heads} bs={batch}",
+            f"{'kernel':<18}{'VMEM':>10}{'%VMEM':>8}{'2xbuf?':>8}"
+            f"{'MXU util':>10}{'AI f/B':>8}"]
+    for p in profiles_for(d_model, d_ff, seq, heads, vocab, batch):
+        rows.append(
+            f"{p.name:<18}{p.vmem_bytes/1024:>8.0f}Ki{p.vmem_frac:>7.1%}"
+            f"{'yes' if p.fits() else 'NO':>8}{p.mxu_utilization:>10.1%}"
+            f"{p.arithmetic_intensity:>8.1f}"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(report())
+    print()
+    # the pocket configs actually lowered
+    print(report(d_model=256, d_ff=1024, seq=64, heads=8, vocab=4096,
+                 batch=8))

@@ -1,0 +1,103 @@
+"""Flash-attention-style Pallas kernel (online softmax, O(block) memory).
+
+This kernel is what makes PocketLLM's "derivative-free methods do not
+require activation saving" claim structurally true even *within* one
+forward: naive attention materializes the [S, S] score matrix, which at
+batch 64 is exactly the kind of activation blow-up Table 1 punishes Adam
+for.  The online-softmax formulation keeps peak intermediate memory at
+O(bq * bk) per grid cell regardless of sequence length.
+
+Hardware adaptation: the CUDA original tiles over threadblocks + shared
+memory; here the q-block lives in VMEM across the kv loop (grid axis 2 is
+the kv walk), with running (max, denominator, accumulator) carried in VMEM
+scratch — the BlockSpec expresses the same HBM↔scratchpad schedule.
+
+Layout: q, k, v are [BH, S, D] (batch*heads flattened on axis 0).
+``mask`` is [BH, S] with 1 = valid key; ``causal`` adds the triangle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, n_kv: int, bq: int, bk: int,
+                  scale: float, causal: bool):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                      # [bq, d]
+    k = k_ref[0]                      # [bk, d]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    valid = mask_ref[0][None, :] > 0  # [1, bk]
+    if causal:
+        iq = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        ik = kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = jnp.logical_and(valid, ik <= iq)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]               # [bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_cur[:, None])
+    # Rows where everything so far is masked keep m == _NEG; exp(0)=1 rows
+    # of garbage are zeroed by the mask above (p=exp(_NEG - _NEG)=1 only
+    # when s==_NEG == m_cur; suppress them explicitly).
+    p = jnp.where(jnp.logical_and(s <= _NEG / 2, m_cur[:, None] <= _NEG / 2),
+                  0.0, p)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kv == n_kv - 1)
+    def _fini():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, mask, causal: bool = False, bq: int = 128,
+                    bk: int = 128):
+    """Online-softmax attention; q,k,v [BH,S,D], mask [BH,S] -> [BH,S,D]."""
+    bh, s, d = q.shape
+    bq = s if s < bq else bq
+    bk = s if s < bk else bk
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = 1.0 / float(d) ** 0.5
+    n_kv = s // bk
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, n_kv=n_kv, bq=bq, bk=bk,
+                          scale=scale, causal=causal),
+        grid=(bh, s // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, kv: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kv: (b, kv, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kv: (b, kv, 0)),
+            pl.BlockSpec((1, bk), lambda b, i, kv: (b, kv)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, kv: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,84 @@
+"""Fused linear (+bias, +GELU) Pallas kernel.
+
+The transformer's dense layers are the FLOPs hot-spot of both the MeZO
+double-forward and the Adam forward.  The kernel is a classic MXU-tiled
+matmul: grid (M/bm, N/bn, K/bk), f32 accumulation in a VMEM scratch tile,
+bias-add and activation fused into the K-epilogue so the activation tensor
+is never re-read from HBM.
+
+Hardware adaptation (DESIGN.md §4): the paper runs dense layers through
+PyTorch on a phone CPU, where the analogous trick is cache blocking.  Here
+BlockSpec expresses the HBM↔VMEM schedule; default blocks are sized for the
+128×128 MXU with bf16-friendly multiples, clamped to the problem size so
+tiny test shapes use a single grid cell.
+
+interpret=True everywhere — see DESIGN.md; real-TPU lowering would emit a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def _pick(block: int, dim: int) -> int:
+    """Clamp a preferred block size to the actual dimension."""
+    return dim if dim < block else block
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+                   activation: str):
+    """One (bm, bn) output tile; grid axis 2 walks the K blocks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...][None, :]
+        if activation == "gelu":
+            y = ref.gelu(y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def linear(x, w, b, activation: str = "none", bm: int = 128, bn: int = 128,
+           bk: int = 512):
+    """act(x @ w + b) with x [M,K], w [K,N], b [N] -> [M,N] float32.
+
+    Shapes must tile evenly by the (clamped) block sizes; model dims are
+    chosen as multiples of 64 so this always holds in practice.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=n_k, activation=activation),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b)

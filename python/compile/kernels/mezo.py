@@ -1,0 +1,78 @@
+"""MeZO perturb / update Pallas kernels — the paper's core memory trick.
+
+``z ~ N(0, I)`` is a parameter-sized tensor that classic SPSA would store.
+MeZO regenerates it from ``(seed, flat element index)`` at every use, so
+the optimizer carries ZERO state beyond the parameters themselves.  These
+kernels express that: each grid cell hashes its own index range (VMEM-local
+counter stream, no HBM read for z) and applies ``w + scale*z`` in place of
+ever materializing z at HBM scale.
+
+The same ``rng.gaussian`` stream is used by:
+  * perturb(+eps)   before forward #1
+  * perturb(-2eps)  before forward #2
+  * perturb(+eps)   to restore w exactly (bitwise, see tests)
+  * update(-lr * projected_grad) for the final SGD step
+so a single uint32 seed is the entire "gradient" state between phases.
+
+Tensors are processed in their flat layout; ``base_offset`` situates each
+parameter tensor inside the virtual flat parameter vector so streams never
+overlap across tensors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import rng
+
+
+def _axpy_kernel(w_ref, seed_ref, scale_ref, o_ref, *, bm: int,
+                 base_offset: int):
+    i = pl.program_id(0)
+    idx = ((i * bm).astype(jnp.uint32) + base_offset
+           + jax.lax.broadcasted_iota(jnp.uint32, (bm,), 0))
+    z = rng.gaussian(seed_ref[0], idx)
+    o_ref[...] = w_ref[...] + scale_ref[0] * z
+
+
+def _apply(w_flat, seed, scale, base_offset: int, bm: int):
+    n = w_flat.shape[0]
+    bm = n if n < bm else bm
+    assert n % bm == 0, (n, bm)
+    return pl.pallas_call(
+        functools.partial(_axpy_kernel, bm=bm, base_offset=base_offset),
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(w_flat, seed, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("base_offset", "bm"))
+def perturb(w, seed, scale, base_offset: int = 0, bm: int = 4096):
+    """w + scale * z(seed); works on any-shaped w via flat view.
+
+    ``seed`` uint32 scalar array, ``scale`` float32 scalar array (traced,
+    so one compiled kernel serves +eps / -2eps / restore).
+    """
+    seed = jnp.asarray(seed, jnp.uint32).reshape((1,))
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    flat = w.reshape((-1,))
+    return _apply(flat, seed, scale, base_offset, bm).reshape(w.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("base_offset", "bm"))
+def update(w, seed, lr, projected_grad, base_offset: int = 0, bm: int = 4096):
+    """One MeZO-SGD parameter update: w - lr * g_proj * z(seed)."""
+    scale = -jnp.asarray(lr, jnp.float32) * jnp.asarray(projected_grad,
+                                                        jnp.float32)
+    return perturb(w, seed, scale, base_offset=base_offset, bm=bm)

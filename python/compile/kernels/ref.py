@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth its kernel twin is tested
+against (``python/tests/test_kernels.py`` sweeps shapes/dtypes/seeds with
+hypothesis and asserts allclose).  They are also what ``model.py`` uses when
+lowering the *fast* artifact variants: XLA's native dot/softmax fusions are
+much quicker under the CPU PJRT plugin than interpret-mode Pallas, and the
+test suite proves the two paths are numerically interchangeable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+
+
+# ---------------------------------------------------------------------------
+# dense compute
+# ---------------------------------------------------------------------------
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the kernel exactly)."""
+    c = jnp.float32(0.7978845608028654)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def linear(x, w, b, activation: str = "none"):
+    """y = act(x @ w + b); x [M,K], w [K,N], b [N]."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "gelu":
+        y = gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def attention(q, k, v, mask=None, causal: bool = False):
+    """Scaled dot-product attention.
+
+    q,k,v: [B, H, S, D].  ``mask``: [B, S] with 1 = valid token, or None.
+    ``causal`` adds the autoregressive triangle.  Returns [B, H, S, D].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    neg = jnp.float32(-1e30)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :] > 0, scores, neg)
+    if causal:
+        s = q.shape[2]
+        tri = jnp.tril(jnp.ones((s, s), dtype=jnp.bool_))
+        scores = jnp.where(tri[None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def softmax_xent(logits, labels, label_mask=None):
+    """Mean token cross-entropy.
+
+    logits [N, V], labels [N] int32; ``label_mask`` [N] (1 = contributes).
+    Returns a scalar: sum(masked nll) / max(sum(mask), 1).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    nll = lse - picked
+    if label_mask is None:
+        return jnp.mean(nll)
+    m = label_mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def mezo_perturb(w, seed, base_offset, scale):
+    """w + scale * z  with z regenerated from (seed, flat element index).
+
+    ``base_offset`` is this tensor's first index in the virtual flat
+    parameter vector; see kernels.rng.gaussian_block.
+    """
+    z = rng.gaussian_block(seed, base_offset, w.shape)
+    return w + jnp.float32(scale) * z
+
+
+def mezo_update(w, seed, base_offset, lr, projected_grad):
+    """One MeZO-SGD step: w - lr * g_proj * z (z regenerated, never stored)."""
+    z = rng.gaussian_block(seed, base_offset, w.shape)
+    return w - jnp.float32(lr) * jnp.float32(projected_grad) * z
+
+
+def adam_update(p, g, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    """One Adam(W) step; ``t`` is the 1-based step count.
+
+    Returns (p_new, m_new, v_new).  This is the comparator the paper OOMs:
+    m and v are two extra parameter-sized states, and g a third.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    t = jnp.float32(t)
+    m_hat = m_new / (1.0 - jnp.float32(beta1) ** t)
+    v_hat = v_new / (1.0 - jnp.float32(beta2) ** t)
+    step = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    if weight_decay:
+        step = step + lr * weight_decay * p
+    return p - step, m_new, v_new

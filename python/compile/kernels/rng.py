@@ -1,0 +1,92 @@
+"""Counter-based RNG shared by the MeZO kernels and the reference oracle.
+
+PocketLLM's memory story hinges on MeZO's central trick (Malladi et al.,
+2024): the Gaussian perturbation ``z`` is never materialized as a second
+parameter-sized tensor.  Instead it is *regenerated* from ``(seed, element
+index)`` every time it is needed — once for the ``+eps*z`` forward, once for
+the ``-2*eps*z`` flip, and once for the final ``-lr*g*z`` update.  Peak
+memory therefore stays at one copy of the parameters.
+
+To make regeneration bit-exact across (a) the Pallas kernels, (b) the
+pure-jnp reference oracle, and (c) every call site inside one fused HLO
+program, all of them share this module: a stateless murmur3-finalizer hash
+over uint32 counters, turned into N(0,1) samples via Box-Muller.
+
+Implementation note: all constants are Python literals (weak-typed scalars)
+rather than jnp arrays — Pallas kernels may not close over array constants,
+and weak-typed literals fold into the uint32 ops without promotion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_TWO_PI = 6.283185307179586
+# 2**-32; multiplying a uint32 by this gives a uniform in [0, 1).
+_U32_INV = 2.3283064365386963e-10
+
+
+def _mul_u32(x: jnp.ndarray, c: int) -> jnp.ndarray:
+    """x * c (mod 2^32) for a uint32 array and a Python constant.
+
+    Constants above 2^31 can't ride in as weak-typed literals (jax parses
+    them as int32), so split c = 2*(c>>1) + (c&1):  the halves fit, and
+    uint32 arithmetic wraps exactly like the single multiply would.
+    """
+    if c < 0x80000000:
+        return x * c
+    y = (x * (c >> 1)) << 1
+    return y + x if (c & 1) else y
+
+
+def hash_u32(seed: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Stateless hash (seed: uint32, idx: uint32) -> uint32.
+
+    murmur3 fmix32 applied to ``idx * GOLDEN + seed``.  Passes through
+    Pallas interpret mode untouched (shifts/xors/mults on uint32).
+    """
+    seed = seed.astype(jnp.uint32)
+    idx = idx.astype(jnp.uint32)
+    x = _mul_u32(idx, 0x9E3779B9) + seed
+    x = x ^ (x >> 16)
+    x = _mul_u32(x, 0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = _mul_u32(x, 0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform01(seed: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Uniform in [0, 1) as float32, from one hash evaluation."""
+    return hash_u32(seed, idx).astype(jnp.float32) * _U32_INV
+
+
+def gaussian(seed: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Standard-normal sample for element index ``idx`` under ``seed``.
+
+    Box-Muller over two decorrelated hash streams (2*idx, 2*idx+1).
+    ``idx`` may be any uint32 array shape; the result is float32 of the
+    same shape.  A tiny floor keeps log() finite when u1 == 0.
+    """
+    idx = idx.astype(jnp.uint32)
+    u1 = uniform01(seed, idx * 2)
+    u2 = uniform01(seed, idx * 2 + 1)
+    u1 = jnp.maximum(u1, 1e-12)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(_TWO_PI * u2)
+
+
+def gaussian_block(seed, base_offset, shape) -> jnp.ndarray:
+    """Gaussian samples for a contiguous flat slab of ``prod(shape)``
+    elements starting at flat index ``base_offset``.
+
+    This is the form the MeZO kernels use: each parameter tensor owns a
+    disjoint offset range inside one virtual flat parameter vector, so the
+    same (seed, global element index) pair always regenerates the same z
+    regardless of which kernel/block asks for it.
+    """
+    n = 1
+    for s in shape:
+        n *= int(s)
+    idx = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(base_offset)
+    return gaussian(seed, idx).reshape(shape)

@@ -1,0 +1,73 @@
+"""Fused masked softmax-cross-entropy Pallas kernel.
+
+The loss epilogue of every MeZO forward.  Fusing logsumexp + pick + mask
+into one pass means the [N, V] logits are read once and nothing of size
+[N, V] is ever written back — the final activation is a scalar, which is
+the whole point for the memory ledger.
+
+Grid walks row blocks; each cell emits partial (masked nll sum, mask sum)
+into a [n_blocks, 2] output that a trailing jnp reduction folds to the
+scalar mean.  (The reduction is O(n_blocks) — negligible.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(logits_ref, labels_ref, mask_ref, o_ref):
+    x = logits_ref[...]                       # [bm, V]
+    m = jnp.max(x, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=-1)) + m
+    bm, v = x.shape
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (bm, v), 1)
+              == labels_ref[...][:, None])
+    picked = jnp.sum(jnp.where(onehot, x, 0.0), axis=-1)
+    w = mask_ref[...].astype(jnp.float32)
+    o_ref[0, 0] = jnp.sum((lse - picked) * w)
+    o_ref[0, 1] = jnp.sum(w)
+
+
+def pick_bm(n: int, v: int, budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Largest row block whose [bm, V] tile fits the VMEM budget.
+
+    Found by the L1 analysis pass (EXPERIMENTS.md §Perf): at V=50k the
+    old fixed bm=128 put a 25 MiB tile in VMEM.  Cap the tile at 4 MiB
+    (leaving double-buffer headroom) and divide n evenly.
+    """
+    bm = max(1, budget_bytes // (4 * v))
+    bm = min(bm, n)
+    while n % bm != 0:  # need an even grid; n is a power-of-two-ish batch
+        bm -= 1
+    return bm
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax_xent(logits, labels, label_mask, bm: int = 0):
+    """Masked mean token cross-entropy; logits [N,V], labels/mask [N].
+
+    ``bm=0`` (default) picks the largest VMEM-safe row block.
+    """
+    n, v = logits.shape
+    if bm == 0:
+        bm = pick_bm(n, v)
+    bm = n if n < bm else bm
+    assert n % bm == 0, (n, bm)
+    partial_sums = pl.pallas_call(
+        _xent_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, v), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // bm, 2), jnp.float32),
+        interpret=True,
+    )(logits, labels.astype(jnp.int32), label_mask)
+    total = jnp.sum(partial_sums, axis=0)
+    return total[0] / jnp.maximum(total[1], 1.0)

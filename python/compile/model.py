@@ -1,0 +1,289 @@
+"""Layer-2: the transformer family PocketLLM fine-tunes, in pure JAX.
+
+Two architectures, mirroring the paper's two subjects:
+
+* ``encoder``  — RoBERTa-style: bidirectional encoder + masked mean-pool +
+  classification head (the paper fine-tunes RoBERTa-large on SST-2).
+* ``decoder``  — OPT-style: causal LM with tied output embedding (the paper
+  fine-tunes OPT-1.3B on SuperGLUE prompts).
+
+Everything is a function of an *ordered list* of parameter tensors — no
+pytrees cross the AOT boundary.  ``param_specs(cfg)`` defines the canonical
+order, shapes and flat offsets; ``aot.py`` writes the same specs into
+``manifest.json`` so the Rust coordinator addresses tensors by index.
+
+``use_pallas`` selects the compute path:
+  True  — L1 Pallas kernels (interpret=True) lower into the HLO program;
+          used for the kernel-path artifacts and the composition tests.
+  False — the pure-jnp reference ops (XLA-native dot/softmax fusions);
+          used for the training-scale artifacts where interpret-mode
+          overhead would dominate.  ``tests/test_model.py`` proves the two
+          paths agree to fp32 tolerance, so they are interchangeable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as k_attention
+from .kernels import layernorm as k_layernorm
+from .kernels import linear as k_linear
+from .kernels import ref
+from .kernels import softmax_xent as k_xent
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one model variant."""
+
+    name: str
+    kind: str                 # "encoder" (classifier) | "decoder" (causal LM)
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    n_classes: int = 2        # encoder head width
+    use_pallas: bool = False
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Registry of every configuration the system knows about.  The pocket-*
+# entries are lowered to artifacts and actually trained; roberta-large /
+# opt-1.3b exist so the device model can compute the paper's footprints
+# from the real dimensions (they are never lowered on this host).
+CONFIGS = {
+    # tiny: unit/integration tests + kernel-path (pallas) artifacts
+    "pocket-tiny": ModelConfig("pocket-tiny", "encoder", vocab=512,
+                               d_model=64, n_layers=2, n_heads=2, d_ff=128,
+                               max_seq=32, use_pallas=True),
+    # same dims, fast path — used to prove path equivalence end-to-end
+    "pocket-tiny-fast": ModelConfig("pocket-tiny-fast", "encoder", vocab=512,
+                                    d_model=64, n_layers=2, n_heads=2,
+                                    d_ff=128, max_seq=32, use_pallas=False),
+    # the Fig. 1 subject: RoBERTa-style classifier at pocket scale (~6M)
+    "pocket-roberta": ModelConfig("pocket-roberta", "encoder", vocab=4096,
+                                  d_model=256, n_layers=6, n_heads=8,
+                                  d_ff=1024, max_seq=64, use_pallas=False),
+    # the §4.3/4.4 subject: OPT-style causal LM at pocket scale
+    "pocket-opt": ModelConfig("pocket-opt", "decoder", vocab=4096,
+                              d_model=256, n_layers=6, n_heads=8, d_ff=1024,
+                              max_seq=64, use_pallas=False),
+    # paper-scale configs — device-model inputs only, never lowered here
+    "roberta-large": ModelConfig("roberta-large", "encoder", vocab=50265,
+                                 d_model=1024, n_layers=24, n_heads=16,
+                                 d_ff=4096, max_seq=512),
+    "opt-1.3b": ModelConfig("opt-1.3b", "decoder", vocab=50272,
+                            d_model=2048, n_layers=24, n_heads=32,
+                            d_ff=8192, max_seq=2048),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameter specification (the AOT manifest contract)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int               # first index in the virtual flat param vector
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Canonical ordered parameter list.
+
+    The order here IS the artifact calling convention: mezo_step /
+    adam_step take and return tensors in exactly this order, and the flat
+    ``offset`` situates each tensor in the shared MeZO z-stream.
+    """
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    d, ff, s = cfg.d_model, cfg.d_ff, cfg.max_seq
+    shapes.append(("embed.tok", (cfg.vocab, d)))
+    shapes.append(("embed.pos", (s, d)))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.bq", (d,)),
+            (p + "attn.wk", (d, d)), (p + "attn.bk", (d,)),
+            (p + "attn.wv", (d, d)), (p + "attn.bv", (d,)),
+            (p + "attn.wo", (d, d)), (p + "attn.bo", (d,)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "ffn.w1", (d, ff)), (p + "ffn.b1", (ff,)),
+            (p + "ffn.w2", (ff, d)), (p + "ffn.b2", (d,)),
+        ]
+    shapes.append(("final_ln.g", (d,)))
+    shapes.append(("final_ln.b", (d,)))
+    if cfg.kind == "encoder":
+        shapes.append(("head.w", (d, cfg.n_classes)))
+        shapes.append(("head.b", (cfg.n_classes,)))
+    # decoder ties the output projection to embed.tok — no extra tensors
+    specs, off = [], 0
+    for name, shp in shapes:
+        specs.append(ParamSpec(name, shp, off))
+        off += int(np.prod(shp))
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    sp = param_specs(cfg)
+    return sp[-1].offset + sp[-1].size
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic scaled-normal init, matching spec order."""
+    g = np.random.default_rng(seed)
+    out = []
+    for spec in param_specs(cfg):
+        if spec.name.endswith((".b", ".bq", ".bk", ".bv", ".bo", ".b1",
+                               ".b2")):
+            w = np.zeros(spec.shape, np.float32)
+        elif spec.name.endswith(".g"):
+            w = np.ones(spec.shape, np.float32)
+        elif spec.name == "head.w":
+            # zero-init the classifier head: training starts at exactly
+            # ln(n_classes) for every batch, which keeps Fig.-1-style
+            # loss curves interpretable (standard fine-tuning practice)
+            w = np.zeros(spec.shape, np.float32)
+        elif spec.name.startswith("embed."):
+            w = (g.standard_normal(spec.shape) * 0.02).astype(np.float32)
+        else:
+            fan_in = spec.shape[0]
+            w = (g.standard_normal(spec.shape)
+                 / math.sqrt(fan_in)).astype(np.float32)
+        out.append(w)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _linear(cfg, x, w, b, act="none"):
+    if cfg.use_pallas:
+        return k_linear.linear(x, w, b, activation=act)
+    return ref.linear(x, w, b, activation=act)
+
+
+def _layernorm(cfg, x, g, b):
+    if cfg.use_pallas:
+        return k_layernorm.layernorm(x, g, b)
+    return ref.layernorm(x, g, b)
+
+
+def _attention(cfg, q, k, v, mask, causal):
+    bsz, h, s, dh = q.shape
+    if cfg.use_pallas:
+        mbh = jnp.repeat(mask.astype(jnp.float32), h, axis=0)
+        out = k_attention.flash_attention(
+            q.reshape(bsz * h, s, dh), k.reshape(bsz * h, s, dh),
+            v.reshape(bsz * h, s, dh), mbh, causal=causal)
+        return out.reshape(bsz, h, s, dh)
+    return ref.attention(q, k, v, mask=mask, causal=causal)
+
+
+def _xent(cfg, logits, labels, mask):
+    if cfg.use_pallas:
+        return k_xent.softmax_xent(logits, labels, mask)
+    return ref.softmax_xent(logits, labels, mask)
+
+
+def encode(cfg: ModelConfig, params: Sequence[jnp.ndarray], ids, mask):
+    """Shared transformer trunk.  ids/mask [B, S] -> hidden [B, S, D]."""
+    specs = param_specs(cfg)
+    byname = {s.name: i for i, s in enumerate(specs)}
+
+    def p(name):
+        return params[byname[name]]
+
+    bsz, s = ids.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    causal = cfg.kind == "decoder"
+
+    x = jnp.take(p("embed.tok"), ids.astype(jnp.int32), axis=0)
+    x = x + p("embed.pos")[None, :s, :]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        # --- attention block (pre-LN) ---
+        hidden = _layernorm(cfg, x.reshape(bsz * s, d), p(pre + "ln1.g"),
+                            p(pre + "ln1.b"))
+        q = _linear(cfg, hidden, p(pre + "attn.wq"), p(pre + "attn.bq"))
+        k = _linear(cfg, hidden, p(pre + "attn.wk"), p(pre + "attn.bk"))
+        v = _linear(cfg, hidden, p(pre + "attn.wv"), p(pre + "attn.bv"))
+        q = q.reshape(bsz, s, h, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, s, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, s, h, dh).transpose(0, 2, 1, 3)
+        a = _attention(cfg, q, k, v, mask, causal)
+        a = a.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+        a = _linear(cfg, a, p(pre + "attn.wo"), p(pre + "attn.bo"))
+        x = x + a.reshape(bsz, s, d)
+        # --- ffn block (pre-LN) ---
+        hidden = _layernorm(cfg, x.reshape(bsz * s, d), p(pre + "ln2.g"),
+                            p(pre + "ln2.b"))
+        hidden = _linear(cfg, hidden, p(pre + "ffn.w1"), p(pre + "ffn.b1"),
+                         act="gelu")
+        hidden = _linear(cfg, hidden, p(pre + "ffn.w2"), p(pre + "ffn.b2"))
+        x = x + hidden.reshape(bsz, s, d)
+
+    x = _layernorm(cfg, x.reshape(bsz * s, d), p("final_ln.g"),
+                   p("final_ln.b")).reshape(bsz, s, d)
+    return x
+
+
+def logits_fn(cfg: ModelConfig, params: Sequence[jnp.ndarray], ids, mask):
+    """Task head.
+
+    encoder: [B, n_classes] from masked mean-pool.
+    decoder: [B, S, vocab] via the tied embedding.
+    """
+    specs = param_specs(cfg)
+    byname = {s.name: i for i, s in enumerate(specs)}
+    x = encode(cfg, params, ids, mask)
+    if cfg.kind == "encoder":
+        m = mask.astype(jnp.float32)[:, :, None]
+        pooled = jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+        return _linear(cfg, pooled, params[byname["head.w"]],
+                       params[byname["head.b"]])
+    return jnp.einsum("bsd,vd->bsv", x, params[byname["embed.tok"]])
+
+
+def loss_fn(cfg: ModelConfig, params: Sequence[jnp.ndarray], ids, mask,
+            labels):
+    """Scalar training loss.
+
+    encoder: cross-entropy over class logits, labels [B].
+    decoder: next-token cross-entropy, labels [B, S] (usually == ids),
+             padding excluded via the mask.
+    """
+    logits = logits_fn(cfg, params, ids, mask)
+    if cfg.kind == "encoder":
+        bsz = logits.shape[0]
+        return _xent(cfg, logits, labels.reshape(bsz),
+                     jnp.ones((bsz,), jnp.float32))
+    # decoder: predict token t+1 from position t
+    bsz, s, v = logits.shape
+    pred = logits[:, :-1, :].reshape(bsz * (s - 1), v)
+    tgt = labels[:, 1:].reshape(bsz * (s - 1))
+    lm_mask = (mask[:, 1:] * mask[:, :-1]).reshape(bsz * (s - 1))
+    return _xent(cfg, pred, tgt, lm_mask.astype(jnp.float32))

@@ -1,0 +1,184 @@
+"""Layer-2 step programs — the units the Rust coordinator executes.
+
+Each function below becomes exactly one AOT artifact per (config, batch)
+pair.  Signatures are flat positional tensor lists (see model.param_specs)
+plus shape-(1,) scalar tensors, because that is what crosses the HLO text
+boundary to the ``xla`` crate.
+
+``mezo_step`` is the paper's contribution as a single fused program:
+
+    seed ~ given by the coordinator (uint32)
+    w+  = w  + eps * z(seed)          # perturb, z regenerated per element
+    L+  = loss(w+)
+    w-  = w+ - 2 eps * z(seed)        # flip to the antithetic point
+    L-  = loss(w-)
+    g   = (L+ - L-) / (2 eps)         # SPSA projected gradient (scalar!)
+    w'  = w- + (eps - lr * g) * z(seed)
+        #  ^ restore (+eps z) and update (-lr g z) folded into ONE axpy —
+        #    see EXPERIMENTS.md §Perf (saves a full parameter sweep).
+
+Peak live state inside the program: one parameter set + one forward's
+activations.  No gradients, no optimizer state, no stored z — this is the
+memory profile Table 1 measures.
+
+``adam_step`` is the derivative-based comparator: jax.value_and_grad plus
+the fused Adam kernel, carrying m and v (2 extra parameter sets) and
+materializing grads (a 3rd) — the footprint that OOMs the phone at bs 64.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .kernels import adam as k_adam
+from .kernels import mezo as k_mezo
+from .kernels import ref
+from .kernels import rng
+
+
+def _perturb_all(cfg, params, seed, scale):
+    """Apply w += scale*z(seed) to every tensor, sharing one flat stream."""
+    specs = model.param_specs(cfg)
+    out = []
+    for spec, w in zip(specs, params):
+        if cfg.use_pallas:
+            out.append(k_mezo.perturb(w, seed, scale,
+                                      base_offset=spec.offset))
+        else:
+            out.append(ref.mezo_perturb(w, seed, spec.offset, scale))
+    return out
+
+
+def mezo_step(cfg: model.ModelConfig, params: Sequence[jnp.ndarray], ids,
+              mask, labels, seed, lr, eps):
+    """One fused MeZO-SGD step.  Returns (new_params..., loss).
+
+    ``seed`` uint32[1]; ``lr``, ``eps`` float32[1].  The reported loss is
+    the mean of the two perturbed evaluations — an unbiased estimate of
+    the unperturbed loss to O(eps^2), without a third forward.
+    """
+    seed_s = seed.reshape(())
+    lr_s = lr.reshape(())
+    eps_s = eps.reshape(())
+
+    w_plus = _perturb_all(cfg, params, seed_s, eps_s)
+    loss_plus = model.loss_fn(cfg, w_plus, ids, mask, labels)
+    w_minus = _perturb_all(cfg, w_plus, seed_s, -2.0 * eps_s)
+    loss_minus = model.loss_fn(cfg, w_minus, ids, mask, labels)
+
+    g = (loss_plus - loss_minus) / (2.0 * eps_s)
+    # restore + update in one pass: w- + (eps - lr*g) * z
+    new_params = _perturb_all(cfg, w_minus, seed_s, eps_s - lr_s * g)
+    loss = 0.5 * (loss_plus + loss_minus)
+    return tuple(new_params) + (loss,)
+
+
+def mezo_step_multi(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
+                    ids, mask, labels, seed, lr, eps, n_queries: int):
+    """k-query SPSA: average ``n_queries`` independent two-point estimates.
+
+    The paper's §6.3 points out that derivative-free methods have
+    *inherent parallelization potential* that phones underuse: the k
+    query pairs are data-parallel (each is an independent forward).  On
+    this CPU lowering they run sequentially inside one program; on a
+    parallel backend XLA can overlap them.  Variance of the SPSA
+    estimator drops ~1/k, buying smoother descent per step at k× the
+    forward cost — the ``ablation_zo`` bench measures that trade.
+
+    Memory stays at ONE parameter set: each query restores the weights
+    (seed-regenerated), and the k updates are applied as k additional
+    axpy sweeps at the end.  All gradients are estimated at the *same*
+    point (classic averaged SPSA, not sequential mini-steps).
+    """
+    seed_s = seed.reshape(())
+    lr_s = lr.reshape(())
+    eps_s = eps.reshape(())
+
+    w = list(params)
+    q_seeds = [rng.hash_u32(seed_s, jnp.uint32(q + 1))
+               for q in range(n_queries)]
+    gs, losses = [], []
+    for sq in q_seeds:
+        w_plus = _perturb_all(cfg, w, sq, eps_s)
+        loss_plus = model.loss_fn(cfg, w_plus, ids, mask, labels)
+        w_minus = _perturb_all(cfg, w_plus, sq, -2.0 * eps_s)
+        loss_minus = model.loss_fn(cfg, w_minus, ids, mask, labels)
+        gs.append((loss_plus - loss_minus) / (2.0 * eps_s))
+        losses.append(0.5 * (loss_plus + loss_minus))
+        w = _perturb_all(cfg, w_minus, sq, eps_s)  # restore
+
+    scale = lr_s / float(n_queries)
+    for sq, g in zip(q_seeds, gs):
+        w = _perturb_all(cfg, w, sq, -scale * g)
+    loss = sum(losses) / float(n_queries)
+    return tuple(w) + (loss,)
+
+
+def mezo_step_naive(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
+                    ids, mask, labels, seed, lr, eps):
+    """Unfused MeZO step — the perf-ablation baseline.
+
+    Identical math to :func:`mezo_step`, but the restore (+eps z) and the
+    update (-lr g z) are two separate parameter sweeps, the way a direct
+    transcription of the MeZO pseudocode reads.  The fused version saves
+    one full parameter-sized regenerate+axpy pass per step; the
+    ``hotpath`` bench measures the difference (EXPERIMENTS.md §Perf L2).
+    """
+    seed_s = seed.reshape(())
+    lr_s = lr.reshape(())
+    eps_s = eps.reshape(())
+
+    w_plus = _perturb_all(cfg, params, seed_s, eps_s)
+    loss_plus = model.loss_fn(cfg, w_plus, ids, mask, labels)
+    w_minus = _perturb_all(cfg, w_plus, seed_s, -2.0 * eps_s)
+    loss_minus = model.loss_fn(cfg, w_minus, ids, mask, labels)
+
+    g = (loss_plus - loss_minus) / (2.0 * eps_s)
+    restored = _perturb_all(cfg, w_minus, seed_s, eps_s)   # pass 3
+    new_params = _perturb_all(cfg, restored, seed_s, -lr_s * g)  # pass 4
+    loss = 0.5 * (loss_plus + loss_minus)
+    return tuple(new_params) + (loss,)
+
+
+def adam_step(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
+              m_state: Sequence[jnp.ndarray], v_state: Sequence[jnp.ndarray],
+              ids, mask, labels, t, lr):
+    """One Adam fine-tuning step (the paper's comparator).
+
+    Returns (new_params..., new_m..., new_v..., loss).  ``t`` float32[1]
+    (1-based), ``lr`` float32[1].
+    """
+    t_s = t.reshape(())
+    lr_s = lr.reshape(())
+
+    def scalar_loss(plist: List[jnp.ndarray]):
+        return model.loss_fn(cfg, plist, ids, mask, labels)
+
+    loss, grads = jax.value_and_grad(scalar_loss)(list(params))
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        if cfg.use_pallas:
+            p2, m2, v2 = k_adam.adam_update(p, g, m, v, t_s, lr_s)
+        else:
+            p2, m2, v2 = ref.adam_update(p, g, m, v, t_s, lr_s)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+def eval_step(cfg: model.ModelConfig, params: Sequence[jnp.ndarray], ids,
+              mask):
+    """Inference: returns task logits (encoder [B,C]; decoder [B,S,V])."""
+    return (model.logits_fn(cfg, params, ids, mask),)
+
+
+def loss_eval_step(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
+                   ids, mask, labels):
+    """Validation loss without any parameter update."""
+    return (model.loss_fn(cfg, params, ids, mask, labels),)

@@ -1,0 +1,46 @@
+"""Tests for the L1 analytical performance model."""
+
+from compile.kernels import analysis
+
+
+class TestKernelProfiles:
+    def test_all_kernels_fit_vmem_double_buffered(self):
+        """The chosen default BlockSpecs must leave double-buffer room."""
+        for p in analysis.profiles_for(1024, 4096, 512, 16, 50265, 8):
+            assert p.fits(double_buffered=True), \
+                f"{p.name} uses {p.vmem_bytes} bytes"
+
+    def test_mxu_utilization_high_at_aligned_dims(self):
+        p = analysis.linear_profile(1024, 4096, 1024)
+        assert p.mxu_utilization > 0.95, p
+
+    def test_mxu_utilization_degrades_for_tiny_tiles(self):
+        tiny = analysis.linear_profile(8, 8, 8)
+        big = analysis.linear_profile(1024, 1024, 1024)
+        assert tiny.mxu_utilization < 0.01
+        assert big.mxu_utilization > tiny.mxu_utilization
+
+    def test_flash_attention_vmem_independent_of_seq(self):
+        """The point of the online-softmax kernel: O(block), not O(seq)."""
+        short = analysis.attention_profile(256, 64)
+        long = analysis.attention_profile(4096, 64)
+        assert short.vmem_bytes == long.vmem_bytes
+
+    def test_mezo_kernel_is_streaming(self):
+        p = analysis.mezo_profile()
+        assert p.vmem_bytes < 64 * 1024  # tiny working set
+        assert p.arithmetic_intensity > 1.0  # RNG work is free flops
+
+    def test_report_renders(self):
+        s = analysis.report()
+        assert "flash_attention" in s
+        assert "mezo_perturb" in s
+        for line in s.splitlines()[2:]:
+            assert "NO" not in line, f"kernel overflows VMEM: {line}"
+
+    def test_tile_util_bounds(self):
+        for d in [1, 64, 127, 128, 129, 255, 256, 1000]:
+            u = analysis._tile_util(d)
+            assert 0.0 < u <= 1.0
+        assert analysis._tile_util(128) == 1.0
+        assert analysis._tile_util(256) == 1.0

@@ -1,0 +1,101 @@
+"""AOT pipeline tests: manifest structure, program signatures, merge
+semantics of partial rebuilds — the cross-language contract."""
+
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestProgramSignature:
+    def test_mezo_io_counts(self):
+        cfg = model.CONFIGS["pocket-tiny-fast"]
+        _, args, ins, outs = aot.program_signature(cfg, "mezo_step", 4)
+        n = len(model.param_specs(cfg))
+        assert len(args) == len(ins) == n + 6
+        assert len(outs) == n + 1
+        assert ins[-3]["name"] == "seed" and ins[-3]["dtype"] == "u32"
+        assert outs[-1]["name"] == "loss"
+
+    def test_multi_query_signature_matches_plain(self):
+        """q-variants must be drop-in (identical calling convention)."""
+        cfg = model.CONFIGS["pocket-tiny-fast"]
+        _, _, ins_a, outs_a = aot.program_signature(cfg, "mezo_step", 4)
+        _, _, ins_b, outs_b = aot.program_signature(cfg, "mezo_step_q4", 4)
+        assert [i["shape"] for i in ins_a] == [i["shape"] for i in ins_b]
+        assert [o["shape"] for o in outs_a] == [o["shape"] for o in outs_b]
+
+    def test_decoder_labels_are_2d(self):
+        cfg = model.CONFIGS["pocket-opt"]
+        _, _, ins, _ = aot.program_signature(cfg, "loss_eval", 2)
+        labels = [i for i in ins if i["name"] == "labels"][0]
+        assert labels["shape"] == [2, cfg.max_seq]
+
+    def test_unknown_kind_rejected(self):
+        cfg = model.CONFIGS["pocket-tiny-fast"]
+        with pytest.raises(ValueError):
+            aot.program_signature(cfg, "bogus", 4)
+
+
+class TestBuildAndMerge:
+    def _mini_plan(self):
+        return [("pocket-tiny-fast", ["eval"], [4])]
+
+    def test_build_writes_manifest_and_params(self):
+        with tempfile.TemporaryDirectory() as d:
+            m = aot.build(d, self._mini_plan(), verbose=False)
+            assert os.path.exists(os.path.join(d, "manifest.json"))
+            assert os.path.exists(
+                os.path.join(d, "pocket-tiny-fast", "init_params.bin"))
+            cfg = model.CONFIGS["pocket-tiny-fast"]
+            size = os.path.getsize(
+                os.path.join(d, "pocket-tiny-fast", "init_params.bin"))
+            assert size == model.num_params(cfg) * 4
+            assert len(m["programs"]) == 1
+
+    def test_partial_rebuild_merges(self):
+        """`--configs X` must not orphan other configs' entries."""
+        with tempfile.TemporaryDirectory() as d:
+            aot.build(d, [("pocket-tiny-fast", ["eval"], [4])],
+                      verbose=False)
+            aot.build(d, [("pocket-tiny", ["eval"], [4])], verbose=False)
+            with open(os.path.join(d, "manifest.json")) as f:
+                m = json.load(f)
+            assert set(m["configs"]) == {"pocket-tiny", "pocket-tiny-fast"}
+            assert len(m["programs"]) == 2
+
+    def test_rebuild_replaces_own_entries(self):
+        with tempfile.TemporaryDirectory() as d:
+            aot.build(d, self._mini_plan(), verbose=False)
+            aot.build(d, self._mini_plan(), verbose=False)
+            with open(os.path.join(d, "manifest.json")) as f:
+                m = json.load(f)
+            assert len(m["programs"]) == 1  # no duplicates
+
+    def test_hlo_text_is_parseable_prefix(self):
+        with tempfile.TemporaryDirectory() as d:
+            aot.build(d, self._mini_plan(), verbose=False)
+            path = os.path.join(d, "pocket-tiny-fast", "eval_bs4.hlo.txt")
+            head = open(path).read(200)
+            assert "HloModule" in head
+
+
+class TestInitParams:
+    def test_offsets_cover_file(self):
+        cfg = model.CONFIGS["pocket-roberta"]
+        specs = model.param_specs(cfg)
+        total = sum(int(np.prod(s.shape)) for s in specs)
+        assert total == model.num_params(cfg)
+
+    def test_zero_head_init(self):
+        cfg = model.CONFIGS["pocket-roberta"]
+        params = model.init_params(cfg)
+        byname = {s.name: i for i, s in enumerate(model.param_specs(cfg))}
+        assert np.all(params[byname["head.w"]] == 0.0)
+        # but the trunk is not degenerate
+        assert np.abs(params[byname["layer0.attn.wq"]]).max() > 0

@@ -1,0 +1,273 @@
+"""L1 correctness gate: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / block sizes / seeds; assert_allclose against
+``compile.kernels.ref``.  This suite runs as part of ``make test`` and must
+be green before ``make artifacts`` output is trusted.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import (adam, attention, layernorm, linear, mezo, ref,
+                             rng, softmax_xent)
+
+F32 = np.float32
+_rng = np.random.default_rng(0)
+
+
+def randn(*shape):
+    return _rng.standard_normal(shape).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# rng: the determinism backbone of MeZO
+# ---------------------------------------------------------------------------
+
+class TestRng:
+    def test_deterministic(self):
+        a = rng.gaussian_block(jnp.uint32(5), 17, (256,))
+        b = rng.gaussian_block(jnp.uint32(5), 17, (256,))
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_seed_changes_stream(self):
+        a = np.asarray(rng.gaussian_block(jnp.uint32(5), 0, (256,)))
+        b = np.asarray(rng.gaussian_block(jnp.uint32(6), 0, (256,)))
+        assert not np.allclose(a, b)
+
+    def test_offset_is_flat_slicing(self):
+        """Tensor at offset k must see the same stream as slice [k:] of the
+        virtual flat vector — the invariant that lets per-tensor kernels
+        share one logical z."""
+        whole = np.asarray(rng.gaussian_block(jnp.uint32(9), 0, (512,)))
+        part = np.asarray(rng.gaussian_block(jnp.uint32(9), 128, (384,)))
+        assert np.array_equal(whole[128:], part)
+
+    def test_gaussian_moments(self):
+        z = np.asarray(rng.gaussian_block(jnp.uint32(1), 0, (200_000,)))
+        assert abs(z.mean()) < 0.02
+        assert abs(z.std() - 1.0) < 0.02
+
+    def test_uniform_range(self):
+        u = np.asarray(rng.uniform01(jnp.uint32(2),
+                                     jnp.arange(10_000, dtype=jnp.uint32)))
+        assert u.min() >= 0.0 and u.max() < 1.0
+
+    @given(seed=st.integers(0, 2**32 - 1), idx=st.integers(0, 2**32 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_hash_matches_cpu_reference(self, seed, idx):
+        """uint32 wraparound semantics == a plain-python murmur3 fmix."""
+        def fmix(s, i):
+            x = (i * 0x9E3779B9 + s) & 0xFFFFFFFF
+            x ^= x >> 16
+            x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+            x ^= x >> 13
+            x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+            x ^= x >> 16
+            return x
+
+        got = int(rng.hash_u32(jnp.uint32(seed), jnp.uint32(idx)))
+        assert got == fmix(seed, idx)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+class TestLinear:
+    @given(
+        m=st.sampled_from([8, 32, 64]),
+        k=st.sampled_from([16, 48, 96]),
+        n=st.sampled_from([8, 40, 80]),
+        act=st.sampled_from(["none", "gelu"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matches_ref(self, m, k, n, act):
+        x, w, b = randn(m, k), randn(k, n), randn(n)
+        got = linear.linear(x, w, b, activation=act, bm=m, bn=n, bk=k)
+        assert_allclose(np.asarray(got), np.asarray(ref.linear(x, w, b, act)),
+                        rtol=2e-5, atol=2e-5)
+
+    def test_blocked_equals_single_cell(self):
+        x, w, b = randn(64, 96), randn(96, 80), randn(80)
+        one = linear.linear(x, w, b, bm=64, bn=80, bk=96)
+        many = linear.linear(x, w, b, bm=16, bn=20, bk=24)
+        assert_allclose(np.asarray(one), np.asarray(many), rtol=1e-5,
+                        atol=1e-5)
+
+    def test_rejects_ragged_blocks(self):
+        with pytest.raises(AssertionError):
+            linear.linear(randn(10, 8), randn(8, 8), randn(8), bm=4, bn=8,
+                          bk=8)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+class TestLayerNorm:
+    @given(m=st.sampled_from([4, 16, 64]), d=st.sampled_from([8, 48, 128]),
+           bm=st.sampled_from([2, 4, 1 << 10]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, m, d, bm):
+        if m % min(bm, m) != 0:
+            return
+        x, g, b = randn(m, d), randn(d), randn(d)
+        got = layernorm.layernorm(x, g, b, bm=bm)
+        assert_allclose(np.asarray(got), np.asarray(ref.layernorm(x, g, b)),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_normalizes(self):
+        x = randn(8, 64) * 10 + 3
+        y = np.asarray(layernorm.layernorm(x, np.ones(64, F32),
+                                           np.zeros(64, F32)))
+        assert_allclose(y.mean(-1), 0, atol=1e-4)
+        assert_allclose(y.std(-1), 1, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    def _run(self, b, h, s, d, causal, bq, bk, mask_frac=0.3):
+        q, k, v = randn(b * h, s, d), randn(b * h, s, d), randn(b * h, s, d)
+        mask = (_rng.random((b, s)) > mask_frac).astype(F32)
+        mask[:, 0] = 1  # never a fully-masked row
+        mbh = np.repeat(mask, h, axis=0)
+        got = attention.flash_attention(q, k, v, mbh, causal=causal, bq=bq,
+                                        bk=bk)
+        want = ref.attention(q.reshape(b, h, s, d), k.reshape(b, h, s, d),
+                             v.reshape(b, h, s, d), mask=mask, causal=causal)
+        assert_allclose(np.asarray(got), np.asarray(want).reshape(b * h, s, d),
+                        rtol=2e-4, atol=2e-5)
+
+    @given(causal=st.booleans(), s=st.sampled_from([16, 32, 64]),
+           bq=st.sampled_from([8, 16]), bk=st.sampled_from([8, 16]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, causal, s, bq, bk):
+        self._run(2, 2, s, 16, causal, bq, bk)
+
+    def test_unmasked(self):
+        self._run(1, 4, 32, 8, False, 16, 8, mask_frac=0.0)
+
+    def test_single_block_equals_many(self):
+        q, k, v = randn(4, 32, 16), randn(4, 32, 16), randn(4, 32, 16)
+        m = np.ones((4, 32), F32)
+        a = attention.flash_attention(q, k, v, m, bq=32, bk=32)
+        b = attention.flash_attention(q, k, v, m, bq=8, bk=8)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+class TestSoftmaxXent:
+    @given(n=st.sampled_from([8, 32, 128]), v=st.sampled_from([5, 33, 257]),
+           bm=st.sampled_from([4, 8, 1 << 10]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, n, v, bm):
+        if n % min(bm, n) != 0:
+            return
+        logits = randn(n, v) * 3
+        labels = _rng.integers(0, v, n).astype(np.int32)
+        mask = (_rng.random(n) > 0.3).astype(F32)
+        got = softmax_xent.softmax_xent(logits, labels, mask, bm=bm)
+        want = ref.softmax_xent(logits, labels, mask)
+        assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+    def test_all_masked_is_zero(self):
+        logits, labels = randn(8, 11), np.zeros(8, np.int32)
+        got = softmax_xent.softmax_xent(logits, labels, np.zeros(8, F32))
+        assert float(got) == 0.0
+
+    def test_perfect_prediction_low_loss(self):
+        labels = np.arange(8, dtype=np.int32)
+        logits = np.full((8, 8), -20.0, F32)
+        logits[np.arange(8), labels] = 20.0
+        got = softmax_xent.softmax_xent(logits, labels, np.ones(8, F32))
+        assert float(got) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# mezo perturb / update
+# ---------------------------------------------------------------------------
+
+class TestMezo:
+    @given(n=st.sampled_from([64, 1000, 4096]),
+           seed=st.integers(0, 2**31),
+           off=st.sampled_from([0, 7, 123456]),
+           bm=st.sampled_from([64, 512]))
+    @settings(max_examples=10, deadline=None)
+    def test_perturb_matches_ref(self, n, seed, off, bm):
+        if n % min(bm, n) != 0:
+            return
+        w = randn(n)
+        got = mezo.perturb(w, seed, 0.02, base_offset=off, bm=bm)
+        want = ref.mezo_perturb(w, jnp.uint32(seed), off, 0.02)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6,
+                        atol=1e-6)
+
+    def test_restore_roundtrip(self):
+        """The MeZO invariant: +eps*z then -eps*z returns w (to fp32 ulp).
+
+        This is what lets the optimizer run with zero stored state."""
+        w = randn(4096)
+        eps = 1e-3
+        p = mezo.perturb(w, 42, eps)
+        back = mezo.perturb(np.asarray(p), 42, -eps)
+        assert_allclose(np.asarray(back), w, rtol=0, atol=1e-6)
+
+    def test_update_matches_ref(self):
+        w = randn(2048)
+        got = mezo.update(w, 9, 1e-3, -1.7, base_offset=11, bm=256)
+        want = ref.mezo_update(w, jnp.uint32(9), 11, 1e-3, -1.7)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6,
+                        atol=1e-6)
+
+    def test_2d_tensor_uses_flat_stream(self):
+        w = randn(32, 64)
+        got = mezo.perturb(w, 3, 0.5, base_offset=100)
+        want = ref.mezo_perturb(w, jnp.uint32(3), 100, 0.5)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6,
+                        atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# adam
+# ---------------------------------------------------------------------------
+
+class TestAdam:
+    @given(n=st.sampled_from([128, 1024]), t=st.integers(1, 100),
+           wd=st.sampled_from([0.0, 0.01]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, n, t, wd):
+        p, g, m = randn(n), randn(n), randn(n)
+        v = randn(n) ** 2
+        got = adam.adam_update(p, g, m, v, t, 1e-3, weight_decay=wd, bm=128)
+        want = ref.adam_update(p, g, m, v, t, 1e-3, weight_decay=wd)
+        for a, b in zip(got, want):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                            atol=2e-6)
+
+    def test_zero_grad_keeps_params_near(self):
+        p = randn(256)
+        m = np.zeros(256, F32)
+        v = np.zeros(256, F32)
+        p2, m2, v2 = adam.adam_update(p, np.zeros(256, F32), m, v, 1, 1e-3)
+        assert_allclose(np.asarray(p2), p, atol=1e-6)
+
+    def test_descends_quadratic(self):
+        """Adam on f(w)=||w||^2/2 must shrink the norm."""
+        w = randn(128)
+        m = np.zeros(128, F32)
+        v = np.zeros(128, F32)
+        for t in range(1, 30):
+            g = np.asarray(w)
+            w, m, v = (np.asarray(a) for a in
+                       adam.adam_update(w, g, m, v, t, 0.05))
+        assert np.linalg.norm(w) < np.linalg.norm(randn(128)) * 0.9

@@ -1,0 +1,117 @@
+//! Bench: L3 hot-path microbenchmarks — the profiling tool for the perf
+//! pass (EXPERIMENTS.md §Perf).
+//!
+//! Decomposes a session step into its components so non-`execute` time
+//! is visible: batch assembly, literal construction, PJRT execution,
+//! output scatter.  Target: everything outside `execute` < 5% of step.
+
+use pocketllm::data::batcher::Batcher;
+use pocketllm::data::bpe::Bpe;
+use pocketllm::data::corpus;
+use pocketllm::data::task::{TaskData, TaskKind};
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::literal::{f32_tensor, i32_tensor};
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::telemetry::bench::{bench, env_u64, render};
+use pocketllm::tuner::session::SessionBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("HOTPATH_ITERS", 30) as usize;
+    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let mut ms = Vec::new();
+
+    // --- data pipeline pieces ---
+    let texts = corpus::tokenizer_corpus(1, 1024);
+    ms.push(bench("bpe.train (1k lines, 4k vocab)", 0, 3, || {
+        std::hint::black_box(Bpe::train(&texts, 4096));
+    }));
+    let bpe = Bpe::train(&texts, 4096);
+    let line = "the movie was truly wonderful and the acting was superb";
+    ms.push(bench("bpe.encode (1 sentence)", 10, iters * 20, || {
+        std::hint::black_box(bpe.encode(line));
+    }));
+
+    let data = TaskData::generate(TaskKind::Sst2, 1, 1024, 8);
+    let mut batcher = Batcher::new(&bpe, &data.train, 8, 64, false, 4096, 2);
+    ms.push(bench("batcher.next (bs8 x seq64)", 5, iters * 10, || {
+        std::hint::black_box(batcher.next());
+    }));
+
+    // --- literal construction ---
+    let ids = vec![1i32; 8 * 64];
+    let mask = vec![1f32; 8 * 64];
+    ms.push(bench("literal i32[8,64]+f32[8,64]", 10, iters * 20, || {
+        std::hint::black_box(i32_tensor(&ids, &[8, 64]).unwrap());
+        std::hint::black_box(f32_tensor(&mask, &[8, 64]).unwrap());
+    }));
+
+    // --- full steps (the denominators) ---
+    for (name, config, kind) in [
+        ("step pocket-tiny mezo (pallas)", "pocket-tiny",
+         OptimizerKind::MeZo),
+        ("step pocket-roberta mezo", "pocket-roberta", OptimizerKind::MeZo),
+        ("step pocket-roberta adam", "pocket-roberta", OptimizerKind::Adam),
+    ] {
+        let mut s = SessionBuilder::new(&rt, config)
+            .optimizer(kind)
+            .seed(4)
+            .build()?;
+        ms.push(bench(name, 2, iters.min(15), || {
+            s.run_steps(1).unwrap();
+        }));
+    }
+
+    // --- L2 perf ablation: fused vs naive MeZO step program ---
+    // (same math; the fused variant folds restore+update into one
+    //  parameter sweep — EXPERIMENTS.md §Perf L2)
+    {
+        let cfg = rt.manifest.config("pocket-roberta")?.clone();
+        let raw = rt.manifest.load_init_params("pocket-roberta")?;
+        let params =
+            pocketllm::runtime::ModelState::from_raw(&cfg, &raw)?;
+        let b = cfg.max_seq * 8;
+        let ids = i32_tensor(&vec![5i32; b], &[8, cfg.max_seq])?;
+        let mask = f32_tensor(&vec![1f32; b], &[8, cfg.max_seq])?;
+        let labels = i32_tensor(&vec![1i32; 8], &[8])?;
+        let seed = pocketllm::runtime::u32_1(7)?;
+        let lr = pocketllm::runtime::f32_1(1e-4)?;
+        let eps = pocketllm::runtime::f32_1(1e-3)?;
+        for kind in ["mezo_step", "mezo_step_naive"] {
+            let prog = rt.program("pocket-roberta", kind, 8)?;
+            let mut inputs: Vec<&xla::Literal> = params.refs();
+            inputs.push(&ids);
+            inputs.push(&mask);
+            inputs.push(&labels);
+            inputs.push(&seed);
+            inputs.push(&lr);
+            inputs.push(&eps);
+            ms.push(bench(&format!("program {kind} (bs8)"), 2,
+                          iters.min(12), || {
+                std::hint::black_box(prog.execute(&inputs).unwrap());
+            }));
+        }
+    }
+
+    // --- eval path ---
+    let s = SessionBuilder::new(&rt, "pocket-roberta").seed(4).build()?;
+    ms.push(bench("eval_loss (full held-out split)", 1, 5, || {
+        std::hint::black_box(s.eval_loss().unwrap());
+    }));
+
+    println!("{}", render("L3 hot-path decomposition", &ms));
+
+    // overhead accounting: batch + literal vs full step
+    let find = |n: &str| {
+        ms.iter().find(|m| m.name.starts_with(n)).unwrap().stats.mean()
+    };
+    let overhead = find("batcher.next") + find("literal");
+    let step = find("step pocket-roberta mezo");
+    println!(
+        "non-execute overhead ≈ {:.3} ms of {:.1} ms/step = {:.2}% \
+         (target < 5%)",
+        overhead * 1e3,
+        step * 1e3,
+        100.0 * overhead / step
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Bench: §4.3/4.4 — OPT-1.3B feasibility and the phone-vs-GPU gap.
+//!
+//! The 1.3B model itself can't run here; what CAN run is (a) the device
+//! model over the real OPT-1.3B dimensions (paper-vs-model table), and
+//! (b) the pocket-opt decoder measured for real, whose per-step cost
+//! anchors the scaling extrapolation printed at the end.
+
+use pocketllm::device::{spec::preset, ComputeModel, ModelDims,
+                        OptimizerFamily};
+use pocketllm::optim::OptimizerKind;
+use pocketllm::report;
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::telemetry::bench::{bench, env_u64};
+use pocketllm::telemetry::Table;
+use pocketllm::tuner::session::SessionBuilder;
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", report::opt13b().render());
+
+    // measure the pocket decoder for real
+    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let mut s = SessionBuilder::new(&rt, "pocket-opt")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(3)
+        .build()?;
+    let iters = env_u64("OPT_ITERS", 6) as usize;
+    let m = bench("pocket-opt mezo step (host)", 2, iters, || {
+        s.run_steps(1).unwrap();
+    });
+    let measured = m.stats.mean();
+    println!("measured pocket-opt ({} params): {:.0} ms/step\n",
+             s.cfg.n_params, measured * 1e3);
+
+    // FLOPs-proportional extrapolation from the measured anchor
+    let pocket = s.cfg.model_dims();
+    let big = ModelDims::opt_1_3b();
+    let host = ComputeModel::new(preset("host").unwrap());
+    let anchor_flops = host.step_flops(
+        &pocket, OptimizerFamily::DerivativeFree, s.batch, pocket.max_seq);
+    let big_flops = host.step_flops(
+        &big, OptimizerFamily::DerivativeFree,
+        report::OPT_BATCH, report::OPT_SEQ);
+
+    let mut t = Table::new("Scaling extrapolation from measured anchor")
+        .header(&["quantity", "value"]);
+    t.row(&["pocket-opt step FLOPs".into(),
+            format!("{:.2e}", anchor_flops)]);
+    t.row(&["OPT-1.3B step FLOPs".into(), format!("{:.2e}", big_flops)]);
+    t.row(&["FLOP ratio".into(),
+            format!("{:.0}x", big_flops / anchor_flops)]);
+    t.row(&[
+        "projected OPT-1.3B on this host".into(),
+        format!("{:.0} s/step", measured * big_flops / anchor_flops),
+    ]);
+    t.row(&[
+        "paper: OPT-1.3B on Reno 6".into(),
+        "~1800 s/step".into(),
+    ]);
+    t.row(&[
+        "paper: OPT-1.3B on RTX 3090".into(),
+        "1.99 s/step (~1000x gap)".into(),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}

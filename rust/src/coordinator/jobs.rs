@@ -1,0 +1,85 @@
+//! Personalization job descriptions and outcomes.
+
+use crate::data::task::TaskKind;
+use crate::optim::OptimizerKind;
+
+/// A queued fine-tuning job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub config: String,
+    pub task: TaskKind,
+    pub optimizer: OptimizerKind,
+    pub batch: usize,
+    pub steps: u64,
+    pub seed: u64,
+}
+
+impl JobSpec {
+    pub fn new(config: &str, task: TaskKind, optimizer: OptimizerKind)
+        -> JobSpec
+    {
+        JobSpec {
+            config: config.to_string(),
+            task,
+            optimizer,
+            batch: 0, // manifest default
+            steps: 20,
+            seed: 42,
+        }
+    }
+
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn steps(mut self, s: u64) -> Self {
+        self.steps = s;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Completed,
+    /// Ran out of policy windows before finishing.
+    Stalled,
+    Failed,
+}
+
+/// What happened to a job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub status: JobStatus,
+    /// The optimizer that actually ran (may differ from the spec after an
+    /// OOM fallback).
+    pub optimizer: OptimizerKind,
+    pub steps_done: u64,
+    pub final_loss: f64,
+    pub windows_used: usize,
+    pub windows_denied: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let j = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                             OptimizerKind::MeZo)
+            .batch(4)
+            .steps(10)
+            .seed(1);
+        assert_eq!(j.batch, 4);
+        assert_eq!(j.steps, 10);
+        assert_eq!(j.seed, 1);
+        assert_eq!(j.config, "pocket-tiny");
+    }
+}

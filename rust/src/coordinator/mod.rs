@@ -1,0 +1,207 @@
+//! The personalization coordinator — PocketLLM's Layer-3 contribution.
+//!
+//! A phone-resident agent that owns the fine-tuning lifecycle:
+//!
+//! * a [`jobs`] queue of personalization jobs (task, model, optimizer),
+//! * policy-gated execution windows ([`crate::scheduler`]): run steps
+//!   only while the phone is plugged in / idle / cool / memory-rich,
+//!   pausing and resuming across windows via the deterministic seed
+//!   schedule (MeZO's 12-byte optimizer state makes suspends free),
+//! * OOM handling with **derivative-free fallback**: if a job configured
+//!   with Adam fails device admission — the paper's Table 1 bs=64 event —
+//!   the coordinator relaunches it with MeZO instead of crashing.  This
+//!   is the paper's thesis operationalized as a scheduling policy.
+//!
+//! Execution is simulation-clocked: each policy window advances the
+//! phone-state trace, while the underlying steps run for real on PJRT.
+
+pub mod jobs;
+
+pub use jobs::{JobOutcome, JobSpec, JobStatus};
+
+use anyhow::Result;
+
+use crate::device::Device;
+use crate::optim::OptimizerKind;
+use crate::runtime::Runtime;
+use crate::scheduler::{DayTrace, Policy};
+use crate::telemetry::MetricLog;
+use crate::tuner::session::SessionBuilder;
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub device_preset: String,
+    pub policy: Policy,
+    /// Steps executed per admitted policy window.
+    pub steps_per_window: u64,
+    /// Simulated minutes between phone-state samples.
+    pub trace_step_minutes: f64,
+    /// Maximum simulated windows before giving up on a job.
+    pub max_windows: usize,
+    pub trace_seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            device_preset: "oppo-reno6".into(),
+            policy: Policy::overnight(),
+            steps_per_window: 4,
+            trace_step_minutes: 10.0,
+            max_windows: 4000,
+            trace_seed: 7,
+        }
+    }
+}
+
+/// Events the run loop reports (collected for logs/tests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Admitted { job: usize, window: usize },
+    Denied { job: usize, reason: &'static str },
+    StepsDone { job: usize, steps: u64, loss: f64 },
+    OomFallback { job: usize, from: &'static str, to: &'static str },
+    Completed { job: usize, final_loss: f64 },
+    Failed { job: usize, error: String },
+}
+
+/// The coordinator itself.
+pub struct Coordinator<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: CoordinatorConfig,
+    pub events: Vec<Event>,
+    pub metrics: MetricLog,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: CoordinatorConfig) -> Self {
+        Coordinator { rt, cfg, events: Vec::new(), metrics: MetricLog::new() }
+    }
+
+    /// Run one job to completion under the phone policy.  Returns the
+    /// outcome; events accumulate in `self.events`.
+    pub fn run_job(&mut self, idx: usize, job: &JobSpec) -> Result<JobOutcome> {
+        // jobs are queued while the user is awake (default 09:00); the
+        // overnight policy then makes the coordinator wait for the
+        // charger — exactly the deployment story the paper motivates
+        let mut trace = DayTrace::new(
+            self.cfg.trace_seed,
+            self.cfg.trace_step_minutes,
+            crate::device::spec::preset(&self.cfg.device_preset)
+                .map(|s| s.ram_bytes)
+                .unwrap_or(12_000_000_000),
+        )
+        .starting_at(9.0);
+
+        // device admission, with derivative-free fallback on OOM
+        let mut optimizer = job.optimizer;
+        let mut session = loop {
+            let device = Device::preset(&self.cfg.device_preset)
+                .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+            let built = SessionBuilder::new(self.rt, &job.config)
+                .optimizer(optimizer)
+                .batch_size(job.batch)
+                .task(job.task)
+                .seed(job.seed)
+                .device(device)
+                .build();
+            match built {
+                Ok(s) => break s,
+                Err(e) if e.to_string().contains("OOM")
+                    && optimizer == OptimizerKind::Adam =>
+                {
+                    self.events.push(Event::OomFallback {
+                        job: idx,
+                        from: "adam",
+                        to: "mezo",
+                    });
+                    optimizer = OptimizerKind::MeZo;
+                }
+                Err(e) => {
+                    self.events.push(Event::Failed {
+                        job: idx,
+                        error: e.to_string(),
+                    });
+                    return Ok(JobOutcome {
+                        status: JobStatus::Failed,
+                        optimizer,
+                        steps_done: 0,
+                        final_loss: f64::NAN,
+                        windows_used: 0,
+                        windows_denied: 0,
+                    });
+                }
+            }
+        };
+
+        let mut steps_done = 0u64;
+        let mut last_loss = f64::NAN;
+        let mut windows = 0usize;
+        let mut denied = 0usize;
+
+        for w in 0..self.cfg.max_windows {
+            if steps_done >= job.steps {
+                break;
+            }
+            let state = trace.next().expect("trace is infinite");
+            match self.cfg.policy.admits(&state) {
+                Err(reason) => {
+                    denied += 1;
+                    self.events.push(Event::Denied {
+                        job: idx,
+                        reason: reason.label(),
+                    });
+                    // phone idles; thermal recovers between windows
+                    if let Some(dev) = session.device.as_mut() {
+                        dev.compute.cool_down();
+                    }
+                    continue;
+                }
+                Ok(()) => {
+                    windows += 1;
+                    self.events.push(Event::Admitted { job: idx, window: w });
+                }
+            }
+            let n = self.cfg.steps_per_window.min(job.steps - steps_done);
+            let stats = session.run_steps(n)?;
+            steps_done += n;
+            last_loss = stats.last_loss;
+            self.metrics.record(
+                &format!("job{idx}.loss"),
+                steps_done,
+                stats.last_loss,
+            );
+            self.events.push(Event::StepsDone {
+                job: idx,
+                steps: steps_done,
+                loss: stats.last_loss,
+            });
+        }
+
+        let status = if steps_done >= job.steps {
+            self.events.push(Event::Completed {
+                job: idx,
+                final_loss: last_loss,
+            });
+            JobStatus::Completed
+        } else {
+            JobStatus::Stalled
+        };
+        Ok(JobOutcome {
+            status,
+            optimizer,
+            steps_done,
+            final_loss: last_loss,
+            windows_used: windows,
+            windows_denied: denied,
+        })
+    }
+
+    /// Run a queue of jobs sequentially (one model fits a phone at a time).
+    pub fn run_queue(&mut self, jobs: &[JobSpec]) -> Result<Vec<JobOutcome>> {
+        jobs.iter()
+            .enumerate()
+            .map(|(i, j)| self.run_job(i, j))
+            .collect()
+    }
+}

@@ -1,0 +1,209 @@
+//! Batch assembly: tokenize, frame, pad, shuffle — producing exactly the
+//! `[B, S]` tensors the AOT step programs take.
+//!
+//! Layout contract (must match `python/compile/aot.py`):
+//! * `ids`    — i32 `[B, S]`, BOS + tokens + EOS, PAD-filled,
+//! * `mask`   — f32 `[B, S]`, 1.0 on real tokens (incl. BOS/EOS),
+//! * `labels` — classification: i32 `[B]`; causal LM: i32 `[B, S]` = ids.
+
+use super::bpe::{Bpe, BOS, EOS, PAD};
+use super::corpus::Sample;
+use crate::util::rng::Rng;
+
+/// One ready-to-execute batch (row-major host buffers).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// `[B]` for classification, `[B*S]` (== ids) for LM.
+    pub labels: Vec<i32>,
+    pub lm: bool,
+}
+
+impl Batch {
+    /// Fraction of non-pad positions (useful for throughput accounting).
+    pub fn density(&self) -> f64 {
+        let live: f64 = self.mask.iter().map(|&m| m as f64).sum();
+        live / self.mask.len() as f64
+    }
+}
+
+/// Deterministic epoch-shuffling batcher over a sample set.
+pub struct Batcher<'a> {
+    bpe: &'a Bpe,
+    samples: &'a [Sample],
+    batch: usize,
+    seq: usize,
+    lm: bool,
+    vocab_limit: i32,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    epoch: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        bpe: &'a Bpe,
+        samples: &'a [Sample],
+        batch: usize,
+        seq: usize,
+        lm: bool,
+        vocab_limit: usize,
+        seed: u64,
+    ) -> Batcher<'a> {
+        assert!(!samples.is_empty(), "empty dataset");
+        assert!(batch > 0 && seq > 2, "bad batch geometry");
+        let mut b = Batcher {
+            bpe,
+            samples,
+            batch,
+            seq,
+            lm,
+            vocab_limit: vocab_limit as i32,
+            order: (0..samples.len()).collect(),
+            cursor: 0,
+            rng: Rng::new(seed),
+            epoch: 0,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Encode one sample into a fixed-length row.
+    fn encode_row(&self, s: &Sample, ids: &mut [i32], mask: &mut [f32]) {
+        let toks = self.bpe.encode(&s.text);
+        ids.fill(PAD);
+        mask.fill(0.0);
+        ids[0] = BOS;
+        mask[0] = 1.0;
+        let take = toks.len().min(self.seq - 2);
+        for (j, &t) in toks[..take].iter().enumerate() {
+            // clamp to the model's embedding table size
+            ids[j + 1] = if t < self.vocab_limit { t } else { super::bpe::UNK };
+            mask[j + 1] = 1.0;
+        }
+        ids[take + 1] = EOS;
+        mask[take + 1] = 1.0;
+    }
+
+    /// Next batch; wraps epochs (reshuffling) as needed.
+    pub fn next(&mut self) -> Batch {
+        let mut ids = vec![PAD; self.batch * self.seq];
+        let mut mask = vec![0.0f32; self.batch * self.seq];
+        let mut cls_labels = Vec::with_capacity(self.batch);
+        for r in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.epoch += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            let s = &self.samples[self.order[self.cursor]];
+            self.cursor += 1;
+            let lo = r * self.seq;
+            self.encode_row(s, &mut ids[lo..lo + self.seq],
+                            &mut mask[lo..lo + self.seq]);
+            cls_labels.push(s.label.max(0));
+        }
+        let labels = if self.lm { ids.clone() } else { cls_labels };
+        Batch { batch: self.batch, seq: self.seq, ids, mask, labels,
+                lm: self.lm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus;
+    use crate::data::task::{TaskData, TaskKind};
+
+    fn setup() -> (Bpe, TaskData) {
+        let texts = corpus::tokenizer_corpus(1, 200);
+        let bpe = Bpe::train(&texts, 320);
+        let data = TaskData::generate(TaskKind::Sst2, 2, 64, 8);
+        (bpe, data)
+    }
+
+    #[test]
+    fn batch_geometry() {
+        let (bpe, data) = setup();
+        let mut b = Batcher::new(&bpe, &data.train, 4, 16, false, 512, 3);
+        let batch = b.next();
+        assert_eq!(batch.ids.len(), 64);
+        assert_eq!(batch.mask.len(), 64);
+        assert_eq!(batch.labels.len(), 4);
+        // row framing: BOS first, mask matches non-pad
+        for r in 0..4 {
+            assert_eq!(batch.ids[r * 16], BOS);
+            assert_eq!(batch.mask[r * 16], 1.0);
+            for j in 0..16 {
+                let live = batch.mask[r * 16 + j] > 0.0;
+                let pad = batch.ids[r * 16 + j] == PAD;
+                assert_eq!(live, !pad);
+            }
+            // exactly one EOS per live row
+            let eos = (0..16)
+                .filter(|&j| batch.ids[r * 16 + j] == EOS)
+                .count();
+            assert_eq!(eos, 1);
+        }
+    }
+
+    #[test]
+    fn lm_labels_mirror_ids() {
+        let (bpe, _) = setup();
+        let data = TaskData::generate(TaskKind::ChatLm, 5, 32, 4);
+        let mut b = Batcher::new(&bpe, &data.train, 2, 16, true, 512, 3);
+        let batch = b.next();
+        assert_eq!(batch.labels, batch.ids);
+    }
+
+    #[test]
+    fn wraps_epochs_and_reshuffles() {
+        let (bpe, data) = setup();
+        let mut b = Batcher::new(&bpe, &data.train, 32, 16, false, 512, 3);
+        let first = b.next();
+        assert_eq!(b.epoch(), 0);
+        let _second = b.next();
+        let third = b.next(); // 96 > 64 samples -> wrapped
+        assert!(b.epoch() >= 1);
+        assert_ne!(first.ids, third.ids);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (bpe, data) = setup();
+        let a = Batcher::new(&bpe, &data.train, 4, 16, false, 512, 9).next();
+        let b = Batcher::new(&bpe, &data.train, 4, 16, false, 512, 9).next();
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn truncates_long_text() {
+        let (bpe, _) = setup();
+        let long = Sample {
+            text: "word ".repeat(100).trim().to_string(),
+            label: 1,
+        };
+        let samples = vec![long];
+        let mut b = Batcher::new(&bpe, &samples, 1, 8, false, 512, 1);
+        let batch = b.next();
+        assert_eq!(batch.ids.len(), 8);
+        assert!(batch.mask.iter().all(|&m| m == 1.0)); // fully packed
+    }
+
+    #[test]
+    fn density_counts_padding() {
+        let (bpe, data) = setup();
+        let mut b = Batcher::new(&bpe, &data.train, 4, 32, false, 512, 3);
+        let batch = b.next();
+        assert!(batch.density() > 0.1 && batch.density() <= 1.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Template-grammar text generation: the synthetic stand-in for the
+//! personal data the paper motivates ("the wealth of valuable, non-public
+//! data generated daily" on phones) and for SST-2/SuperGLUE text.
+//!
+//! The generators produce sentences with *learnable* structure — polarity
+//! is carried by lexical choice, entailment by substring/negation
+//! relations — so fine-tuning has a real signal to descend on, which is
+//! all Fig. 1 requires.  Grammar quality is deliberately simple; the
+//! point is a controlled, deterministic corpus, not linguistic realism.
+
+use crate::util::rng::Rng;
+
+pub const POSITIVE_ADJ: &[&str] = &[
+    "great", "wonderful", "brilliant", "fantastic", "moving", "charming",
+    "delightful", "masterful", "gripping", "superb", "touching", "fresh",
+];
+
+pub const NEGATIVE_ADJ: &[&str] = &[
+    "terrible", "boring", "awful", "bland", "tedious", "clumsy",
+    "forgettable", "dreadful", "lifeless", "shallow", "messy", "dull",
+];
+
+pub const SUBJECTS: &[&str] = &[
+    "the movie", "the film", "this picture", "the story", "the plot",
+    "the acting", "the screenplay", "the direction", "the cast",
+    "the soundtrack", "the dialogue", "the pacing",
+];
+
+pub const INTENSIFIERS: &[&str] =
+    &["really", "truly", "quite", "absolutely", "remarkably", "simply"];
+
+pub const FACT_SUBJECTS: &[&str] = &[
+    "the river", "the mountain", "the library", "the museum", "the bridge",
+    "the market", "the garden", "the station", "the harbor", "the tower",
+];
+
+pub const FACT_PREDICATES: &[&str] = &[
+    "is open on sundays", "was built in the last century",
+    "is close to the city center", "is longer than ten kilometers",
+    "attracts many visitors", "was renovated recently",
+    "is free to enter", "is closed in winter",
+];
+
+/// Personal-messaging vocabulary for the LM personalization scenario.
+pub const CHAT_OPENERS: &[&str] = &[
+    "hey are we still on for", "running late for", "dont forget",
+    "can you pick up", "see you at", "just finished", "on my way to",
+    "what time is", "lets reschedule", "thanks again for",
+];
+
+pub const CHAT_TOPICS: &[&str] = &[
+    "dinner tonight", "the gym session", "the team meeting",
+    "the groceries", "the airport run", "the weekend trip",
+    "the project review", "the birthday party", "coffee tomorrow",
+    "the dentist appointment",
+];
+
+/// A generated labelled sentence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub text: String,
+    pub label: i32,
+}
+
+/// SST-2-style sentiment sentence with its polarity label (1 = positive).
+pub fn sentiment_sample(rng: &mut Rng) -> Sample {
+    let positive = rng.chance(0.5);
+    let adj_pool = if positive { POSITIVE_ADJ } else { NEGATIVE_ADJ };
+    let subj = rng.choose(SUBJECTS);
+    let adj = rng.choose(adj_pool);
+    let text = match rng.below(4) {
+        0 => format!("{subj} was {adj}"),
+        1 => {
+            let int = rng.choose(INTENSIFIERS);
+            format!("{subj} was {int} {adj}")
+        }
+        2 => {
+            let adj2 = rng.choose(adj_pool);
+            format!("{subj} was {adj} and {adj2}")
+        }
+        _ => {
+            let subj2 = rng.choose(SUBJECTS);
+            let adj2 = rng.choose(adj_pool);
+            format!("{subj} was {adj} but {subj2} was {adj2}")
+        }
+    };
+    Sample { text, label: positive as i32 }
+}
+
+/// BoolQ-style (passage, question) pair; label 1 = yes.
+/// The question restates or negates the passage predicate.
+pub fn boolq_sample(rng: &mut Rng) -> Sample {
+    let subj = rng.choose(FACT_SUBJECTS);
+    let pred = rng.choose(FACT_PREDICATES);
+    let answer_yes = rng.chance(0.5);
+    let q_pred = if answer_yes {
+        pred.to_string()
+    } else {
+        // ask about a different predicate -> "no"
+        loop {
+            let other = rng.choose(FACT_PREDICATES);
+            if other != pred {
+                break other.to_string();
+            }
+        }
+    };
+    let text = format!("passage : {subj} {pred} . question : {subj} {q_pred} ?");
+    Sample { text, label: answer_yes as i32 }
+}
+
+/// RTE-style premise/hypothesis pair; label 1 = entailment.
+/// Entailed hypotheses drop a conjunct; contradictions negate.
+pub fn rte_sample(rng: &mut Rng) -> Sample {
+    let subj = rng.choose(SUBJECTS);
+    let (a, b) = (rng.choose(POSITIVE_ADJ), rng.choose(POSITIVE_ADJ));
+    let entailed = rng.chance(0.5);
+    let hypothesis = if entailed {
+        format!("{subj} was {a}")
+    } else {
+        let neg = rng.choose(NEGATIVE_ADJ);
+        format!("{subj} was {neg}")
+    };
+    let text =
+        format!("premise : {subj} was {a} and {b} . hypothesis : {hypothesis}");
+    Sample { text, label: entailed as i32 }
+}
+
+/// One line of a user's synthetic message history (for the causal-LM
+/// personalization task).  Labels are unused (-1).
+pub fn chat_sample(rng: &mut Rng) -> Sample {
+    let opener = rng.choose(CHAT_OPENERS);
+    let topic = rng.choose(CHAT_TOPICS);
+    let text = if rng.chance(0.3) {
+        let topic2 = rng.choose(CHAT_TOPICS);
+        format!("{opener} {topic} and {topic2}")
+    } else {
+        format!("{opener} {topic}")
+    };
+    Sample { text, label: -1 }
+}
+
+/// Build a raw text corpus for tokenizer training: a mix of all
+/// generators so the vocabulary covers every task.
+pub fn tokenizer_corpus(seed: u64, lines: usize) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(lines);
+    for i in 0..lines {
+        let s = match i % 4 {
+            0 => sentiment_sample(&mut rng).text,
+            1 => boolq_sample(&mut rng).text,
+            2 => rte_sample(&mut rng).text,
+            _ => chat_sample(&mut rng).text,
+        };
+        out.push(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentiment_labels_match_lexicon() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = sentiment_sample(&mut rng);
+            let has_pos = POSITIVE_ADJ.iter().any(|a| s.text.contains(a));
+            let has_neg = NEGATIVE_ADJ.iter().any(|a| s.text.contains(a));
+            if s.label == 1 {
+                assert!(has_pos && !has_neg, "{:?}", s);
+            } else {
+                assert!(has_neg && !has_pos, "{:?}", s);
+            }
+        }
+    }
+
+    #[test]
+    fn boolq_yes_iff_predicate_repeated() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let s = boolq_sample(&mut rng);
+            let parts: Vec<&str> = s.text.split(" . question : ").collect();
+            assert_eq!(parts.len(), 2);
+            let passage_pred = parts[0]
+                .trim_start_matches("passage : ")
+                .to_string();
+            let repeated = parts[1].trim_end_matches(" ?")
+                .ends_with(passage_pred.split_once(' ').unwrap().1);
+            assert_eq!(repeated, s.label == 1, "{:?}", s);
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = tokenizer_corpus(9, 50);
+        let b = tokenizer_corpus(9, 50);
+        assert_eq!(a, b);
+        let c = tokenizer_corpus(10, 50);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let mut rng = Rng::new(3);
+        let pos: i32 = (0..1000).map(|_| sentiment_sample(&mut rng).label).sum();
+        assert!((350..650).contains(&pos), "{pos}");
+    }
+}

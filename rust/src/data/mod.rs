@@ -1,0 +1,18 @@
+//! On-device data pipeline: tokenizer + synthetic personal-data tasks.
+//!
+//! The paper fine-tunes on SST-2 and SuperGLUE.  Those corpora (and the
+//! user's real typing data the paper motivates with) are not available
+//! here, so this module builds the closest synthetic equivalents that
+//! exercise the same code path: template-grammar generators with enough
+//! lexical signal to *learn from* ([`task`]), a from-scratch byte-pair
+//! tokenizer trained on the generated corpus ([`bpe`]), and a padding /
+//! shuffling batcher that emits exactly the `[B, S]` i32/f32 tensors the
+//! AOT artifacts expect ([`batcher`]).
+//!
+//! Everything is deterministic under a seed: a fine-tuning session is
+//! fully reproducible from `(task, seed)`.
+
+pub mod batcher;
+pub mod bpe;
+pub mod corpus;
+pub mod task;

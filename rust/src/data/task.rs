@@ -1,0 +1,112 @@
+//! Fine-tuning tasks: dataset objects over the synthetic generators.
+//!
+//! [`TaskKind`] enumerates the paper's workloads: SST-2 (the RoBERTa-large
+//! experiment), two SuperGLUE-style tasks (the OPT experiments), and the
+//! personal-chat LM corpus the introduction motivates.  A [`TaskData`]
+//! is a fully materialized train/eval split, deterministic in the seed.
+
+use super::corpus::{self, Sample};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Sentence classification, 2 classes (positive/negative).
+    Sst2,
+    /// Yes/no question answering over a passage (SuperGLUE BoolQ style).
+    BoolQ,
+    /// Textual entailment (SuperGLUE RTE style).
+    Rte,
+    /// Causal-LM on the user's message history (personalization).
+    ChatLm,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "sst2" => Some(TaskKind::Sst2),
+            "boolq" => Some(TaskKind::BoolQ),
+            "rte" => Some(TaskKind::Rte),
+            "chatlm" | "chat" => Some(TaskKind::ChatLm),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::Sst2 => "sst2",
+            TaskKind::BoolQ => "boolq",
+            TaskKind::Rte => "rte",
+            TaskKind::ChatLm => "chatlm",
+        }
+    }
+
+    /// Classification tasks have labels; LM tasks self-supervise.
+    pub fn is_classification(&self) -> bool {
+        !matches!(self, TaskKind::ChatLm)
+    }
+
+    pub fn generate(&self, rng: &mut Rng) -> Sample {
+        match self {
+            TaskKind::Sst2 => corpus::sentiment_sample(rng),
+            TaskKind::BoolQ => corpus::boolq_sample(rng),
+            TaskKind::Rte => corpus::rte_sample(rng),
+            TaskKind::ChatLm => corpus::chat_sample(rng),
+        }
+    }
+}
+
+/// A materialized dataset split.
+#[derive(Debug, Clone)]
+pub struct TaskData {
+    pub kind: TaskKind,
+    pub train: Vec<Sample>,
+    pub eval: Vec<Sample>,
+}
+
+impl TaskData {
+    /// Generate `n_train` + `n_eval` samples deterministically.
+    pub fn generate(kind: TaskKind, seed: u64, n_train: usize,
+                    n_eval: usize) -> TaskData {
+        let mut rng = Rng::new(seed);
+        let train = (0..n_train).map(|_| kind.generate(&mut rng)).collect();
+        let eval = (0..n_eval).map(|_| kind.generate(&mut rng)).collect();
+        TaskData { kind, train, eval }
+    }
+
+    /// The raw text of the training split (for tokenizer training).
+    pub fn train_texts(&self) -> Vec<String> {
+        self.train.iter().map(|s| s.text.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [TaskKind::Sst2, TaskKind::BoolQ, TaskKind::Rte,
+                  TaskKind::ChatLm] {
+            assert_eq!(TaskKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(TaskKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn generate_sizes_and_determinism() {
+        let a = TaskData::generate(TaskKind::Sst2, 7, 100, 20);
+        assert_eq!(a.train.len(), 100);
+        assert_eq!(a.eval.len(), 20);
+        let b = TaskData::generate(TaskKind::Sst2, 7, 100, 20);
+        assert_eq!(a.train, b.train);
+        // train and eval are disjoint draws (overwhelmingly different)
+        assert_ne!(a.train[..20], a.eval[..]);
+    }
+
+    #[test]
+    fn lm_task_has_no_labels() {
+        let d = TaskData::generate(TaskKind::ChatLm, 1, 10, 2);
+        assert!(d.train.iter().all(|s| s.label == -1));
+        assert!(!TaskKind::ChatLm.is_classification());
+    }
+}

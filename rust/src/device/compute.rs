@@ -1,0 +1,203 @@
+//! Step-time model — the mechanism behind the paper's Table 2 and the
+//! §4.4 phone-vs-GPU gap.
+//!
+//! Per-step wall-clock is modelled as
+//!
+//! ```text
+//!   t = flops / (peak * u(batch) * thermal) + bytes / bandwidth
+//! ```
+//!
+//! where `u(b) = b / (b + sat_half)` is the utilization saturation curve.
+//! That curve is the key observation the paper's own numbers force: on
+//! the Reno 6 an 8x batch increase costs only 97 s -> 123 s, i.e. small
+//! batches leave the NEON units mostly idle.  GPUs have `sat_half ~= 1`
+//! (saturated immediately at LLM widths), which is also why the 3090 is
+//! ~1000x faster on OPT-1.3B (§4.4) while its peak-FLOPs advantage is
+//! only ~100x.
+//!
+//! MeZO steps are **two forwards** (the ±eps·z evaluations); Adam steps
+//! are forward + backward, with backward ≈ 2 forwards of FLOPs running
+//! at the (higher-utilization) training throughput.
+
+use super::spec::{DeviceSpec, ModelDims};
+use super::OptimizerFamily;
+
+/// Component timings for one step (seconds).
+#[derive(Debug, Clone)]
+pub struct StepTimeBreakdown {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    /// FLOPs executed in this step.
+    pub flops: f64,
+    /// Effective throughput achieved (GFLOP/s).
+    pub effective_gflops: f64,
+}
+
+impl StepTimeBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.memory_s
+    }
+}
+
+/// Compute model bound to one device spec.
+pub struct ComputeModel {
+    spec: DeviceSpec,
+    /// Seconds of sustained load so far (drives the thermal model).
+    sustained_s: f64,
+}
+
+impl ComputeModel {
+    pub fn new(spec: DeviceSpec) -> Self {
+        ComputeModel { spec, sustained_s: 0.0 }
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Utilization at a given batch size.
+    pub fn utilization(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        b / (b + self.spec.sat_half_batch)
+    }
+
+    /// Step FLOPs for an optimizer family.
+    pub fn step_flops(
+        &self,
+        dims: &ModelDims,
+        family: OptimizerFamily,
+        batch: usize,
+        seq: usize,
+    ) -> f64 {
+        let fwd = dims.forward_flops(batch, seq);
+        match family {
+            // two perturbed forward evaluations
+            OptimizerFamily::DerivativeFree => 2.0 * fwd,
+            // forward + backward (~2x forward)
+            OptimizerFamily::DerivativeBased => 3.0 * fwd,
+        }
+    }
+
+    /// Predicted step time at the current thermal state.
+    pub fn step_time(
+        &self,
+        dims: &ModelDims,
+        family: OptimizerFamily,
+        batch: usize,
+        seq: usize,
+    ) -> StepTimeBreakdown {
+        let flops = self.step_flops(dims, family, batch, seq);
+        let peak = match family {
+            OptimizerFamily::DerivativeFree => self.spec.fwd_gflops,
+            OptimizerFamily::DerivativeBased => self.spec.bwd_gflops,
+        } * 1e9;
+        let thermal = self.spec.thermal.factor(self.sustained_s);
+        let eff = peak * self.utilization(batch) * thermal;
+        let compute_s = flops / eff;
+
+        // streaming term: parameters are swept once per pass (plus state
+        // updates for Adam); activations traffic is folded into `eff`.
+        let passes = match family {
+            OptimizerFamily::DerivativeFree => 2.0,
+            OptimizerFamily::DerivativeBased => 6.0, // fwd+bwd+g+m+v+p
+        };
+        let bytes = dims.n_params() as f64 * dims.param_bytes as f64 * passes;
+        let memory_s = bytes / (self.spec.mem_bw_gbps * 1e9);
+
+        StepTimeBreakdown {
+            compute_s,
+            memory_s,
+            flops,
+            effective_gflops: eff / 1e9,
+        }
+    }
+
+    /// Advance the thermal clock by `dt` seconds of sustained load.
+    pub fn advance(&mut self, dt: f64) {
+        self.sustained_s += dt;
+    }
+
+    /// Cool-down (idle): thermal clock resets.
+    pub fn cool_down(&mut self) {
+        self.sustained_s = 0.0;
+    }
+
+    pub fn sustained_s(&self) -> f64 {
+        self.sustained_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::preset;
+
+    const SST2_SEQ: usize = 32; // SST-2 sentences are short
+
+    fn reno6() -> ComputeModel {
+        ComputeModel::new(preset("oppo-reno6").unwrap())
+    }
+
+    #[test]
+    fn table2_mezo_bs8_about_97s() {
+        let t = reno6().step_time(&ModelDims::roberta_large(),
+                                  OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        assert!((70.0..130.0).contains(&t.total_s()), "{}", t.total_s());
+    }
+
+    #[test]
+    fn table2_mezo_bs64_sublinear() {
+        // paper: 97 s -> ~123 s for 8x the batch
+        let m = reno6();
+        let t8 = m.step_time(&ModelDims::roberta_large(),
+                             OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        let t64 = m.step_time(&ModelDims::roberta_large(),
+                              OptimizerFamily::DerivativeFree, 64, SST2_SEQ);
+        let ratio = t64.total_s() / t8.total_s();
+        assert!((1.05..2.0).contains(&ratio), "ratio {}", ratio);
+    }
+
+    #[test]
+    fn table2_adam_bs8_about_74s() {
+        let t = reno6().step_time(&ModelDims::roberta_large(),
+                                  OptimizerFamily::DerivativeBased, 8, SST2_SEQ);
+        assert!((55.0..100.0).contains(&t.total_s()), "{}", t.total_s());
+    }
+
+    #[test]
+    fn sec44_opt13b_phone_vs_gpu_gap() {
+        // paper: ~1800 s/step on the phone vs 1.99 s on the 3090 (~1000x)
+        let phone = reno6().step_time(&ModelDims::opt_1_3b(),
+                                      OptimizerFamily::DerivativeFree, 16, 128);
+        let gpu = ComputeModel::new(preset("rtx3090-server").unwrap())
+            .step_time(&ModelDims::opt_1_3b(),
+                       OptimizerFamily::DerivativeFree, 16, 128);
+        assert!((900.0..3500.0).contains(&phone.total_s()),
+                "phone {}", phone.total_s());
+        assert!((0.5..5.0).contains(&gpu.total_s()), "gpu {}", gpu.total_s());
+        let gap = phone.total_s() / gpu.total_s();
+        assert!((300.0..3000.0).contains(&gap), "gap {}", gap);
+    }
+
+    #[test]
+    fn thermal_throttling_slows_steps() {
+        let mut m = reno6();
+        let cold = m.step_time(&ModelDims::roberta_large(),
+                               OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        m.advance(600.0);
+        let hot = m.step_time(&ModelDims::roberta_large(),
+                              OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        assert!(hot.total_s() > cold.total_s() * 1.2);
+        m.cool_down();
+        let cooled = m.step_time(&ModelDims::roberta_large(),
+                                 OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        assert!((cooled.total_s() - cold.total_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_saturates() {
+        let m = reno6();
+        assert!(m.utilization(8) < m.utilization(64));
+        assert!(m.utilization(100_000) > 0.99);
+    }
+}

@@ -1,0 +1,129 @@
+//! Energy model: what fine-tuning costs in battery — the constraint the
+//! paper's deployment story lives under (its overnight/charging policy
+//! exists exactly because of this).
+//!
+//! Simple but calibrated: sustained full-tilt compute on a Dimensity-900
+//! class SoC draws ~4 W package power; a Reno 6 battery holds 4300 mAh
+//! @3.85 V ≈ 16.6 Wh.  Energy per step = watts × step seconds, so a
+//! single RoBERTa-large MeZO step (~97 s) costs ~0.11 Wh ≈ 0.65% of the
+//! battery — i.e. an *unplugged* phone affords ~150 steps.  This is why
+//! the scheduler requires the charger, and it is an honest extension of
+//! the paper's analysis (the paper never quantifies energy).
+
+use super::spec::DeviceSpec;
+
+/// Per-device energy envelope.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Package power under sustained fine-tuning load (W).
+    pub active_watts: f64,
+    /// Idle draw while the job is paused (W).
+    pub idle_watts: f64,
+    /// Battery capacity (Wh); `f64::INFINITY` for mains-powered devices.
+    pub battery_wh: f64,
+}
+
+impl EnergyModel {
+    /// Calibrated envelope for a device preset.
+    pub fn for_spec(spec: &DeviceSpec) -> EnergyModel {
+        match spec.name.as_str() {
+            "oppo-reno6" => EnergyModel {
+                active_watts: 4.0,
+                idle_watts: 0.15,
+                battery_wh: 16.6, // 4300 mAh @ 3.85 V
+            },
+            "pixel-4a" => EnergyModel {
+                active_watts: 3.2,
+                idle_watts: 0.12,
+                battery_wh: 12.0,
+            },
+            "budget-phone-3gb" => EnergyModel {
+                active_watts: 2.5,
+                idle_watts: 0.10,
+                battery_wh: 11.5,
+            },
+            "raspberry-pi4" => EnergyModel {
+                active_watts: 6.5,
+                idle_watts: 2.5,
+                battery_wh: f64::INFINITY, // mains
+            },
+            "rtx3090-server" => EnergyModel {
+                active_watts: 420.0,
+                idle_watts: 60.0,
+                battery_wh: f64::INFINITY,
+            },
+            _ => EnergyModel {
+                active_watts: 65.0,
+                idle_watts: 10.0,
+                battery_wh: f64::INFINITY,
+            },
+        }
+    }
+
+    /// Energy for `seconds` of sustained fine-tuning (Wh).
+    pub fn active_wh(&self, seconds: f64) -> f64 {
+        self.active_watts * seconds / 3600.0
+    }
+
+    /// Battery fraction consumed by `seconds` of load (0..=1; 0 for
+    /// mains-powered devices).
+    pub fn battery_fraction(&self, seconds: f64) -> f64 {
+        if self.battery_wh.is_infinite() {
+            0.0
+        } else {
+            (self.active_wh(seconds) / self.battery_wh).min(1.0)
+        }
+    }
+
+    /// How many steps of `step_seconds` each fit in `budget_frac` of the
+    /// battery (the scheduler's unplugged allowance).
+    pub fn steps_within_budget(&self, step_seconds: f64,
+                               budget_frac: f64) -> u64 {
+        if self.battery_wh.is_infinite() {
+            return u64::MAX;
+        }
+        let budget_wh = self.battery_wh * budget_frac;
+        (budget_wh / self.active_wh(step_seconds).max(1e-12)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::preset;
+
+    #[test]
+    fn reno6_step_costs_fraction_of_battery() {
+        let e = EnergyModel::for_spec(&preset("oppo-reno6").unwrap());
+        // one ~97 s RoBERTa-large MeZO step
+        let frac = e.battery_fraction(97.0);
+        assert!((0.002..0.02).contains(&frac), "{frac}");
+        // an unplugged phone affords O(100) steps on 80% of the battery
+        let steps = e.steps_within_budget(97.0, 0.8);
+        assert!((50..500).contains(&(steps as i64)), "{steps}");
+    }
+
+    #[test]
+    fn mains_devices_are_unconstrained() {
+        let e = EnergyModel::for_spec(&preset("rtx3090-server").unwrap());
+        assert_eq!(e.battery_fraction(1e6), 0.0);
+        assert_eq!(e.steps_within_budget(10.0, 0.5), u64::MAX);
+    }
+
+    #[test]
+    fn energy_scales_linearly() {
+        let e = EnergyModel::for_spec(&preset("pixel-4a").unwrap());
+        assert!((e.active_wh(7200.0) - 2.0 * e.active_wh(3600.0)).abs()
+                < 1e-12);
+        assert!(e.active_wh(3600.0) > 0.0);
+    }
+
+    #[test]
+    fn every_preset_has_an_envelope() {
+        for name in crate::device::spec::preset_names() {
+            let e = EnergyModel::for_spec(&preset(name).unwrap());
+            assert!(e.active_watts > 0.0);
+            assert!(e.idle_watts < e.active_watts);
+        }
+    }
+}

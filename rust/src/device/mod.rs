@@ -1,0 +1,151 @@
+//! Mobile-device simulator — the substitution for the paper's OPPO Reno 6.
+//!
+//! The paper's evaluation is three measurements on a phone: a memory
+//! footprint per (model, optimizer, batch) cell (Table 1), a per-step
+//! wall-clock (Table 2), and OOM events when the footprint exceeds what
+//! Android will give one app.  All three are *functions of the workload
+//! shape*, which this module computes explicitly:
+//!
+//! * [`spec`]     — hardware envelopes ([`DeviceSpec`]) with calibrated
+//!                  presets: `oppo-reno6`, `rtx3090-server`, `pixel-4a`,
+//!                  `raspberry-pi4`, and `host` (this machine).
+//! * [`memory`]   — an allocation ledger with category tagging and OOM
+//!                  semantics, plus the analytical fine-tuning footprint
+//!                  model (params / grads / optimizer state / activations).
+//! * [`compute`]  — the step-time model (FLOPs / effective throughput,
+//!                  plus bandwidth term and thermal throttling).
+//!
+//! Calibration constants come from the paper's own numbers; DESIGN.md §2
+//! documents the fit and EXPERIMENTS.md compares model vs. paper for every
+//! cell the paper reports.
+
+pub mod compute;
+pub mod energy;
+pub mod memory;
+pub mod spec;
+
+pub use compute::{ComputeModel, StepTimeBreakdown};
+pub use energy::EnergyModel;
+pub use memory::{FootprintBreakdown, MemoryLedger, OomError, Category};
+pub use spec::{DeviceSpec, ModelDims};
+
+/// Which optimizer family a fine-tuning job uses — the axis the paper's
+/// whole evaluation pivots on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptimizerFamily {
+    /// Derivative-free (MeZO): no grads, no optimizer state, activations
+    /// not retained (inference-style forward, twice).
+    DerivativeFree,
+    /// Derivative-based (Adam): grads + 2x optimizer state + full
+    /// activation retention for backprop.
+    DerivativeBased,
+}
+
+impl OptimizerFamily {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptimizerFamily::DerivativeFree => "MeZo",
+            OptimizerFamily::DerivativeBased => "Adam",
+        }
+    }
+}
+
+/// A simulated device: spec + live memory ledger + compute model.
+///
+/// The tuner drives this alongside the real PJRT execution: every tensor
+/// the runtime allocates is mirrored into the ledger scaled to the
+/// *simulated* model dimensions, so a pocket-scale run on this host
+/// faithfully reproduces the OOM behaviour the paper saw at 355M/1.3B
+/// scale on the phone.
+pub struct Device {
+    pub spec: DeviceSpec,
+    pub ledger: MemoryLedger,
+    pub compute: ComputeModel,
+}
+
+impl Device {
+    pub fn new(spec: DeviceSpec) -> Self {
+        let budget = spec.app_memory_budget();
+        Device {
+            ledger: MemoryLedger::new(budget),
+            compute: ComputeModel::new(spec.clone()),
+            spec,
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        spec::preset(name).map(Device::new)
+    }
+
+    /// Admission check + ledger charge for a fine-tuning job.  Returns the
+    /// footprint breakdown, or the OOM error the phone would raise.
+    pub fn admit_finetune(
+        &mut self,
+        dims: &ModelDims,
+        family: OptimizerFamily,
+        batch: usize,
+        seq: usize,
+    ) -> Result<FootprintBreakdown, OomError> {
+        let fp = memory::finetune_footprint(dims, family, batch, seq);
+        self.ledger.charge_footprint(&fp)?;
+        Ok(fp)
+    }
+
+    /// Release a previously admitted job's memory.
+    pub fn release_finetune(
+        &mut self,
+        dims: &ModelDims,
+        family: OptimizerFamily,
+        batch: usize,
+        seq: usize,
+    ) {
+        let fp = memory::finetune_footprint(dims, family, batch, seq);
+        self.ledger.release_footprint(&fp);
+    }
+
+    /// Predicted per-step wall-clock for this device (seconds).
+    pub fn step_time(
+        &self,
+        dims: &ModelDims,
+        family: OptimizerFamily,
+        batch: usize,
+        seq: usize,
+    ) -> StepTimeBreakdown {
+        self.compute.step_time(dims, family, batch, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reno6_runs_mezo_but_ooms_adam_bs64() {
+        // The paper's headline OOM result, as an admission-control test.
+        let dims = ModelDims::roberta_large();
+        let mut dev = Device::preset("oppo-reno6").unwrap();
+        assert!(dev
+            .admit_finetune(&dims, OptimizerFamily::DerivativeFree, 64, 128)
+            .is_ok());
+        dev.release_finetune(&dims, OptimizerFamily::DerivativeFree, 64, 128);
+        assert!(dev
+            .admit_finetune(&dims, OptimizerFamily::DerivativeBased, 8, 128)
+            .is_ok());
+        dev.release_finetune(&dims, OptimizerFamily::DerivativeBased, 8, 128);
+        let err = dev
+            .admit_finetune(&dims, OptimizerFamily::DerivativeBased, 64, 128)
+            .unwrap_err();
+        assert!(err.requested > err.available);
+    }
+
+    #[test]
+    fn release_restores_budget() {
+        let dims = ModelDims::roberta_large();
+        let mut dev = Device::preset("oppo-reno6").unwrap();
+        let before = dev.ledger.in_use();
+        dev.admit_finetune(&dims, OptimizerFamily::DerivativeFree, 8, 128)
+            .unwrap();
+        dev.release_finetune(&dims, OptimizerFamily::DerivativeFree, 8, 128);
+        assert_eq!(dev.ledger.in_use(), before);
+    }
+}

@@ -1,0 +1,54 @@
+//! # PocketLLM — on-device LLM fine-tuning via derivative-free optimization
+//!
+//! Rust reproduction of *"PocketLLM: Enabling On-Device Fine-Tuning for
+//! Personalized LLMs"* (Peng, Fu & Wang, OPPO Research Institute, 2024),
+//! built as a three-layer stack:
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels + a JAX transformer
+//!   family, AOT-lowered once to HLO-text artifacts (`make artifacts`).
+//! * **Layer 3 (this crate)** — the on-device fine-tuning runtime: it loads
+//!   the artifacts through PJRT ([`runtime`]), drives MeZO / Adam step
+//!   programs ([`optim`], [`tuner`]), generates and tokenizes on-device
+//!   personal data ([`data`]), enforces a simulated smartphone's memory /
+//!   compute envelope ([`device`]), and schedules background fine-tuning
+//!   sessions the way a phone would ([`scheduler`], [`coordinator`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `pocketllm` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use pocketllm::prelude::*;
+//!
+//! let manifest = Manifest::load("artifacts/manifest.json").unwrap();
+//! let rt = Runtime::new(manifest).unwrap();
+//! let mut session = SessionBuilder::new(&rt, "pocket-tiny")
+//!     .optimizer(OptimizerKind::MeZo)
+//!     .batch_size(4)
+//!     .build()
+//!     .unwrap();
+//! let stats = session.run_steps(10).unwrap();
+//! println!("final loss {:.4}", stats.last_loss);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod optim;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod telemetry;
+pub mod tuner;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::data::batcher::{Batch, Batcher};
+    pub use crate::data::task::TaskKind;
+    pub use crate::device::{Device, DeviceSpec, OptimizerFamily};
+    pub use crate::optim::OptimizerKind;
+    pub use crate::runtime::{Manifest, Runtime};
+    pub use crate::tuner::session::{SessionBuilder, SessionStats};
+}

@@ -1,0 +1,356 @@
+//! `pocketllm` — the on-device fine-tuning launcher.
+//!
+//! Subcommands:
+//! ```text
+//!   finetune   run a fine-tuning session (the paper's core loop)
+//!   eval       evaluate a model / checkpoint on a task's held-out split
+//!   report     regenerate the paper's tables & figures (fig1, table1,
+//!              table2, opt13b, ablation, sweep, frontier, all)
+//!   daemon     run the policy-gated personalization coordinator over a
+//!              simulated day of phone state
+//!   devices    list device presets
+//!   artifacts  list AOT programs in the manifest
+//! ```
+//!
+//! Python never runs here: all compute is AOT-compiled HLO executed via
+//! PJRT.  Run `make artifacts` first.
+
+use anyhow::{bail, Context, Result};
+
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+use pocketllm::data::task::TaskKind;
+use pocketllm::device::Device;
+use pocketllm::optim::{OptimizerKind, Schedule};
+use pocketllm::report;
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::scheduler::Policy;
+use pocketllm::tuner::checkpoint::Checkpoint;
+use pocketllm::tuner::session::SessionBuilder;
+use pocketllm::util::args::Args;
+
+const VALUE_FLAGS: &[&str] = &[
+    "model", "task", "optimizer", "steps", "batch", "lr", "eps", "seed",
+    "device", "artifacts", "csv", "checkpoint", "schedule", "windows",
+    "report-steps", "trace-seed", "steps-per-window",
+];
+
+fn usage() -> &'static str {
+    "pocketllm — on-device LLM fine-tuning via derivative-free optimization
+
+USAGE: pocketllm <finetune|eval|report|daemon|devices|artifacts> [flags]
+
+COMMON FLAGS
+  --artifacts DIR    artifact directory (default: artifacts)
+  --model NAME       model config (default: pocket-roberta)
+  --task NAME        sst2 | boolq | rte | chatlm (default: sst2)
+  --optimizer NAME   mezo | adam (default: mezo)
+  --batch N          batch size (default: first available artifact)
+  --steps N          optimization steps (default: 30)
+  --lr F | --schedule S   learning rate (const:X, linear:A:B:N, cosine:..)
+  --eps F            MeZO perturbation scale (default: 1e-3)
+  --seed N           master seed (default: 42)
+  --device NAME      simulate a device envelope (oppo-reno6, pixel-4a, ...)
+  --csv PATH         dump step metrics as CSV
+  --checkpoint DIR   save a checkpoint at the end (MeZO sessions)
+
+REPORT
+  pocketllm report [fig1|table1|table2|opt13b|ablation|sweep|frontier|all]
+                   [--report-steps N]
+
+DAEMON
+  pocketllm daemon [--steps N] [--windows N] [--steps-per-window N]
+                   [--trace-seed N]
+"
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(format!("{dir}/manifest.json"))
+        .with_context(|| format!("loading {dir}/manifest.json — did you \
+                                  run `make artifacts`?"))?;
+    Runtime::new(manifest)
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, VALUE_FLAGS)?;
+    match args.subcommand.as_deref() {
+        Some("finetune") => cmd_finetune(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("report") => cmd_report(&args),
+        Some("daemon") => cmd_daemon(&args),
+        Some("devices") => {
+            println!("{}", report::devices().render());
+            Ok(())
+        }
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}'\n\n{}", usage()),
+    }
+}
+
+fn parse_schedule(args: &Args) -> Result<Option<Schedule>> {
+    if let Some(s) = args.flag("schedule") {
+        return Ok(Some(
+            Schedule::parse(s).context("bad --schedule (e.g. const:1e-3)")?,
+        ));
+    }
+    if args.has("lr") {
+        return Ok(Some(Schedule::Constant(args.get_f64("lr", 1e-3)?)));
+    }
+    Ok(None)
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get_or("model", "pocket-roberta");
+    let optimizer = OptimizerKind::parse(args.get_or("optimizer", "mezo"))
+        .context("bad --optimizer (mezo|adam)")?;
+    let task = TaskKind::parse(args.get_or("task", "sst2"))
+        .context("bad --task (sst2|boolq|rte|chatlm)")?;
+    let steps = args.get_u64("steps", 30)?;
+
+    if optimizer == OptimizerKind::Adam && args.has("checkpoint") {
+        bail!("--checkpoint currently supports MeZO sessions (an Adam \
+               checkpoint is 3x params on disk; the asymmetry is the \
+               paper's point)");
+    }
+
+    let mut builder = SessionBuilder::new(&rt, model)
+        .optimizer(optimizer)
+        .task(task)
+        .batch_size(args.get_usize("batch", 0)?)
+        .eps(args.get_f64("eps", 1e-3)?)
+        .seed(args.get_u64("seed", 42)?);
+    if let Some(s) = parse_schedule(args)? {
+        builder = builder.lr(s);
+    }
+    if let Some(dev) = args.flag("device") {
+        let device =
+            Device::preset(dev).context("unknown --device preset")?;
+        println!(
+            "device: {} (app budget {})",
+            dev,
+            pocketllm::util::bytes::fmt_gb(device.ledger.budget())
+        );
+        builder = builder.device(device);
+    }
+
+    let mut session = builder.build().map_err(|e| {
+        anyhow::anyhow!("session admission failed: {e:#}")
+    })?;
+    println!(
+        "fine-tuning {model} ({} params) with {} on {}, batch {}, {} steps",
+        session.cfg.n_params,
+        optimizer.label(),
+        task.label(),
+        session.batch,
+        steps
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut last = f64::NAN;
+    for chunk_start in (0..steps).step_by(10) {
+        let n = 10.min(steps - chunk_start);
+        let stats = session.run_steps(n)?;
+        last = stats.last_loss;
+        println!(
+            "step {:>5}  loss {:.4}  host {:.0} ms/step  sim {:.1} s/step",
+            session.step,
+            stats.last_loss,
+            stats.mean_host_step_s * 1e3,
+            stats.mean_sim_step_s
+        );
+    }
+    println!("done in {:.1}s; final loss {:.4}", t0.elapsed().as_secs_f64(),
+             last);
+    if let Some(peak) = pocketllm::telemetry::bench::peak_rss_bytes() {
+        // machine-readable for the table1 bench (subprocess isolation)
+        println!("host peak RSS bytes: {peak}");
+    }
+
+    if let Some(curve) = session.metrics.get("loss") {
+        println!("loss  {}", report::sparkline(&curve.points, 60));
+    }
+    if let Some(dev) = session.device.as_ref() {
+        println!(
+            "simulated peak memory: {}",
+            pocketllm::util::bytes::fmt_gb(dev.ledger.peak())
+        );
+    }
+    if let Some(path) = args.flag("csv") {
+        session.metrics.save_csv(std::path::Path::new(path))?;
+        println!("metrics -> {path}");
+    }
+    if let Some(dir) = args.flag("checkpoint") {
+        Checkpoint::save(
+            dir,
+            model,
+            optimizer,
+            session.step,
+            args.get_u64("seed", 42)?,
+            last,
+            &session.params,
+            None,
+        )?;
+        println!("checkpoint -> {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get_or("model", "pocket-roberta");
+    let task = TaskKind::parse(args.get_or("task", "sst2"))
+        .context("bad --task")?;
+    let mut session = SessionBuilder::new(&rt, model)
+        .task(task)
+        .seed(args.get_u64("seed", 42)?)
+        .build()?;
+    if let Some(dir) = args.flag("checkpoint") {
+        let ck = Checkpoint::open(dir)?;
+        session.params = ck.load_params(&session.cfg)?;
+        println!("loaded checkpoint @ step {}", ck.step);
+    }
+    let loss = session.eval_loss()?;
+    println!("eval loss: {loss:.4}");
+    if !session.cfg.is_decoder() {
+        println!("eval accuracy: {:.3}", session.eval_accuracy()?);
+    } else {
+        println!("perplexity: {:.2}",
+                 pocketllm::tuner::eval::perplexity(loss));
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let steps = args.get_u64("report-steps", 60)?;
+    let wants = |k: &str| which == k || which == "all";
+    let mut known = false;
+
+    if wants("table1") {
+        known = true;
+        println!("{}", report::table1().render());
+    }
+    if wants("table2") {
+        known = true;
+        println!("{}", report::table2().render());
+    }
+    if wants("opt13b") {
+        known = true;
+        println!("{}", report::opt13b().render());
+    }
+    if wants("ablation") {
+        known = true;
+        println!("{}", report::ablation_memory().render());
+    }
+    if wants("sweep") {
+        known = true;
+        println!("{}",
+                 report::memory_sweep(&[1, 2, 4, 8, 16, 32, 64, 128])
+                     .render());
+    }
+    if wants("frontier") {
+        known = true;
+        println!("{}", report::oom_frontier().render());
+    }
+    if wants("energy") {
+        known = true;
+        println!("{}", report::energy_table().render());
+    }
+    if wants("fig1") {
+        known = true;
+        let rt = open_runtime(args)?;
+        let model = args.get_or("model", "pocket-roberta");
+        println!("running Fig. 1 ({steps} steps x 2 optimizers) ...");
+        let (table, log) = report::fig1(&rt, model, steps, 1e-4, 1e-3)?;
+        println!("{}", table.render());
+        for name in ["mezo.loss", "adam.loss"] {
+            if let Some(s) = log.get(name) {
+                println!("{name:<10} {}", report::sparkline(&s.points, 60));
+            }
+        }
+        if let Some(path) = args.flag("csv") {
+            log.save_csv(std::path::Path::new(path))?;
+            println!("fig1 series -> {path}");
+        }
+    }
+    if !known {
+        bail!("unknown report '{which}' (fig1|table1|table2|opt13b|\
+               ablation|sweep|frontier|all)");
+    }
+    Ok(())
+}
+
+fn cmd_daemon(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get_or("model", "pocket-tiny");
+    let steps = args.get_u64("steps", 24)?;
+    let cfg = CoordinatorConfig {
+        policy: Policy::overnight(),
+        steps_per_window: args.get_u64("steps-per-window", 4)?,
+        max_windows: args.get_usize("windows", 2000)?,
+        trace_seed: args.get_u64("trace-seed", 7)?,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(&rt, cfg);
+    let job = JobSpec::new(
+        model,
+        TaskKind::parse(args.get_or("task", "sst2")).context("bad task")?,
+        OptimizerKind::parse(args.get_or("optimizer", "mezo"))
+            .context("bad optimizer")?,
+    )
+    .steps(steps);
+    println!("daemon: running {} for {} steps under overnight policy",
+             model, steps);
+    let outcome = coord.run_job(0, &job)?;
+    println!(
+        "outcome: {:?} with {} after {} steps (windows used {}, denied {})",
+        outcome.status,
+        outcome.optimizer.label(),
+        outcome.steps_done,
+        outcome.windows_used,
+        outcome.windows_denied
+    );
+    println!("final loss: {:.4}", outcome.final_loss);
+    let mut denies = std::collections::BTreeMap::new();
+    for e in &coord.events {
+        if let pocketllm::coordinator::Event::Denied { reason, .. } = e {
+            *denies.entry(*reason).or_insert(0usize) += 1;
+        }
+    }
+    for (reason, count) in denies {
+        println!("  denied {count:>4}x: {reason}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let mut t = pocketllm::telemetry::Table::new("AOT programs")
+        .header(&["config", "kind", "batch", "file", "inputs", "outputs"]);
+    for p in &rt.manifest.programs {
+        t.row(&[
+            p.config.clone(),
+            p.kind.clone(),
+            p.batch.to_string(),
+            p.file.clone(),
+            p.inputs.len().to_string(),
+            p.outputs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("platform: {}", rt.platform());
+    Ok(())
+}

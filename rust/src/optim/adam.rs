@@ -1,0 +1,126 @@
+//! Adam driver: the derivative-based comparator's host-side state.
+//!
+//! Carries the two parameter-sized moment tensors (m, v) between steps —
+//! exactly the memory the paper's Table 1 charges Adam for.  The
+//! adam_step artifact consumes and returns them alongside the params.
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::schedule::Schedule;
+use crate::runtime::literal::f32_1;
+use crate::runtime::manifest::ConfigInfo;
+use crate::runtime::state::ModelState;
+
+#[derive(Debug, Clone)]
+pub struct AdamConfig {
+    pub lr: Schedule,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: Schedule::Constant(1e-3) }
+    }
+}
+
+/// Live Adam driver: step counter + m/v state tensors.
+pub struct AdamDriver {
+    pub cfg: AdamConfig,
+    /// 1-based inside the artifact (bias correction); `step` counts
+    /// completed steps.
+    pub step: u64,
+    pub m: ModelState,
+    pub v: ModelState,
+}
+
+impl AdamDriver {
+    pub fn new(cfg: AdamConfig, model_cfg: &ConfigInfo) -> Result<Self> {
+        Ok(AdamDriver {
+            cfg,
+            step: 0,
+            m: ModelState::zeros_like(model_cfg)?,
+            v: ModelState::zeros_like(model_cfg)?,
+        })
+    }
+
+    pub fn current_lr(&self) -> f64 {
+        self.cfg.lr.at(self.step)
+    }
+
+    /// Scalars appended after (params, m, v, ids, mask, labels): t, lr.
+    pub fn scalar_inputs(&self) -> Result<[Literal; 2]> {
+        Ok([
+            f32_1((self.step + 1) as f32)?, // 1-based t
+            f32_1(self.current_lr() as f32)?,
+        ])
+    }
+
+    /// Consume the artifact's returned m/v tensors.
+    pub fn replace_state(
+        &mut self,
+        m: Vec<Literal>,
+        v: Vec<Literal>,
+    ) -> Result<()> {
+        self.m.replace(m)?;
+        self.v.replace(v)?;
+        Ok(())
+    }
+
+    pub fn advance(&mut self) {
+        self.step += 1;
+    }
+
+    /// Parameter-sized tensor sets carried beyond the params themselves.
+    pub const EXTRA_PARAM_SETS: usize = 2;
+
+    /// Checkpoint cost of the optimizer state in bytes.
+    pub fn state_bytes(&self) -> u64 {
+        self.m.checkpoint_bytes() + self.v.checkpoint_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpecInfo;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "t".into(),
+            kind: "encoder".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 4,
+            max_seq: 4,
+            n_classes: 2,
+            use_pallas: false,
+            n_params: 6,
+            params: vec![ParamSpecInfo {
+                name: "w".into(),
+                shape: vec![2, 3],
+                offset: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn init_state_is_zero_and_sized() {
+        let d = AdamDriver::new(AdamConfig::default(), &tiny_cfg()).unwrap();
+        assert_eq!(d.m.l2_norm().unwrap(), 0.0);
+        assert_eq!(d.v.l2_norm().unwrap(), 0.0);
+        assert_eq!(d.state_bytes(), 2 * 6 * 4);
+        assert_eq!(AdamDriver::EXTRA_PARAM_SETS, 2);
+    }
+
+    #[test]
+    fn t_is_one_based() {
+        let mut d = AdamDriver::new(AdamConfig::default(), &tiny_cfg()).unwrap();
+        let [t, _lr] = d.scalar_inputs().unwrap();
+        assert_eq!(t.get_first_element::<f32>().unwrap(), 1.0);
+        d.advance();
+        let [t, _lr] = d.scalar_inputs().unwrap();
+        assert_eq!(t.get_first_element::<f32>().unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! MeZO driver: host-side orchestration of the fused mezo_step artifact.
+//!
+//! The remarkable property this module makes concrete: **the optimizer
+//! state is two integers.**  `(master_seed, step)` deterministically
+//! yields the per-step perturbation seed; the z tensor, the projected
+//! gradient, and the update all live transiently inside one HLO program
+//! execution.  Checkpointing MeZO therefore costs 12 bytes beyond the
+//! parameters, versus 2x parameters for Adam — the paper's Table 1, in
+//! struct form.
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::schedule::Schedule;
+use crate::runtime::literal::{f32_1, u32_1};
+use crate::util::rng::mezo_step_seed;
+
+/// Hyper-parameters of a MeZO run.
+#[derive(Debug, Clone)]
+pub struct MezoConfig {
+    pub lr: Schedule,
+    /// SPSA perturbation scale (the paper/MeZO default: 1e-3).
+    pub eps: f64,
+    /// Master seed for the per-step seed schedule.
+    pub master_seed: u64,
+}
+
+impl Default for MezoConfig {
+    fn default() -> Self {
+        MezoConfig {
+            lr: Schedule::Constant(1e-3),
+            eps: 1e-3,
+            master_seed: 0x9E3779B9,
+        }
+    }
+}
+
+/// Live driver; owns nothing but the step counter.
+#[derive(Debug, Clone)]
+pub struct MezoDriver {
+    pub cfg: MezoConfig,
+    pub step: u64,
+}
+
+impl MezoDriver {
+    pub fn new(cfg: MezoConfig) -> Self {
+        MezoDriver { cfg, step: 0 }
+    }
+
+    /// Seed fed to the artifact at the current step.
+    pub fn current_seed(&self) -> u32 {
+        mezo_step_seed(self.cfg.master_seed, self.step)
+    }
+
+    pub fn current_lr(&self) -> f64 {
+        self.cfg.lr.at(self.step)
+    }
+
+    /// The three scalar literals appended after (params, ids, mask,
+    /// labels) in the mezo_step calling convention: seed, lr, eps.
+    pub fn scalar_inputs(&self) -> Result<[Literal; 3]> {
+        Ok([
+            u32_1(self.current_seed())?,
+            f32_1(self.current_lr() as f32)?,
+            f32_1(self.cfg.eps as f32)?,
+        ])
+    }
+
+    pub fn advance(&mut self) {
+        self.step += 1;
+    }
+
+    /// Resume from a checkpoint: state is literally (master_seed, step).
+    pub fn resume(cfg: MezoConfig, step: u64) -> Self {
+        MezoDriver { cfg, step }
+    }
+
+    /// Bytes of optimizer state this driver adds to a checkpoint.
+    pub const STATE_BYTES: u64 = 12; // master_seed u64 + step padded
+
+    /// Extra parameter-sized tensors MeZO carries (none — the point).
+    pub const EXTRA_PARAM_SETS: usize = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_sequence_deterministic_and_resumable() {
+        let cfg = MezoConfig::default();
+        let mut a = MezoDriver::new(cfg.clone());
+        let seeds: Vec<u32> = (0..5)
+            .map(|_| {
+                let s = a.current_seed();
+                a.advance();
+                s
+            })
+            .collect();
+        // resume at step 3 reproduces the tail of the sequence
+        let b = MezoDriver::resume(cfg, 3);
+        assert_eq!(b.current_seed(), seeds[3]);
+        // all seeds distinct (whp)
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+    }
+
+    #[test]
+    fn lr_schedule_applies() {
+        let cfg = MezoConfig {
+            lr: Schedule::Linear { start: 1.0, end: 0.0, steps: 10 },
+            ..Default::default()
+        };
+        let mut d = MezoDriver::new(cfg);
+        assert_eq!(d.current_lr(), 1.0);
+        for _ in 0..5 {
+            d.advance();
+        }
+        assert!((d.current_lr() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_inputs_shapes() {
+        let d = MezoDriver::new(MezoConfig::default());
+        let [seed, lr, eps] = d.scalar_inputs().unwrap();
+        assert_eq!(seed.element_count(), 1);
+        assert_eq!(lr.element_count(), 1);
+        assert_eq!(eps.element_count(), 1);
+    }
+
+    #[test]
+    fn zero_extra_state() {
+        assert_eq!(MezoDriver::EXTRA_PARAM_SETS, 0);
+        assert!(MezoDriver::STATE_BYTES < 64);
+    }
+}

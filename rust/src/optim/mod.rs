@@ -1,0 +1,81 @@
+//! Optimizer orchestration — the host-side half of MeZO and Adam.
+//!
+//! The numerical updates happen inside the AOT step programs; what lives
+//! here is everything the paper's system needs *around* them:
+//!
+//! * [`mezo`] — the seed schedule (the entire "optimizer state" of MeZO
+//!   is a `(master_seed, step)` pair!), eps/lr handling, and the
+//!   projected-gradient bookkeeping,
+//! * [`adam`] — the m/v state tensors and the bias-correction step
+//!   counter,
+//! * [`schedule`] — learning-rate schedules shared by both.
+
+pub mod adam;
+pub mod mezo;
+pub mod schedule;
+
+pub use adam::AdamDriver;
+pub use mezo::MezoDriver;
+pub use schedule::Schedule;
+
+use crate::device::OptimizerFamily;
+
+/// User-facing optimizer selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptimizerKind {
+    MeZo,
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mezo" | "zo" | "derivative-free" => Some(OptimizerKind::MeZo),
+            "adam" | "derivative-based" => Some(OptimizerKind::Adam),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptimizerKind::MeZo => "mezo",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+
+    /// Which artifact kind this optimizer executes.
+    pub fn program_kind(&self) -> &'static str {
+        match self {
+            OptimizerKind::MeZo => "mezo_step",
+            OptimizerKind::Adam => "adam_step",
+        }
+    }
+
+    pub fn family(&self) -> OptimizerFamily {
+        match self {
+            OptimizerKind::MeZo => OptimizerFamily::DerivativeFree,
+            OptimizerKind::Adam => OptimizerFamily::DerivativeBased,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(OptimizerKind::parse("MeZo"), Some(OptimizerKind::MeZo));
+        assert_eq!(OptimizerKind::parse("zo"), Some(OptimizerKind::MeZo));
+        assert_eq!(OptimizerKind::parse("adam"), Some(OptimizerKind::Adam));
+        assert_eq!(OptimizerKind::parse("sgd"), None);
+    }
+
+    #[test]
+    fn families() {
+        assert_eq!(OptimizerKind::MeZo.family(),
+                   OptimizerFamily::DerivativeFree);
+        assert_eq!(OptimizerKind::Adam.family(),
+                   OptimizerFamily::DerivativeBased);
+    }
+}

@@ -1,0 +1,109 @@
+//! Learning-rate schedules.  MeZO typically wants a constant or gently
+//! decaying rate (the SPSA estimate is noisy; aggressive decay stalls
+//! it); Adam commonly uses linear warmup+decay for fine-tuning.
+
+/// A learning-rate schedule: maps step -> lr.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant(f64),
+    /// Linear from `start` to `end` over `steps`, then flat at `end`.
+    Linear { start: f64, end: f64, steps: u64 },
+    /// Linear warmup to `peak` over `warmup` steps, then cosine decay
+    /// to `floor` by `total` steps.
+    WarmupCosine { peak: f64, floor: f64, warmup: u64, total: u64 },
+}
+
+impl Schedule {
+    pub fn at(&self, step: u64) -> f64 {
+        match *self {
+            Schedule::Constant(lr) => lr,
+            Schedule::Linear { start, end, steps } => {
+                if steps == 0 || step >= steps {
+                    end
+                } else {
+                    start + (end - start) * step as f64 / steps as f64
+                }
+            }
+            Schedule::WarmupCosine { peak, floor, warmup, total } => {
+                if warmup > 0 && step < warmup {
+                    peak * (step as f64 + 1.0) / warmup as f64
+                } else if step >= total {
+                    floor
+                } else {
+                    let span = (total - warmup).max(1) as f64;
+                    let p = (step - warmup) as f64 / span;
+                    floor
+                        + 0.5 * (peak - floor)
+                            * (1.0 + (std::f64::consts::PI * p).cos())
+                }
+            }
+        }
+    }
+
+    /// Parse "const:1e-3", "linear:1e-3:1e-5:1000",
+    /// "cosine:1e-3:1e-6:100:1000".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["const", lr] => Some(Schedule::Constant(lr.parse().ok()?)),
+            ["linear", a, b, n] => Some(Schedule::Linear {
+                start: a.parse().ok()?,
+                end: b.parse().ok()?,
+                steps: n.parse().ok()?,
+            }),
+            ["cosine", p, f, w, t] => Some(Schedule::WarmupCosine {
+                peak: p.parse().ok()?,
+                floor: f.parse().ok()?,
+                warmup: w.parse().ok()?,
+                total: t.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        assert_eq!(Schedule::Constant(0.1).at(0), 0.1);
+        assert_eq!(Schedule::Constant(0.1).at(10_000), 0.1);
+    }
+
+    #[test]
+    fn linear_interpolates_and_clamps() {
+        let s = Schedule::Linear { start: 1.0, end: 0.0, steps: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(5) - 0.5).abs() < 1e-12);
+        assert_eq!(s.at(10), 0.0);
+        assert_eq!(s.at(99), 0.0);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = Schedule::WarmupCosine {
+            peak: 1.0, floor: 0.0, warmup: 10, total: 110,
+        };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(60) < 1.0 && s.at(60) > 0.0);
+        assert_eq!(s.at(110), 0.0);
+        // monotone decreasing after warmup
+        assert!(s.at(20) > s.at(50));
+        assert!(s.at(50) > s.at(100));
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Schedule::parse("const:0.5"),
+                   Some(Schedule::Constant(0.5)));
+        assert_eq!(
+            Schedule::parse("linear:1:0:5"),
+            Some(Schedule::Linear { start: 1.0, end: 0.0, steps: 5 })
+        );
+        assert!(Schedule::parse("cosine:1:0:10:100").is_some());
+        assert_eq!(Schedule::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,417 @@
+//! Paper-reproduction reports: each function regenerates one table or
+//! figure from the PocketLLM evaluation, printing paper value vs. this
+//! system's value side by side.  Shared by `pocketllm report`, the bench
+//! harness, and EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::data::task::TaskKind;
+use crate::device::{memory, spec::preset, ComputeModel, ModelDims,
+                    OptimizerFamily};
+use crate::optim::OptimizerKind;
+use crate::runtime::Runtime;
+use crate::telemetry::{MetricLog, Table};
+use crate::tuner::session::SessionBuilder;
+use crate::util::bytes::fmt_gb;
+
+/// SST-2 sentences are short; the paper's RoBERTa-large rows are modelled
+/// at this sequence length (see DESIGN.md §2 calibration).
+pub const SST2_SEQ: usize = 32;
+/// The OPT-1.3B SuperGLUE scenario (MeZO reference defaults).
+pub const OPT_SEQ: usize = 128;
+pub const OPT_BATCH: usize = 16;
+
+/// Paper Table 1 — memory for fine-tuning RoBERTa-large on the Reno 6.
+/// Returns the rendered table; rows are (paper measurement, our model).
+pub fn table1() -> Table {
+    let dims = ModelDims::roberta_large();
+    let budget = preset("oppo-reno6").unwrap().app_memory_budget();
+    let mut t = Table::new(
+        "Table 1 — RoBERTa-large fine-tuning memory on OPPO Reno 6 (12 GB)",
+    )
+    .header(&["batch", "optimizer", "paper", "model", "verdict"]);
+
+    let cell = |family: OptimizerFamily, batch: usize| -> (String, String) {
+        let fp = memory::finetune_footprint(&dims, family, batch, SST2_SEQ);
+        if fp.total() > budget {
+            ("OOM".into(), format!("OOM ({} > {})", fmt_gb(fp.total()),
+                                   fmt_gb(budget)))
+        } else {
+            (fmt_gb(fp.total()), "fits".into())
+        }
+    };
+
+    let rows: [(usize, OptimizerFamily, &str); 4] = [
+        (8, OptimizerFamily::DerivativeFree, "4.8 / 4.6 GB"),
+        (8, OptimizerFamily::DerivativeBased, "6.5 / 6.7 GB"),
+        (64, OptimizerFamily::DerivativeFree, "4.0 / 4.5 GB"),
+        (64, OptimizerFamily::DerivativeBased, "OOM"),
+    ];
+    for (batch, family, paper) in rows {
+        let (model, verdict) = cell(family, batch);
+        t.row(&[
+            batch.to_string(),
+            family.label().to_string(),
+            paper.to_string(),
+            model,
+            verdict,
+        ]);
+    }
+    t
+}
+
+/// Paper Table 2 — per-step wall-clock for RoBERTa-large on the Reno 6.
+pub fn table2() -> Table {
+    let dims = ModelDims::roberta_large();
+    let budget = preset("oppo-reno6").unwrap().app_memory_budget();
+    let cm = ComputeModel::new(preset("oppo-reno6").unwrap());
+    let mut t = Table::new(
+        "Table 2 — RoBERTa-large per-step wall-clock on OPPO Reno 6 (s)",
+    )
+    .header(&["batch", "optimizer", "paper", "model"]);
+
+    let rows: [(usize, OptimizerFamily, &str); 4] = [
+        (8, OptimizerFamily::DerivativeFree, "97 / 83"),
+        (8, OptimizerFamily::DerivativeBased, "74 / 85"),
+        (64, OptimizerFamily::DerivativeFree, "123 / 121"),
+        (64, OptimizerFamily::DerivativeBased, "OOM"),
+    ];
+    for (batch, family, paper) in rows {
+        let fp = memory::finetune_footprint(&dims, family, batch, SST2_SEQ);
+        let model = if fp.total() > budget {
+            "OOM".to_string()
+        } else {
+            format!("{:.0}", cm.step_time(&dims, family, batch,
+                                          SST2_SEQ).total_s())
+        };
+        t.row(&[
+            batch.to_string(),
+            family.label().to_string(),
+            paper.to_string(),
+            model,
+        ]);
+    }
+    t
+}
+
+/// §4.3/§4.4 — OPT-1.3B on the phone, and the phone-vs-GPU gap.
+pub fn opt13b() -> Table {
+    let dims = ModelDims::opt_1_3b();
+    let phone = ComputeModel::new(preset("oppo-reno6").unwrap());
+    let gpu = ComputeModel::new(preset("rtx3090-server").unwrap());
+    let fp = memory::finetune_footprint(
+        &dims, OptimizerFamily::DerivativeFree, OPT_BATCH, OPT_SEQ);
+    let t_phone = phone
+        .step_time(&dims, OptimizerFamily::DerivativeFree, OPT_BATCH, OPT_SEQ)
+        .total_s();
+    let t_gpu = gpu
+        .step_time(&dims, OptimizerFamily::DerivativeFree, OPT_BATCH, OPT_SEQ)
+        .total_s();
+
+    let mut t = Table::new("§4.3/4.4 — OPT-1.3B with MeZO (fp16)")
+        .header(&["quantity", "paper", "model"]);
+    t.row(&[
+        "memory on Reno 6".into(),
+        "≈6.5 GB".into(),
+        fmt_gb(fp.total()),
+    ]);
+    t.row(&[
+        "fits 12 GB phone".into(),
+        "yes".into(),
+        if fp.total() < preset("oppo-reno6").unwrap().app_memory_budget() {
+            "yes".into()
+        } else {
+            "no".into()
+        },
+    ]);
+    t.row(&[
+        "s/step on Reno 6".into(),
+        "≈1800".into(),
+        format!("{:.0}", t_phone),
+    ]);
+    t.row(&[
+        "s/step on RTX 3090".into(),
+        "1.99".into(),
+        format!("{:.2}", t_gpu),
+    ]);
+    t.row(&[
+        "phone/GPU gap".into(),
+        "≈1000x".into(),
+        format!("{:.0}x", t_phone / t_gpu),
+    ]);
+    t
+}
+
+/// Memory-model ablation: what each MeZO ingredient buys (stored-z vs
+/// regenerated-z, no-autograd activations) — the design-choice ablation
+/// DESIGN.md calls out.
+pub fn ablation_memory() -> Table {
+    let dims = ModelDims::roberta_large();
+    let p_bytes = dims.n_params() * 4;
+    let mezo = memory::finetune_footprint(
+        &dims, OptimizerFamily::DerivativeFree, 64, SST2_SEQ);
+    let adam = memory::finetune_footprint(
+        &dims, OptimizerFamily::DerivativeBased, 64, SST2_SEQ);
+
+    let mut t = Table::new(
+        "Ablation — where MeZO's memory win comes from (RoBERTa-large, bs 64)",
+    )
+    .header(&["variant", "total", "delta vs full MeZO"]);
+    let full = mezo.total();
+    t.row(&["MeZO (regenerated z)".into(), fmt_gb(full), "—".into()]);
+    t.row(&[
+        "MeZO + stored z".into(),
+        fmt_gb(full + p_bytes),
+        format!("+{}", fmt_gb(p_bytes)),
+    ]);
+    t.row(&[
+        "MeZO + stored z + grads".into(),
+        fmt_gb(full + 2 * p_bytes),
+        format!("+{}", fmt_gb(2 * p_bytes)),
+    ]);
+    t.row(&[
+        "Adam (full derivative-based)".into(),
+        fmt_gb(adam.total()),
+        format!("+{}", fmt_gb(adam.total() - full)),
+    ]);
+    let accum = memory::finetune_footprint_grad_accum(&dims, 64, SST2_SEQ, 8);
+    t.row(&[
+        "Adam + grad-accum (micro-bs 8)".into(),
+        fmt_gb(accum.total()),
+        format!("+{}", fmt_gb(accum.total().saturating_sub(full))),
+    ]);
+    t
+}
+
+/// Energy budget per device — an extension of the paper's analysis (§6
+/// never quantifies battery cost, but the overnight policy exists
+/// because of it).
+pub fn energy_table() -> Table {
+    use crate::device::EnergyModel;
+    let dims = ModelDims::roberta_large();
+    let mut t = Table::new(
+        "Energy — RoBERTa-large MeZO fine-tuning (bs 8) per device",
+    )
+    .header(&["device", "s/step", "Wh/step", "% battery/step",
+              "steps on 80% battery"]);
+    for name in crate::device::spec::preset_names() {
+        let spec = preset(name).unwrap();
+        let e = EnergyModel::for_spec(&spec);
+        let s = ComputeModel::new(spec)
+            .step_time(&dims, OptimizerFamily::DerivativeFree, 8, SST2_SEQ)
+            .total_s();
+        let steps = e.steps_within_budget(s, 0.8);
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", s),
+            format!("{:.3}", e.active_wh(s)),
+            if e.battery_wh.is_infinite() {
+                "mains".into()
+            } else {
+                format!("{:.2}%", 100.0 * e.battery_fraction(s))
+            },
+            if steps == u64::MAX {
+                "∞".into()
+            } else {
+                steps.to_string()
+            },
+        ]);
+    }
+    t
+}
+
+/// Fig. 1 — training loss, MeZO vs Adam, actually trained on this host
+/// over the pocket-scale model.  Returns (table, metric log with
+/// `mezo.loss` / `adam.loss` series).
+pub fn fig1(
+    rt: &Runtime,
+    config: &str,
+    steps: u64,
+    mezo_lr: f64,
+    adam_lr: f64,
+) -> Result<(Table, MetricLog)> {
+    let mut log = MetricLog::new();
+
+    let mut mezo = SessionBuilder::new(rt, config)
+        .optimizer(OptimizerKind::MeZo)
+        .task(TaskKind::Sst2)
+        .lr(crate::optim::Schedule::Constant(mezo_lr))
+        .seed(1234)
+        .build()?;
+    let mut adam = SessionBuilder::new(rt, config)
+        .optimizer(OptimizerKind::Adam)
+        .task(TaskKind::Sst2)
+        .lr(crate::optim::Schedule::Constant(adam_lr))
+        .seed(1234)
+        .build()?;
+
+    for s in 0..steps {
+        let rm = mezo.step()?;
+        let ra = adam.step()?;
+        log.record("mezo.loss", s, rm.loss);
+        log.record("adam.loss", s, ra.loss);
+    }
+
+    let m = log.get("mezo.loss").unwrap();
+    let a = log.get("adam.loss").unwrap();
+    let k = (steps as usize / 5).max(1);
+    let mut t = Table::new(&format!(
+        "Fig. 1 — training loss, {config}, {steps} steps (measured on host)"
+    ))
+    .header(&["series", "first", "last", "head mean", "tail mean",
+              "descended"]);
+    for (name, s) in [("MeZo", m), ("Adam", a)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.4}", s.points.first().map(|p| p.1).unwrap_or(0.0)),
+            format!("{:.4}", s.last().unwrap_or(0.0)),
+            format!("{:.4}", s.head_mean(k)),
+            format!("{:.4}", s.tail_mean(k)),
+            (s.tail_mean(k) < s.head_mean(k)).to_string(),
+        ]);
+    }
+    Ok((t, log))
+}
+
+/// ASCII sparkline of a loss curve (for terminal "figures").
+pub fn sparkline(points: &[(u64, f64)], width: usize) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let hi = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let stride = (points.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < points.len() && out.chars().count() < width {
+        let v = points[i as usize].1;
+        let idx = (((v - lo) / span) * 7.0).round() as usize;
+        out.push(BARS[idx.min(7)]);
+        i += stride;
+    }
+    out
+}
+
+/// Device overview table (`pocketllm devices`).
+pub fn devices() -> Table {
+    let mut t = Table::new("Device presets")
+        .header(&["name", "RAM", "app budget", "fwd GF/s", "bwd GF/s",
+                  "sat½"]);
+    for name in crate::device::spec::preset_names() {
+        let s = preset(name).unwrap();
+        t.row(&[
+            s.name.clone(),
+            fmt_gb(s.ram_bytes),
+            fmt_gb(s.app_memory_budget()),
+            format!("{:.0}", s.fwd_gflops),
+            format!("{:.0}", s.bwd_gflops),
+            format!("{:.0}", s.sat_half_batch),
+        ]);
+    }
+    t
+}
+
+/// Batch sweep of the memory model (the abl-batch experiment).
+pub fn memory_sweep(batches: &[usize]) -> Table {
+    let dims = ModelDims::roberta_large();
+    let budget = preset("oppo-reno6").unwrap().app_memory_budget();
+    let mut t = Table::new(
+        "Memory vs batch size — RoBERTa-large on OPPO Reno 6",
+    )
+    .header(&["batch", "MeZo", "Adam", "Adam verdict"]);
+    for &b in batches {
+        let m = memory::finetune_footprint(
+            &dims, OptimizerFamily::DerivativeFree, b, SST2_SEQ);
+        let a = memory::finetune_footprint(
+            &dims, OptimizerFamily::DerivativeBased, b, SST2_SEQ);
+        t.row(&[
+            b.to_string(),
+            fmt_gb(m.total()),
+            fmt_gb(a.total()),
+            if a.total() > budget { "OOM" } else { "fits" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Crossover: largest batch Adam can run vs MeZO on each device preset.
+pub fn oom_frontier() -> Table {
+    let dims = ModelDims::roberta_large();
+    let mut t = Table::new(
+        "OOM frontier — max batch for RoBERTa-large per device",
+    )
+    .header(&["device", "budget", "max batch MeZo", "max batch Adam"]);
+    for name in crate::device::spec::preset_names() {
+        let spec = preset(name).unwrap();
+        let budget = spec.app_memory_budget();
+        let max_for = |family: OptimizerFamily| -> String {
+            let mut best = None;
+            for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+                let fp = memory::finetune_footprint(&dims, family, b,
+                                                    SST2_SEQ);
+                if fp.total() <= budget {
+                    best = Some(b);
+                }
+            }
+            best.map(|b| format!("≥{b}"))
+                .unwrap_or_else(|| "none".into())
+        };
+        t.row(&[
+            name.to_string(),
+            fmt_gb(budget),
+            max_for(OptimizerFamily::DerivativeFree),
+            max_for(OptimizerFamily::DerivativeBased),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reproduces_oom_pattern() {
+        let s = table1().render();
+        // Adam @64 OOMs; nothing else does
+        assert_eq!(s.matches("OOM").count(), 3, "{s}"); // paper cell + model cell + verdict
+        assert!(s.contains("fits"));
+    }
+
+    #[test]
+    fn table2_numbers_in_band() {
+        let s = table2().render();
+        assert!(s.contains("97"));
+        assert!(s.contains("OOM"));
+    }
+
+    #[test]
+    fn opt13b_gap_order_of_magnitude() {
+        let s = opt13b().render();
+        assert!(s.contains("x"), "{s}");
+    }
+
+    #[test]
+    fn sparkline_monotone_input() {
+        let pts: Vec<(u64, f64)> =
+            (0..50).map(|i| (i, 50.0 - i as f64)).collect();
+        let sl = sparkline(&pts, 20);
+        assert_eq!(sl.chars().count(), 20);
+        assert!(sl.starts_with('█'));
+        assert!(sl.ends_with('▁'));
+    }
+
+    #[test]
+    fn ablation_ordering() {
+        let s = ablation_memory().render();
+        assert!(s.contains("stored z"));
+    }
+
+    #[test]
+    fn frontier_mezo_dominates() {
+        let s = oom_frontier().render();
+        assert!(s.contains("oppo-reno6"));
+    }
+}

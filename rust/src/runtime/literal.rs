@@ -1,0 +1,111 @@
+//! Host-literal construction/extraction helpers over the `xla` crate.
+//!
+//! The step programs speak three element types (f32/i32/u32) and two
+//! scalar conventions (shape-(1,) scalars for seed/lr/eps; shape-()
+//! for the returned loss).  These helpers centralize the byte-level
+//! plumbing so the session code stays readable.
+
+use anyhow::{anyhow, Context, Result};
+use xla::Literal;
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+/// f32 tensor literal of the given shape (row-major data).
+pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", shape,
+                    data.len());
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes_of(data),
+    )
+    .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+/// i32 tensor literal.
+pub fn i32_tensor(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", shape,
+                    data.len());
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes_of(data),
+    )
+    .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+/// Shape-(1,) f32 scalar (the step programs' scalar convention).
+pub fn f32_1(v: f32) -> Result<Literal> {
+    f32_tensor(&[v], &[1])
+}
+
+/// Shape-(1,) u32 scalar (the MeZO seed).
+pub fn u32_1(v: u32) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32,
+        &[1],
+        bytes_of(&[v]),
+    )
+    .map_err(|e| anyhow!("u32 literal: {e:?}"))
+}
+
+/// Convenience extraction methods on `xla::Literal`.
+pub trait LiteralExt {
+    /// All elements as f32 (errors on dtype mismatch).
+    fn f32_vec(&self) -> Result<Vec<f32>>;
+    /// First element as f32 (works for shape-() and shape-(1,)).
+    fn f32_scalar(&self) -> Result<f32>;
+    /// Total element count.
+    fn len(&self) -> usize;
+}
+
+impl LiteralExt for Literal {
+    fn f32_vec(&self) -> Result<Vec<f32>> {
+        self.to_vec::<f32>().map_err(|e| anyhow!("literal->f32 vec: {e:?}"))
+    }
+
+    fn f32_scalar(&self) -> Result<f32> {
+        self.get_first_element::<f32>()
+            .map_err(|e| anyhow!("literal->f32 scalar: {e:?}"))
+            .context("extracting scalar")
+    }
+
+    fn len(&self) -> usize {
+        self.element_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(LiteralExt::len(&l), 4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_tensor(&[1.0], &[2]).is_err());
+        assert!(i32_tensor(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        let l = f32_1(0.5).unwrap();
+        assert_eq!(l.f32_scalar().unwrap(), 0.5);
+        let u = u32_1(7).unwrap();
+        assert_eq!(u.get_first_element::<u32>().unwrap(), 7);
+    }
+}

@@ -1,0 +1,346 @@
+//! `manifest.json` — the calling convention emitted by `python/compile/
+//! aot.py` and consumed here.  Everything the coordinator knows about a
+//! model (tensor order, shapes, dtypes, scalar inputs, artifact files)
+//! comes from this file; nothing is hard-coded on the Rust side.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a program input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One program input or output tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model parameter tensor (name, shape, flat offset into the virtual
+/// parameter vector — the MeZO z-stream coordinate).
+#[derive(Debug, Clone)]
+pub struct ParamSpecInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamSpecInfo {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model configuration (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub kind: String, // "encoder" | "decoder"
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_classes: usize,
+    pub use_pallas: bool,
+    pub n_params: usize,
+    pub params: Vec<ParamSpecInfo>,
+}
+
+impl ConfigInfo {
+    pub fn is_decoder(&self) -> bool {
+        self.kind == "decoder"
+    }
+
+    /// The device-simulator dimensions for this config (fp32 artifacts).
+    pub fn model_dims(&self) -> crate::device::ModelDims {
+        crate::device::ModelDims {
+            name: self.name.clone(),
+            vocab: self.vocab,
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            max_seq: self.max_seq,
+            decoder: self.is_decoder(),
+            param_bytes: 4,
+        }
+    }
+}
+
+/// One AOT program entry.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub config: String,
+    pub kind: String, // mezo_step | adam_step | eval | loss_eval
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigInfo>,
+    pub programs: Vec<ProgramSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().context("tensor spec list")?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name").as_str().context("tensor name")?.into(),
+                shape: t
+                    .get("shape")
+                    .as_arr()
+                    .context("tensor shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: Dtype::parse(
+                    t.get("dtype").as_str().context("dtype")?,
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let dir = path
+            .parent()
+            .context("manifest has no parent dir")?
+            .to_path_buf();
+
+        if root.get("format").as_u64() != Some(1) {
+            bail!("unsupported manifest format");
+        }
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in root.get("configs").as_obj().context("configs")? {
+            let params = c
+                .get("params")
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpecInfo {
+                        name: p.get("name").as_str().context("pname")?.into(),
+                        shape: p
+                            .get("shape")
+                            .as_arr()
+                            .context("pshape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                        offset: p.get("offset").as_usize().context("off")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let info = ConfigInfo {
+                name: name.clone(),
+                kind: c.get("kind").as_str().context("kind")?.into(),
+                vocab: c.get("vocab").as_usize().context("vocab")?,
+                d_model: c.get("d_model").as_usize().context("d_model")?,
+                n_layers: c.get("n_layers").as_usize().context("n_layers")?,
+                n_heads: c.get("n_heads").as_usize().context("n_heads")?,
+                d_ff: c.get("d_ff").as_usize().context("d_ff")?,
+                max_seq: c.get("max_seq").as_usize().context("max_seq")?,
+                n_classes: c.get("n_classes").as_usize().context("n_classes")?,
+                use_pallas: c.get("use_pallas").as_bool().unwrap_or(false),
+                n_params: c.get("n_params").as_usize().context("n_params")?,
+                params,
+            };
+            // validate: offsets contiguous, total matches n_params
+            let mut off = 0usize;
+            for p in &info.params {
+                if p.offset != off {
+                    bail!("config {name}: param {} offset mismatch", p.name);
+                }
+                off += p.elements();
+            }
+            if off != info.n_params {
+                bail!("config {name}: n_params {} != sum {}", info.n_params,
+                      off);
+            }
+            configs.insert(name.clone(), info);
+        }
+
+        let mut programs = Vec::new();
+        for p in root.get("programs").as_arr().context("programs")? {
+            programs.push(ProgramSpec {
+                config: p.get("config").as_str().context("config")?.into(),
+                kind: p.get("kind").as_str().context("kind")?.into(),
+                batch: p.get("batch").as_usize().context("batch")?,
+                file: p.get("file").as_str().context("file")?.into(),
+                inputs: tensor_specs(p.get("inputs"))?,
+                outputs: tensor_specs(p.get("outputs"))?,
+            });
+        }
+
+        for prog in &programs {
+            if !configs.contains_key(&prog.config) {
+                bail!("program {} references unknown config {}", prog.file,
+                      prog.config);
+            }
+        }
+
+        Ok(Manifest { dir, configs, programs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model config '{name}'; known: {:?}",
+                                   self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn find_program(
+        &self,
+        config: &str,
+        kind: &str,
+        batch: usize,
+    ) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .find(|p| p.config == config && p.kind == kind && p.batch == batch)
+    }
+
+    /// Batch sizes available for a (config, kind).
+    pub fn batches_for(&self, config: &str, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .programs
+            .iter()
+            .filter(|p| p.config == config && p.kind == kind)
+            .map(|p| p.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Read `<config>/init_params.bin` and split per tensor.
+    pub fn load_init_params(&self, config: &str) -> Result<Vec<Vec<f32>>> {
+        let info = self.config(config)?;
+        let path = self.dir.join(config).join("init_params.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != info.n_params * 4 {
+            bail!(
+                "init_params.bin is {} bytes, expected {}",
+                bytes.len(),
+                info.n_params * 4
+            );
+        }
+        let mut out = Vec::with_capacity(info.params.len());
+        let mut cursor = 0usize;
+        for p in &info.params {
+            let n = p.elements();
+            let mut v = vec![0f32; n];
+            for (i, chunk) in bytes[cursor..cursor + 4 * n]
+                .chunks_exact(4)
+                .enumerate()
+            {
+                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2],
+                                           chunk[3]]);
+            }
+            cursor += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "configs": {
+        "m": {"kind": "encoder", "vocab": 8, "d_model": 4, "n_layers": 1,
+              "n_heads": 2, "d_ff": 8, "max_seq": 4, "n_classes": 2,
+              "use_pallas": false, "n_params": 44,
+              "params": [
+                {"name": "a", "shape": [8, 4], "offset": 0},
+                {"name": "b", "shape": [12], "offset": 32}
+              ]}
+      },
+      "programs": [
+        {"config": "m", "kind": "mezo_step", "batch": 4,
+         "file": "m/mezo_step_bs4.hlo.txt",
+         "inputs": [{"name": "a", "shape": [8, 4], "dtype": "f32"}],
+         "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    fn write_sample(dir: &std::path::Path) -> PathBuf {
+        let p = dir.join("manifest.json");
+        std::fs::write(&p, SAMPLE).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("pocketllm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Manifest::load(write_sample(&dir)).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        let c = m.config("m").unwrap();
+        assert_eq!(c.n_params, 44);
+        assert!(m.find_program("m", "mezo_step", 4).is_some());
+        assert!(m.find_program("m", "mezo_step", 8).is_none());
+        assert_eq!(m.batches_for("m", "mezo_step"), vec![4]);
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let dir = std::env::temp_dir().join("pocketllm_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = SAMPLE.replace("\"offset\": 32", "\"offset\": 31");
+        let p = dir.join("manifest.json");
+        std::fs::write(&p, bad).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! PJRT execution runtime: loads the AOT artifacts and runs them.
+//!
+//! This is the only module that touches the `xla` crate.  Flow:
+//!
+//! ```text
+//!   manifest.json ──> Manifest (calling convention: configs, programs)
+//!   *.hlo.txt     ──> HloModuleProto::from_text_file ──> compile (once)
+//!   step loop     ──> Program::execute(&[&Literal]) ──> output literals
+//! ```
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Compiled executables are cached per (config, kind, batch), so the
+//! session hot loop pays compilation exactly once.
+
+pub mod literal;
+pub mod manifest;
+pub mod state;
+
+pub use literal::{f32_1, i32_tensor, f32_tensor, u32_1, LiteralExt};
+pub use manifest::{ConfigInfo, Dtype, Manifest, ParamSpecInfo, ProgramSpec,
+                   TensorSpec};
+pub use state::ModelState;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A compiled, ready-to-execute step program.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with host literals; returns the decomposed output tuple.
+    ///
+    /// Input count/order must follow `spec.inputs` (checked).  Output is
+    /// the artifact's tuple flattened to a `Vec<Literal>` following
+    /// `spec.outputs`.
+    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {}/{} expects {} inputs, got {}",
+                self.spec.config,
+                self.spec.kind,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.spec.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "program {} returned {} outputs, manifest says {}",
+                self.spec.file,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// The PJRT client + program cache, bound to one artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<(String, String, usize), std::sync::Arc<Program>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over a loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling + caching on first use) a step program.
+    pub fn program(
+        &self,
+        config: &str,
+        kind: &str,
+        batch: usize,
+    ) -> Result<std::sync::Arc<Program>> {
+        let key = (config.to_string(), kind.to_string(), batch);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(p) = cache.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        let spec = self
+            .manifest
+            .find_program(config, kind, batch)
+            .ok_or_else(|| {
+                anyhow!("no artifact for ({config}, {kind}, bs={batch}); \
+                         run `make artifacts`")
+            })?
+            .clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.file))?;
+        let program = std::sync::Arc::new(Program { spec, exe });
+        self.cache.lock().unwrap().insert(key, program.clone());
+        Ok(program)
+    }
+
+    /// Number of programs compiled so far (telemetry / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,178 @@
+//! Model state: the parameter tensors held between steps, plus binary
+//! (de)serialization for checkpoints.
+//!
+//! Parameters live as host `Literal`s in manifest order.  The step
+//! programs take them by reference and return fresh ones, so the hot
+//! loop is: build refs → execute → swap in outputs.  No reshaping or
+//! copying happens on the Rust side.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::literal::{f32_tensor, LiteralExt};
+use super::manifest::ConfigInfo;
+
+/// The live parameter set of one model instance.
+pub struct ModelState {
+    /// Tensors in manifest order.
+    pub tensors: Vec<Literal>,
+    pub n_params: usize,
+}
+
+impl ModelState {
+    /// Build from raw per-tensor f32 data (e.g. `init_params.bin`).
+    pub fn from_raw(cfg: &ConfigInfo, raw: &[Vec<f32>]) -> Result<ModelState> {
+        if raw.len() != cfg.params.len() {
+            bail!("expected {} tensors, got {}", cfg.params.len(), raw.len());
+        }
+        let mut tensors = Vec::with_capacity(raw.len());
+        for (spec, data) in cfg.params.iter().zip(raw) {
+            if data.len() != spec.elements() {
+                bail!("tensor {} has {} values, expected {}", spec.name,
+                      data.len(), spec.elements());
+            }
+            tensors.push(f32_tensor(data, &spec.shape)?);
+        }
+        Ok(ModelState { tensors, n_params: cfg.n_params })
+    }
+
+    /// All-zero state with the same shapes (Adam m/v initialization).
+    pub fn zeros_like(cfg: &ConfigInfo) -> Result<ModelState> {
+        let mut tensors = Vec::with_capacity(cfg.params.len());
+        for spec in &cfg.params {
+            tensors.push(f32_tensor(&vec![0f32; spec.elements()],
+                                    &spec.shape)?);
+        }
+        Ok(ModelState { tensors, n_params: cfg.n_params })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Borrow every tensor (for building program input lists).
+    pub fn refs(&self) -> Vec<&Literal> {
+        self.tensors.iter().collect()
+    }
+
+    /// Replace all tensors (with the step program's outputs).
+    pub fn replace(&mut self, tensors: Vec<Literal>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!("replace: {} tensors, expected {}", tensors.len(),
+                  self.tensors.len());
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+
+    /// Serialize to the checkpoint format: raw f32 LE in manifest order
+    /// (identical to `init_params.bin`).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.n_params * 4);
+        for t in &self.tensors {
+            for v in t.f32_vec()? {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Restore from [`ModelState::to_bytes`] output.
+    pub fn from_bytes(cfg: &ConfigInfo, bytes: &[u8]) -> Result<ModelState> {
+        if bytes.len() != cfg.n_params * 4 {
+            bail!("checkpoint is {} bytes, expected {}", bytes.len(),
+                  cfg.n_params * 4);
+        }
+        let mut raw = Vec::with_capacity(cfg.params.len());
+        let mut cursor = 0usize;
+        for spec in &cfg.params {
+            let n = spec.elements();
+            let mut v = vec![0f32; n];
+            for (i, c) in
+                bytes[cursor..cursor + 4 * n].chunks_exact(4).enumerate()
+            {
+                v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            cursor += 4 * n;
+            raw.push(v);
+        }
+        ModelState::from_raw(cfg, &raw)
+    }
+
+    /// L2 norm of all parameters (drift diagnostics in tests/telemetry).
+    pub fn l2_norm(&self) -> Result<f64> {
+        let mut acc = 0f64;
+        for t in &self.tensors {
+            for v in t.f32_vec()? {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+
+    pub fn checkpoint_bytes(&self) -> u64 {
+        (self.n_params * 4) as u64
+    }
+}
+
+// Tests for ModelState need a ConfigInfo; covered in the integration
+// suite (rust/tests/integration.rs) against the real manifest, where
+// from_raw/to_bytes/from_bytes round-trip over pocket-tiny.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpecInfo;
+
+    fn tiny_cfg() -> ConfigInfo {
+        ConfigInfo {
+            name: "t".into(),
+            kind: "encoder".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 4,
+            max_seq: 4,
+            n_classes: 2,
+            use_pallas: false,
+            n_params: 10,
+            params: vec![
+                ParamSpecInfo { name: "a".into(), shape: vec![2, 3], offset: 0 },
+                ParamSpecInfo { name: "b".into(), shape: vec![4], offset: 6 },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![1., 2., 3., 4., 5., 6.], vec![7., 8., 9., 10.]];
+        let st = ModelState::from_raw(&cfg, &raw).unwrap();
+        assert_eq!(st.len(), 2);
+        let bytes = st.to_bytes().unwrap();
+        assert_eq!(bytes.len(), 40);
+        let st2 = ModelState::from_bytes(&cfg, &bytes).unwrap();
+        assert_eq!(st2.tensors[1].f32_vec().unwrap(), raw[1]);
+    }
+
+    #[test]
+    fn zeros_like_shapes() {
+        let st = ModelState::zeros_like(&tiny_cfg()).unwrap();
+        assert_eq!(st.tensors[0].f32_vec().unwrap(), vec![0.0; 6]);
+        assert!(st.l2_norm().unwrap() == 0.0);
+    }
+
+    #[test]
+    fn wrong_sizes_rejected() {
+        let cfg = tiny_cfg();
+        assert!(ModelState::from_raw(&cfg, &[vec![0.0; 5]]).is_err());
+        assert!(ModelState::from_bytes(&cfg, &[0u8; 8]).is_err());
+        let raw = vec![vec![0.; 6], vec![0.; 3]];
+        assert!(ModelState::from_raw(&cfg, &raw).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Synthetic phone-state traces: a deterministic simulated day.
+//!
+//! Replaces the real Android telemetry the paper's deployment would
+//! subscribe to.  The generator follows a plausible daily rhythm —
+//! overnight charging, morning/evening usage bursts, battery drain/charge
+//! dynamics, ambient + load-driven temperature, other apps squeezing
+//! memory — so the coordinator's pause/resume logic gets exercised the
+//! way it would be in the field.
+
+use crate::util::rng::Rng;
+
+/// A snapshot of the phone at some point in time.
+#[derive(Debug, Clone)]
+pub struct PhoneState {
+    /// Hour of (simulated) day, [0, 24).
+    pub hour: f64,
+    pub charging: bool,
+    pub battery_pct: f64,
+    pub screen_on: bool,
+    pub temp_c: f64,
+    /// Memory other apps have left available.
+    pub free_bytes: u64,
+}
+
+/// Deterministic day-long trace, sampled every `step_minutes`.
+pub struct DayTrace {
+    rng: Rng,
+    pub step_minutes: f64,
+    minute: f64,
+    battery: f64,
+    total_ram: u64,
+}
+
+impl DayTrace {
+    pub fn new(seed: u64, step_minutes: f64, total_ram: u64) -> DayTrace {
+        DayTrace {
+            rng: Rng::new(seed),
+            step_minutes,
+            minute: 0.0,
+            battery: 80.0,
+            total_ram,
+        }
+    }
+
+    /// Start the trace at a given hour of day (jobs are typically queued
+    /// while the user is awake, then run overnight).
+    pub fn starting_at(mut self, hour: f64) -> DayTrace {
+        self.minute = hour * 60.0;
+        self
+    }
+
+    fn hour(&self) -> f64 {
+        (self.minute / 60.0) % 24.0
+    }
+
+    /// Probability the screen is on at this hour (usage rhythm).
+    fn screen_on_prob(hour: f64) -> f64 {
+        match hour {
+            h if h < 6.5 => 0.02,  // asleep
+            h if h < 9.0 => 0.55,  // morning
+            h if h < 12.0 => 0.30,
+            h if h < 14.0 => 0.45, // lunch
+            h if h < 18.0 => 0.25,
+            h if h < 23.0 => 0.60, // evening
+            _ => 0.15,
+        }
+    }
+
+    fn charging_now(hour: f64, battery: f64) -> bool {
+        // overnight charger + opportunistic top-ups when low
+        !(6.5..22.5).contains(&hour) || battery < 20.0
+    }
+}
+
+impl Iterator for DayTrace {
+    type Item = PhoneState;
+
+    fn next(&mut self) -> Option<PhoneState> {
+        let hour = self.hour();
+        let screen_on = self.rng.chance(Self::screen_on_prob(hour));
+        let charging = Self::charging_now(hour, self.battery);
+
+        // battery dynamics per tick
+        let drain = if screen_on { 0.25 } else { 0.03 } * self.step_minutes;
+        let gain = if charging { 0.8 * self.step_minutes } else { 0.0 };
+        self.battery = (self.battery - drain + gain).clamp(1.0, 100.0);
+
+        // temperature: ambient + usage + charging warmth + noise
+        let temp_c = 24.0
+            + if screen_on { 6.0 } else { 0.0 }
+            + if charging { 3.0 } else { 0.0 }
+            + self.rng.gaussian() * 1.0;
+
+        // other-apps memory pressure: heavier when the user is active
+        let pressure_frac = if screen_on {
+            0.45 + 0.25 * self.rng.next_f64()
+        } else {
+            0.20 + 0.15 * self.rng.next_f64()
+        };
+        let free_bytes =
+            (self.total_ram as f64 * (1.0 - pressure_frac)) as u64;
+
+        let state = PhoneState {
+            hour,
+            charging,
+            battery_pct: self.battery,
+            screen_on,
+            temp_c,
+            free_bytes,
+        };
+        self.minute += self.step_minutes;
+        Some(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::GB;
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<f64> = DayTrace::new(1, 10.0, 12 * GB)
+            .take(100)
+            .map(|s| s.battery_pct)
+            .collect();
+        let b: Vec<f64> = DayTrace::new(1, 10.0, 12 * GB)
+            .take(100)
+            .map(|s| s.battery_pct)
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn overnight_mostly_charging_and_dark() {
+        let states: Vec<PhoneState> = DayTrace::new(2, 10.0, 12 * GB)
+            .take(6 * 24) // one day at 10-min ticks
+            .collect();
+        let night: Vec<&PhoneState> =
+            states.iter().filter(|s| s.hour < 6.0).collect();
+        assert!(!night.is_empty());
+        let charging_frac = night.iter().filter(|s| s.charging).count()
+            as f64
+            / night.len() as f64;
+        let dark_frac = night.iter().filter(|s| !s.screen_on).count() as f64
+            / night.len() as f64;
+        assert!(charging_frac > 0.95, "{charging_frac}");
+        assert!(dark_frac > 0.85, "{dark_frac}");
+    }
+
+    #[test]
+    fn battery_stays_in_bounds() {
+        for s in DayTrace::new(3, 5.0, 12 * GB).take(1000) {
+            assert!((1.0..=100.0).contains(&s.battery_pct));
+            assert!(s.free_bytes <= 12 * GB);
+        }
+    }
+
+    #[test]
+    fn daytime_has_usage() {
+        let states: Vec<PhoneState> = DayTrace::new(4, 10.0, 12 * GB)
+            .take(6 * 48)
+            .collect();
+        let evening: Vec<&PhoneState> = states
+            .iter()
+            .filter(|s| (19.0..23.0).contains(&s.hour))
+            .collect();
+        let on = evening.iter().filter(|s| s.screen_on).count() as f64
+            / evening.len().max(1) as f64;
+        assert!(on > 0.3, "{on}");
+    }
+}

@@ -1,0 +1,15 @@
+//! On-device scheduling: when is a phone *allowed* to fine-tune?
+//!
+//! The paper's vision (§1, §6) is background personalization on a device
+//! the user is actively living on.  That needs an admission policy —
+//! fine-tuning is heavy, so it should run while charging, idle, cool and
+//! memory-rich — plus reaction to state changes mid-run (pause on
+//! unplug, resume at night).  [`policy`] defines the gate; [`events`]
+//! generates deterministic synthetic phone-state traces (a simulated day)
+//! that the coordinator and the tests drive against.
+
+pub mod events;
+pub mod policy;
+
+pub use events::{DayTrace, PhoneState};
+pub use policy::{DenyReason, Policy};

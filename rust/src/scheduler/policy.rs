@@ -1,0 +1,134 @@
+//! The fine-tuning admission policy.
+
+use super::events::PhoneState;
+
+/// Why a step window was denied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenyReason {
+    NotCharging,
+    BatteryLow,
+    ScreenOn,
+    TooHot,
+    MemoryPressure,
+}
+
+impl DenyReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DenyReason::NotCharging => "not charging",
+            DenyReason::BatteryLow => "battery low",
+            DenyReason::ScreenOn => "user active",
+            DenyReason::TooHot => "thermal",
+            DenyReason::MemoryPressure => "memory pressure",
+        }
+    }
+}
+
+/// Admission policy for background fine-tuning windows.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub require_charging: bool,
+    pub min_battery_pct: f64,
+    pub require_screen_off: bool,
+    pub max_temp_c: f64,
+    /// Minimum free device memory (bytes) beyond the job's own budget.
+    pub min_free_bytes: u64,
+}
+
+impl Policy {
+    /// The conservative default a shipping personalization agent would
+    /// use: plugged in, screen off, cool, > 1 GB slack.
+    pub fn overnight() -> Policy {
+        Policy {
+            require_charging: true,
+            min_battery_pct: 30.0,
+            require_screen_off: true,
+            max_temp_c: 38.0,
+            min_free_bytes: 1_000_000_000,
+        }
+    }
+
+    /// Permissive policy for foreground/benchmark runs.
+    pub fn always() -> Policy {
+        Policy {
+            require_charging: false,
+            min_battery_pct: 0.0,
+            require_screen_off: false,
+            max_temp_c: f64::INFINITY,
+            min_free_bytes: 0,
+        }
+    }
+
+    /// Check a phone state; `Ok(())` means fine-tuning may run now.
+    pub fn admits(&self, s: &PhoneState) -> Result<(), DenyReason> {
+        if self.require_charging && !s.charging {
+            return Err(DenyReason::NotCharging);
+        }
+        if s.battery_pct < self.min_battery_pct {
+            return Err(DenyReason::BatteryLow);
+        }
+        if self.require_screen_off && s.screen_on {
+            return Err(DenyReason::ScreenOn);
+        }
+        if s.temp_c > self.max_temp_c {
+            return Err(DenyReason::TooHot);
+        }
+        if s.free_bytes < self.min_free_bytes {
+            return Err(DenyReason::MemoryPressure);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good_state() -> PhoneState {
+        PhoneState {
+            hour: 3.0,
+            charging: true,
+            battery_pct: 90.0,
+            screen_on: false,
+            temp_c: 28.0,
+            free_bytes: 4_000_000_000,
+        }
+    }
+
+    #[test]
+    fn overnight_admits_ideal_state() {
+        assert_eq!(Policy::overnight().admits(&good_state()), Ok(()));
+    }
+
+    #[test]
+    fn each_gate_fires() {
+        let p = Policy::overnight();
+        let mut s = good_state();
+        s.charging = false;
+        assert_eq!(p.admits(&s), Err(DenyReason::NotCharging));
+        let mut s = good_state();
+        s.battery_pct = 10.0;
+        assert_eq!(p.admits(&s), Err(DenyReason::BatteryLow));
+        let mut s = good_state();
+        s.screen_on = true;
+        assert_eq!(p.admits(&s), Err(DenyReason::ScreenOn));
+        let mut s = good_state();
+        s.temp_c = 45.0;
+        assert_eq!(p.admits(&s), Err(DenyReason::TooHot));
+        let mut s = good_state();
+        s.free_bytes = 100;
+        assert_eq!(p.admits(&s), Err(DenyReason::MemoryPressure));
+    }
+
+    #[test]
+    fn always_admits_anything() {
+        let p = Policy::always();
+        let mut s = good_state();
+        s.charging = false;
+        s.screen_on = true;
+        s.temp_c = 80.0;
+        s.free_bytes = 0;
+        s.battery_pct = 1.0;
+        assert_eq!(p.admits(&s), Ok(()));
+    }
+}

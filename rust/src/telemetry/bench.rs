@@ -1,0 +1,121 @@
+//! Minimal benchmark harness (the offline environment has no criterion).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries, each of which
+//! uses this module: warmup, N timed iterations, Welford stats, and a
+//! rendered table.  Measurements are wall-clock per iteration.
+
+use std::time::Instant;
+
+use crate::util::timer::Stats;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub stats: Stats,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.stats.mean() * 1e3
+    }
+}
+
+/// Time `iters` runs of `f` after `warmup` runs.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), stats }
+}
+
+/// Render measurements as a table (mean / std / min / max in ms).
+pub fn render(title: &str, ms: &[Measurement]) -> String {
+    let mut t = super::Table::new(title).header(&[
+        "benchmark", "mean ms", "std ms", "min ms", "max ms", "iters",
+    ]);
+    for m in ms {
+        t.row(&[
+            m.name.clone(),
+            format!("{:.3}", m.stats.mean() * 1e3),
+            format!("{:.3}", m.stats.std() * 1e3),
+            format!("{:.3}", m.stats.min() * 1e3),
+            format!("{:.3}", m.stats.max() * 1e3),
+            m.stats.count().to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Read an override from the environment (bench knobs without flags).
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Current process resident-set size (bytes) from /proc (Linux).
+pub fn current_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim()
+                .parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Process lifetime peak RSS (bytes).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim()
+                .parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let m = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.stats.count(), 10);
+        assert!(m.stats.mean() >= 0.0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let m = bench("x", 0, 3, || {});
+        let s = render("T", &[m]);
+        assert!(s.contains("x"));
+        assert!(s.contains("mean ms"));
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        assert!(current_rss_bytes().unwrap_or(0) > 0);
+        assert!(peak_rss_bytes().unwrap_or(0) > 0);
+    }
+}

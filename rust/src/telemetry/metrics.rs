@@ -1,0 +1,178 @@
+//! Step-indexed metric series (loss curves, step times, memory) with CSV
+//! and JSON export.  This is what EXPERIMENTS.md's recorded runs are
+//! generated from.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One named series of (step, value) points.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        self.points.iter().map(|&(_, v)| v).sum::<f64>()
+            / self.points.len() as f64
+    }
+
+    /// Mean of the first / last `k` points — used for "did the loss go
+    /// down" assertions in tests and benches.
+    pub fn head_mean(&self, k: usize) -> f64 {
+        let k = k.min(self.points.len());
+        self.points[..k].iter().map(|&(_, v)| v).sum::<f64>() / k.max(1) as f64
+    }
+
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.points.len();
+        let k = k.min(n);
+        self.points[n - k..].iter().map(|&(_, v)| v).sum::<f64>()
+            / k.max(1) as f64
+    }
+}
+
+/// A bundle of named series sharing a step axis.
+#[derive(Debug, Clone, Default)]
+pub struct MetricLog {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl MetricLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(step, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// CSV with a `step` column and one column per series (empty cells
+    /// where a series has no point at that step).
+    pub fn to_csv(&self) -> String {
+        let mut steps: Vec<u64> = Vec::new();
+        for s in self.series.values() {
+            for &(st, _) in &s.points {
+                steps.push(st);
+            }
+        }
+        steps.sort();
+        steps.dedup();
+
+        let names: Vec<&String> = self.series.keys().collect();
+        let mut out = String::from("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for st in steps {
+            out.push_str(&st.to_string());
+            for n in &names {
+                out.push(',');
+                let s = &self.series[*n];
+                if let Some(&(_, v)) =
+                    s.points.iter().find(|&&(p, _)| p == st)
+                {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|&(st, v)| {
+                                    Json::Arr(vec![
+                                        Json::Num(st as f64),
+                                        Json::Num(v),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = MetricLog::new();
+        m.record("loss", 0, 2.0);
+        m.record("loss", 1, 1.0);
+        m.record("time", 0, 5.0);
+        assert_eq!(m.get("loss").unwrap().last(), Some(1.0));
+        assert_eq!(m.get("loss").unwrap().mean(), 1.5);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn head_tail_means() {
+        let mut s = Series::default();
+        for i in 0..10 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.head_mean(2), 0.5);
+        assert_eq!(s.tail_mean(2), 8.5);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut m = MetricLog::new();
+        m.record("a", 0, 1.0);
+        m.record("b", 1, 2.0);
+        let csv = m.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,,2");
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut m = MetricLog::new();
+        m.record("loss", 3, 0.25);
+        let j = m.to_json().dump();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("loss").at(0).at(1).as_f64(), Some(0.25));
+    }
+}

@@ -1,0 +1,9 @@
+//! Telemetry: metric recording, CSV export, and the fixed-width table
+//! renderer used by `pocketllm report` and the bench harness.
+
+pub mod bench;
+pub mod metrics;
+pub mod table;
+
+pub use metrics::{MetricLog, Series};
+pub use table::Table;

@@ -1,0 +1,61 @@
+//! Evaluation helpers: softmax/argmax over logits, perplexity, and the
+//! personalization delta metric used by the examples.
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z.max(f32::MIN_POSITIVE)).collect()
+}
+
+/// Index of the max logit.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Perplexity from a mean token cross-entropy.
+pub fn perplexity(mean_xent: f64) -> f64 {
+    mean_xent.exp()
+}
+
+/// Relative improvement of `after` over `before` for a loss-like metric
+/// (positive = better).
+pub fn improvement(before: f64, after: f64) -> f64 {
+    (before - after) / before.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let xent = (10f64).ln();
+        assert!((perplexity(xent) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_sign() {
+        assert!(improvement(2.0, 1.0) > 0.0);
+        assert!(improvement(1.0, 2.0) < 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The fine-tuning engine: sessions (the step loop over AOT programs),
+//! checkpointing, and evaluation.
+//!
+//! A [`session::Session`] owns everything one fine-tuning job needs —
+//! compiled programs, live parameters, optimizer driver, data pipeline,
+//! the simulated device envelope, and telemetry — and exposes `step()` /
+//! `run_steps()` / `evaluate()`.  The [`coordinator`](crate::coordinator)
+//! drives sessions according to phone policy; examples and benches drive
+//! them directly.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod session;
+
+pub use checkpoint::Checkpoint;
+pub use session::{Session, SessionBuilder, SessionStats, StepResult};

@@ -1,0 +1,530 @@
+//! The fine-tuning session: PocketLLM's request-path hot loop.
+//!
+//! One `Session` = one on-device fine-tuning job.  Its `step()`:
+//!
+//! 1. pulls the next batch from the on-device data pipeline,
+//! 2. assembles the artifact input list (params .. [m, v] .. ids, mask,
+//!    labels, scalars) as literal *references* — no parameter copies,
+//! 3. executes the fused step program on PJRT,
+//! 4. swaps the returned parameter (and m/v) tensors into place,
+//! 5. mirrors the allocation behaviour into the simulated device ledger
+//!    and advances the thermal clock by the *simulated* step time.
+//!
+//! Python is nowhere in this path; the artifacts were lowered at build
+//! time.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::batcher::{Batch, Batcher};
+use crate::data::bpe::Bpe;
+use crate::data::corpus;
+use crate::data::task::{TaskData, TaskKind};
+use crate::device::Device;
+use crate::optim::{AdamDriver, MezoDriver, OptimizerKind, Schedule};
+use crate::optim::adam::AdamConfig;
+use crate::optim::mezo::MezoConfig;
+use crate::runtime::literal::{f32_tensor, i32_tensor, LiteralExt};
+use crate::runtime::state::ModelState;
+use crate::runtime::{Program, Runtime};
+use crate::telemetry::MetricLog;
+
+/// Result of one optimization step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub step: u64,
+    pub loss: f64,
+    /// Real wall-clock of the PJRT execution on this host.
+    pub host_time_s: f64,
+    /// Simulated wall-clock on the session's device.
+    pub sim_time_s: f64,
+}
+
+/// Summary returned by [`Session::run_steps`].
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    pub steps: u64,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    pub mean_host_step_s: f64,
+    pub mean_sim_step_s: f64,
+    /// Peak simulated memory (bytes) during the run.
+    pub sim_peak_bytes: u64,
+}
+
+enum Driver {
+    MeZo(MezoDriver),
+    Adam(AdamDriver),
+}
+
+/// Builder for [`Session`].
+pub struct SessionBuilder<'rt> {
+    rt: &'rt Runtime,
+    config: String,
+    optimizer: OptimizerKind,
+    batch: usize,
+    task: TaskKind,
+    lr: Option<Schedule>,
+    eps: f64,
+    seed: u64,
+    n_train: usize,
+    n_eval: usize,
+    device: Option<Device>,
+    queries: usize,
+}
+
+impl<'rt> SessionBuilder<'rt> {
+    pub fn new(rt: &'rt Runtime, config: &str) -> Self {
+        SessionBuilder {
+            rt,
+            config: config.to_string(),
+            optimizer: OptimizerKind::MeZo,
+            batch: 0, // 0 = first available in the manifest
+            task: TaskKind::Sst2,
+            lr: None,
+            eps: 1e-3,
+            seed: 42,
+            n_train: 512,
+            n_eval: 128,
+            device: None,
+            queries: 1,
+        }
+    }
+
+    /// k-query SPSA (paper §6.3): average k independent two-point
+    /// gradient estimates per step.  Requires a `mezo_step_q{k}`
+    /// artifact; k=1 uses the standard fused program.
+    pub fn queries(mut self, k: usize) -> Self {
+        assert!(k >= 1);
+        self.queries = k;
+        self
+    }
+
+    pub fn optimizer(mut self, o: OptimizerKind) -> Self {
+        self.optimizer = o;
+        self
+    }
+
+    pub fn batch_size(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn task(mut self, t: TaskKind) -> Self {
+        self.task = t;
+        self
+    }
+
+    pub fn lr(mut self, s: Schedule) -> Self {
+        self.lr = Some(s);
+        self
+    }
+
+    pub fn eps(mut self, e: f64) -> Self {
+        self.eps = e;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn dataset_size(mut self, train: usize, eval: usize) -> Self {
+        self.n_train = train;
+        self.n_eval = eval;
+        self
+    }
+
+    /// Run inside a simulated device envelope (admission control + OOM +
+    /// thermal).  Without one, the session runs unconstrained on host.
+    pub fn device(mut self, d: Device) -> Self {
+        self.device = Some(d);
+        self
+    }
+
+    pub fn build(self) -> Result<Session> {
+        let cfg = self.rt.manifest.config(&self.config)?.clone();
+        let program_kind = match (self.optimizer, self.queries) {
+            (OptimizerKind::MeZo, k) if k > 1 => {
+                format!("mezo_step_q{k}")
+            }
+            (o, _) => o.program_kind().to_string(),
+        };
+        let batch = if self.batch == 0 {
+            *self
+                .rt
+                .manifest
+                .batches_for(&self.config, &program_kind)
+                .first()
+                .with_context(|| {
+                    format!("no {} artifacts for {}", program_kind,
+                            self.config)
+                })?
+        } else {
+            self.batch
+        };
+
+        // decoder models self-supervise; force the LM task for them
+        let task = if cfg.is_decoder() { TaskKind::ChatLm } else { self.task };
+
+        // 1. simulated-device admission (the paper's OOM gate) happens
+        //    BEFORE any real allocation, like a real runtime would.
+        let mut device = self.device;
+        let fp = if let Some(dev) = device.as_mut() {
+            let dims = dev_dims(&cfg);
+            let fp = dev
+                .admit_finetune(&dims, self.optimizer.family(), batch,
+                                cfg.max_seq)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            Some(fp)
+        } else {
+            None
+        };
+
+        // 2. data pipeline: corpus -> BPE -> batcher
+        let data = TaskData::generate(task, self.seed, self.n_train,
+                                      self.n_eval);
+        let mut corpus_texts = corpus::tokenizer_corpus(self.seed ^ 0xC0,
+                                                        1024);
+        corpus_texts.extend(data.train_texts());
+        let bpe_vocab = cfg.vocab.min(4096).max(260);
+        let bpe = Bpe::train(&corpus_texts, bpe_vocab);
+
+        // 3. compiled programs
+        let step_prog = self.rt.program(&self.config, &program_kind,
+                                        batch)?;
+        let loss_prog = self
+            .rt
+            .program(&self.config, "loss_eval", batch)
+            .ok();
+        let eval_prog = self.rt.program(&self.config, "eval", batch).ok();
+
+        // 4. parameters + optimizer state
+        let raw = self.rt.manifest.load_init_params(&self.config)?;
+        let params = ModelState::from_raw(&cfg, &raw)?;
+        let lr = self.lr.unwrap_or(Schedule::Constant(match self.optimizer {
+            // SPSA's projected gradient scales with sqrt(P); MeZO needs a
+            // much smaller rate than Adam (matches the MeZO paper's grids)
+            OptimizerKind::MeZo => 1e-4,
+            OptimizerKind::Adam => 1e-3,
+        }));
+        let driver = match self.optimizer {
+            OptimizerKind::MeZo => Driver::MeZo(MezoDriver::new(MezoConfig {
+                lr,
+                eps: self.eps,
+                master_seed: self.seed,
+            })),
+            OptimizerKind::Adam => Driver::Adam(AdamDriver::new(
+                AdamConfig { lr },
+                &cfg,
+            )?),
+        };
+
+        Ok(Session {
+            cfg,
+            optimizer: self.optimizer,
+            batch,
+            seq: 0, // set below from cfg
+            task,
+            data,
+            bpe,
+            step_prog,
+            loss_prog,
+            eval_prog,
+            params,
+            driver,
+            device,
+            footprint: fp,
+            step: 0,
+            metrics: MetricLog::new(),
+            batcher_seed: self.seed ^ 0xBA7C4,
+            batch_cache: Vec::new(),
+        }
+        .finalize())
+    }
+}
+
+fn dev_dims(cfg: &crate::runtime::manifest::ConfigInfo)
+    -> crate::device::ModelDims
+{
+    cfg.model_dims()
+}
+
+/// A live fine-tuning session.
+pub struct Session {
+    pub cfg: crate::runtime::manifest::ConfigInfo,
+    pub optimizer: OptimizerKind,
+    pub batch: usize,
+    seq: usize,
+    pub task: TaskKind,
+    data: TaskData,
+    bpe: Bpe,
+    step_prog: std::sync::Arc<Program>,
+    loss_prog: Option<std::sync::Arc<Program>>,
+    eval_prog: Option<std::sync::Arc<Program>>,
+    pub params: ModelState,
+    driver: Driver,
+    pub device: Option<Device>,
+    footprint: Option<crate::device::FootprintBreakdown>,
+    pub step: u64,
+    pub metrics: MetricLog,
+    batcher_seed: u64,
+    /// Batches materialized so far, indexed by step.  The batcher is
+    /// deterministic under (data, seed), so caching keeps long sessions
+    /// O(1) per step instead of O(step) replay, while resume-from-
+    /// checkpoint stays exact (perf pass #1, EXPERIMENTS.md §Perf).
+    batch_cache: Vec<Batch>,
+}
+
+impl Session {
+    fn finalize(mut self) -> Session {
+        self.seq = self.cfg.max_seq;
+        self
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn make_batcher(&self) -> Batcher<'_> {
+        Batcher::new(
+            &self.bpe,
+            &self.data.train,
+            self.batch,
+            self.seq,
+            self.cfg.is_decoder(),
+            self.cfg.vocab,
+            self.batcher_seed,
+        )
+    }
+
+    fn batch_literals(&self, b: &Batch) -> Result<[Literal; 3]> {
+        let ids = i32_tensor(&b.ids, &[b.batch, b.seq])?;
+        let mask = f32_tensor(&b.mask, &[b.batch, b.seq])?;
+        let labels = if b.lm {
+            i32_tensor(&b.labels, &[b.batch, b.seq])?
+        } else {
+            i32_tensor(&b.labels, &[b.batch])?
+        };
+        Ok([ids, mask, labels])
+    }
+
+    /// Execute one optimization step on a prepared batch.
+    pub fn step_on(&mut self, b: &Batch) -> Result<StepResult> {
+        let [ids, mask, labels] = self.batch_literals(b)?;
+        let n = self.params.len();
+        let started = Instant::now();
+
+        let loss = match &mut self.driver {
+            Driver::MeZo(d) => {
+                let scalars = d.scalar_inputs()?;
+                let mut inputs: Vec<&Literal> =
+                    Vec::with_capacity(n + 6);
+                inputs.extend(self.params.refs());
+                inputs.push(&ids);
+                inputs.push(&mask);
+                inputs.push(&labels);
+                inputs.extend(scalars.iter());
+                let mut outs = self.step_prog.execute(&inputs)?;
+                let loss = outs.pop().context("loss output")?.f32_scalar()?;
+                self.params.replace(outs)?;
+                d.advance();
+                loss as f64
+            }
+            Driver::Adam(d) => {
+                let scalars = d.scalar_inputs()?;
+                let mut inputs: Vec<&Literal> =
+                    Vec::with_capacity(3 * n + 5);
+                inputs.extend(self.params.refs());
+                inputs.extend(d.m.refs());
+                inputs.extend(d.v.refs());
+                inputs.push(&ids);
+                inputs.push(&mask);
+                inputs.push(&labels);
+                inputs.extend(scalars.iter());
+                let mut outs = self.step_prog.execute(&inputs)?;
+                let loss = outs.pop().context("loss output")?.f32_scalar()?;
+                let v_new = outs.split_off(2 * n);
+                let m_new = outs.split_off(n);
+                self.params.replace(outs)?;
+                d.replace_state(m_new, v_new)?;
+                d.advance();
+                loss as f64
+            }
+        };
+        let host_time_s = started.elapsed().as_secs_f64();
+
+        // mirror into the simulated device: thermal clock advances by the
+        // *simulated* step time, which also is what we report
+        let sim_time_s = if let Some(dev) = self.device.as_mut() {
+            let dims = dev_dims(&self.cfg);
+            let t = dev
+                .step_time(&dims, self.optimizer.family(), self.batch,
+                           self.seq)
+                .total_s();
+            dev.compute.advance(t);
+            t
+        } else {
+            host_time_s
+        };
+
+        let r = StepResult { step: self.step, loss, host_time_s, sim_time_s };
+        self.metrics.record("loss", self.step, loss);
+        self.metrics.record("host_step_s", self.step, host_time_s);
+        self.metrics.record("sim_step_s", self.step, sim_time_s);
+        self.step += 1;
+        Ok(r)
+    }
+
+    /// Ensure the batch cache covers steps [0, upto).
+    fn fill_batch_cache(&mut self, upto: usize) {
+        if self.batch_cache.len() >= upto {
+            return;
+        }
+        // the batcher borrows data/bpe immutably; collect first, then
+        // extend the cache (single deterministic stream from step 0)
+        let fresh: Vec<Batch> = {
+            let mut batcher = self.make_batcher();
+            for _ in 0..self.batch_cache.len() {
+                batcher.next();
+            }
+            (self.batch_cache.len()..upto).map(|_| batcher.next()).collect()
+        };
+        self.batch_cache.extend(fresh);
+    }
+
+    /// Pull the next batch and step (the common path).
+    pub fn step(&mut self) -> Result<StepResult> {
+        let idx = self.step as usize;
+        self.fill_batch_cache(idx + 1);
+        let batch = self.batch_cache[idx].clone();
+        self.step_on(&batch)
+    }
+
+    /// Run `n` steps; returns summary stats.
+    pub fn run_steps(&mut self, n: u64) -> Result<SessionStats> {
+        let start = self.step as usize;
+        self.fill_batch_cache(start + n as usize);
+        let batches: Vec<Batch> =
+            self.batch_cache[start..start + n as usize].to_vec();
+        let mut first = None;
+        let mut last = 0.0;
+        let mut host = 0.0;
+        let mut sim = 0.0;
+        for batch in &batches {
+            let r = self.step_on(batch)?;
+            first.get_or_insert(r.loss);
+            last = r.loss;
+            host += r.host_time_s;
+            sim += r.sim_time_s;
+        }
+        Ok(SessionStats {
+            steps: n,
+            first_loss: first.unwrap_or(f64::NAN),
+            last_loss: last,
+            mean_host_step_s: host / n.max(1) as f64,
+            mean_sim_step_s: sim / n.max(1) as f64,
+            sim_peak_bytes: self
+                .device
+                .as_ref()
+                .map(|d| d.ledger.peak())
+                .unwrap_or(0),
+        })
+    }
+
+    /// Evaluation loss over the held-out split (LM + classification).
+    pub fn eval_loss(&self) -> Result<f64> {
+        let prog = self
+            .loss_prog
+            .as_ref()
+            .context("no loss_eval artifact for this config/batch")?;
+        let mut b = Batcher::new(
+            &self.bpe,
+            &self.data.eval,
+            self.batch,
+            self.seq,
+            self.cfg.is_decoder(),
+            self.cfg.vocab,
+            7,
+        );
+        let n_batches = (self.data.eval.len() / self.batch).max(1);
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let batch = b.next();
+            let [ids, mask, labels] = self.batch_literals(&batch)?;
+            let mut inputs: Vec<&Literal> = Vec::new();
+            inputs.extend(self.params.refs());
+            inputs.push(&ids);
+            inputs.push(&mask);
+            inputs.push(&labels);
+            let outs = prog.execute(&inputs)?;
+            total += outs[0].f32_scalar()? as f64;
+        }
+        Ok(total / n_batches as f64)
+    }
+
+    /// Classification accuracy over the held-out split (encoders only).
+    pub fn eval_accuracy(&self) -> Result<f64> {
+        if self.cfg.is_decoder() {
+            bail!("accuracy undefined for causal-LM tasks; use eval_loss");
+        }
+        let prog = self
+            .eval_prog
+            .as_ref()
+            .context("no eval artifact for this config/batch")?;
+        let mut b = Batcher::new(
+            &self.bpe,
+            &self.data.eval,
+            self.batch,
+            self.seq,
+            false,
+            self.cfg.vocab,
+            7,
+        );
+        let n_batches = (self.data.eval.len() / self.batch).max(1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..n_batches {
+            let batch = b.next();
+            let [ids, mask, _labels] = self.batch_literals(&batch)?;
+            let mut inputs: Vec<&Literal> = Vec::new();
+            inputs.extend(self.params.refs());
+            inputs.push(&ids);
+            inputs.push(&mask);
+            let outs = prog.execute(&inputs)?;
+            let logits = outs[0].f32_vec()?;
+            let ncls = self.cfg.n_classes;
+            for (row, &want) in batch.labels.iter().enumerate() {
+                let row_logits = &logits[row * ncls..(row + 1) * ncls];
+                let got = row_logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += (got as i32 == want) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Tear down: release the simulated memory reservation.
+    pub fn close(&mut self) {
+        if let (Some(dev), Some(fp)) =
+            (self.device.as_mut(), self.footprint.take())
+        {
+            dev.ledger.release_footprint(&fp);
+            dev.compute.cool_down();
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.close();
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny CLI argument parser (no clap in the offline environment).
+//!
+//! Supports the subset the `pocketllm` launcher needs: a positional
+//! subcommand, `--flag value`, `--flag=value`, boolean `--flag`, and
+//! repeated flags.  Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse raw argv (without the program name).  `known` lists the flags
+    /// that take a value; every other `--x` is treated as boolean.
+    pub fn parse(
+        argv: &[String],
+        known_value_flags: &[&str],
+    ) -> Result<Args, ArgError> {
+        let mut out = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            flags: BTreeMap::new(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let takes_value = known_value_flags.contains(&name.as_str());
+                let value = if let Some(v) = inline_val {
+                    v
+                } else if takes_value {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| {
+                            ArgError(format!("--{name} expects a value"))
+                        })?
+                } else {
+                    "true".to_string()
+                };
+                out.flags.entry(name).or_default().push(value);
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: bad number '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(
+            &argv(&["finetune", "--model", "pocket-tiny", "--steps=5",
+                    "--verbose", "extra"]),
+            &["model", "steps"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("finetune"));
+        assert_eq!(a.flag("model"), Some("pocket-tiny"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["x", "--model"]), &["model"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_f64("lr", 1e-3).unwrap(), 1e-3);
+    }
+
+    #[test]
+    fn repeated_flags() {
+        let a = Args::parse(
+            &argv(&["r", "--tag", "a", "--tag", "b"]),
+            &["tag"],
+        )
+        .unwrap();
+        assert_eq!(a.flag_all("tag"), vec!["a", "b"]);
+        assert_eq!(a.flag("tag"), Some("b"));
+    }
+}

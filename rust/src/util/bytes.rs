@@ -1,0 +1,52 @@
+//! Byte-size arithmetic and human-readable formatting.
+//!
+//! The device memory model traffics in exact byte counts; reports print
+//! them the way the paper does (decimal GB, one decimal place).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+pub const GB: u64 = 1_000_000_000;
+pub const MB: u64 = 1_000_000;
+
+/// Format as the paper's tables do: decimal GB with one decimal.
+pub fn fmt_gb(bytes: u64) -> String {
+    format!("{:.1} GB", bytes as f64 / GB as f64)
+}
+
+/// Adaptive human formatting (B / KiB / MiB / GiB).
+pub fn fmt_human(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// f32 tensor size in bytes for a shape.
+pub fn f32_bytes(shape: &[usize]) -> u64 {
+    4 * shape.iter().product::<usize>() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_gb(6_500_000_000), "6.5 GB");
+        assert_eq!(fmt_human(512), "512 B");
+        assert_eq!(fmt_human(2 * MIB), "2.0 MiB");
+        assert_eq!(fmt_human(3 * GIB), "3.00 GiB");
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        assert_eq!(f32_bytes(&[2, 3]), 24);
+        assert_eq!(f32_bytes(&[]), 4);
+    }
+}

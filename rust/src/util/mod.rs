@@ -1,0 +1,11 @@
+//! Dependency-free substrates: JSON codec, deterministic PRNG, byte/size
+//! formatting, timing helpers, and a tiny CLI argument parser.
+//!
+//! The offline build environment provides no serde / rand / clap, so the
+//! runtime carries its own minimal, well-tested implementations.
+
+pub mod args;
+pub mod bytes;
+pub mod json;
+pub mod rng;
+pub mod timer;

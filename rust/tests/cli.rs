@@ -1,0 +1,114 @@
+//! CLI integration tests: drive the `pocketllm` binary end to end the way
+//! a user would.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let bin = env!("CARGO_BIN_EXE_pocketllm");
+    let out = Command::new(bin).args(args).output().expect("spawn");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["finetune", "report", "daemon", "devices"] {
+        assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_loudly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn devices_table_renders() {
+    let (ok, text) = run(&["devices"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("oppo-reno6"));
+    assert!(text.contains("rtx3090-server"));
+}
+
+#[test]
+fn report_tables_match_paper_shape() {
+    let (ok, text) = run(&["report", "table1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("OOM"));
+    let (ok, text) = run(&["report", "table2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("97"));
+    let (ok, text) = run(&["report", "energy"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("battery"));
+    let (ok, _) = run(&["report", "nonsense"]);
+    assert!(!ok);
+}
+
+#[test]
+fn finetune_smoke_with_device_and_csv() {
+    let csv = std::env::temp_dir().join("pocketllm_cli_metrics.csv");
+    let csv_s = csv.to_str().unwrap();
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny", "--optimizer", "mezo",
+        "--steps", "4", "--device", "oppo-reno6", "--csv", csv_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("final loss"));
+    assert!(text.contains("simulated peak memory"));
+    let data = std::fs::read_to_string(&csv).unwrap();
+    assert!(data.starts_with("step,"));
+    assert!(data.lines().count() >= 5, "{data}");
+}
+
+#[test]
+fn finetune_checkpoint_then_eval() {
+    let dir = std::env::temp_dir().join("pocketllm_cli_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().unwrap();
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny", "--steps", "3",
+        "--checkpoint", dir_s,
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = run(&[
+        "eval", "--model", "pocket-tiny", "--checkpoint", dir_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("eval loss"));
+    assert!(text.contains("accuracy"));
+}
+
+#[test]
+fn adam_checkpoint_is_refused_with_explanation() {
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny-fast", "--optimizer", "adam",
+        "--steps", "1", "--checkpoint", "/tmp/should_not_exist_ck",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("3x params"), "{text}");
+}
+
+#[test]
+fn artifacts_listing_shows_programs() {
+    let (ok, text) = run(&["artifacts"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mezo_step"));
+    assert!(text.contains("pocket-roberta"));
+    assert!(text.contains("platform: cpu"));
+}
+
+#[test]
+fn missing_artifacts_dir_explains_make() {
+    let (ok, text) = run(&["artifacts", "--artifacts", "/nonexistent"]);
+    assert!(!ok);
+    assert!(text.contains("make artifacts"), "{text}");
+}

@@ -1,0 +1,347 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! The offline environment has no proptest crate, so this file carries a
+//! tiny deterministic property harness (`for_cases`): N seeded random
+//! cases per property, with the failing seed printed for reproduction.
+//! Shrinking is traded for case volume — each property runs hundreds of
+//! random cases.
+
+use pocketllm::data::batcher::Batcher;
+use pocketllm::data::bpe::Bpe;
+use pocketllm::data::corpus::{self, Sample};
+use pocketllm::device::memory::{finetune_footprint, Category, MemoryLedger};
+use pocketllm::device::spec::preset;
+use pocketllm::device::{ComputeModel, ModelDims, OptimizerFamily};
+use pocketllm::optim::Schedule;
+use pocketllm::util::json::{self, Json};
+use pocketllm::util::rng::Rng;
+
+/// Run `n` seeded cases of a property.
+fn for_cases(n: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(HARNESS_SALT ^ seed);
+        prop(&mut rng);
+    }
+}
+
+// 0xP isn't valid rust — constant for the harness:
+#[allow(dead_code)]
+const HARNESS_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+// ---------------------------------------------------------------------
+// memory ledger invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ledger_never_exceeds_budget_and_balances() {
+    for_cases(300, |rng| {
+        let budget = 1 + rng.below(1 << 30) as u64;
+        let mut ledger = MemoryLedger::new(budget);
+        let mut shadow: Vec<(Category, u64)> = Vec::new();
+        for _ in 0..rng.below(40) {
+            let cat = *rng.choose(&Category::ALL);
+            if rng.chance(0.6) || shadow.is_empty() {
+                let bytes = rng.below(1 << 28) as u64;
+                if ledger.alloc(cat, bytes).is_ok() {
+                    shadow.push((cat, bytes));
+                }
+            } else {
+                let i = rng.below(shadow.len());
+                let (cat, bytes) = shadow.swap_remove(i);
+                ledger.free(cat, bytes);
+            }
+            // invariants
+            assert!(ledger.in_use() <= ledger.budget());
+            assert!(ledger.peak() >= ledger.in_use());
+            let sum: u64 =
+                Category::ALL.iter().map(|&c| ledger.category(c)).sum();
+            assert_eq!(sum, ledger.in_use());
+        }
+        // free everything -> exactly zero
+        for (cat, bytes) in shadow.drain(..) {
+            ledger.free(cat, bytes);
+        }
+        assert_eq!(ledger.in_use(), 0);
+        assert_eq!(ledger.overfree_events(), 0);
+    });
+}
+
+#[test]
+fn prop_oom_iff_over_budget() {
+    for_cases(300, |rng| {
+        let budget = rng.below(1 << 30) as u64;
+        let mut ledger = MemoryLedger::new(budget);
+        let req = rng.below(1 << 31) as u64;
+        let fits = req <= budget;
+        assert_eq!(ledger.alloc(Category::Workspace, req).is_ok(), fits);
+        assert_eq!(ledger.oom_events(), (!fits) as u64);
+    });
+}
+
+// ---------------------------------------------------------------------
+// footprint model properties (the Table 1 mechanism)
+// ---------------------------------------------------------------------
+
+fn random_dims(rng: &mut Rng) -> ModelDims {
+    let d = 64 << rng.below(5); // 64..1024
+    ModelDims {
+        name: "prop".into(),
+        vocab: 512 + rng.below(50_000),
+        d_model: d,
+        n_layers: 1 + rng.below(30),
+        n_heads: [1, 2, 4, 8][rng.below(4)],
+        d_ff: d * 4,
+        max_seq: 16 << rng.below(5),
+        decoder: rng.chance(0.5),
+        param_bytes: if rng.chance(0.5) { 2 } else { 4 },
+    }
+}
+
+#[test]
+fn prop_mezo_footprint_never_exceeds_adam() {
+    for_cases(200, |rng| {
+        let dims = random_dims(rng);
+        let b = 1 + rng.below(128);
+        let s = 8 + rng.below(512);
+        let m = finetune_footprint(&dims, OptimizerFamily::DerivativeFree,
+                                   b, s);
+        let a = finetune_footprint(&dims, OptimizerFamily::DerivativeBased,
+                                   b, s);
+        assert!(m.total() <= a.total(),
+                "mezo {} > adam {} for {dims:?} b={b} s={s}",
+                m.total(), a.total());
+        // and the structural zeros hold
+        assert_eq!(m.gradients, 0);
+        assert_eq!(m.optimizer_state, 0);
+    });
+}
+
+#[test]
+fn prop_footprints_monotone_in_batch_and_seq() {
+    for_cases(150, |rng| {
+        let dims = random_dims(rng);
+        let b = 1 + rng.below(64);
+        let s = 8 + rng.below(256);
+        for fam in [OptimizerFamily::DerivativeFree,
+                    OptimizerFamily::DerivativeBased] {
+            let base = finetune_footprint(&dims, fam, b, s).total();
+            let bigger_b = finetune_footprint(&dims, fam, b * 2, s).total();
+            let bigger_s = finetune_footprint(&dims, fam, b, s * 2).total();
+            assert!(bigger_b >= base);
+            assert!(bigger_s >= base);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// compute model properties (the Table 2 mechanism)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_step_time_positive_and_sublinear_in_batch() {
+    for_cases(100, |rng| {
+        let dims = random_dims(rng);
+        let name = *rng.choose(pocketllm::device::spec::preset_names());
+        let cm = ComputeModel::new(preset(name).unwrap());
+        let b = 1 + rng.below(64);
+        let s = 8 + rng.below(256);
+        for fam in [OptimizerFamily::DerivativeFree,
+                    OptimizerFamily::DerivativeBased] {
+            let t1 = cm.step_time(&dims, fam, b, s).total_s();
+            let t2 = cm.step_time(&dims, fam, b * 8, s).total_s();
+            assert!(t1 > 0.0 && t1.is_finite());
+            // 8x batch must cost at most 8x time (utilization saturates)
+            assert!(t2 <= t1 * 8.0 + 1e-9, "{name}: {t1} -> {t2}");
+            assert!(t2 >= t1, "more work cannot be faster");
+        }
+    });
+}
+
+#[test]
+fn prop_utilization_bounded() {
+    for_cases(100, |rng| {
+        let name = *rng.choose(pocketllm::device::spec::preset_names());
+        let cm = ComputeModel::new(preset(name).unwrap());
+        let b = 1 + rng.below(100_000);
+        let u = cm.utilization(b);
+        assert!(u > 0.0 && u < 1.0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// JSON codec: random documents round-trip
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            // grid of integers and dyadic fractions survives f64 exactly
+            Json::Num(rng.range(-1_000_000, 1_000_000) as f64
+                      + [0.0, 0.5, 0.25][rng.below(3)])
+        }
+        3 => {
+            let len = rng.below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32; // printable ascii
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for_cases(500, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.dump();
+        let back = json::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse failed: {e} on {text}"));
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// BPE: random word corpora round-trip
+// ---------------------------------------------------------------------
+
+fn random_word(rng: &mut Rng) -> String {
+    let len = 1 + rng.below(10);
+    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+#[test]
+fn prop_bpe_roundtrips_any_ascii_words() {
+    for_cases(40, |rng| {
+        let vocab_words: Vec<String> =
+            (0..20).map(|_| random_word(rng)).collect();
+        let corpus: Vec<String> = (0..50)
+            .map(|_| {
+                (0..1 + rng.below(8))
+                    .map(|_| rng.choose(&vocab_words).clone())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect();
+        let bpe = Bpe::train(&corpus, 260 + rng.below(200));
+        // in-vocabulary text
+        let text = corpus[rng.below(corpus.len())].clone();
+        assert_eq!(bpe.decode(&bpe.encode(&text)), text);
+        // out-of-vocabulary text still round-trips (byte fallback)
+        let novel = format!("{} {}", random_word(rng), random_word(rng));
+        assert_eq!(bpe.decode(&bpe.encode(&novel)), novel);
+        // save/load preserves the encoding function
+        let restored = Bpe::load(&bpe.save()).unwrap();
+        assert_eq!(bpe.encode(&text), restored.encode(&text));
+    });
+}
+
+// ---------------------------------------------------------------------
+// batcher: geometry and masking invariants under random shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_mask_matches_pad() {
+    let texts = corpus::tokenizer_corpus(1, 100);
+    let bpe = Bpe::train(&texts, 300);
+    for_cases(60, |rng| {
+        let n = 4 + rng.below(60);
+        let samples: Vec<Sample> = {
+            let mut r2 = rng.fork(1);
+            (0..n)
+                .map(|_| corpus::sentiment_sample(&mut r2))
+                .collect()
+        };
+        let batch = 1 + rng.below(8);
+        let seq = 8 + rng.below(24);
+        let lm = rng.chance(0.3);
+        let mut b = Batcher::new(&bpe, &samples, batch, seq, lm, 512,
+                                 rng.next_u64());
+        for _ in 0..3 {
+            let out = b.next();
+            assert_eq!(out.ids.len(), batch * seq);
+            assert_eq!(out.mask.len(), batch * seq);
+            assert_eq!(out.labels.len(),
+                       if lm { batch * seq } else { batch });
+            for (i, &id) in out.ids.iter().enumerate() {
+                let live = out.mask[i] > 0.0;
+                assert_eq!(live, id != 0, "mask/pad mismatch at {i}");
+                assert!(id >= 0 && (id as usize) < 512);
+            }
+            // every row starts with BOS
+            for r in 0..batch {
+                assert_eq!(out.ids[r * seq], 1);
+            }
+            assert!(out.density() > 0.0);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// schedules: output always within the hull of endpoints
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_schedule_bounded() {
+    for_cases(200, |rng| {
+        let a = rng.next_f64();
+        let b = rng.next_f64();
+        let steps = 1 + rng.below(1000) as u64;
+        let lo = a.min(b);
+        let hi = a.max(b);
+        let lin = Schedule::Linear { start: a, end: b, steps };
+        let cos = Schedule::WarmupCosine {
+            peak: hi,
+            floor: lo,
+            warmup: steps / 4,
+            total: steps,
+        };
+        for probe in 0..20 {
+            let t = (probe * (steps + 10)) / 20;
+            let v = lin.at(t);
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12);
+            // warmup ramps from ~0, so the cosine hull is [0, peak]
+            let v = cos.at(t);
+            assert!(v >= -1e-12 && v <= hi + 1e-12);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// rng: fork independence, shuffle preserves multiset
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fork_streams_diverge() {
+    for_cases(100, |rng| {
+        let mut a = rng.fork(1);
+        let mut b = rng.fork(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    });
+}
+
+#[test]
+fn prop_shuffle_is_permutation() {
+    for_cases(100, |rng| {
+        let n = 1 + rng.below(200);
+        let mut v: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+    });
+}
