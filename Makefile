@@ -1,0 +1,27 @@
+# PocketLLM build driver.
+#
+# The default (native) backend needs NOTHING here: `cargo test` and
+# `cargo build --release` are hermetic.  `make artifacts` runs the
+# Layer-1/2 Python AOT pipeline, which only the `pjrt` backend needs
+# (the native backend will happily use the resulting manifest +
+# init_params.bin too, for cross-backend parity runs).
+
+.PHONY: build test artifacts bench clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Lower every (config, program, batch) to HLO text + manifest.json.
+# Requires python + jax (see python/compile/aot.py).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf artifacts

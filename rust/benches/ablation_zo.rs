@@ -14,7 +14,7 @@ use pocketllm::tuner::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
     let steps = env_u64("ZO_STEPS", 40);
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
     let mut t = Table::new(&format!(
         "k-query SPSA ablation — pocket-roberta, {steps} steps, lr 1e-4"
     ))

@@ -12,7 +12,7 @@ fn main() -> anyhow::Result<()> {
     let steps = env_u64("FIG1_STEPS", 80);
     let model = std::env::var("FIG1_MODEL")
         .unwrap_or_else(|_| "pocket-roberta".into());
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
 
     println!("fig1: {model}, {steps} steps per optimizer\n");
     let t0 = std::time::Instant::now();

@@ -2,7 +2,7 @@
 //! pass (EXPERIMENTS.md §Perf).
 //!
 //! Decomposes a session step into its components so non-`execute` time
-//! is visible: batch assembly, literal construction, PJRT execution,
+//! is visible: batch assembly, literal construction, backend execution,
 //! output scatter.  Target: everything outside `execute` < 5% of step.
 
 use pocketllm::data::batcher::Batcher;
@@ -17,7 +17,7 @@ use pocketllm::tuner::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
     let iters = env_u64("HOTPATH_ITERS", 30) as usize;
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
     let mut ms = Vec::new();
 
     // --- data pipeline pieces ---
@@ -78,7 +78,8 @@ fn main() -> anyhow::Result<()> {
         let eps = pocketllm::runtime::f32_1(1e-3)?;
         for kind in ["mezo_step", "mezo_step_naive"] {
             let prog = rt.program("pocket-roberta", kind, 8)?;
-            let mut inputs: Vec<&xla::Literal> = params.refs();
+            let mut inputs: Vec<&pocketllm::runtime::Literal> =
+                params.refs();
             inputs.push(&ids);
             inputs.push(&mask);
             inputs.push(&labels);

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", report::opt13b().render());
 
     // measure the pocket decoder for real
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
     let mut s = SessionBuilder::new(&rt, "pocket-opt")
         .optimizer(OptimizerKind::MeZo)
         .seed(3)

@@ -14,7 +14,7 @@ use pocketllm::tuner::session::SessionBuilder;
 fn main() -> anyhow::Result<()> {
     println!("{}", report::table2().render());
 
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
     let iters = env_u64("TABLE2_ITERS", 8) as usize;
     let mut measurements = Vec::new();
     let mut per_step = std::collections::BTreeMap::new();

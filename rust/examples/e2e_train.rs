@@ -8,7 +8,7 @@
 //!
 //! Trains the pocket-roberta classifier (5.8M params) on synthetic SST-2
 //! with BOTH optimizers through the whole stack — Pallas/JAX-lowered HLO
-//! on PJRT driven by the Rust session loop under a simulated OPPO Reno 6
+//! driven by the Rust session loop under a simulated OPPO Reno 6
 //! envelope — and writes the Fig.-1-style loss curves to
 //! `e2e_loss_curves.csv`.  Exit code is non-zero if either optimizer
 //! fails to learn (so this doubles as a long-running CI check).
@@ -23,7 +23,7 @@ use pocketllm::telemetry::MetricLog;
 fn main() -> anyhow::Result<()> {
     let mezo_steps = env_u64("E2E_STEPS_MEZO", 300);
     let adam_steps = env_u64("E2E_STEPS_ADAM", 150);
-    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let manifest = Manifest::load_or_builtin("artifacts/manifest.json")?;
     let rt = Runtime::new(manifest)?;
     let mut log = MetricLog::new();
     let mut summary = Vec::new();

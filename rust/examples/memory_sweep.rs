@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", report::oom_frontier().render());
 
     // measured at pocket scale on this host
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
     let mut t = Table::new(
         "Measured host RSS growth per session (pocket-roberta, 3 steps)",
     )
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "note: rust+PJRT runtime overhead is ~{} — versus the ~2.6 GB \
+        "note: rust runtime overhead is ~{} — versus the ~2.6 GB \
          Termux+PyTorch stack the paper carried (see ablation report)",
         fmt_human(current_rss_bytes().unwrap_or(0))
     );

@@ -18,7 +18,7 @@ use pocketllm::scheduler::Policy;
 use pocketllm::tuner::eval::perplexity;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(Manifest::load("artifacts/manifest.json")?)?;
+    let rt = Runtime::new(Manifest::load_or_builtin("artifacts/manifest.json")?)?;
 
     // baseline perplexity on the user's held-out messages
     let base = SessionBuilder::new(&rt, "pocket-opt")

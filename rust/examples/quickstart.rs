@@ -1,22 +1,22 @@
 //! Quickstart: fine-tune a pocket model with MeZO in ~30 lines.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart   # hermetic (native backend)
+//! # or: make artifacts first to run over the AOT manifest
 //! ```
 //!
-//! Loads the AOT manifest, fine-tunes `pocket-tiny` (the Pallas-kernel
-//! artifact) on synthetic SST-2 with derivative-free optimization, and
-//! reports accuracy before and after.  Note what is *absent*: no Python,
-//! no gradients, no optimizer state — the entire optimizer state is a
-//! seed and a step counter.
+//! Fine-tunes `pocket-tiny` on synthetic SST-2 with derivative-free
+//! optimization and reports accuracy before and after.  Note what is
+//! *absent*: no Python, no gradients, no optimizer state — the entire
+//! optimizer state is a seed and a step counter.
 
 use pocketllm::prelude::*;
 use pocketllm::optim::Schedule;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let manifest = Manifest::load_or_builtin("artifacts/manifest.json")?;
     let rt = Runtime::new(manifest)?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("execution backend: {}", rt.platform());
 
     let mut session = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let acc_after = session.eval_accuracy()?;
     println!("accuracy after fine-tuning:  {:.3}", acc_after);
     println!(
-        "optimizer state carried between steps: 12 bytes (seed + counter)"
+        "optimizer state carried between steps: 16 bytes (seed + counter)"
     );
     Ok(())
 }

@@ -6,14 +6,15 @@
 //! * policy-gated execution windows ([`crate::scheduler`]): run steps
 //!   only while the phone is plugged in / idle / cool / memory-rich,
 //!   pausing and resuming across windows via the deterministic seed
-//!   schedule (MeZO's 12-byte optimizer state makes suspends free),
+//!   schedule (MeZO's 16-byte optimizer state makes suspends free),
 //! * OOM handling with **derivative-free fallback**: if a job configured
 //!   with Adam fails device admission — the paper's Table 1 bs=64 event —
 //!   the coordinator relaunches it with MeZO instead of crashing.  This
 //!   is the paper's thesis operationalized as a scheduling policy.
 //!
 //! Execution is simulation-clocked: each policy window advances the
-//! phone-state trace, while the underlying steps run for real on PJRT.
+//! phone-state trace, while the underlying steps run for real on the
+//! configured execution backend.
 
 pub mod jobs;
 

@@ -6,23 +6,42 @@
 //!
 //! * **Layer 1/2 (build-time Python)** — Pallas kernels + a JAX transformer
 //!   family, AOT-lowered once to HLO-text artifacts (`make artifacts`).
-//! * **Layer 3 (this crate)** — the on-device fine-tuning runtime: it loads
-//!   the artifacts through PJRT ([`runtime`]), drives MeZO / Adam step
-//!   programs ([`optim`], [`tuner`]), generates and tokenizes on-device
-//!   personal data ([`data`]), enforces a simulated smartphone's memory /
-//!   compute envelope ([`device`]), and schedules background fine-tuning
-//!   sessions the way a phone would ([`scheduler`], [`coordinator`]).
+//! * **Layer 3 (this crate)** — the on-device fine-tuning runtime: it
+//!   executes step programs through a pluggable backend ([`runtime`]),
+//!   drives MeZO / Adam step programs ([`optim`], [`tuner`]), generates
+//!   and tokenizes on-device personal data ([`data`]), enforces a
+//!   simulated smartphone's memory / compute envelope ([`device`]), and
+//!   schedules background fine-tuning sessions the way a phone would
+//!   ([`scheduler`], [`coordinator`]).
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `pocketllm` binary is self-contained.
+//! Python never runs on the request path — and with the default
+//! **native backend** it never needs to run at all.
+//!
+//! ## Execution backends
+//!
+//! | backend  | feature     | needs                        | use for |
+//! |----------|-------------|------------------------------|---------|
+//! | native   | (default)   | nothing — hermetic           | tests, CI, any machine |
+//! | pjrt     | `pjrt`      | `xla` crate + local XLA, `make artifacts` | the AOT/HLO path the paper's system deploys |
+//!
+//! The native backend interprets the fused `mezo_step` / `adam_step` /
+//! `eval` program semantics directly in Rust ([`runtime::native`]):
+//! the same counter-RNG perturbation stream as the Pallas kernels (so
+//! seeds and trajectories are comparable), a hand-derived backward pass
+//! for Adam, and the same manifest calling convention.  `make
+//! artifacts` only matters to the PJRT path (it lowers the HLO text
+//! that backend compiles); the native path synthesizes its manifest
+//! ([`runtime::Manifest::builtin`]) when `artifacts/` is absent.
 //!
 //! ## Quick tour
 //!
 //! ```no_run
 //! use pocketllm::prelude::*;
 //!
-//! let manifest = Manifest::load("artifacts/manifest.json").unwrap();
-//! let rt = Runtime::new(manifest).unwrap();
+//! // artifacts/manifest.json if present, hermetic builtin otherwise
+//! let manifest =
+//!     Manifest::load_or_builtin("artifacts/manifest.json").unwrap();
+//! let rt = Runtime::new(manifest).unwrap(); // native backend
 //! let mut session = SessionBuilder::new(&rt, "pocket-tiny")
 //!     .optimizer(OptimizerKind::MeZo)
 //!     .batch_size(4)

@@ -12,8 +12,12 @@
 //!   artifacts  list AOT programs in the manifest
 //! ```
 //!
-//! Python never runs here: all compute is AOT-compiled HLO executed via
-//! PJRT.  Run `make artifacts` first.
+//! Python never runs here.  By default the binary is fully hermetic:
+//! without an `artifacts/` directory it runs the builtin manifest on
+//! the native interpreter backend.  With `make artifacts` (or an
+//! explicit `--artifacts DIR`) it uses the AOT manifest instead — and
+//! the same artifacts execute on PJRT when built with `--features
+//! pjrt`.
 
 use anyhow::{bail, Context, Result};
 
@@ -73,10 +77,25 @@ fn main() {
 
 fn open_runtime(args: &Args) -> Result<Runtime> {
     let dir = args.get_or("artifacts", "artifacts");
-    let manifest = Manifest::load(format!("{dir}/manifest.json"))
-        .with_context(|| format!("loading {dir}/manifest.json — did you \
-                                  run `make artifacts`?"))?;
-    Runtime::new(manifest)
+    let path = format!("{dir}/manifest.json");
+    if std::path::Path::new(&path).exists() {
+        let manifest = Manifest::load(&path)
+            .with_context(|| format!("loading {path}"))?;
+        // with the pjrt feature, on-disk artifacts run on the PJRT/XLA
+        // backend (the deployment path); otherwise native interprets
+        // the same manifest
+        #[cfg(feature = "pjrt")]
+        return Runtime::pjrt(manifest);
+        #[cfg(not(feature = "pjrt"))]
+        return Runtime::new(manifest);
+    }
+    if args.has("artifacts") {
+        // an explicit --artifacts dir that doesn't exist is an error,
+        // not a silent fallback
+        bail!("no manifest at {path} — did you run `make artifacts`?");
+    }
+    // hermetic default: builtin manifest + native interpreter backend
+    Runtime::new(Manifest::builtin())
 }
 
 fn run(argv: &[String]) -> Result<()> {

@@ -5,10 +5,9 @@
 //! adam_step artifact consumes and returns them alongside the params.
 
 use anyhow::Result;
-use xla::Literal;
 
 use super::schedule::Schedule;
-use crate::runtime::literal::f32_1;
+use crate::runtime::literal::{f32_1, Literal};
 use crate::runtime::manifest::ConfigInfo;
 use crate::runtime::state::ModelState;
 
@@ -118,9 +117,9 @@ mod tests {
     fn t_is_one_based() {
         let mut d = AdamDriver::new(AdamConfig::default(), &tiny_cfg()).unwrap();
         let [t, _lr] = d.scalar_inputs().unwrap();
-        assert_eq!(t.get_first_element::<f32>().unwrap(), 1.0);
+        assert_eq!(t.f32_scalar().unwrap(), 1.0);
         d.advance();
         let [t, _lr] = d.scalar_inputs().unwrap();
-        assert_eq!(t.get_first_element::<f32>().unwrap(), 2.0);
+        assert_eq!(t.f32_scalar().unwrap(), 2.0);
     }
 }

@@ -4,15 +4,14 @@
 //! state is two integers.**  `(master_seed, step)` deterministically
 //! yields the per-step perturbation seed; the z tensor, the projected
 //! gradient, and the update all live transiently inside one HLO program
-//! execution.  Checkpointing MeZO therefore costs 12 bytes beyond the
+//! execution.  Checkpointing MeZO therefore costs 16 bytes beyond the
 //! parameters, versus 2x parameters for Adam — the paper's Table 1, in
 //! struct form.
 
 use anyhow::Result;
-use xla::Literal;
 
 use super::schedule::Schedule;
-use crate::runtime::literal::{f32_1, u32_1};
+use crate::runtime::literal::{f32_1, u32_1, Literal};
 use crate::util::rng::mezo_step_seed;
 
 /// Hyper-parameters of a MeZO run.
@@ -75,8 +74,10 @@ impl MezoDriver {
         MezoDriver { cfg, step }
     }
 
-    /// Bytes of optimizer state this driver adds to a checkpoint.
-    pub const STATE_BYTES: u64 = 12; // master_seed u64 + step padded
+    /// Bytes of optimizer state this driver adds to a checkpoint:
+    /// `(master_seed: u64, step: u64)` — exactly what
+    /// `tuner::checkpoint` persists and [`MezoDriver::resume`] consumes.
+    pub const STATE_BYTES: u64 = 16;
 
     /// Extra parameter-sized tensors MeZO carries (none — the point).
     pub const EXTRA_PARAM_SETS: usize = 0;
@@ -126,6 +127,7 @@ mod tests {
         let d = MezoDriver::new(MezoConfig::default());
         let [seed, lr, eps] = d.scalar_inputs().unwrap();
         assert_eq!(seed.element_count(), 1);
+        assert_eq!(seed.u32_scalar().unwrap(), d.current_seed());
         assert_eq!(lr.element_count(), 1);
         assert_eq!(eps.element_count(), 1);
     }
@@ -133,6 +135,10 @@ mod tests {
     #[test]
     fn zero_extra_state() {
         assert_eq!(MezoDriver::EXTRA_PARAM_SETS, 0);
-        assert!(MezoDriver::STATE_BYTES < 64);
+        // the durable optimizer state is exactly (master_seed, step)
+        assert_eq!(
+            MezoDriver::STATE_BYTES,
+            (std::mem::size_of::<u64>() * 2) as u64
+        );
     }
 }

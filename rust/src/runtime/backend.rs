@@ -1,0 +1,43 @@
+//! The execution-backend abstraction.
+//!
+//! A [`Backend`] turns a manifest [`ProgramSpec`] into an [`Executable`]
+//! — the step-program unit the session hot loop calls.  Two
+//! implementations exist:
+//!
+//! * [`native`](super::native) — a pure-Rust interpreter of the step
+//!   program semantics (tiny-transformer forward, softmax-xent loss,
+//!   counter-RNG SPSA perturbation, Adam update).  Default; hermetic;
+//!   needs no artifacts beyond the manifest.
+//! * [`pjrt`](super::pjrt) (`--features pjrt`) — compiles the AOT HLO
+//!   text through the `xla` crate's PJRT CPU client, the original
+//!   seed-repo path.
+//!
+//! Everything above this trait (optimizers, tuner, coordinator, benches)
+//! is backend-agnostic: it sees only [`Literal`]s and `ProgramSpec`s.
+
+use anyhow::Result;
+
+use super::literal::Literal;
+use super::manifest::{Manifest, ProgramSpec};
+
+/// A compiled, ready-to-run step program (one (config, kind, batch)).
+pub trait Executable: Send + Sync {
+    /// Execute with host literals.  Input order follows `spec.inputs`;
+    /// the output vector follows `spec.outputs`.  Arity is checked by
+    /// the [`Program`](super::Program) wrapper, not here.
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+}
+
+/// An execution engine bound to one artifact directory / manifest.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform tag (e.g. `cpu-native`, `cpu` for PJRT).
+    fn platform(&self) -> String;
+
+    /// Compile one step program.  Called once per (config, kind, batch);
+    /// the [`Runtime`](super::Runtime) caches the result.
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &ProgramSpec,
+    ) -> Result<Box<dyn Executable>>;
+}

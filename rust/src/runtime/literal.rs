@@ -1,87 +1,170 @@
-//! Host-literal construction/extraction helpers over the `xla` crate.
+//! Backend-owned host tensors.
 //!
+//! [`Literal`] is the value type that crosses the [`Backend`]
+//! (crate::runtime::backend) boundary: a shape plus typed host data.
 //! The step programs speak three element types (f32/i32/u32) and two
 //! scalar conventions (shape-(1,) scalars for seed/lr/eps; shape-()
-//! for the returned loss).  These helpers centralize the byte-level
-//! plumbing so the session code stays readable.
+//! for the returned loss).  These helpers centralize that plumbing so
+//! the session code stays readable and backend-agnostic — the PJRT
+//! backend converts to/from `xla::Literal` internally, the native
+//! backend operates on these buffers directly.
 
-use anyhow::{anyhow, Context, Result};
-use xla::Literal;
+use anyhow::{bail, Result};
 
-fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(
-            v.as_ptr() as *const u8,
-            std::mem::size_of_val(v),
-        )
+use super::manifest::Dtype;
+
+/// Typed element storage of one literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A host tensor: row-major data plus shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: LiteralData,
+}
+
+impl Literal {
+    fn check(n: usize, shape: &[usize]) -> Result<()> {
+        let want: usize = shape.iter().product();
+        if want != n {
+            bail!("shape {:?} vs {} values", shape, n);
+        }
+        Ok(())
+    }
+
+    pub fn from_f32(data: Vec<f32>, shape: Vec<usize>) -> Result<Literal> {
+        Self::check(data.len(), &shape)?;
+        Ok(Literal { shape, data: LiteralData::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: Vec<usize>) -> Result<Literal> {
+        Self::check(data.len(), &shape)?;
+        Ok(Literal { shape, data: LiteralData::I32(data) })
+    }
+
+    pub fn from_u32(data: Vec<u32>, shape: Vec<usize>) -> Result<Literal> {
+        Self::check(data.len(), &shape)?;
+        Ok(Literal { shape, data: LiteralData::U32(data) })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            LiteralData::F32(_) => Dtype::F32,
+            LiteralData::I32(_) => Dtype::I32,
+            LiteralData::U32(_) => Dtype::U32,
+        }
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.element_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.element_count() == 0
+    }
+
+    pub fn f32_slice(&self) -> Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            _ => bail!("expected f32 literal, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn i32_slice(&self) -> Result<&[i32]> {
+        match &self.data {
+            LiteralData::I32(v) => Ok(v),
+            _ => bail!("expected i32 literal, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn u32_slice(&self) -> Result<&[u32]> {
+        match &self.data {
+            LiteralData::U32(v) => Ok(v),
+            _ => bail!("expected u32 literal, got {:?}", self.dtype()),
+        }
+    }
+
+    /// All elements as f32 (errors on dtype mismatch).
+    pub fn f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.f32_slice()?.to_vec())
+    }
+
+    /// First element as f32 (works for shape-() and shape-(1,)).
+    pub fn f32_scalar(&self) -> Result<f32> {
+        match self.f32_slice()?.first() {
+            Some(v) => Ok(*v),
+            None => bail!("empty literal has no scalar"),
+        }
+    }
+
+    /// First element as u32.
+    pub fn u32_scalar(&self) -> Result<u32> {
+        match self.u32_slice()?.first() {
+            Some(v) => Ok(*v),
+            None => bail!("empty literal has no scalar"),
+        }
+    }
+
+    /// Raw little-endian bytes (checkpoint format).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.element_count() * 4);
+        match &self.data {
+            LiteralData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            LiteralData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            LiteralData::U32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        out
     }
 }
 
 /// f32 tensor literal of the given shape (row-major data).
 pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<Literal> {
-    let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", shape,
-                    data.len());
-    Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes_of(data),
-    )
-    .map_err(|e| anyhow!("f32 literal: {e:?}"))
+    Literal::from_f32(data.to_vec(), shape.to_vec())
 }
 
 /// i32 tensor literal.
 pub fn i32_tensor(data: &[i32], shape: &[usize]) -> Result<Literal> {
-    let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {:?} vs {} values", shape,
-                    data.len());
-    Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        shape,
-        bytes_of(data),
-    )
-    .map_err(|e| anyhow!("i32 literal: {e:?}"))
+    Literal::from_i32(data.to_vec(), shape.to_vec())
 }
 
 /// Shape-(1,) f32 scalar (the step programs' scalar convention).
 pub fn f32_1(v: f32) -> Result<Literal> {
-    f32_tensor(&[v], &[1])
+    Literal::from_f32(vec![v], vec![1])
 }
 
 /// Shape-(1,) u32 scalar (the MeZO seed).
 pub fn u32_1(v: u32) -> Result<Literal> {
-    Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::U32,
-        &[1],
-        bytes_of(&[v]),
-    )
-    .map_err(|e| anyhow!("u32 literal: {e:?}"))
-}
-
-/// Convenience extraction methods on `xla::Literal`.
-pub trait LiteralExt {
-    /// All elements as f32 (errors on dtype mismatch).
-    fn f32_vec(&self) -> Result<Vec<f32>>;
-    /// First element as f32 (works for shape-() and shape-(1,)).
-    fn f32_scalar(&self) -> Result<f32>;
-    /// Total element count.
-    fn len(&self) -> usize;
-}
-
-impl LiteralExt for Literal {
-    fn f32_vec(&self) -> Result<Vec<f32>> {
-        self.to_vec::<f32>().map_err(|e| anyhow!("literal->f32 vec: {e:?}"))
-    }
-
-    fn f32_scalar(&self) -> Result<f32> {
-        self.get_first_element::<f32>()
-            .map_err(|e| anyhow!("literal->f32 scalar: {e:?}"))
-            .context("extracting scalar")
-    }
-
-    fn len(&self) -> usize {
-        self.element_count()
-    }
+    Literal::from_u32(vec![v], vec![1])
 }
 
 #[cfg(test)]
@@ -92,7 +175,9 @@ mod tests {
     fn f32_roundtrip() {
         let l = f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
         assert_eq!(l.f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(LiteralExt::len(&l), 4);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.shape(), &[2, 2]);
+        assert_eq!(l.dtype(), Dtype::F32);
     }
 
     #[test]
@@ -106,6 +191,23 @@ mod tests {
         let l = f32_1(0.5).unwrap();
         assert_eq!(l.f32_scalar().unwrap(), 0.5);
         let u = u32_1(7).unwrap();
-        assert_eq!(u.get_first_element::<u32>().unwrap(), 7);
+        assert_eq!(u.u32_scalar().unwrap(), 7);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let u = u32_1(7).unwrap();
+        assert!(u.f32_vec().is_err());
+        let f = f32_1(1.0).unwrap();
+        assert!(f.i32_slice().is_err());
+    }
+
+    #[test]
+    fn le_bytes_match_format() {
+        let l = f32_tensor(&[1.0, -2.0], &[2]).unwrap();
+        let b = l.to_le_bytes();
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b[0..4], &1.0f32.to_le_bytes());
+        assert_eq!(&b[4..8], &(-2.0f32).to_le_bytes());
     }
 }

@@ -117,6 +117,9 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub configs: BTreeMap<String, ConfigInfo>,
     pub programs: Vec<ProgramSpec>,
+    /// True for the in-code manifest ([`Manifest::builtin`]): init
+    /// params are generated natively instead of read from disk.
+    pub builtin: bool,
 }
 
 fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
@@ -226,7 +229,63 @@ impl Manifest {
             }
         }
 
-        Ok(Manifest { dir, configs, programs })
+        Ok(Manifest { dir, configs, programs, builtin: false })
+    }
+
+    /// Load `<path>` if it exists, else fall back to the hermetic
+    /// builtin manifest (native backend, generated init params).
+    pub fn load_or_builtin(path: impl AsRef<Path>) -> Result<Manifest> {
+        if path.as_ref().exists() {
+            Manifest::load(path)
+        } else {
+            Ok(Manifest::builtin())
+        }
+    }
+
+    /// The in-code manifest: the same configs and (config, kind, batch)
+    /// program grid `python/compile/aot.py` lowers (its DEFAULT_PLAN),
+    /// with no files behind it.  The native backend interprets these
+    /// programs directly, so a fresh checkout trains hermetically; the
+    /// PJRT backend needs a real artifact directory instead.
+    pub fn builtin() -> Manifest {
+        use crate::runtime::native::params::make_config;
+        let tiny = make_config("pocket-tiny", "encoder", 512, 64, 2, 2,
+                               128, 32, 2, true);
+        let tiny_fast = make_config("pocket-tiny-fast", "encoder", 512, 64,
+                                    2, 2, 128, 32, 2, false);
+        let roberta = make_config("pocket-roberta", "encoder", 4096, 256,
+                                  6, 8, 1024, 64, 2, false);
+        let opt = make_config("pocket-opt", "decoder", 4096, 256, 6, 8,
+                              1024, 64, 2, false);
+
+        let mut programs = Vec::new();
+        let plan: &[(&ConfigInfo, &[&str], &[usize])] = &[
+            (&tiny, &["mezo_step", "eval", "loss_eval"], &[4]),
+            (&tiny_fast,
+             &["mezo_step", "adam_step", "eval", "loss_eval"], &[4]),
+            (&roberta,
+             &["mezo_step", "adam_step", "eval", "loss_eval"], &[8, 64]),
+            (&roberta, &["mezo_step_naive", "mezo_step_q4"], &[8]),
+            (&opt, &["mezo_step", "adam_step", "eval", "loss_eval"], &[8]),
+        ];
+        for (cfg, kinds, batches) in plan {
+            for kind in *kinds {
+                for &batch in *batches {
+                    programs.push(builtin_program(cfg, kind, batch));
+                }
+            }
+        }
+
+        let mut configs = BTreeMap::new();
+        for cfg in [tiny, tiny_fast, roberta, opt] {
+            configs.insert(cfg.name.clone(), cfg);
+        }
+        Manifest {
+            dir: PathBuf::from("builtin"),
+            configs,
+            programs,
+            builtin: true,
+        }
     }
 
     pub fn config(&self, name: &str) -> Result<&ConfigInfo> {
@@ -259,9 +318,14 @@ impl Manifest {
         v
     }
 
-    /// Read `<config>/init_params.bin` and split per tensor.
+    /// Initial parameters for a config: `<config>/init_params.bin` for
+    /// artifact-backed manifests, deterministic native init for the
+    /// builtin one.
     pub fn load_init_params(&self, config: &str) -> Result<Vec<Vec<f32>>> {
         let info = self.config(config)?;
+        if self.builtin {
+            return Ok(crate::runtime::native::params::init_params(info));
+        }
         let path = self.dir.join(config).join("init_params.bin");
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -288,6 +352,89 @@ impl Manifest {
             out.push(v);
         }
         Ok(out)
+    }
+}
+
+/// One builtin [`ProgramSpec`], mirroring `aot.py::program_signature`'s
+/// input/output calling convention exactly.
+fn builtin_program(cfg: &ConfigInfo, kind: &str, batch: usize)
+    -> ProgramSpec
+{
+    let s = cfg.max_seq;
+    let t = |name: &str, shape: Vec<usize>, dtype: Dtype| TensorSpec {
+        name: name.into(),
+        shape,
+        dtype,
+    };
+    let param_io = |suffix: &str| -> Vec<TensorSpec> {
+        cfg.params
+            .iter()
+            .map(|p| TensorSpec {
+                name: format!("{}{}", p.name, suffix),
+                shape: p.shape.clone(),
+                dtype: Dtype::F32,
+            })
+            .collect()
+    };
+    let data_io = || {
+        vec![t("ids", vec![batch, s], Dtype::I32),
+             t("mask", vec![batch, s], Dtype::F32)]
+    };
+    let labels_io = || {
+        if cfg.is_decoder() {
+            t("labels", vec![batch, s], Dtype::I32)
+        } else {
+            t("labels", vec![batch], Dtype::I32)
+        }
+    };
+
+    let (inputs, outputs) = if kind == "adam_step" {
+        let mut ins = param_io("");
+        ins.extend(param_io(".m"));
+        ins.extend(param_io(".v"));
+        ins.extend(data_io());
+        ins.push(labels_io());
+        ins.push(t("t", vec![1], Dtype::F32));
+        ins.push(t("lr", vec![1], Dtype::F32));
+        let mut outs = param_io("");
+        outs.extend(param_io(".m"));
+        outs.extend(param_io(".v"));
+        outs.push(t("loss", vec![], Dtype::F32));
+        (ins, outs)
+    } else if kind == "eval" {
+        let mut ins = param_io("");
+        ins.extend(data_io());
+        let outs = if cfg.is_decoder() {
+            vec![t("logits", vec![batch, s, cfg.vocab], Dtype::F32)]
+        } else {
+            vec![t("logits", vec![batch, cfg.n_classes], Dtype::F32)]
+        };
+        (ins, outs)
+    } else if kind == "loss_eval" {
+        let mut ins = param_io("");
+        ins.extend(data_io());
+        ins.push(labels_io());
+        (ins, vec![t("loss", vec![], Dtype::F32)])
+    } else {
+        // the mezo_step family shares one signature
+        let mut ins = param_io("");
+        ins.extend(data_io());
+        ins.push(labels_io());
+        ins.push(t("seed", vec![1], Dtype::U32));
+        ins.push(t("lr", vec![1], Dtype::F32));
+        ins.push(t("eps", vec![1], Dtype::F32));
+        let mut outs = param_io("");
+        outs.push(t("loss", vec![], Dtype::F32));
+        (ins, outs)
+    };
+
+    ProgramSpec {
+        config: cfg.name.clone(),
+        kind: kind.into(),
+        batch,
+        file: format!("{}/{}_bs{}.hlo.txt", cfg.name, kind, batch),
+        inputs,
+        outputs,
     }
 }
 
@@ -332,6 +479,53 @@ mod tests {
         assert!(m.find_program("m", "mezo_step", 8).is_none());
         assert_eq!(m.batches_for("m", "mezo_step"), vec![4]);
         assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_covers_the_default_plan() {
+        let m = Manifest::builtin();
+        assert!(m.builtin);
+        for name in ["pocket-tiny", "pocket-tiny-fast", "pocket-roberta",
+                     "pocket-opt"] {
+            assert!(m.configs.contains_key(name), "missing {name}");
+            assert!(!m.batches_for(name, "mezo_step").is_empty());
+        }
+        // the kernel-path config has no adam program (MeZO needs no AD)
+        assert!(m.batches_for("pocket-tiny", "adam_step").is_empty());
+        assert_eq!(m.batches_for("pocket-roberta", "mezo_step"),
+                   vec![8, 64]);
+        assert!(m.find_program("pocket-roberta", "mezo_step_q4", 8)
+            .is_some());
+        // calling conventions: params + ids/mask/labels + 3 scalars
+        let p = m.find_program("pocket-tiny", "mezo_step", 4).unwrap();
+        let n = m.config("pocket-tiny").unwrap().params.len();
+        assert_eq!(p.inputs.len(), n + 6);
+        assert_eq!(p.outputs.len(), n + 1);
+        let a = m.find_program("pocket-opt", "adam_step", 8).unwrap();
+        let nd = m.config("pocket-opt").unwrap().params.len();
+        assert_eq!(a.inputs.len(), 3 * nd + 5);
+        assert_eq!(a.outputs.len(), 3 * nd + 1);
+        // decoder labels are [B, S]
+        assert_eq!(a.inputs[3 * nd + 2].shape, vec![8, 64]);
+    }
+
+    #[test]
+    fn builtin_init_params_are_deterministic_and_sized() {
+        let m = Manifest::builtin();
+        let raw = m.load_init_params("pocket-tiny").unwrap();
+        let cfg = m.config("pocket-tiny").unwrap();
+        assert_eq!(raw.len(), cfg.params.len());
+        let total: usize = raw.iter().map(|t| t.len()).sum();
+        assert_eq!(total, cfg.n_params);
+        assert_eq!(m.load_init_params("pocket-tiny").unwrap()[0], raw[0]);
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let m =
+            Manifest::load_or_builtin("/definitely/not/here/manifest.json")
+                .unwrap();
+        assert!(m.builtin);
     }
 
     #[test]

@@ -1,25 +1,31 @@
-//! PJRT execution runtime: loads the AOT artifacts and runs them.
-//!
-//! This is the only module that touches the `xla` crate.  Flow:
+//! Execution runtime: loads a manifest and runs step programs through a
+//! pluggable [`Backend`].
 //!
 //! ```text
-//!   manifest.json ──> Manifest (calling convention: configs, programs)
-//!   *.hlo.txt     ──> HloModuleProto::from_text_file ──> compile (once)
-//!   step loop     ──> Program::execute(&[&Literal]) ──> output literals
+//!   manifest.json / Manifest::builtin ──> calling convention
+//!   Backend::compile(spec)             ──> Executable   (cached once)
+//!   step loop ──> Program::execute(&[&Literal]) ──> output literals
 //! ```
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax
-//! >= 0.5 emits 64-bit instruction ids that the crate's xla_extension
-//! 0.5.1 rejects; the text parser reassigns ids.
+//! Backends:
+//! * **native** (default) — pure-Rust interpreter of the step-program
+//!   semantics; hermetic, no XLA, no artifacts required.
+//! * **pjrt** (`--features pjrt`) — compiles the AOT HLO text through
+//!   the `xla` crate's PJRT CPU client (the original seed-repo path).
 //!
 //! Compiled executables are cached per (config, kind, batch), so the
 //! session hot loop pays compilation exactly once.
 
+pub mod backend;
 pub mod literal;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod state;
 
-pub use literal::{f32_1, i32_tensor, f32_tensor, u32_1, LiteralExt};
+pub use backend::{Backend, Executable};
+pub use literal::{f32_1, f32_tensor, i32_tensor, u32_1, Literal};
 pub use manifest::{ConfigInfo, Dtype, Manifest, ParamSpecInfo, ProgramSpec,
                    TensorSpec};
 pub use state::ModelState;
@@ -27,21 +33,20 @@ pub use state::ModelState;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// A compiled, ready-to-execute step program.
 pub struct Program {
     pub spec: ProgramSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn Executable>,
 }
 
 impl Program {
-    /// Execute with host literals; returns the decomposed output tuple.
+    /// Execute with host literals; returns the output tuple.
     ///
-    /// Input count/order must follow `spec.inputs` (checked).  Output is
-    /// the artifact's tuple flattened to a `Vec<Literal>` following
-    /// `spec.outputs`.
-    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+    /// Input count/order must follow `spec.inputs` (checked).  Output
+    /// follows `spec.outputs` (checked).
+    pub fn execute(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "program {}/{} expects {} inputs, got {}",
@@ -51,14 +56,7 @@ impl Program {
                 inputs.len()
             );
         }
-        let result = self
-            .exe
-            .execute::<&xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.spec.file))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("device->host transfer")?;
-        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        let outs = self.exe.run(inputs)?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
                 "program {} returned {} outputs, manifest says {}",
@@ -71,23 +69,38 @@ impl Program {
     }
 }
 
-/// The PJRT client + program cache, bound to one artifact directory.
+/// The backend + program cache, bound to one manifest.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
     cache: Mutex<HashMap<(String, String, usize), std::sync::Arc<Program>>>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT runtime over a loaded manifest.
+    /// Create a runtime over the default (native) execution backend.
     pub fn new(manifest: Manifest) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Runtime::with_backend(manifest,
+                              Box::new(native::NativeBackend::new()))
+    }
+
+    /// Create a runtime over an explicit backend.
+    pub fn with_backend(
+        manifest: Manifest,
+        backend: Box<dyn Backend>,
+    ) -> Result<Runtime> {
+        Ok(Runtime { backend, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create a runtime over the PJRT/XLA backend (needs real AOT
+    /// artifacts on disk; see `runtime::pjrt`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(manifest: Manifest) -> Result<Runtime> {
+        let backend = pjrt::PjrtBackend::new()?;
+        Runtime::with_backend(manifest, Box::new(backend))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     /// Get (compiling + caching on first use) a step program.
@@ -108,20 +121,11 @@ impl Runtime {
             .manifest
             .find_program(config, kind, batch)
             .ok_or_else(|| {
-                anyhow!("no artifact for ({config}, {kind}, bs={batch}); \
-                         run `make artifacts`")
+                anyhow!("no program for ({config}, {kind}, bs={batch}) in \
+                         the manifest")
             })?
             .clone();
-        let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path")?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", spec.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.file))?;
+        let exe = self.backend.compile(&self.manifest, &spec)?;
         let program = std::sync::Arc::new(Program { spec, exe });
         self.cache.lock().unwrap().insert(key, program.clone());
         Ok(program)
@@ -130,5 +134,30 @@ impl Runtime {
     /// Number of programs compiled so far (telemetry / tests).
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_compiles_and_caches() {
+        let rt = Runtime::new(Manifest::builtin()).unwrap();
+        assert_eq!(rt.platform(), "cpu-native");
+        let a = rt.program("pocket-tiny", "eval", 4).unwrap();
+        let n = rt.compiled_count();
+        let b = rt.program("pocket-tiny", "eval", 4).unwrap();
+        assert_eq!(rt.compiled_count(), n);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert!(rt.program("pocket-tiny", "adam_step", 4).is_err());
+        assert!(rt.program("pocket-tiny", "mezo_step", 999).is_err());
+    }
+
+    #[test]
+    fn arity_checked_before_execution() {
+        let rt = Runtime::new(Manifest::builtin()).unwrap();
+        let prog = rt.program("pocket-tiny", "loss_eval", 4).unwrap();
+        assert!(prog.execute(&[]).is_err());
     }
 }

@@ -1,0 +1,290 @@
+//! Dense f32 kernels for the native interpreter.
+//!
+//! Plain safe Rust, written so LLVM autovectorizes the inner loops:
+//! matmuls use the i-k-j order (unit-stride writes, no horizontal
+//! reductions) and dot products keep 8 independent accumulators.  Large
+//! matmuls split output rows across a `std::thread::scope` — results
+//! stay bit-deterministic because each output row is always reduced in
+//! the same sequential order regardless of the thread count.
+
+/// Worker threads for large matmuls (cached after first query).
+fn n_threads() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let t = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+        .max(1);
+    CACHED.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Flop threshold below which threading costs more than it saves.
+const PAR_FLOPS: usize = 1 << 21;
+
+/// Serial i-k-j matmul over a row range: out[r, :] = a[r, :] @ b.
+fn mm_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `a [m,k] @ b [k,n] -> [m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32>
+{
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    let threads = n_threads();
+    if threads <= 1 || m < 2 || m * k * n < PAR_FLOPS {
+        mm_rows(a, b, k, n, &mut out);
+        return out;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|sc| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let lo = ci * rows_per;
+            let a = &a[lo * k..lo * k + (ochunk.len() / n) * k];
+            sc.spawn(move || mm_rows(a, b, k, n, ochunk));
+        }
+    });
+    out
+}
+
+/// `a [m,k] @ b [k,n] + bias [n] -> [m,n]`.
+pub fn matmul_bias(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = matmul(a, b, m, k, n);
+    for row in out.chunks_mut(n) {
+        for (o, &bv) in row.iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+    out
+}
+
+/// `a^T [k,m] @ b [m,n] -> [k,n]`  (a stored as [m,k]; dW = x^T dy).
+pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32>
+{
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut out = vec![0f32; k * n];
+    for mm in 0..m {
+        let arow = &a[mm * k..(mm + 1) * k];
+        let brow = &b[mm * n..(mm + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// 8-accumulator dot product (vectorizes without fp reassociation).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let ac = &a[c * 8..c * 8 + 8];
+        let bc = &b[c * 8..c * 8 + 8];
+        for j in 0..8 {
+            acc[j] += ac[j] * bc[j];
+        }
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    let mut s = tail;
+    for v in acc {
+        s += v;
+    }
+    s
+}
+
+/// Serial row range of `a @ b^T`.
+fn mm_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    let rows = out.len() / k;
+    for i in 0..rows {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, &b[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
+/// `a [m,n] @ b [k,n]^T -> [m,k]`  (dx = dy @ W^T; decoder tied logits).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize)
+    -> Vec<f32>
+{
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * k];
+    let threads = n_threads();
+    if threads <= 1 || m < 2 || m * k * n < PAR_FLOPS {
+        mm_bt_rows(a, b, n, k, &mut out);
+        return out;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|sc| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * k).enumerate() {
+            let lo = ci * rows_per;
+            let a = &a[lo * n..lo * n + (ochunk.len() / k) * n];
+            sc.spawn(move || mm_bt_rows(a, b, n, k, ochunk));
+        }
+    });
+    out
+}
+
+/// tanh-approximation GELU (matches the kernels exactly).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_560_802_865_4_f32; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu(x) / dx for the backward pass.
+#[inline]
+pub fn dgelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_560_802_865_4_f32;
+    let t = (C * (x + 0.044715 * x * x * x)).tanh();
+    0.5 * (1.0 + t)
+        + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+        -> Vec<f32>
+    {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn randv(n: usize, seed: u32) -> Vec<f32> {
+        (0..n)
+            .map(|i| super::super::rng::uniform01(seed, i as u32) - 0.5)
+            .collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let (m, k, n) = (7, 5, 9);
+        let a = randv(m * k, 1);
+        let b = randv(k * n, 2);
+        let got = matmul(&a, &b, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        // large enough to cross the PAR_FLOPS threshold
+        let (m, k, n) = (128, 64, 300);
+        let a = randv(m * k, 3);
+        let b = randv(k * n, 4);
+        let got = matmul(&a, &b, m, k, n);
+        let mut serial = vec![0f32; m * n];
+        mm_rows(&a, &b, k, n, &mut serial);
+        assert_eq!(got, serial, "threading must not change results");
+    }
+
+    #[test]
+    fn transposed_variants() {
+        let (m, k, n) = (6, 4, 5);
+        let a = randv(m * k, 5);
+        let b = randv(m * n, 6);
+        // a^T @ b == naive(transpose(a), b)
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let got = matmul_at(&a, &b, m, k, n);
+        let want = naive(&at, &b, k, m, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+        // a @ c^T
+        let c = randv(n * k, 7); // [k2=n rows? keep simple: b2 [j,k]]
+        let got = matmul_bt(&a, &c, m, k, n);
+        // naive: out[i, j] = sum_q a[i,q] * c[j,q], a [m,k], c [n,k]
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for q in 0..k {
+                    acc += a[i * k + q] * c[j * k + q];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_and_gelu() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![2.0, 3.0, 4.0, 5.0];
+        let out = matmul_bias(&a, &b, &[10.0, 20.0], 2, 2, 2);
+        assert_eq!(out, vec![12.0, 23.0, 14.0, 25.0]);
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(3.0) - 2.9963627).abs() < 1e-4);
+        // dgelu matches finite difference
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((dgelu(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_sequential() {
+        let a = randv(103, 8);
+        let b = randv(103, 9);
+        let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - seq).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,404 @@
+//! The pure-Rust native execution backend.
+//!
+//! Interprets the step-program semantics directly instead of executing
+//! AOT-lowered HLO: the same fused `mezo_step` / `adam_step` / `eval` /
+//! `loss_eval` contracts (input order, output order, scalar
+//! conventions) as `python/compile/steps.py`, over the same counter-RNG
+//! perturbation stream as `python/compile/kernels/rng.py`.  This is the
+//! default backend: hermetic (no XLA, no artifacts, no Python), which
+//! is what makes `cargo test` self-contained on any machine.
+//!
+//! Submodules: [`rng`] (counter RNG), [`math`] (dense kernels),
+//! [`model`] (forward/backward), [`params`] (canonical layout + init).
+
+pub mod math;
+pub mod model;
+pub mod params;
+pub mod rng;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Backend, Executable};
+use super::literal::Literal;
+use super::manifest::{ConfigInfo, Manifest, ProgramSpec};
+
+/// The native CPU backend (stateless; all state lives per-program).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "cpu-native".into()
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &ProgramSpec,
+    ) -> Result<Box<dyn Executable>> {
+        let cfg = manifest.config(&spec.config)?.clone();
+        model::check_layout(&cfg)?;
+        let kind = ProgramKind::parse(&spec.kind).with_context(|| {
+            format!("native backend: program kind '{}'", spec.kind)
+        })?;
+        Ok(Box::new(NativeProgram { cfg, kind, spec: spec.clone() }))
+    }
+}
+
+/// Which step-program semantics to interpret.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProgramKind {
+    /// Fused MeZO step (restore+update folded into one axpy).
+    Mezo,
+    /// Unfused perf-ablation twin (two separate sweeps; same math).
+    MezoNaive,
+    /// k-query averaged SPSA (`mezo_step_q{k}`).
+    MezoMulti(usize),
+    Adam,
+    Eval,
+    LossEval,
+}
+
+impl ProgramKind {
+    pub fn parse(kind: &str) -> Option<ProgramKind> {
+        match kind {
+            "mezo_step" => Some(ProgramKind::Mezo),
+            "mezo_step_naive" => Some(ProgramKind::MezoNaive),
+            "adam_step" => Some(ProgramKind::Adam),
+            "eval" => Some(ProgramKind::Eval),
+            "loss_eval" => Some(ProgramKind::LossEval),
+            other => {
+                let k = other.strip_prefix("mezo_step_q")?;
+                let k: usize = k.parse().ok()?;
+                if k >= 1 {
+                    Some(ProgramKind::MezoMulti(k))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+struct NativeProgram {
+    cfg: ConfigInfo,
+    kind: ProgramKind,
+    spec: ProgramSpec,
+}
+
+/// `w += scale * z(seed)` over every tensor, sharing one flat stream.
+pub fn perturb_all(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    seed: u32,
+    scale: f32,
+) {
+    for (spec, t) in cfg.params.iter().zip(w.iter_mut()) {
+        rng::perturb(t, seed, spec.offset, scale);
+    }
+}
+
+/// One fused MeZO-SGD step on `w` in place; returns the reported loss
+/// (mean of the two perturbed evaluations).  Mirrors
+/// `steps.mezo_step` / `mezo_step_naive` / `mezo_step_multi`.
+#[allow(clippy::too_many_arguments)]
+pub fn mezo_step(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    seed: u32,
+    lr: f32,
+    eps: f32,
+    kind: ProgramKind,
+) -> Result<f32> {
+    let two_point = |w: &mut [Vec<f32>], sq: u32| -> (f32, f32) {
+        perturb_all(cfg, w, sq, eps);
+        let lplus = model::loss(cfg, w, ids, mask, labels, bsz, s);
+        perturb_all(cfg, w, sq, -2.0 * eps);
+        let lminus = model::loss(cfg, w, ids, mask, labels, bsz, s);
+        (lplus, lminus)
+    };
+    match kind {
+        ProgramKind::Mezo => {
+            let (lplus, lminus) = two_point(w, seed);
+            let g = (lplus - lminus) / (2.0 * eps);
+            // restore (+eps z) and update (-lr g z) in ONE sweep
+            perturb_all(cfg, w, seed, eps - lr * g);
+            Ok(0.5 * (lplus + lminus))
+        }
+        ProgramKind::MezoNaive => {
+            let (lplus, lminus) = two_point(w, seed);
+            let g = (lplus - lminus) / (2.0 * eps);
+            perturb_all(cfg, w, seed, eps); // restore
+            perturb_all(cfg, w, seed, -lr * g); // update
+            Ok(0.5 * (lplus + lminus))
+        }
+        ProgramKind::MezoMulti(k) => {
+            // k independent two-point estimates at the SAME point, then
+            // k averaged update sweeps (steps.mezo_step_multi)
+            let q_seeds: Vec<u32> =
+                (0..k).map(|q| rng::hash_u32(seed, q as u32 + 1)).collect();
+            let mut gs = Vec::with_capacity(k);
+            let mut losses = 0f32;
+            for &sq in &q_seeds {
+                let (lplus, lminus) = two_point(w, sq);
+                gs.push((lplus - lminus) / (2.0 * eps));
+                losses += 0.5 * (lplus + lminus);
+                perturb_all(cfg, w, sq, eps); // restore
+            }
+            let scale = lr / k as f32;
+            for (&sq, &g) in q_seeds.iter().zip(&gs) {
+                perturb_all(cfg, w, sq, -scale * g);
+            }
+            Ok(losses / k as f32)
+        }
+        other => bail!("mezo_step called with {other:?}"),
+    }
+}
+
+/// One Adam step on `(w, m, v)` in place; returns the loss.  Constants
+/// match `kernels/ref.py::adam_update` (beta1 0.9, beta2 0.999, eps
+/// 1e-8, no weight decay); `t` is the 1-based step count.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    t: f32,
+    lr: f32,
+) -> Result<f32> {
+    const BETA1: f32 = 0.9;
+    const BETA2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let (loss, grads) =
+        model::loss_and_grad(cfg, w, ids, mask, labels, bsz, s);
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    for ((wt, mt), (vt, gt)) in w
+        .iter_mut()
+        .zip(m.iter_mut())
+        .zip(v.iter_mut().zip(grads.iter()))
+    {
+        for i in 0..wt.len() {
+            let g = gt[i];
+            let m2 = BETA1 * mt[i] + (1.0 - BETA1) * g;
+            let v2 = BETA2 * vt[i] + (1.0 - BETA2) * g * g;
+            mt[i] = m2;
+            vt[i] = v2;
+            let mhat = m2 / bc1;
+            let vhat = v2 / bc2;
+            wt[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+    Ok(loss)
+}
+
+/// Pull `count` consecutive f32 tensors (cloned) starting at `from`.
+fn take_f32(inputs: &[&Literal], from: usize, count: usize)
+    -> Result<Vec<Vec<f32>>>
+{
+    (from..from + count)
+        .map(|i| inputs[i].f32_vec())
+        .collect()
+}
+
+fn param_literals(
+    cfg: &ConfigInfo,
+    tensors: Vec<Vec<f32>>,
+) -> Result<Vec<Literal>> {
+    cfg.params
+        .iter()
+        .zip(tensors)
+        .map(|(spec, data)| Literal::from_f32(data, spec.shape.clone()))
+        .collect()
+}
+
+impl NativeProgram {
+    /// (batch, seq) from the ids input literal.
+    fn batch_dims(&self, ids: &Literal) -> Result<(usize, usize)> {
+        match ids.shape() {
+            [b, s] => Ok((*b, *s)),
+            other => bail!("ids input has shape {other:?}, expected [B, S]"),
+        }
+    }
+}
+
+impl Executable for NativeProgram {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let cfg = &self.cfg;
+        let n = cfg.params.len();
+        match self.kind {
+            ProgramKind::Mezo
+            | ProgramKind::MezoNaive
+            | ProgramKind::MezoMulti(_) => {
+                let (b, s) = self.batch_dims(inputs[n])?;
+                let mut w = take_f32(inputs, 0, n)?;
+                let ids = inputs[n].i32_slice()?;
+                let mask = inputs[n + 1].f32_slice()?;
+                let labels = inputs[n + 2].i32_slice()?;
+                let seed = inputs[n + 3].u32_scalar()?;
+                let lr = inputs[n + 4].f32_scalar()?;
+                let eps = inputs[n + 5].f32_scalar()?;
+                let loss = mezo_step(cfg, &mut w, ids, mask, labels, b, s,
+                                     seed, lr, eps, self.kind)?;
+                let mut outs = param_literals(cfg, w)?;
+                outs.push(Literal::from_f32(vec![loss], vec![])?);
+                Ok(outs)
+            }
+            ProgramKind::Adam => {
+                let (b, s) = self.batch_dims(inputs[3 * n])?;
+                let mut w = take_f32(inputs, 0, n)?;
+                let mut m = take_f32(inputs, n, n)?;
+                let mut v = take_f32(inputs, 2 * n, n)?;
+                let ids = inputs[3 * n].i32_slice()?;
+                let mask = inputs[3 * n + 1].f32_slice()?;
+                let labels = inputs[3 * n + 2].i32_slice()?;
+                let t = inputs[3 * n + 3].f32_scalar()?;
+                let lr = inputs[3 * n + 4].f32_scalar()?;
+                let loss = adam_step(cfg, &mut w, &mut m, &mut v, ids,
+                                     mask, labels, b, s, t, lr)?;
+                let mut outs = param_literals(cfg, w)?;
+                outs.extend(param_literals(cfg, m)?);
+                outs.extend(param_literals(cfg, v)?);
+                outs.push(Literal::from_f32(vec![loss], vec![])?);
+                Ok(outs)
+            }
+            ProgramKind::Eval => {
+                let (b, s) = self.batch_dims(inputs[n])?;
+                let w = take_f32(inputs, 0, n)?;
+                let ids = inputs[n].i32_slice()?;
+                let mask = inputs[n + 1].f32_slice()?;
+                let lg = model::logits(cfg, &w, ids, mask, b, s);
+                let shape = if cfg.is_decoder() {
+                    vec![b, s, cfg.vocab]
+                } else {
+                    vec![b, cfg.n_classes]
+                };
+                Ok(vec![Literal::from_f32(lg, shape)?])
+            }
+            ProgramKind::LossEval => {
+                let (b, s) = self.batch_dims(inputs[n])?;
+                let w = take_f32(inputs, 0, n)?;
+                let ids = inputs[n].i32_slice()?;
+                let mask = inputs[n + 1].f32_slice()?;
+                let labels = inputs[n + 2].i32_slice()?;
+                let loss = model::loss(cfg, &w, ids, mask, labels, b, s);
+                Ok(vec![Literal::from_f32(vec![loss], vec![])?])
+            }
+        }
+    }
+}
+
+// `spec` is carried for error reporting/debugging parity with the PJRT
+// path; silence the lint without dropping the field.
+impl NativeProgram {
+    #[allow(dead_code)]
+    fn file(&self) -> &str {
+        &self.spec.file
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_kind_parses() {
+        assert_eq!(ProgramKind::parse("mezo_step"), Some(ProgramKind::Mezo));
+        assert_eq!(ProgramKind::parse("mezo_step_naive"),
+                   Some(ProgramKind::MezoNaive));
+        assert_eq!(ProgramKind::parse("mezo_step_q4"),
+                   Some(ProgramKind::MezoMulti(4)));
+        assert_eq!(ProgramKind::parse("adam_step"), Some(ProgramKind::Adam));
+        assert_eq!(ProgramKind::parse("eval"), Some(ProgramKind::Eval));
+        assert_eq!(ProgramKind::parse("loss_eval"),
+                   Some(ProgramKind::LossEval));
+        assert_eq!(ProgramKind::parse("mezo_step_q0"), None);
+        assert_eq!(ProgramKind::parse("sgd_step"), None);
+    }
+
+    #[test]
+    fn fused_and_naive_agree() {
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      3, false);
+        let init = params::init_params(&cfg);
+        let ids = vec![1i32, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask =
+            vec![1f32, 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let mut fused = init.clone();
+        let lf = mezo_step(&cfg, &mut fused, &ids, &mask, &labels, 2, 6,
+                           99, 1e-2, 1e-3, ProgramKind::Mezo)
+            .unwrap();
+        let mut naive = init.clone();
+        let ln = mezo_step(&cfg, &mut naive, &ids, &mask, &labels, 2, 6,
+                           99, 1e-2, 1e-3, ProgramKind::MezoNaive)
+            .unwrap();
+        assert_eq!(lf, ln, "identical loss estimate");
+        for (a, b) in fused.iter().zip(&naive) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mezo_state_is_only_the_seed() {
+        // two sessions with the same seed sequence produce bit-identical
+        // parameters — no hidden state anywhere in the interpreter
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      3, false);
+        let ids = vec![1i32; 12];
+        let mask = vec![1f32; 12];
+        let labels = vec![0i32, 1];
+        let run = || {
+            let mut w = params::init_params(&cfg);
+            for step in 0..3u32 {
+                mezo_step(&cfg, &mut w, &ids, &mask, &labels, 2, 6,
+                          1000 + step, 1e-3, 1e-3, ProgramKind::Mezo)
+                    .unwrap();
+            }
+            w
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn adam_descends_on_tiny_problem() {
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      2, false);
+        let mut w = params::init_params(&cfg);
+        let mut m: Vec<Vec<f32>> =
+            cfg.params.iter().map(|s| vec![0.0; s.elements()]).collect();
+        let mut v = m.clone();
+        let ids = vec![1i32, 5, 9, 3, 2, 0, 1, 2, 2, 7, 11, 0];
+        let mask =
+            vec![1f32, 1., 1., 1., 1., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![1i32, 0];
+        let mut losses = Vec::new();
+        for t in 1..=25 {
+            let l = adam_step(&cfg, &mut w, &mut m, &mut v, &ids, &mask,
+                              &labels, 2, 6, t as f32, 5e-3)
+                .unwrap();
+            losses.push(l);
+        }
+        assert!(losses[24] < losses[0] * 0.5,
+                "adam failed to descend: {losses:?}");
+    }
+}

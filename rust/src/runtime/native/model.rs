@@ -1,0 +1,822 @@
+//! The tiny-transformer forward/backward pass the step programs fuse.
+//!
+//! Semantics mirror `python/compile/model.py` + `kernels/ref.py` (the
+//! pure-jnp oracle the Pallas kernels are tested against): pre-LN
+//! encoder/decoder blocks, tanh-GELU FFN, masked scaled-dot-product
+//! attention, masked mean-pool + linear head (encoder) or tied-embedding
+//! LM logits (decoder), and mean softmax-xent loss.  The backward pass
+//! is a hand-derived reverse of exactly this forward (validated against
+//! `jax.value_and_grad` — see `rust/tests/native_golden.rs`), which is
+//! what lets the native backend run `adam_step` without any autodiff
+//! dependency.
+//!
+//! Parameters arrive as the manifest's ordered flat tensor list; the
+//! index layout is the canonical one from [`super::params::param_specs`]
+//! and is validated once at program-compile time via [`check_layout`].
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ConfigInfo;
+
+use super::math::{dgelu, dot, gelu, matmul, matmul_at, matmul_bias,
+                  matmul_bt};
+use super::params;
+
+const LN_EPS: f32 = 1e-5;
+const NEG: f32 = -1e30;
+
+// Fixed tensor indices within one layer (see params::param_specs).
+const EMBED_TOK: usize = 0;
+const EMBED_POS: usize = 1;
+const LN1_G: usize = 0;
+const LN1_B: usize = 1;
+const WQ: usize = 2;
+const BQ: usize = 3;
+const WK: usize = 4;
+const BK: usize = 5;
+const WV: usize = 6;
+const BV: usize = 7;
+const WO: usize = 8;
+const BO: usize = 9;
+const LN2_G: usize = 10;
+const LN2_B: usize = 11;
+const W1: usize = 12;
+const B1: usize = 13;
+const W2: usize = 14;
+const B2: usize = 15;
+
+#[inline]
+fn li(layer: usize, t: usize) -> usize {
+    2 + layer * 16 + t
+}
+
+fn final_ln_g(cfg: &ConfigInfo) -> usize {
+    2 + cfg.n_layers * 16
+}
+
+fn head_w(cfg: &ConfigInfo) -> usize {
+    final_ln_g(cfg) + 2
+}
+
+/// Verify that a manifest config follows the canonical parameter layout
+/// the interpreter indexes by.  Called once per program compile.
+pub fn check_layout(cfg: &ConfigInfo) -> Result<()> {
+    let want = params::param_specs(
+        cfg.is_decoder(),
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.d_ff,
+        cfg.max_seq,
+        cfg.n_classes,
+    );
+    if cfg.params.len() != want.len() {
+        bail!(
+            "config {}: {} param tensors, canonical layout has {}",
+            cfg.name,
+            cfg.params.len(),
+            want.len()
+        );
+    }
+    for (got, want) in cfg.params.iter().zip(&want) {
+        if got.name != want.name
+            || got.shape != want.shape
+            || got.offset != want.offset
+        {
+            bail!(
+                "config {}: param {} (shape {:?}, offset {}) deviates from \
+                 the canonical layout ({} {:?} @{}); the native backend \
+                 requires the model.py tensor order",
+                cfg.name, got.name, got.shape, got.offset, want.name,
+                want.shape, want.offset
+            );
+        }
+    }
+    if cfg.d_model % cfg.n_heads != 0 {
+        bail!("config {}: d_model {} not divisible by n_heads {}",
+              cfg.name, cfg.d_model, cfg.n_heads);
+    }
+    Ok(())
+}
+
+/// Row-wise LayerNorm; returns (out, xhat, rstd-per-row).
+fn layernorm(x: &[f32], g: &[f32], b: &[f32], d: usize)
+    -> (Vec<f32>, Vec<f32>, Vec<f32>)
+{
+    let rows = x.len() / d;
+    let mut out = vec![0f32; x.len()];
+    let mut xhat = vec![0f32; x.len()];
+    let mut rstd = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let or = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            let h = (xr[j] - mu) * rs;
+            xh[j] = h;
+            or[j] = h * g[j] + b[j];
+        }
+    }
+    (out, xhat, rstd)
+}
+
+/// dx, dgamma, dbeta for [`layernorm`].
+fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = dy.len() / d;
+    let mut dx = vec![0f32; dy.len()];
+    let mut dg = vec![0f32; d];
+    let mut db = vec![0f32; d];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0f32; // mean(dxhat)
+        let mut m2 = 0f32; // mean(dxhat * xhat)
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let rs = rstd[r];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dxr[j] = rs * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+fn col_sums(a: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    for row in a.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Per-layer activations retained for the backward pass.
+struct LayerCache {
+    h1: Vec<f32>,
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// [b, h, i, j] softmax attention weights, flattened.
+    probs: Vec<f32>,
+    /// Attention context in [B*S, D] layout (pre-Wo).
+    a: Vec<f32>,
+    h2: Vec<f32>,
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    /// FFN pre-activation.
+    u: Vec<f32>,
+    /// gelu(u).
+    f1: Vec<f32>,
+}
+
+struct EncCache {
+    layers: Vec<LayerCache>,
+    xhatf: Vec<f32>,
+    rstdf: Vec<f32>,
+}
+
+/// Gather one head's rows into a contiguous [S, Dh] buffer.
+fn gather_head(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; s * dh];
+    for i in 0..s {
+        let src = &x[(b * s + i) * d + h * dh..(b * s + i) * d + (h + 1) * dh];
+        out[i * dh..(i + 1) * dh].copy_from_slice(src);
+    }
+    out
+}
+
+/// Scatter-add a contiguous [S, Dh] head buffer back into [B*S, D].
+fn scatter_head(
+    dst: &mut [f32],
+    src: &[f32],
+    b: usize,
+    h: usize,
+    s: usize,
+    d: usize,
+    dh: usize,
+) {
+    for i in 0..s {
+        let dstr = &mut dst
+            [(b * s + i) * d + h * dh..(b * s + i) * d + (h + 1) * dh];
+        dstr.copy_from_slice(&src[i * dh..(i + 1) * dh]);
+    }
+}
+
+/// Shared transformer trunk: ids/mask [B, S] -> hidden y [B*S, D].
+fn encode(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    bsz: usize,
+    s: usize,
+    keep: bool,
+) -> (Vec<f32>, Option<EncCache>) {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let ff = cfg.d_ff;
+    let causal = cfg.is_decoder();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let bs = bsz * s;
+
+    // embeddings
+    let tok = &p[EMBED_TOK];
+    let pos = &p[EMBED_POS];
+    let mut x = vec![0f32; bs * d];
+    for b in 0..bsz {
+        for i in 0..s {
+            let r = b * s + i;
+            let id = ids[r].max(0) as usize % cfg.vocab;
+            let xr = &mut x[r * d..(r + 1) * d];
+            let er = &tok[id * d..(id + 1) * d];
+            let pr = &pos[i * d..(i + 1) * d];
+            for j in 0..d {
+                xr[j] = er[j] + pr[j];
+            }
+        }
+    }
+
+    let mut layers = Vec::new();
+    for l in 0..cfg.n_layers {
+        // --- attention block (pre-LN) ---
+        let (h1, xhat1, rstd1) =
+            layernorm(&x, &p[li(l, LN1_G)], &p[li(l, LN1_B)], d);
+        let q = matmul_bias(&h1, &p[li(l, WQ)], &p[li(l, BQ)], bs, d, d);
+        let k = matmul_bias(&h1, &p[li(l, WK)], &p[li(l, BK)], bs, d, d);
+        let v = matmul_bias(&h1, &p[li(l, WV)], &p[li(l, BV)], bs, d, d);
+
+        let mut a = vec![0f32; bs * d];
+        let mut probs_all =
+            if keep { vec![0f32; bsz * heads * s * s] } else { Vec::new() };
+        for b in 0..bsz {
+            let mrow = &mask[b * s..(b + 1) * s];
+            for h in 0..heads {
+                let qh = gather_head(&q, b, h, s, d, dh);
+                let kh = gather_head(&k, b, h, s, d, dh);
+                let vh = gather_head(&v, b, h, s, d, dh);
+                // scores[i,j] = q_i . k_j * scale, masked
+                let mut scores = matmul_bt(&qh, &kh, s, dh, s);
+                for i in 0..s {
+                    let row = &mut scores[i * s..(i + 1) * s];
+                    for j in 0..s {
+                        row[j] *= scale;
+                        if mrow[j] <= 0.0 || (causal && j > i) {
+                            row[j] = NEG;
+                        }
+                    }
+                    // softmax in place
+                    let mx = row.iter().cloned().fold(NEG, f32::max);
+                    let mut z = 0f32;
+                    for pv in row.iter_mut() {
+                        *pv = (*pv - mx).exp();
+                        z += *pv;
+                    }
+                    for pv in row.iter_mut() {
+                        *pv /= z;
+                    }
+                }
+                let ah = matmul(&scores, &vh, s, s, dh);
+                scatter_head(&mut a, &ah, b, h, s, d, dh);
+                if keep {
+                    let base = (b * heads + h) * s * s;
+                    probs_all[base..base + s * s]
+                        .copy_from_slice(&scores);
+                }
+            }
+        }
+        let o = matmul_bias(&a, &p[li(l, WO)], &p[li(l, BO)], bs, d, d);
+        add_into(&mut x, &o);
+
+        // --- ffn block (pre-LN) ---
+        let (h2, xhat2, rstd2) =
+            layernorm(&x, &p[li(l, LN2_G)], &p[li(l, LN2_B)], d);
+        let u = matmul_bias(&h2, &p[li(l, W1)], &p[li(l, B1)], bs, d, ff);
+        let f1: Vec<f32> = u.iter().map(|&v| gelu(v)).collect();
+        let f2 = matmul_bias(&f1, &p[li(l, W2)], &p[li(l, B2)], bs, ff, d);
+        add_into(&mut x, &f2);
+
+        if keep {
+            layers.push(LayerCache {
+                h1,
+                xhat1,
+                rstd1,
+                q,
+                k,
+                v,
+                probs: probs_all,
+                a,
+                h2,
+                xhat2,
+                rstd2,
+                u,
+                f1,
+            });
+        }
+    }
+
+    let fln = final_ln_g(cfg);
+    let (y, xhatf, rstdf) = layernorm(&x, &p[fln], &p[fln + 1], d);
+    let cache =
+        if keep { Some(EncCache { layers, xhatf, rstdf }) } else { None };
+    (y, cache)
+}
+
+/// Masked mean-pool denominators per batch row.
+fn pool_denoms(mask: &[f32], bsz: usize, s: usize) -> Vec<f32> {
+    (0..bsz)
+        .map(|b| {
+            let sum: f32 = mask[b * s..(b + 1) * s].iter().sum();
+            sum.max(1.0)
+        })
+        .collect()
+}
+
+/// Task logits: encoder [B, n_classes]; decoder [B, S, vocab] (tied
+/// embedding).  Flattened row-major.
+pub fn logits(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    bsz: usize,
+    s: usize,
+) -> Vec<f32> {
+    let (y, _) = encode(cfg, p, ids, mask, bsz, s, false);
+    logits_from_y(cfg, p, &y, mask, bsz, s)
+}
+
+fn logits_from_y(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    y: &[f32],
+    mask: &[f32],
+    bsz: usize,
+    s: usize,
+) -> Vec<f32> {
+    let d = cfg.d_model;
+    if cfg.is_decoder() {
+        // [B*S, V] = y @ E^T
+        return matmul_bt(y, &p[EMBED_TOK], bsz * s, d, cfg.vocab);
+    }
+    let denoms = pool_denoms(mask, bsz, s);
+    let mut pooled = vec![0f32; bsz * d];
+    for b in 0..bsz {
+        let pr = &mut pooled[b * d..(b + 1) * d];
+        for i in 0..s {
+            let m = mask[b * s + i];
+            if m > 0.0 {
+                let yr = &y[(b * s + i) * d..(b * s + i + 1) * d];
+                for j in 0..d {
+                    pr[j] += yr[j] * m;
+                }
+            }
+        }
+        for v in pr.iter_mut() {
+            *v /= denoms[b];
+        }
+    }
+    let hw = head_w(cfg);
+    matmul_bias(&pooled, &p[hw], &p[hw + 1], bsz, d, cfg.n_classes)
+}
+
+/// The (row, label, weight) view of the loss: encoder classifies each
+/// batch row; decoder predicts token t+1 from position t with padding
+/// masked out.
+fn loss_rows(
+    cfg: &ConfigInfo,
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+) -> Vec<(usize, i32, f32)> {
+    if cfg.is_decoder() {
+        let mut rows = Vec::with_capacity(bsz * (s - 1));
+        for b in 0..bsz {
+            for i in 0..s - 1 {
+                let r = b * s + i;
+                rows.push((r, labels[r + 1], mask[r + 1] * mask[r]));
+            }
+        }
+        rows
+    } else {
+        (0..bsz).map(|b| (b, labels[b], 1.0)).collect()
+    }
+}
+
+fn nll_of_row(row: &[f32], label: i32) -> f32 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0f32;
+    for &v in row {
+        z += (v - mx).exp();
+    }
+    let lse = z.ln() + mx;
+    lse - row[label.max(0) as usize % row.len()]
+}
+
+/// Scalar training loss (the loss_eval program body).
+pub fn loss(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+) -> f32 {
+    let lg = logits(cfg, p, ids, mask, bsz, s);
+    let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
+    let rows = loss_rows(cfg, mask, labels, bsz, s);
+    let mut acc = 0f32;
+    let mut msum = 0f32;
+    for (r, label, w) in rows {
+        if w > 0.0 {
+            acc += w * nll_of_row(&lg[r * ncols..(r + 1) * ncols], label);
+        }
+        msum += w;
+    }
+    acc / msum.max(1.0)
+}
+
+/// Loss + parameter gradients — the hand-derived reverse pass that lets
+/// the native backend run `adam_step` without autodiff.
+pub fn loss_and_grad(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+) -> (f32, Vec<Vec<f32>>) {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let ff = cfg.d_ff;
+    let bs = bsz * s;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let (y, cache) = encode(cfg, p, ids, mask, bsz, s, true);
+    let cache = cache.expect("keep=true retains the cache");
+    let lg = logits_from_y(cfg, p, &y, mask, bsz, s);
+
+    let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
+    let rows = loss_rows(cfg, mask, labels, bsz, s);
+    let msum: f32 = rows.iter().map(|r| r.2).sum::<f32>().max(1.0);
+
+    // loss + dlogits in one sweep
+    let mut acc = 0f32;
+    let mut dlogits = vec![0f32; lg.len()];
+    for &(r, label, w) in &rows {
+        let row = &lg[r * ncols..(r + 1) * ncols];
+        if w > 0.0 {
+            acc += w * nll_of_row(row, label);
+        }
+        let coeff = w / msum;
+        if coeff == 0.0 {
+            continue;
+        }
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        let sm: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+        for &e in &sm {
+            z += e;
+        }
+        let drow = &mut dlogits[r * ncols..(r + 1) * ncols];
+        for (dv, e) in drow.iter_mut().zip(sm) {
+            *dv = e / z * coeff;
+        }
+        drow[label.max(0) as usize % ncols] -= coeff;
+    }
+    let loss = acc / msum;
+
+    let mut grads: Vec<Vec<f32>> = cfg
+        .params
+        .iter()
+        .map(|spec| vec![0f32; spec.elements()])
+        .collect();
+
+    // task head backward -> dy [B*S, D]
+    let mut dy;
+    if cfg.is_decoder() {
+        // logits = y @ E^T : dy = dlogits @ E ; dE += dlogits^T y
+        dy = matmul(&dlogits, &p[EMBED_TOK], bs, cfg.vocab, d);
+        let de = matmul_at(&dlogits, &y, bs, cfg.vocab, d);
+        add_into(&mut grads[EMBED_TOK], &de);
+    } else {
+        let denoms = pool_denoms(mask, bsz, s);
+        let mut pooled = vec![0f32; bsz * d];
+        for b in 0..bsz {
+            let pr = &mut pooled[b * d..(b + 1) * d];
+            for i in 0..s {
+                let m = mask[b * s + i];
+                if m > 0.0 {
+                    let yr = &y[(b * s + i) * d..(b * s + i + 1) * d];
+                    for j in 0..d {
+                        pr[j] += yr[j] * m;
+                    }
+                }
+            }
+            for v in pr.iter_mut() {
+                *v /= denoms[b];
+            }
+        }
+        let hw = head_w(cfg);
+        grads[hw] = matmul_at(&pooled, &dlogits, bsz, d, cfg.n_classes);
+        grads[hw + 1] = col_sums(&dlogits, cfg.n_classes);
+        let dpooled = matmul_bt(&dlogits, &p[hw], bsz, cfg.n_classes, d);
+        dy = vec![0f32; bs * d];
+        for b in 0..bsz {
+            let dp = &dpooled[b * d..(b + 1) * d];
+            for i in 0..s {
+                let m = mask[b * s + i];
+                if m > 0.0 {
+                    let dyr =
+                        &mut dy[(b * s + i) * d..(b * s + i + 1) * d];
+                    let c = m / denoms[b];
+                    for j in 0..d {
+                        dyr[j] += dp[j] * c;
+                    }
+                }
+            }
+        }
+    }
+
+    // final LN
+    let fln = final_ln_g(cfg);
+    let (mut dx, dgf, dbf) =
+        layernorm_bwd(&dy, &cache.xhatf, &cache.rstdf, &p[fln], d);
+    add_into(&mut grads[fln], &dgf);
+    add_into(&mut grads[fln + 1], &dbf);
+
+    for l in (0..cfg.n_layers).rev() {
+        let lc = &cache.layers[l];
+        // x_out = x_mid + f2
+        let df2 = &dx;
+        grads[li(l, W2)] = matmul_at(&lc.f1, df2, bs, ff, d);
+        grads[li(l, B2)] = col_sums(df2, d);
+        let df1 = matmul_bt(df2, &p[li(l, W2)], bs, d, ff);
+        let mut du = vec![0f32; bs * ff];
+        for i in 0..bs * ff {
+            du[i] = df1[i] * dgelu(lc.u[i]);
+        }
+        grads[li(l, W1)] = matmul_at(&lc.h2, &du, bs, d, ff);
+        grads[li(l, B1)] = col_sums(&du, ff);
+        let dh2 = matmul_bt(&du, &p[li(l, W1)], bs, ff, d);
+        let (dxm, dg2, db2) =
+            layernorm_bwd(&dh2, &lc.xhat2, &lc.rstd2, &p[li(l, LN2_G)], d);
+        grads[li(l, LN2_G)] = dg2;
+        grads[li(l, LN2_B)] = db2;
+        // dx_mid = dx (residual) + dxm
+        add_into(&mut dx, &dxm);
+
+        // x_mid = x_in + o ; o = a @ Wo + bo
+        let do_ = &dx;
+        grads[li(l, WO)] = matmul_at(&lc.a, do_, bs, d, d);
+        grads[li(l, BO)] = col_sums(do_, d);
+        let da = matmul_bt(do_, &p[li(l, WO)], bs, d, d);
+
+        let mut dq = vec![0f32; bs * d];
+        let mut dk = vec![0f32; bs * d];
+        let mut dv = vec![0f32; bs * d];
+        for b in 0..bsz {
+            for h in 0..heads {
+                let qh = gather_head(&lc.q, b, h, s, d, dh);
+                let kh = gather_head(&lc.k, b, h, s, d, dh);
+                let vh = gather_head(&lc.v, b, h, s, d, dh);
+                let dah = gather_head(&da, b, h, s, d, dh);
+                let base = (b * heads + h) * s * s;
+                let probs = &lc.probs[base..base + s * s];
+                // dp = dah @ vh^T ; dvh = probs^T @ dah
+                let dp = matmul_bt(&dah, &vh, s, dh, s);
+                let dvh = matmul_at(probs, &dah, s, s, dh);
+                // softmax backward
+                let mut dscores = vec![0f32; s * s];
+                for i in 0..s {
+                    let pr = &probs[i * s..(i + 1) * s];
+                    let dpr = &dp[i * s..(i + 1) * s];
+                    let inner = dot(pr, dpr);
+                    let dsr = &mut dscores[i * s..(i + 1) * s];
+                    for j in 0..s {
+                        dsr[j] = pr[j] * (dpr[j] - inner);
+                    }
+                }
+                let mut dqh = matmul(&dscores, &kh, s, s, dh);
+                let mut dkh = matmul_at(&dscores, &qh, s, s, dh);
+                for v_ in dqh.iter_mut() {
+                    *v_ *= scale;
+                }
+                for v_ in dkh.iter_mut() {
+                    *v_ *= scale;
+                }
+                scatter_head(&mut dq, &dqh, b, h, s, d, dh);
+                scatter_head(&mut dk, &dkh, b, h, s, d, dh);
+                scatter_head(&mut dv, &dvh, b, h, s, d, dh);
+            }
+        }
+        grads[li(l, WQ)] = matmul_at(&lc.h1, &dq, bs, d, d);
+        grads[li(l, BQ)] = col_sums(&dq, d);
+        grads[li(l, WK)] = matmul_at(&lc.h1, &dk, bs, d, d);
+        grads[li(l, BK)] = col_sums(&dk, d);
+        grads[li(l, WV)] = matmul_at(&lc.h1, &dv, bs, d, d);
+        grads[li(l, BV)] = col_sums(&dv, d);
+        let mut dh1 = matmul_bt(&dq, &p[li(l, WQ)], bs, d, d);
+        add_into(&mut dh1, &matmul_bt(&dk, &p[li(l, WK)], bs, d, d));
+        add_into(&mut dh1, &matmul_bt(&dv, &p[li(l, WV)], bs, d, d));
+        let (dxi, dg1, db1) =
+            layernorm_bwd(&dh1, &lc.xhat1, &lc.rstd1, &p[li(l, LN1_G)], d);
+        grads[li(l, LN1_G)] = dg1;
+        grads[li(l, LN1_B)] = db1;
+        add_into(&mut dx, &dxi);
+    }
+
+    // embeddings
+    for b in 0..bsz {
+        for i in 0..s {
+            let r = b * s + i;
+            let id = ids[r].max(0) as usize % cfg.vocab;
+            let dxr = &dx[r * d..(r + 1) * d];
+            let er = &mut grads[EMBED_TOK][id * d..(id + 1) * d];
+            for j in 0..d {
+                er[j] += dxr[j];
+            }
+            let pr = &mut grads[EMBED_POS][i * d..(i + 1) * d];
+            for j in 0..d {
+                pr[j] += dxr[j];
+            }
+        }
+    }
+
+    (loss, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::params::make_config;
+    use crate::runtime::native::rng::uniform01;
+
+    fn tiny() -> ConfigInfo {
+        make_config("t", "encoder", 13, 8, 1, 2, 16, 6, 3, false)
+    }
+
+    fn seeded_params(cfg: &ConfigInfo, seed: u32) -> Vec<Vec<f32>> {
+        cfg.params
+            .iter()
+            .map(|spec| {
+                (0..spec.elements())
+                    .map(|i| {
+                        uniform01(seed, (spec.offset + i) as u32) * 0.2
+                            - 0.1
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn layout_check_accepts_canonical_rejects_mutant() {
+        let cfg = tiny();
+        assert!(check_layout(&cfg).is_ok());
+        let mut bad = cfg.clone();
+        bad.params.swap(0, 1);
+        assert!(check_layout(&bad).is_err());
+    }
+
+    #[test]
+    fn zero_head_gives_chance_loss() {
+        let cfg = tiny();
+        let init = crate::runtime::native::params::init_params(&cfg);
+        let ids = vec![1i32; 2 * 6];
+        let mask = vec![1f32; 2 * 6];
+        let labels = vec![0i32, 2];
+        let l = loss(&cfg, &init, &ids, &mask, &labels, 2, 6);
+        let chance = (cfg.n_classes as f32).ln();
+        assert!((l - chance).abs() < 1e-4, "{l} vs ln(3)={chance}");
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        // spot-check the hand-derived backward against central
+        // differences on a handful of parameters in different tensors
+        let cfg = tiny();
+        let params = seeded_params(&cfg, 77);
+        let ids: Vec<i32> =
+            vec![1, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask: Vec<f32> =
+            vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let (_, grads) =
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6);
+        // probe: (tensor index, element index)
+        let probes = [
+            (0usize, 9usize),            // embed.tok (token 1 row)
+            (1, 3),                      // embed.pos
+            (li(0, WQ), 11),             // attn weight
+            (li(0, W1), 5),              // ffn weight
+            (li(0, LN1_G), 2),           // layernorm gain
+            (head_w(&cfg), 4),           // classifier head
+        ];
+        for (t, e) in probes {
+            let h = 1e-3f32;
+            let mut pp = params.clone();
+            pp[t][e] += h;
+            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            pp[t][e] -= 2.0 * h;
+            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let fd = (lp - lm) / (2.0 * h);
+            let an = grads[t][e];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                "tensor {t} elem {e}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn decoder_grads_match_finite_differences() {
+        let cfg = make_config("td", "decoder", 13, 8, 1, 2, 16, 6, 2,
+                              false);
+        let params = seeded_params(&cfg, 78);
+        let ids: Vec<i32> =
+            vec![1, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask: Vec<f32> =
+            vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = ids.clone();
+        let (_, grads) =
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6);
+        for (t, e) in [(0usize, 42usize), (li(0, WO), 20), (li(0, W2), 9)] {
+            let h = 1e-3f32;
+            let mut pp = params.clone();
+            pp[t][e] += h;
+            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            pp[t][e] -= 2.0 * h;
+            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let fd = (lp - lm) / (2.0 * h);
+            let an = grads[t][e];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                "tensor {t} elem {e}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn logits_shapes() {
+        let cfg = tiny();
+        let params = seeded_params(&cfg, 5);
+        let ids = vec![1i32; 12];
+        let mask = vec![1f32; 12];
+        let lg = logits(&cfg, &params, &ids, &mask, 2, 6);
+        assert_eq!(lg.len(), 2 * 3);
+        let dec = make_config("td", "decoder", 13, 8, 1, 2, 16, 6, 2,
+                              false);
+        let pd = seeded_params(&dec, 6);
+        let lg = logits(&dec, &pd, &ids, &mask, 2, 6);
+        assert_eq!(lg.len(), 2 * 6 * 13);
+    }
+}

@@ -1,0 +1,196 @@
+//! Canonical parameter layout + deterministic init for the native path.
+//!
+//! Mirrors `python/compile/model.py::param_specs` exactly: the order IS
+//! the step-program calling convention, and the flat `offset` situates
+//! each tensor in the shared MeZO z-stream.  The cross-language
+//! invariant is pinned by `ModelDims::n_params` (device model) agreeing
+//! with these specs for every config — tested in the integration suite.
+//!
+//! Init differs from the Python artifacts' `init_params.bin` only in the
+//! random draws (numpy's Philox vs our SplitMix64): same structural
+//! rules (zero biases/head, unit LN gains, 0.02 embeddings, 1/sqrt(fan
+//! in) projections), so hermetic native runs behave like artifact runs
+//! without needing `make artifacts`.
+
+use crate::runtime::manifest::{ConfigInfo, ParamSpecInfo};
+use crate::util::rng::Rng;
+
+/// Canonical ordered parameter list for one architecture.
+pub fn param_specs(
+    decoder: bool,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    d_ff: usize,
+    max_seq: usize,
+    n_classes: usize,
+) -> Vec<ParamSpecInfo> {
+    let d = d_model;
+    let mut shapes: Vec<(String, Vec<usize>)> = Vec::new();
+    shapes.push(("embed.tok".into(), vec![vocab, d]));
+    shapes.push(("embed.pos".into(), vec![max_seq, d]));
+    for i in 0..n_layers {
+        let p = format!("layer{i}.");
+        let mut push = |suffix: &str, shape: Vec<usize>| {
+            shapes.push((format!("{p}{suffix}"), shape));
+        };
+        push("ln1.g", vec![d]);
+        push("ln1.b", vec![d]);
+        push("attn.wq", vec![d, d]);
+        push("attn.bq", vec![d]);
+        push("attn.wk", vec![d, d]);
+        push("attn.bk", vec![d]);
+        push("attn.wv", vec![d, d]);
+        push("attn.bv", vec![d]);
+        push("attn.wo", vec![d, d]);
+        push("attn.bo", vec![d]);
+        push("ln2.g", vec![d]);
+        push("ln2.b", vec![d]);
+        push("ffn.w1", vec![d, d_ff]);
+        push("ffn.b1", vec![d_ff]);
+        push("ffn.w2", vec![d_ff, d]);
+        push("ffn.b2", vec![d]);
+    }
+    shapes.push(("final_ln.g".into(), vec![d]));
+    shapes.push(("final_ln.b".into(), vec![d]));
+    if !decoder {
+        shapes.push(("head.w".into(), vec![d, n_classes]));
+        shapes.push(("head.b".into(), vec![n_classes]));
+    }
+    // decoder ties the output projection to embed.tok — no extra tensors
+
+    let mut specs = Vec::with_capacity(shapes.len());
+    let mut off = 0usize;
+    for (name, shape) in shapes {
+        let n: usize = shape.iter().product();
+        specs.push(ParamSpecInfo { name, shape, offset: off });
+        off += n;
+    }
+    specs
+}
+
+/// Build a full [`ConfigInfo`] (specs + n_params) from architecture dims.
+#[allow(clippy::too_many_arguments)]
+pub fn make_config(
+    name: &str,
+    kind: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    max_seq: usize,
+    n_classes: usize,
+    use_pallas: bool,
+) -> ConfigInfo {
+    let params = param_specs(kind == "decoder", vocab, d_model, n_layers,
+                             d_ff, max_seq, n_classes);
+    let n_params = params
+        .last()
+        .map(|p| p.offset + p.elements())
+        .unwrap_or(0);
+    ConfigInfo {
+        name: name.into(),
+        kind: kind.into(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        max_seq,
+        n_classes,
+        use_pallas,
+        n_params,
+        params,
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Deterministic init matching the structural rules of
+/// `model.init_params` (per-tensor independent SplitMix64 streams).
+pub fn init_params(cfg: &ConfigInfo) -> Vec<Vec<f32>> {
+    let cfg_salt = fnv1a(&cfg.name);
+    cfg.params
+        .iter()
+        .map(|spec| {
+            let n = spec.elements();
+            let bias = spec.name.ends_with(".b")
+                || spec.name.ends_with(".bq")
+                || spec.name.ends_with(".bk")
+                || spec.name.ends_with(".bv")
+                || spec.name.ends_with(".bo")
+                || spec.name.ends_with(".b1")
+                || spec.name.ends_with(".b2");
+            if bias || spec.name == "head.w" {
+                // zero-init biases and the classifier head: training
+                // starts at exactly ln(n_classes) for every batch
+                return vec![0f32; n];
+            }
+            if spec.name.ends_with(".g") {
+                return vec![1f32; n];
+            }
+            let scale = if spec.name.starts_with("embed.") {
+                0.02
+            } else {
+                1.0 / (spec.shape[0] as f64).sqrt()
+            };
+            let mut rng = Rng::new(cfg_salt ^ fnv1a(&spec.name));
+            (0..n).map(|_| (rng.gaussian() * scale) as f32).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_contiguous_and_total_matches_device_formula() {
+        let cfg = make_config("t", "encoder", 512, 64, 2, 2, 128, 32, 2,
+                              true);
+        let mut off = 0;
+        for p in &cfg.params {
+            assert_eq!(p.offset, off, "{}", p.name);
+            off += p.elements();
+        }
+        assert_eq!(off, cfg.n_params);
+        // the device model's closed-form count must agree
+        assert_eq!(cfg.model_dims().n_params(), cfg.n_params as u64);
+
+        let dec = make_config("d", "decoder", 4096, 256, 6, 8, 1024, 64, 2,
+                              false);
+        assert_eq!(dec.model_dims().n_params(), dec.n_params as u64);
+        // decoder has no head tensors
+        assert!(dec.params.iter().all(|p| !p.name.starts_with("head.")));
+    }
+
+    #[test]
+    fn init_rules() {
+        let cfg = make_config("t", "encoder", 64, 8, 1, 2, 16, 8, 2, false);
+        let init = init_params(&cfg);
+        assert_eq!(init.len(), cfg.params.len());
+        for (spec, w) in cfg.params.iter().zip(&init) {
+            assert_eq!(w.len(), spec.elements());
+            if spec.name.ends_with(".g") {
+                assert!(w.iter().all(|&v| v == 1.0), "{}", spec.name);
+            }
+            if spec.name == "head.w" || spec.name.ends_with(".b1") {
+                assert!(w.iter().all(|&v| v == 0.0), "{}", spec.name);
+            }
+            if spec.name == "embed.tok" {
+                let mx = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                assert!(mx > 0.0 && mx < 0.2, "embed scale {mx}");
+            }
+        }
+        // deterministic across calls
+        assert_eq!(init_params(&cfg)[0], init[0]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Counter-based RNG — the Rust twin of `python/compile/kernels/rng.py`.
+//!
+//! MeZO's memory trick depends on *regenerating* the Gaussian
+//! perturbation `z` from `(seed, flat element index)` instead of storing
+//! a parameter-sized tensor.  For a native backend to interoperate with
+//! the AOT artifacts (same seed → same perturbation → same trajectory),
+//! this stream must be bit-compatible with the Python/Pallas one:
+//! murmur3's fmix32 finalizer over `idx * GOLDEN + seed`, mapped to
+//! N(0,1) via Box–Muller on the (2*idx, 2*idx+1) sub-streams.
+//!
+//! `hash_u32`/`uniform01` are bit-exact by construction (integer ops and
+//! an exact power-of-two scale); `gaussian` matches to libm precision
+//! (see `rust/tests/native_golden.rs` for the cross-language pin).
+
+const TWO_PI: f32 = 6.283_185_307_179_586_f32;
+/// 2^-32: multiplying a u32 by this gives a uniform in [0, 1).
+const U32_INV: f32 = 2.328_306_436_538_696_3e-10_f32;
+
+/// Stateless hash (seed, idx) -> u32: murmur3 fmix32 of idx*GOLDEN+seed.
+#[inline]
+pub fn hash_u32(seed: u32, idx: u32) -> u32 {
+    let mut x = idx.wrapping_mul(0x9E37_79B9).wrapping_add(seed);
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x85EB_CA6B);
+    x ^= x >> 13;
+    x = x.wrapping_mul(0xC2B2_AE35);
+    x ^= x >> 16;
+    x
+}
+
+/// Uniform in [0, 1] as f32, from one hash evaluation.
+///
+/// Nominally [0, 1), but hashes >= 0xFFFFFF80 round up to 2^32 in the
+/// u32→f32 cast, so exactly 1.0 occurs with probability ~2^-25.  The
+/// Python reference (`hash.astype(float32) * 2**-32`) rounds the same
+/// way; bit-compatibility wins over range purity here, and the only
+/// in-crate consumer ([`gaussian`]) is total on [0, 1].
+#[inline]
+pub fn uniform01(seed: u32, idx: u32) -> f32 {
+    hash_u32(seed, idx) as f32 * U32_INV
+}
+
+/// Standard-normal sample for element index `idx` under `seed`.
+///
+/// Box–Muller over two decorrelated hash streams (2*idx, 2*idx+1); a
+/// tiny floor keeps ln() finite when u1 == 0.
+#[inline]
+pub fn gaussian(seed: u32, idx: u32) -> f32 {
+    let u1 = uniform01(seed, idx.wrapping_mul(2)).max(1e-12);
+    let u2 = uniform01(seed, idx.wrapping_mul(2).wrapping_add(1));
+    let r = (-2.0f32 * u1.ln()).sqrt();
+    r * (TWO_PI * u2).cos()
+}
+
+/// `w[i] += scale * z(seed, base_offset + i)` over a flat tensor slab.
+///
+/// `base_offset` situates the tensor inside the virtual flat parameter
+/// vector, so streams never overlap across tensors — identical to
+/// `rng.gaussian_block` + the fused axpy in the Pallas kernels.
+pub fn perturb(w: &mut [f32], seed: u32, base_offset: usize, scale: f32) {
+    let base = base_offset as u32;
+    for (i, x) in w.iter_mut().enumerate() {
+        let z = gaussian(seed, base.wrapping_add(i as u32));
+        *x += scale * z;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_reference_values() {
+        // pinned against python/compile/kernels/rng.py (see the
+        // cross-language golden suite for the full set)
+        assert_eq!(hash_u32(0, 0), 0x0000_0000);
+        assert_eq!(hash_u32(0, 1), 0x92CA_2F0E);
+        assert_eq!(hash_u32(1, 0), 0x514E_28B7);
+        assert_eq!(hash_u32(42, 7), 0x21A2_7BDB);
+    }
+
+    #[test]
+    fn uniform_in_range_and_deterministic() {
+        for idx in 0..1000 {
+            let u = uniform01(99, idx);
+            // closed upper bound: see the doc comment on uniform01
+            assert!((0.0..=1.0).contains(&u));
+            assert_eq!(u, uniform01(99, idx));
+        }
+        // the rounding edge itself: a hash of u32::MAX rounds to 1.0
+        assert_eq!(u32::MAX as f32 * 2.328_306_436_538_696_3e-10, 1.0);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let n = 100_000u32;
+        let xs: Vec<f64> =
+            (0..n).map(|i| gaussian(7, i) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn perturb_restores_exactly() {
+        // +eps then -eps is a bitwise no-op when the regenerated z
+        // stream is identical — the property the fused step relies on
+        let orig: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+        let mut w = orig.clone();
+        perturb(&mut w, 0xC0FFEE, 1000, 1e-3);
+        assert_ne!(w, orig);
+        // float caveat: a + s*z - s*z == a only when the intermediate
+        // is exact; instead check proximity element-wise
+        perturb(&mut w, 0xC0FFEE, 1000, -1e-3);
+        for (a, b) in w.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn streams_disjoint_across_offsets() {
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        perturb(&mut a, 5, 0, 1.0);
+        perturb(&mut b, 5, 8, 1.0);
+        assert_ne!(a, b);
+        // offset 8 slab == tail of a longer slab at offset 0
+        let mut c = vec![0.0f32; 16];
+        perturb(&mut c, 5, 0, 1.0);
+        assert_eq!(&c[8..], &b[..]);
+    }
+}

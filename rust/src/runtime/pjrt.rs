@@ -1,0 +1,135 @@
+//! PJRT/XLA execution backend (`--features pjrt`) — the original seed
+//! path: compile the AOT HLO-text artifacts through the `xla` crate's
+//! PJRT CPU client and execute them on device buffers.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Building this module requires adding the `xla` crate to
+//! `rust/Cargo.toml` (see the comment there) — it binds a local XLA
+//! install, which the default native backend deliberately avoids.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::{Backend, Executable};
+use super::literal::Literal;
+use super::manifest::{Dtype, Manifest, ProgramSpec};
+
+/// The PJRT client, bound to the host CPU platform.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &ProgramSpec,
+    ) -> Result<Box<dyn Executable>> {
+        if manifest.builtin {
+            bail!("the builtin manifest has no HLO artifacts; run `make \
+                   artifacts` and load artifacts/manifest.json for PJRT");
+        }
+        let path = manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.file))?;
+        Ok(Box::new(PjrtProgram { spec: spec.clone(), exe }))
+    }
+}
+
+struct PjrtProgram {
+    spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+/// Host [`Literal`] -> `xla::Literal`.
+fn to_xla(l: &Literal) -> Result<xla::Literal> {
+    let (ty, bytes) = match l.dtype() {
+        Dtype::F32 => (xla::ElementType::F32, bytes_of(l.f32_slice()?)),
+        Dtype::I32 => (xla::ElementType::S32, bytes_of(l.i32_slice()?)),
+        Dtype::U32 => (xla::ElementType::U32, bytes_of(l.u32_slice()?)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, l.shape(), bytes)
+        .map_err(|e| anyhow!("building xla literal: {e:?}"))
+}
+
+/// `xla::Literal` -> host [`Literal`], typed/shaped per the manifest.
+fn from_xla(l: &xla::Literal, want: &super::manifest::TensorSpec)
+    -> Result<Literal>
+{
+    let shape = want.shape.clone();
+    match want.dtype {
+        Dtype::F32 => Literal::from_f32(
+            l.to_vec::<f32>()
+                .map_err(|e| anyhow!("literal->f32: {e:?}"))?,
+            shape,
+        ),
+        Dtype::I32 => Literal::from_i32(
+            l.to_vec::<i32>()
+                .map_err(|e| anyhow!("literal->i32: {e:?}"))?,
+            shape,
+        ),
+        Dtype::U32 => Literal::from_u32(
+            l.to_vec::<u32>()
+                .map_err(|e| anyhow!("literal->u32: {e:?}"))?,
+            shape,
+        ),
+    }
+}
+
+impl Executable for PjrtProgram {
+    fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let xla_inputs: Vec<xla::Literal> =
+            inputs.iter().map(|l| to_xla(l)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = xla_inputs.iter().collect();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing {}", self.spec.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "program {} returned {} outputs, manifest says {}",
+                self.spec.file,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, want)| from_xla(l, want))
+            .collect()
+    }
+}

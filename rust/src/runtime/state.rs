@@ -7,9 +7,8 @@
 //! copying happens on the Rust side.
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
-use super::literal::{f32_tensor, LiteralExt};
+use super::literal::{f32_tensor, Literal};
 use super::manifest::ConfigInfo;
 
 /// The live parameter set of one model instance.
@@ -74,9 +73,8 @@ impl ModelState {
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
         let mut out = Vec::with_capacity(self.n_params * 4);
         for t in &self.tensors {
-            for v in t.f32_vec()? {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
+            t.f32_slice()?; // params are f32 by contract
+            out.extend(t.to_le_bytes());
         }
         Ok(out)
     }
@@ -107,7 +105,7 @@ impl ModelState {
     pub fn l2_norm(&self) -> Result<f64> {
         let mut acc = 0f64;
         for t in &self.tensors {
-            for v in t.f32_vec()? {
+            for &v in t.f32_slice()? {
                 acc += (v as f64) * (v as f64);
             }
         }
@@ -158,6 +156,7 @@ mod tests {
         assert_eq!(bytes.len(), 40);
         let st2 = ModelState::from_bytes(&cfg, &bytes).unwrap();
         assert_eq!(st2.tensors[1].f32_vec().unwrap(), raw[1]);
+        assert_eq!(st2.tensors[0].shape(), &[2, 3]);
     }
 
     #[test]

@@ -20,6 +20,15 @@ use crate::runtime::manifest::ConfigInfo;
 use crate::runtime::state::ModelState;
 use crate::util::json::{self, Json};
 
+/// Read a u64 stored either as a decimal string (current format) or a
+/// JSON number (pre-fix checkpoints; exact only below 2^53).
+fn json_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(s) => s.parse().ok(),
+        other => other.as_u64(),
+    }
+}
+
 /// A checkpoint on disk.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -60,11 +69,14 @@ impl Checkpoint {
                 bail!("mezo checkpoint carries no optimizer state")
             }
         }
+        // u64s are serialized as decimal STRINGS: the JSON codec's f64
+        // numbers silently lose bits above 2^53, which would break
+        // deterministic MeZO resume for large master seeds.
         let meta = Json::obj(vec![
             ("config", Json::str(config)),
             ("optimizer", Json::str(optimizer.label())),
-            ("step", Json::num(step as f64)),
-            ("master_seed", Json::num(master_seed as f64)),
+            ("step", Json::str(&step.to_string())),
+            ("master_seed", Json::str(&master_seed.to_string())),
             ("last_loss", Json::num(last_loss)),
         ]);
         std::fs::write(dir.join("meta.json"), meta.dump())?;
@@ -93,8 +105,9 @@ impl Checkpoint {
             dir,
             config: meta.get("config").as_str().context("config")?.into(),
             optimizer,
-            step: meta.get("step").as_u64().context("step")?,
-            master_seed: meta.get("master_seed").as_u64().context("seed")?,
+            step: json_u64(meta.get("step")).context("step")?,
+            master_seed: json_u64(meta.get("master_seed"))
+                .context("seed")?,
             last_loss: meta.get("last_loss").as_f64().context("loss")?,
         })
     }
@@ -181,7 +194,7 @@ mod tests {
         assert_eq!(back.master_seed, 99);
         assert_eq!(back.optimizer, OptimizerKind::MeZo);
         let p = back.load_params(&cfg).unwrap();
-        assert_eq!(p.tensors[0].to_vec::<f32>().unwrap(),
+        assert_eq!(p.tensors[0].f32_vec().unwrap(),
                    vec![1., 2., 3., 4., 5., 6.]);
         assert!(back.load_adam_state(&cfg).is_err());
         // MeZO checkpoint = params + small metadata
@@ -203,6 +216,42 @@ mod tests {
         assert_eq!(v.len(), 1);
         // Adam durable cost ~3x params
         assert!(ck.size_bytes().unwrap() >= 3 * 6 * 4);
+    }
+
+    #[test]
+    fn u64_fields_roundtrip_above_f64_precision() {
+        // f64 has 53 mantissa bits; these values would silently round
+        // if serialized through Json::num (the pre-fix bug)
+        let cfg = tiny_cfg();
+        let params = ModelState::zeros_like(&cfg).unwrap();
+        let big_seed = u64::MAX - 1;
+        let big_step = (1u64 << 53) + 3;
+        let dir = tmp("bigseed");
+        Checkpoint::save(&dir, "t", OptimizerKind::MeZo, big_step,
+                         big_seed, 0.25, &params, None)
+            .unwrap();
+        let back = Checkpoint::open(&dir).unwrap();
+        assert_eq!(back.master_seed, big_seed, "seed lost bits");
+        assert_eq!(back.step, big_step, "step lost bits");
+        // and the on-disk form is a string, not a float
+        let meta =
+            std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        assert!(meta.contains(&format!("\"{big_seed}\"")), "{meta}");
+    }
+
+    #[test]
+    fn legacy_numeric_meta_still_opens() {
+        let dir = tmp("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"config":"t","optimizer":"mezo","step":17,
+                "master_seed":99,"last_loss":0.5}"#,
+        )
+        .unwrap();
+        let back = Checkpoint::open(&dir).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(back.master_seed, 99);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! 1. pulls the next batch from the on-device data pipeline,
 //! 2. assembles the artifact input list (params .. [m, v] .. ids, mask,
 //!    labels, scalars) as literal *references* — no parameter copies,
-//! 3. executes the fused step program on PJRT,
+//! 3. executes the fused step program on the configured execution
+//!    backend (native interpreter by default, PJRT with `--features
+//!    pjrt`),
 //! 4. swaps the returned parameter (and m/v) tensors into place,
 //! 5. mirrors the allocation behaviour into the simulated device ledger
 //!    and advances the thermal clock by the *simulated* step time.
@@ -15,8 +17,7 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-use xla::Literal;
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::bpe::Bpe;
@@ -26,7 +27,7 @@ use crate::device::Device;
 use crate::optim::{AdamDriver, MezoDriver, OptimizerKind, Schedule};
 use crate::optim::adam::AdamConfig;
 use crate::optim::mezo::MezoConfig;
-use crate::runtime::literal::{f32_tensor, i32_tensor, LiteralExt};
+use crate::runtime::literal::{f32_tensor, i32_tensor, Literal};
 use crate::runtime::state::ModelState;
 use crate::runtime::{Program, Runtime};
 use crate::telemetry::MetricLog;
@@ -36,7 +37,7 @@ use crate::telemetry::MetricLog;
 pub struct StepResult {
     pub step: u64,
     pub loss: f64,
-    /// Real wall-clock of the PJRT execution on this host.
+    /// Real wall-clock of the step-program execution on this host.
     pub host_time_s: f64,
     /// Simulated wall-clock on the session's device.
     pub sim_time_s: f64,
@@ -510,6 +511,49 @@ impl Session {
             }
         }
         Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Restore a checkpoint into this session: parameters, the step
+    /// counter, and the optimizer state.
+    ///
+    /// For MeZO, the "optimizer state" is just `(master_seed, step)` —
+    /// the deterministic seed schedule regenerates everything else, so
+    /// a restored session continues with the exact seed/loss sequence
+    /// of the uninterrupted run (tested in `rust/tests/integration.rs`).
+    /// The session must have been built with the same config and
+    /// optimizer; for exact replay, also the same `seed(..)` (which
+    /// drives the data pipeline).
+    pub fn restore(
+        &mut self,
+        ck: &crate::tuner::checkpoint::Checkpoint,
+    ) -> Result<()> {
+        ensure!(
+            ck.config == self.cfg.name,
+            "checkpoint is for config {}, session runs {}",
+            ck.config,
+            self.cfg.name
+        );
+        ensure!(
+            ck.optimizer == self.optimizer,
+            "checkpoint optimizer {} vs session {}",
+            ck.optimizer.label(),
+            self.optimizer.label()
+        );
+        self.params = ck.load_params(&self.cfg)?;
+        match &mut self.driver {
+            Driver::MeZo(d) => {
+                d.cfg.master_seed = ck.master_seed;
+                d.step = ck.step;
+            }
+            Driver::Adam(d) => {
+                let (m, v) = ck.load_adam_state(&self.cfg)?;
+                d.m = m;
+                d.v = v;
+                d.step = ck.step;
+            }
+        }
+        self.step = ck.step;
+        Ok(())
     }
 
     /// Tear down: release the simulated memory reservation.

@@ -1,24 +1,25 @@
-//! Integration tests: the full three-layer stack over the real AOT
-//! artifacts.  Requires `make artifacts` (the Makefile `test` target
-//! guarantees the ordering).
+//! Integration tests: the full three-layer stack over the execution
+//! backend.  These run hermetically on the default native backend —
+//! `Manifest::builtin()` when no artifact directory exists, the real
+//! AOT manifest when one does — so `cargo test` is self-contained.
 //!
-//! These are the tests that prove the layers *compose*: Pallas-kernel
-//! HLO → PJRT compile → rust session loop → losses that behave like
+//! These are the tests that prove the layers *compose*: manifest →
+//! backend compile → rust session loop → losses that behave like
 //! Fig. 1 says they should.
 
 use pocketllm::coordinator::{Coordinator, CoordinatorConfig, Event, JobSpec};
 use pocketllm::data::task::TaskKind;
 use pocketllm::device::{Device, ModelDims};
 use pocketllm::optim::{OptimizerKind, Schedule};
-use pocketllm::runtime::{LiteralExt, Manifest, Runtime};
+use pocketllm::runtime::{Manifest, Runtime};
 use pocketllm::scheduler::Policy;
 use pocketllm::tuner::checkpoint::Checkpoint;
 use pocketllm::tuner::session::SessionBuilder;
 
 fn runtime() -> Runtime {
-    let m = Manifest::load("artifacts/manifest.json")
-        .expect("run `make artifacts` before `cargo test`");
-    Runtime::new(m).expect("PJRT cpu client")
+    let m = Manifest::load_or_builtin("artifacts/manifest.json")
+        .expect("manifest");
+    Runtime::new(m).expect("native runtime")
 }
 
 // ---------------------------------------------------------------------
@@ -44,8 +45,8 @@ fn manifest_has_all_default_programs() {
 #[test]
 fn rust_param_formula_matches_python_manifest() {
     // ModelDims::n_params (used by the device model at 355M/1.3B scale)
-    // must agree with the Python-side param_specs that produced the
-    // manifest, for every config we can cross-check.
+    // must agree with the param_specs layout behind the manifest, for
+    // every config we can cross-check.
     let rt = runtime();
     for (name, info) in &rt.manifest.configs {
         let dims = ModelDims {
@@ -110,9 +111,9 @@ fn mezo_is_deterministic_across_sessions() {
 
 #[test]
 fn pallas_and_fast_paths_agree() {
-    // pocket-tiny lowers through the Pallas kernels; pocket-tiny-fast
-    // through XLA-native ops.  Same dims, same init, same seed — the
-    // first-step loss must agree to fp32 tolerance.
+    // pocket-tiny is the kernel-path config; pocket-tiny-fast the
+    // XLA-native-op twin.  Same dims, same init, same seed — the
+    // first-step loss must agree to fp32 tolerance on any backend.
     let rt = runtime();
     let loss_of = |config: &str| {
         let mut s = SessionBuilder::new(&rt, config)
@@ -196,39 +197,82 @@ fn checkpoint_resume_is_exact() {
     Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, a.step, 11,
                      0.0, &a.params, None)
         .unwrap();
+    let params_at_4 = a.params.to_bytes().unwrap();
     let a6 = a.run_steps(2).unwrap().last_loss;
 
-    // resume from the checkpoint and run the same 2 steps
+    // restore the checkpoint into a fresh session and run the same 2
+    // steps — Session::restore fast-forwards the optimizer clock via
+    // the deterministic (master_seed, step) schedule
     let ck = Checkpoint::open(&dir).unwrap();
     let mut b = SessionBuilder::new(&rt, "pocket-tiny")
-        .optimizer(OptimizerKind::MeZo)
-        .seed(ck.master_seed)
-        .build()
-        .unwrap();
-    b.params = ck.load_params(&b.cfg).unwrap();
-    // fast-forward the optimizer/batcher clocks deterministically
-    for _ in 0..ck.step {
-        // advancing without executing would desync MeZO's seed schedule;
-        // instead rebuild driver state by stepping the *seed schedule*
-        // via the session's own replay: run zero-lr steps would perturb
-        // params; so we simply re-run from scratch and compare instead.
-        break;
-    }
-    // simpler equivalence: a fresh session stepped 6 == checkpoint@4 + 2
-    let mut c = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
         .seed(11)
         .build()
         .unwrap();
-    let c6 = {
-        c.run_steps(6).unwrap().last_loss
-    };
-    assert!((a6 - c6).abs() < 1e-9, "{a6} vs {c6}");
+    b.restore(&ck).unwrap();
+    assert_eq!(b.step, 4);
+    let b6 = b.run_steps(2).unwrap().last_loss;
+    assert_eq!(a6, b6, "resumed tail must be bit-identical");
+
     // and the checkpointed params themselves round-trip bit-exactly
-    let pa = b.params.to_bytes().unwrap();
     let ck2 = Checkpoint::open(&dir).unwrap();
-    let pb = ck2.load_params(&b.cfg).unwrap().to_bytes().unwrap();
-    assert_eq!(pa, pb);
+    let pb = ck2
+        .load_params(rt.manifest.config("pocket-tiny").unwrap())
+        .unwrap();
+    assert_eq!(pb.to_bytes().unwrap(), params_at_4,
+               "checkpoint params must round-trip bit-exactly");
+}
+
+#[test]
+fn resume_reproduces_seed_and_loss_sequence_with_huge_master_seed() {
+    // the satellite-bug regression: master seeds above 2^53 must survive
+    // checkpoint JSON (string-serialized u64) AND the resumed session
+    // must replay the identical seed/loss sequence
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("pocketllm_it_bigseed");
+    let _ = std::fs::remove_dir_all(&dir);
+    let big_seed = u64::MAX - 1;
+
+    // uninterrupted reference run: 6 steps of losses
+    let mut a = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(big_seed)
+        .build()
+        .unwrap();
+    let mut ref_losses = Vec::new();
+    for _ in 0..6 {
+        ref_losses.push(a.step().unwrap().loss);
+    }
+
+    // interrupted run: 3 steps, checkpoint, restore, 3 more
+    let mut b = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(big_seed)
+        .build()
+        .unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        got.push(b.step().unwrap().loss);
+    }
+    Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, b.step,
+                     big_seed, *got.last().unwrap(), &b.params, None)
+        .unwrap();
+    drop(b);
+
+    let ck = Checkpoint::open(&dir).unwrap();
+    assert_eq!(ck.master_seed, big_seed, "seed must survive the JSON");
+    assert_eq!(ck.step, 3);
+    let mut c = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(ck.master_seed)
+        .build()
+        .unwrap();
+    c.restore(&ck).unwrap();
+    for _ in 3..6 {
+        got.push(c.step().unwrap().loss);
+    }
+    assert_eq!(got, ref_losses,
+               "resumed run must replay the identical loss sequence");
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,311 @@
+//! Cross-language golden tests: the native backend pinned against the
+//! Python reference stack.
+//!
+//! Every constant below was produced by the repo's own Python layer
+//! (`python/compile/kernels/rng.py`, `kernels/ref.py`, `steps.py`,
+//! jax 0.4 on CPU, float32).  Regenerate with:
+//!
+//! ```text
+//! cd python && python - <<'EOF'
+//! import numpy as np, jax.numpy as jnp
+//! from compile import model, steps
+//! from compile.kernels import rng
+//! # hash/gaussian: print rng.hash_u32/gaussian for the pairs below.
+//! # model goldens: params[i] = uniform01(1234, offset+i)*0.2-0.1 over
+//! # the golden-enc/golden-dec configs, then loss_fn/logits_fn/
+//! # mezo_step/mezo_step_multi/adam_step on the fixed batch below.
+//! EOF
+//! ```
+//!
+//! The integer hash and the uniform stream are bit-exact; everything
+//! that crosses libm (gaussian, forwards) is pinned to tolerances far
+//! above any observed deviation (~1e-6) but far below optimizer scales.
+
+use pocketllm::runtime::manifest::ConfigInfo;
+use pocketllm::runtime::native::params::make_config;
+use pocketllm::runtime::native::rng::{gaussian, hash_u32, uniform01};
+use pocketllm::runtime::native::{adam_step, mezo_step, model, ProgramKind};
+
+// ---------------------------------------------------------------- rng
+
+#[test]
+fn hash_u32_matches_python_exactly() {
+    let cases: [(u32, u32, u32); 7] = [
+        (0x0, 0x0, 0x0000_0000),
+        (0x0, 0x1, 0x92CA_2F0E),
+        (0x1, 0x0, 0x514E_28B7),
+        (0x2A, 0x7, 0x21A2_7BDB),
+        (0xDEAD_BEEF, 0x3039, 0x6124_B765),
+        (0xFFFF_FFFF, 0xFFFF_FFFF, 0x3B66_B2AA),
+        (0x3039, 0x8000_0003, 0x789B_4631),
+    ];
+    for (seed, idx, want) in cases {
+        assert_eq!(hash_u32(seed, idx), want,
+                   "hash_u32({seed:#x}, {idx:#x})");
+    }
+}
+
+#[test]
+fn uniform01_matches_python_bit_for_bit() {
+    let want_bits: [u32; 4] =
+        [0x3DC6_4D76, 0x3E0C_5A8D, 0x3EE6_F441, 0x3F7F_8391];
+    for (idx, want) in want_bits.into_iter().enumerate() {
+        let got = uniform01(7, idx as u32);
+        assert_eq!(got.to_bits(), want,
+                   "uniform01(7, {idx}) = {got} bits {:#010x}",
+                   got.to_bits());
+    }
+}
+
+#[test]
+fn gaussian_matches_python_stream() {
+    let want: [f32; 8] = [
+        1.127_803_8, 1.313_020_7, -0.190_180_2, -0.155_015_42,
+        -0.530_648_23, 1.271_272_8, 0.653_417, -0.386_771_5,
+    ];
+    for (idx, w) in want.into_iter().enumerate() {
+        let got = gaussian(0xDEAD_BEEF, idx as u32);
+        assert!((got - w).abs() < 1e-4, "gaussian idx {idx}: {got} vs {w}");
+    }
+    // offset slab (rng.gaussian_block(seed=42, base_offset=1000, (6,)))
+    let want_off: [f32; 6] = [
+        2.266_634_2, -1.568_671, -1.162_987, -0.156_606_73, 1.220_620_5,
+        0.707_487_6,
+    ];
+    for (i, w) in want_off.into_iter().enumerate() {
+        let got = gaussian(42, 1000 + i as u32);
+        assert!((got - w).abs() < 1e-4, "offset idx {i}: {got} vs {w}");
+    }
+}
+
+// ------------------------------------------------------------- models
+
+fn golden_enc() -> ConfigInfo {
+    make_config("golden-enc", "encoder", 13, 8, 2, 2, 16, 6, 3, false)
+}
+
+fn golden_dec() -> ConfigInfo {
+    make_config("golden-dec", "decoder", 13, 8, 2, 2, 16, 6, 2, false)
+}
+
+/// params[i] = uniform01(1234, offset + i) * 0.2 - 0.1 — bit-exact on
+/// both sides, so forward mismatches isolate forward bugs.
+fn golden_params(cfg: &ConfigInfo) -> Vec<Vec<f32>> {
+    cfg.params
+        .iter()
+        .map(|spec| {
+            (0..spec.elements())
+                .map(|i| {
+                    uniform01(1234, (spec.offset + i) as u32) * 0.2f32
+                        - 0.1f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+const IDS: [i32; 12] = [1, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+const MASK: [f32; 12] =
+    [1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+const LABELS_CLS: [i32; 2] = [2, 0];
+
+fn close(got: f32, want: f32, tol: f32, what: &str) {
+    assert!((got - want).abs() < tol,
+            "{what}: got {got}, python says {want}");
+}
+
+#[test]
+fn golden_configs_match_python_param_layout() {
+    // python: model.num_params / len(model.param_specs(cfg))
+    let enc = golden_enc();
+    assert_eq!(enc.params.len(), 38);
+    assert_eq!(enc.n_params, 1395);
+    let dec = golden_dec();
+    assert_eq!(dec.params.len(), 36);
+    assert_eq!(dec.n_params, 1368);
+}
+
+#[test]
+fn encoder_loss_and_logits_match_jax() {
+    let cfg = golden_enc();
+    let p = golden_params(&cfg);
+    let l = model::loss(&cfg, &p, &IDS, &MASK, &LABELS_CLS, 2, 6);
+    close(l, 1.060_763_6, 2e-4, "encoder loss_eval");
+    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6);
+    let want: [f32; 6] = [
+        0.012_931_107, -0.083_361_536, 0.058_144_696, 0.013_024_121,
+        -0.083_118_81, 0.058_435_928,
+    ];
+    for (i, w) in want.into_iter().enumerate() {
+        close(lg[i], w, 2e-4, "encoder logit");
+    }
+}
+
+#[test]
+fn decoder_loss_and_logits_match_jax() {
+    let cfg = golden_dec();
+    let p = golden_params(&cfg);
+    let l = model::loss(&cfg, &p, &IDS, &MASK, &IDS, 2, 6);
+    close(l, 2.568_747_3, 3e-4, "decoder loss_eval");
+    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6);
+    let want: [f32; 6] = [
+        0.022_800_053, -0.000_762_739_2, 0.001_808_712_5, 0.014_508_689,
+        0.004_410_263, -0.005_158_985,
+    ];
+    for (i, w) in want.into_iter().enumerate() {
+        close(lg[i], w, 2e-4, "decoder logit");
+    }
+}
+
+#[test]
+fn encoder_mezo_step_matches_jax() {
+    let cfg = golden_enc();
+    let mut w = golden_params(&cfg);
+    let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
+                         1e-2, 1e-3, ProgramKind::Mezo)
+        .unwrap();
+    close(loss, 1.060_764_6, 2e-4, "mezo loss");
+    // embed.tok head of the update stream
+    let want_p0: [f32; 4] =
+        [-0.084_797_435, -0.013_533_172, 0.045_290_843, 0.089_610_75];
+    for (i, want) in want_p0.into_iter().enumerate() {
+        close(w[0][i], want, 2e-4, "mezo p0");
+    }
+    // head.b — the far end of the z-stream
+    let last = w.last().unwrap();
+    let want_last: [f32; 3] =
+        [0.017_041_584, -0.083_037_49, 0.045_541_067];
+    for (i, want) in want_last.into_iter().enumerate() {
+        close(last[i], want, 2e-4, "mezo plast");
+    }
+}
+
+#[test]
+fn decoder_mezo_step_matches_jax() {
+    let cfg = golden_dec();
+    let mut w = golden_params(&cfg);
+    let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
+                         1e-3, ProgramKind::Mezo)
+        .unwrap();
+    close(loss, 2.568_747_5, 3e-4, "mezo loss");
+    let want_p0: [f32; 4] =
+        [-0.087_249_13, -0.012_435_146, 0.044_555_154, 0.092_124_58];
+    for (i, want) in want_p0.into_iter().enumerate() {
+        close(w[0][i], want, 2e-4, "mezo p0");
+    }
+    let last = w.last().unwrap(); // final_ln.b (decoder ties the head)
+    let want_last: [f32; 4] =
+        [-0.043_252_83, -0.054_199_3, 0.097_400_85, 0.067_621_216];
+    for (i, want) in want_last.into_iter().enumerate() {
+        close(last[i], want, 2e-4, "mezo plast");
+    }
+}
+
+#[test]
+fn multi_query_mezo_matches_jax() {
+    let cfg = golden_enc();
+    let mut w = golden_params(&cfg);
+    let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
+                         1e-2, 1e-3, ProgramKind::MezoMulti(2))
+        .unwrap();
+    close(loss, 1.060_764_9, 2e-4, "q2 loss");
+    let want_p0: [f32; 4] =
+        [-0.089_060_865, -0.013_062_127, 0.043_244_63, 0.089_557_44];
+    for (i, want) in want_p0.into_iter().enumerate() {
+        close(w[0][i], want, 2e-4, "q2 p0");
+    }
+
+    let cfg = golden_dec();
+    let mut w = golden_params(&cfg);
+    let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
+                         1e-3, ProgramKind::MezoMulti(2))
+        .unwrap();
+    close(loss, 2.568_747, 3e-4, "q2 dec loss");
+    let want_p0: [f32; 4] =
+        [-0.087_981_4, -0.012_158_867, 0.044_249_527, 0.092_467_87];
+    for (i, want) in want_p0.into_iter().enumerate() {
+        close(w[0][i], want, 2e-4, "q2 dec p0");
+    }
+}
+
+#[test]
+fn encoder_adam_step_matches_jax_autodiff() {
+    // the strongest pin: jax computed these with value_and_grad; the
+    // native backend with its hand-derived backward pass
+    let cfg = golden_enc();
+    let mut w = golden_params(&cfg);
+    let init = w.clone();
+    let zeros = |cfg: &ConfigInfo| -> Vec<Vec<f32>> {
+        cfg.params.iter().map(|s| vec![0.0; s.elements()]).collect()
+    };
+    let mut m = zeros(&cfg);
+    let mut v = zeros(&cfg);
+    let loss = adam_step(&cfg, &mut w, &mut m, &mut v, &IDS, &MASK,
+                         &LABELS_CLS, 2, 6, 1.0, 1e-3)
+        .unwrap();
+    close(loss, 1.060_763_6, 2e-4, "adam loss");
+    // PAD-token embedding gets exactly zero gradient -> unchanged
+    for i in 0..4 {
+        close(w[0][i], init[0][i], 1e-7, "adam pad-row");
+    }
+    // head.b: nonzero grads flow
+    let n = cfg.params.len();
+    let want_p: [f32; 3] =
+        [0.014_345_845, -0.081_009_53, 0.045_785_606];
+    let want_m: [f32; 3] =
+        [-0.016_154_712, 0.030_740_53, -0.014_585_814];
+    let want_v: [f32; 3] =
+        [2.609_747_4e-5, 9.449_802e-5, 2.127_459_6e-5];
+    for i in 0..3 {
+        close(w[n - 1][i], want_p[i], 2e-4, "adam plast");
+        close(m[n - 1][i], want_m[i], 2e-4, "adam mlast");
+        close(v[n - 1][i], want_v[i], 1e-6, "adam vlast");
+    }
+    // aggregate over the whole gradient field
+    let sum_m: f64 = m
+        .iter()
+        .flat_map(|t| t.iter())
+        .map(|x| x.abs() as f64)
+        .sum();
+    let want_sum = 0.163_962_957;
+    assert!((sum_m - want_sum).abs() < 1e-3 * want_sum.max(1.0),
+            "sum|m| {sum_m} vs {want_sum}");
+}
+
+#[test]
+fn decoder_adam_step_matches_jax_autodiff() {
+    let cfg = golden_dec();
+    let mut w = golden_params(&cfg);
+    let mut m: Vec<Vec<f32>> =
+        cfg.params.iter().map(|s| vec![0.0; s.elements()]).collect();
+    let mut v = m.clone();
+    let loss = adam_step(&cfg, &mut w, &mut m, &mut v, &IDS, &MASK, &IDS,
+                         2, 6, 1.0, 1e-3)
+        .unwrap();
+    close(loss, 2.568_747_3, 3e-4, "adam dec loss");
+    // tied embedding: grads flow into embed.tok row 0 via the LM head
+    let want_p0: [f32; 4] =
+        [-0.087_144_695, -0.011_034_067, 0.043_286_43, 0.092_042_83];
+    for (i, want) in want_p0.into_iter().enumerate() {
+        close(w[0][i], want, 2e-4, "adam dec p0");
+    }
+    let n = cfg.params.len();
+    let want_plast: [f32; 4] =
+        [-0.043_578_822, -0.054_226_268, 0.098_123_33, 0.067_177_21];
+    let want_mlast: [f32; 4] = [
+        0.002_094_867_4, -0.003_387_581_6, -0.001_208_957_6,
+        0.003_870_208_5,
+    ];
+    for i in 0..4 {
+        close(w[n - 1][i], want_plast[i], 2e-4, "adam dec plast");
+        close(m[n - 1][i], want_mlast[i], 2e-4, "adam dec mlast");
+    }
+    let sum_m: f64 = m
+        .iter()
+        .flat_map(|t| t.iter())
+        .map(|x| x.abs() as f64)
+        .sum();
+    let want_sum = 0.123_515_071;
+    assert!((sum_m - want_sum).abs() < 1e-3 * want_sum.max(1.0),
+            "sum|m| {sum_m} vs {want_sum}");
+}
