@@ -85,14 +85,19 @@ def mezo_step_multi(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
     *inherent parallelization potential* that phones underuse: the k
     query pairs are data-parallel (each is an independent forward).  On
     this CPU lowering they run sequentially inside one program; on a
-    parallel backend XLA can overlap them.  Variance of the SPSA
-    estimator drops ~1/k, buying smoother descent per step at k× the
-    forward cost — the ``ablation_zo`` bench measures that trade.
+    parallel backend XLA can overlap them, and the Rust native backend
+    fans them out over a worker pool.  Variance of the SPSA estimator
+    drops ~1/k, buying smoother descent per step at k× the forward cost
+    — the ``ablation_zo`` bench measures that trade.
 
-    Memory stays at ONE parameter set: each query restores the weights
-    (seed-regenerated), and the k updates are applied as k additional
-    axpy sweeps at the end.  All gradients are estimated at the *same*
-    point (classic averaged SPSA, not sequential mini-steps).
+    Memory stays at ONE parameter set plus one perturbed copy.  Every
+    query evaluates BOTH sides directly from the base point (w ± eps z,
+    classic averaged SPSA at a single point) — queries are therefore
+    order-independent, which is exactly what makes them parallelizable
+    without changing results; the k averaged updates are applied to the
+    untouched base as k axpy sweeps at the end.  The Rust
+    ``runtime::native`` interpreter mirrors these semantics bit-for-bit
+    across worker counts.
     """
     seed_s = seed.reshape(())
     lr_s = lr.reshape(())
@@ -105,11 +110,10 @@ def mezo_step_multi(cfg: model.ModelConfig, params: Sequence[jnp.ndarray],
     for sq in q_seeds:
         w_plus = _perturb_all(cfg, w, sq, eps_s)
         loss_plus = model.loss_fn(cfg, w_plus, ids, mask, labels)
-        w_minus = _perturb_all(cfg, w_plus, sq, -2.0 * eps_s)
+        w_minus = _perturb_all(cfg, w, sq, -eps_s)  # from the BASE
         loss_minus = model.loss_fn(cfg, w_minus, ids, mask, labels)
         gs.append((loss_plus - loss_minus) / (2.0 * eps_s))
         losses.append(0.5 * (loss_plus + loss_minus))
-        w = _perturb_all(cfg, w_minus, sq, eps_s)  # restore
 
     scale = lr_s / float(n_queries)
     for sq, g in zip(q_seeds, gs):

@@ -2,8 +2,12 @@
 //! pass (EXPERIMENTS.md §Perf).
 //!
 //! Decomposes a session step into its components so non-`execute` time
-//! is visible: batch assembly, literal construction, backend execution,
-//! output scatter.  Target: everything outside `execute` < 5% of step.
+//! is visible: batch assembly, literal construction, parameter
+//! clone-in/clone-out (the cost `run_in_place` deletes), backend
+//! execution, output scatter.  Also races the buffer-donation path
+//! against the literal `run()` path and the parallel `mezo_step_q4`
+//! against its sequential oracle.  Writes `BENCH_hotpath.json`
+//! (override with `BENCH_JSON=path`) so the numbers leave a trail.
 
 use pocketllm::data::batcher::Batcher;
 use pocketllm::data::bpe::Bpe;
@@ -11,8 +15,8 @@ use pocketllm::data::corpus;
 use pocketllm::data::task::{TaskData, TaskKind};
 use pocketllm::optim::OptimizerKind;
 use pocketllm::runtime::literal::{f32_tensor, i32_tensor};
-use pocketllm::runtime::{Manifest, Runtime};
-use pocketllm::telemetry::bench::{bench, env_u64, render};
+use pocketllm::runtime::{ExecState, Manifest, Runtime};
+use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
 use pocketllm::tuner::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
@@ -37,13 +41,28 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(batcher.next());
     }));
 
-    // --- literal construction ---
+    // --- literal construction (the only per-step literals left) ---
     let ids = vec![1i32; 8 * 64];
     let mask = vec![1f32; 8 * 64];
     ms.push(bench("literal i32[8,64]+f32[8,64]", 10, iters * 20, || {
         std::hint::black_box(i32_tensor(&ids, &[8, 64]).unwrap());
         std::hint::black_box(f32_tensor(&mask, &[8, 64]).unwrap());
     }));
+
+    // --- the old path's per-step parameter traffic, isolated:
+    //     clone every tensor into literals, then scatter them back
+    //     (exactly what run() forces and run_in_place deletes) ---
+    let roberta_cfg = rt.manifest.config("pocket-roberta")?.clone();
+    let roberta_raw = rt.manifest.load_init_params("pocket-roberta")?;
+    {
+        let mut st = ExecState::from_raw(&roberta_cfg,
+                                         roberta_raw.clone())?;
+        ms.push(bench("param literals clone-in + scatter-out (roberta)",
+                      2, iters.min(15), || {
+            let donated = st.donated_literals().unwrap();
+            st.absorb(donated).unwrap();
+        }));
+    }
 
     // --- full steps (the denominators) ---
     for (name, config, kind) in [
@@ -61,17 +80,80 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
+    // --- donation vs literal path on the same program ---
+    {
+        let prog = rt.program("pocket-roberta", "mezo_step", 8)?;
+        let b = roberta_cfg.max_seq * 8;
+        let ids = i32_tensor(&vec![5i32; b], &[8, roberta_cfg.max_seq])?;
+        let mask = f32_tensor(&vec![1f32; b], &[8, roberta_cfg.max_seq])?;
+        let labels = i32_tensor(&vec![1i32; 8], &[8])?;
+        let seed = pocketllm::runtime::u32_1(7)?;
+        let lr = pocketllm::runtime::f32_1(1e-4)?;
+        let eps = pocketllm::runtime::f32_1(1e-3)?;
+        let inputs = [&ids, &mask, &labels, &seed, &lr, &eps];
+        let mut st_run =
+            ExecState::from_raw(&roberta_cfg, roberta_raw.clone())?;
+        ms.push(bench("mezo_step via run() (clone-in/out)", 2,
+                      iters.min(12), || {
+            std::hint::black_box(
+                prog.execute_in_place_via_run(&mut st_run, &inputs)
+                    .unwrap(),
+            );
+        }));
+        let mut st_ip =
+            ExecState::from_raw(&roberta_cfg, roberta_raw.clone())?;
+        ms.push(bench("mezo_step via run_in_place (donated)", 2,
+                      iters.min(12), || {
+            std::hint::black_box(
+                prog.execute_in_place(&mut st_ip, &inputs).unwrap(),
+            );
+        }));
+    }
+
+    // --- k-query SPSA: parallel pool vs sequential oracle ---
+    {
+        let prog = rt.program("pocket-roberta", "mezo_step_q4", 8)?;
+        let b = roberta_cfg.max_seq * 8;
+        let ids_v = vec![5i32; b];
+        let mask_v = vec![1f32; b];
+        let labels_v = vec![1i32; 8];
+        let ids = i32_tensor(&ids_v, &[8, roberta_cfg.max_seq])?;
+        let mask = f32_tensor(&mask_v, &[8, roberta_cfg.max_seq])?;
+        let labels = i32_tensor(&labels_v, &[8])?;
+        let seed = pocketllm::runtime::u32_1(7)?;
+        let lr = pocketllm::runtime::f32_1(1e-4)?;
+        let eps = pocketllm::runtime::f32_1(1e-3)?;
+        let inputs = [&ids, &mask, &labels, &seed, &lr, &eps];
+        let mut st =
+            ExecState::from_raw(&roberta_cfg, roberta_raw.clone())?;
+        ms.push(bench("mezo_step_q4 parallel (in place)", 1,
+                      iters.min(10), || {
+            std::hint::black_box(
+                prog.execute_in_place(&mut st, &inputs).unwrap(),
+            );
+        }));
+        let mut w = roberta_raw.clone();
+        ms.push(bench("mezo_step_q4 sequential reference", 1,
+                      iters.min(10), || {
+            std::hint::black_box(
+                pocketllm::runtime::native::mezo_step_multi_reference(
+                    &roberta_cfg, &mut w, &ids_v, &mask_v, &labels_v, 8,
+                    roberta_cfg.max_seq, 7, 1e-4, 1e-3, 4,
+                )
+                .unwrap(),
+            );
+        }));
+    }
+
     // --- L2 perf ablation: fused vs naive MeZO step program ---
     // (same math; the fused variant folds restore+update into one
     //  parameter sweep — EXPERIMENTS.md §Perf L2)
     {
-        let cfg = rt.manifest.config("pocket-roberta")?.clone();
-        let raw = rt.manifest.load_init_params("pocket-roberta")?;
-        let params =
-            pocketllm::runtime::ModelState::from_raw(&cfg, &raw)?;
-        let b = cfg.max_seq * 8;
-        let ids = i32_tensor(&vec![5i32; b], &[8, cfg.max_seq])?;
-        let mask = f32_tensor(&vec![1f32; b], &[8, cfg.max_seq])?;
+        let params = pocketllm::runtime::ModelState::from_raw(
+            &roberta_cfg, &roberta_raw)?;
+        let b = roberta_cfg.max_seq * 8;
+        let ids = i32_tensor(&vec![5i32; b], &[8, roberta_cfg.max_seq])?;
+        let mask = f32_tensor(&vec![1f32; b], &[8, roberta_cfg.max_seq])?;
         let labels = i32_tensor(&vec![1i32; 8], &[8])?;
         let seed = pocketllm::runtime::u32_1(7)?;
         let lr = pocketllm::runtime::f32_1(1e-4)?;
@@ -101,18 +183,53 @@ fn main() -> anyhow::Result<()> {
 
     println!("{}", render("L3 hot-path decomposition", &ms));
 
-    // overhead accounting: batch + literal vs full step
+    // overhead accounting: everything outside backend execution.
+    // old path = batch literals + the O(params) clone-in/scatter-out;
+    // in-place path = batch literals only.
     let find = |n: &str| {
         ms.iter().find(|m| m.name.starts_with(n)).unwrap().stats.mean()
     };
-    let overhead = find("batcher.next") + find("literal");
+    let batch_lit = find("batcher.next") + find("literal");
+    let param_traffic = find("param literals clone-in");
+    let overhead_run = batch_lit + param_traffic;
+    let overhead_in_place = batch_lit;
     let step = find("step pocket-roberta mezo");
     println!(
-        "non-execute overhead ≈ {:.3} ms of {:.1} ms/step = {:.2}% \
-         (target < 5%)",
-        overhead * 1e3,
-        step * 1e3,
-        100.0 * overhead / step
+        "non-execute overhead: run() path ≈ {:.3} ms, run_in_place \
+         path ≈ {:.3} ms ({:.1}% reduction) of {:.1} ms/step",
+        overhead_run * 1e3,
+        overhead_in_place * 1e3,
+        100.0 * (1.0 - overhead_in_place / overhead_run),
+        step * 1e3
     );
+    println!(
+        "q4 parallel speedup vs sequential: {:.2}x",
+        find("mezo_step_q4 sequential") / find("mezo_step_q4 parallel")
+    );
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    dump_json(
+        &out,
+        "L3 hot-path decomposition",
+        &ms,
+        &[
+            ("non_execute_overhead_run_path_ms", overhead_run * 1e3),
+            ("non_execute_overhead_in_place_ms",
+             overhead_in_place * 1e3),
+            ("overhead_reduction_pct",
+             100.0 * (1.0 - overhead_in_place / overhead_run)),
+            ("step_via_run_ms",
+             find("mezo_step via run()") * 1e3),
+            ("step_via_run_in_place_ms",
+             find("mezo_step via run_in_place") * 1e3),
+            ("q4_sequential_ms", find("mezo_step_q4 sequential") * 1e3),
+            ("q4_parallel_ms", find("mezo_step_q4 parallel") * 1e3),
+            ("q4_parallel_speedup",
+             find("mezo_step_q4 sequential")
+                 / find("mezo_step_q4 parallel")),
+        ],
+    )?;
+    println!("wrote {out}");
     Ok(())
 }

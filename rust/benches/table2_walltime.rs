@@ -8,7 +8,7 @@
 use pocketllm::optim::OptimizerKind;
 use pocketllm::report;
 use pocketllm::runtime::{Manifest, Runtime};
-use pocketllm::telemetry::bench::{bench, env_u64, render};
+use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
 use pocketllm::tuner::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
@@ -54,5 +54,22 @@ fn main() -> anyhow::Result<()> {
     println!("optimizer ratio @bs8 (adam/mezo): {:.2}x  (paper: ~0.8-1.0x \
               — comparable per-step cost)",
              g("adam", 8) / g("mezo", 8));
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_walltime.json".into());
+    dump_json(
+        &out,
+        "Table 2 — measured per-step wall-clock",
+        &measurements,
+        &[
+            ("mezo_bs8_ms", g("mezo", 8) * 1e3),
+            ("mezo_bs64_ms", g("mezo", 64) * 1e3),
+            ("adam_bs8_ms", g("adam", 8) * 1e3),
+            ("adam_bs64_ms", g("adam", 64) * 1e3),
+            ("mezo_batch_scaling", g("mezo", 64) / g("mezo", 8)),
+            ("adam_over_mezo_bs8", g("adam", 8) / g("mezo", 8)),
+        ],
+    )?;
+    println!("wrote {out}");
     Ok(())
 }

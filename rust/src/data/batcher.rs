@@ -44,6 +44,22 @@ pub struct Batcher<'a> {
     epoch: u64,
 }
 
+/// A resumable snapshot of a [`Batcher`]'s position in its stream.
+///
+/// The batcher is deterministic under (data, seed), so a session can
+/// cap its batch cache at a fixed window and still regenerate any
+/// batch: resume from the last snapshot for the sequential case (O(1)
+/// per step), or replay from step 0 on a cold miss.  This is what
+/// bounds the per-session memory of million-step runs (ROADMAP
+/// "Batcher scalability").
+#[derive(Debug, Clone)]
+pub struct BatcherState {
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    epoch: u64,
+}
+
 impl<'a> Batcher<'a> {
     pub fn new(
         bpe: &'a Bpe,
@@ -74,6 +90,25 @@ impl<'a> Batcher<'a> {
 
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Snapshot the stream position (see [`BatcherState`]).
+    pub fn state(&self) -> BatcherState {
+        BatcherState {
+            order: self.order.clone(),
+            cursor: self.cursor,
+            rng: self.rng.clone(),
+            epoch: self.epoch,
+        }
+    }
+
+    /// Resume from a [`state`](Batcher::state) snapshot taken on a
+    /// batcher with the same (data, seed, geometry).
+    pub fn restore(&mut self, st: &BatcherState) {
+        self.order = st.order.clone();
+        self.cursor = st.cursor;
+        self.rng = st.rng.clone();
+        self.epoch = st.epoch;
     }
 
     /// Encode one sample into a fixed-length row.
@@ -197,6 +232,28 @@ mod tests {
         let batch = b.next();
         assert_eq!(batch.ids.len(), 8);
         assert!(batch.mask.iter().all(|&m| m == 1.0)); // fully packed
+    }
+
+    #[test]
+    fn snapshot_resume_continues_the_exact_stream() {
+        let (bpe, data) = setup();
+        // reference: 10 consecutive batches from one batcher
+        let mut reference = Batcher::new(&bpe, &data.train, 4, 16, false,
+                                         512, 9);
+        let want: Vec<Batch> = (0..10).map(|_| reference.next()).collect();
+        // snapshot after 6, resume in a fresh batcher, take the tail
+        let mut a = Batcher::new(&bpe, &data.train, 4, 16, false, 512, 9);
+        for _ in 0..6 {
+            a.next();
+        }
+        let st = a.state();
+        let mut b = Batcher::new(&bpe, &data.train, 4, 16, false, 512, 9);
+        b.restore(&st);
+        for w in &want[6..] {
+            let got = b.next();
+            assert_eq!(got.ids, w.ids);
+            assert_eq!(got.labels, w.labels);
+        }
     }
 
     #[test]

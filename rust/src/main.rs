@@ -212,6 +212,9 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         println!("metrics -> {path}");
     }
     if let Some(dir) = args.flag("checkpoint") {
+        // materialize the resident ExecState tensors — the checkpoint
+        // boundary is the only place the hot params become Literals
+        let params = session.params()?;
         Checkpoint::save(
             dir,
             model,
@@ -219,7 +222,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
             session.step,
             args.get_u64("seed", 42)?,
             last,
-            &session.params,
+            &params,
             None,
         )?;
         println!("checkpoint -> {dir}");
@@ -238,7 +241,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .build()?;
     if let Some(dir) = args.flag("checkpoint") {
         let ck = Checkpoint::open(dir)?;
-        session.params = ck.load_params(&session.cfg)?;
+        let params = ck.load_params(&session.cfg)?;
+        session.load_params(&params)?;
         println!("loaded checkpoint @ step {}", ck.step);
     }
     let loss = session.eval_loss()?;

@@ -1,15 +1,16 @@
-//! Adam driver: the derivative-based comparator's host-side state.
+//! Adam driver: the derivative-based comparator's host-side clock.
 //!
-//! Carries the two parameter-sized moment tensors (m, v) between steps —
-//! exactly the memory the paper's Table 1 charges Adam for.  The
-//! adam_step artifact consumes and returns them alongside the params.
+//! The two parameter-sized moment tensors (m, v) — exactly the memory
+//! the paper's Table 1 charges Adam for — live in the session's
+//! `runtime::ExecState` (created via `ExecState::with_adam`), where the
+//! adam_step program mutates them in place alongside the params.  The
+//! driver itself carries only the schedule and the step counter, and
+//! produces the scalar literals of the adam_step calling convention.
 
 use anyhow::Result;
 
 use super::schedule::Schedule;
 use crate::runtime::literal::{f32_1, Literal};
-use crate::runtime::manifest::ConfigInfo;
-use crate::runtime::state::ModelState;
 
 #[derive(Debug, Clone)]
 pub struct AdamConfig {
@@ -22,24 +23,19 @@ impl Default for AdamConfig {
     }
 }
 
-/// Live Adam driver: step counter + m/v state tensors.
+/// Live Adam driver: schedule + step counter (moments live in the
+/// session's ExecState).
+#[derive(Debug, Clone)]
 pub struct AdamDriver {
     pub cfg: AdamConfig,
     /// 1-based inside the artifact (bias correction); `step` counts
     /// completed steps.
     pub step: u64,
-    pub m: ModelState,
-    pub v: ModelState,
 }
 
 impl AdamDriver {
-    pub fn new(cfg: AdamConfig, model_cfg: &ConfigInfo) -> Result<Self> {
-        Ok(AdamDriver {
-            cfg,
-            step: 0,
-            m: ModelState::zeros_like(model_cfg)?,
-            v: ModelState::zeros_like(model_cfg)?,
-        })
+    pub fn new(cfg: AdamConfig) -> Self {
+        AdamDriver { cfg, step: 0 }
     }
 
     pub fn current_lr(&self) -> f64 {
@@ -54,17 +50,6 @@ impl AdamDriver {
         ])
     }
 
-    /// Consume the artifact's returned m/v tensors.
-    pub fn replace_state(
-        &mut self,
-        m: Vec<Literal>,
-        v: Vec<Literal>,
-    ) -> Result<()> {
-        self.m.replace(m)?;
-        self.v.replace(v)?;
-        Ok(())
-    }
-
     pub fn advance(&mut self) {
         self.step += 1;
     }
@@ -72,50 +57,26 @@ impl AdamDriver {
     /// Parameter-sized tensor sets carried beyond the params themselves.
     pub const EXTRA_PARAM_SETS: usize = 2;
 
-    /// Checkpoint cost of the optimizer state in bytes.
-    pub fn state_bytes(&self) -> u64 {
-        self.m.checkpoint_bytes() + self.v.checkpoint_bytes()
+    /// Checkpoint cost of the optimizer state in bytes for a model of
+    /// `n_params` parameters (m + v at f32).
+    pub fn state_bytes(n_params: usize) -> u64 {
+        (Self::EXTRA_PARAM_SETS * n_params * 4) as u64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::ParamSpecInfo;
-
-    fn tiny_cfg() -> ConfigInfo {
-        ConfigInfo {
-            name: "t".into(),
-            kind: "encoder".into(),
-            vocab: 4,
-            d_model: 2,
-            n_layers: 1,
-            n_heads: 1,
-            d_ff: 4,
-            max_seq: 4,
-            n_classes: 2,
-            use_pallas: false,
-            n_params: 6,
-            params: vec![ParamSpecInfo {
-                name: "w".into(),
-                shape: vec![2, 3],
-                offset: 0,
-            }],
-        }
-    }
 
     #[test]
-    fn init_state_is_zero_and_sized() {
-        let d = AdamDriver::new(AdamConfig::default(), &tiny_cfg()).unwrap();
-        assert_eq!(d.m.l2_norm().unwrap(), 0.0);
-        assert_eq!(d.v.l2_norm().unwrap(), 0.0);
-        assert_eq!(d.state_bytes(), 2 * 6 * 4);
+    fn state_cost_is_two_param_sets() {
         assert_eq!(AdamDriver::EXTRA_PARAM_SETS, 2);
+        assert_eq!(AdamDriver::state_bytes(6), 2 * 6 * 4);
     }
 
     #[test]
     fn t_is_one_based() {
-        let mut d = AdamDriver::new(AdamConfig::default(), &tiny_cfg()).unwrap();
+        let mut d = AdamDriver::new(AdamConfig::default());
         let [t, _lr] = d.scalar_inputs().unwrap();
         assert_eq!(t.f32_scalar().unwrap(), 1.0);
         d.advance();

@@ -6,8 +6,9 @@
 //! * [`mezo`] — the seed schedule (the entire "optimizer state" of MeZO
 //!   is a `(master_seed, step)` pair!), eps/lr handling, and the
 //!   projected-gradient bookkeeping,
-//! * [`adam`] — the m/v state tensors and the bias-correction step
-//!   counter,
+//! * [`adam`] — the bias-correction step counter and scalar plumbing
+//!   (the m/v moment tensors live in the session's
+//!   `runtime::ExecState`, updated in place by the step program),
 //! * [`schedule`] — learning-rate schedules shared by both.
 
 pub mod adam;

@@ -12,13 +12,27 @@
 //!   text through the `xla` crate's PJRT CPU client, the original
 //!   seed-repo path.
 //!
+//! Executables expose two calling conventions:
+//!
+//! * [`Executable::run`] — pure literal-in/literal-out; every parameter
+//!   crosses the boundary as a fresh host tensor both ways.
+//! * [`Executable::run_in_place`] — XLA-style input/output aliasing
+//!   (buffer donation): the parameter and optimizer-moment tensors live
+//!   in a caller-owned [`ExecState`] that the program mutates directly,
+//!   and only the non-donated inputs (batch tensors + scalars) are
+//!   passed as literals.  The default implementation bridges onto
+//!   `run()` (clone in, scatter out), so literal-only backends like
+//!   PJRT keep working unchanged; the native backend overrides it with
+//!   a true zero-copy path.
+//!
 //! Everything above this trait (optimizers, tuner, coordinator, benches)
 //! is backend-agnostic: it sees only [`Literal`]s and `ProgramSpec`s.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::literal::Literal;
 use super::manifest::{Manifest, ProgramSpec};
+use super::state::ExecState;
 
 /// A compiled, ready-to-run step program (one (config, kind, batch)).
 pub trait Executable: Send + Sync {
@@ -26,6 +40,55 @@ pub trait Executable: Send + Sync {
     /// the output vector follows `spec.outputs`.  Arity is checked by
     /// the [`Program`](super::Program) wrapper, not here.
     fn run(&self, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+
+    /// Execute with donated state: the tensors in `state` (params, then
+    /// Adam m/v when present) stand in for the leading `spec.inputs`
+    /// and are updated in place; `inputs` carries only the remaining
+    /// (batch + scalar) literals, in spec order.  Returns the step's
+    /// scalar loss — only programs whose final output is that scalar
+    /// support this path.
+    ///
+    /// Aliasing contract: during the call the donated tensors belong to
+    /// the program (the caller must not read them); after it returns
+    /// they hold the post-step values.  The default implementation
+    /// routes through [`run`](Executable::run) — materialize donated
+    /// literals, execute, scatter the outputs back — which preserves
+    /// exact step semantics at the cost of the copies; backends
+    /// override it to make those copies disappear.
+    fn run_in_place(
+        &self,
+        state: &mut ExecState,
+        inputs: &[&Literal],
+    ) -> Result<f32> {
+        bridge_via_run(&mut |full| self.run(full), state, inputs)
+    }
+}
+
+/// The literal-path bridge behind the default
+/// [`Executable::run_in_place`]: materialize the donated tensors, run
+/// the literal convention, pop the loss, scatter the remaining outputs
+/// back into the state.  `Program::execute_in_place_via_run` calls this
+/// same body, so the compat path and the default impl can never
+/// diverge.
+pub fn bridge_via_run(
+    run: &mut dyn FnMut(&[&Literal]) -> Result<Vec<Literal>>,
+    state: &mut ExecState,
+    inputs: &[&Literal],
+) -> Result<f32> {
+    let donated = state.donated_literals()?;
+    let mut full: Vec<&Literal> =
+        Vec::with_capacity(donated.len() + inputs.len());
+    full.extend(donated.iter());
+    full.extend(inputs.iter().copied());
+    let mut outs = run(&full)?;
+    let loss = outs
+        .pop()
+        .context("step program returned no outputs")?
+        .f32_scalar()?;
+    if !outs.is_empty() {
+        state.absorb(outs)?;
+    }
+    Ok(loss)
 }
 
 /// An execution engine bound to one artifact directory / manifest.

@@ -107,6 +107,16 @@ impl Literal {
         Ok(self.f32_slice()?.to_vec())
     }
 
+    /// Consume the literal, moving its f32 storage out without a copy
+    /// (the `ExecState::absorb` write-back path).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        let dt = self.dtype();
+        match self.data {
+            LiteralData::F32(v) => Ok(v),
+            _ => bail!("expected f32 literal, got {:?}", dt),
+        }
+    }
+
     /// First element as f32 (works for shape-() and shape-(1,)).
     pub fn f32_scalar(&self) -> Result<f32> {
         match self.f32_slice()?.first() {

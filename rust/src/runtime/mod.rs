@@ -28,7 +28,7 @@ pub use backend::{Backend, Executable};
 pub use literal::{f32_1, f32_tensor, i32_tensor, u32_1, Literal};
 pub use manifest::{ConfigInfo, Dtype, Manifest, ParamSpecInfo, ProgramSpec,
                    TensorSpec};
-pub use state::ModelState;
+pub use state::{ExecState, ModelState};
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -66,6 +66,71 @@ impl Program {
             );
         }
         Ok(outs)
+    }
+
+    /// Arity/shape gate shared by the two in-place entry points: the
+    /// donated tensors in `state` plus `inputs` must cover exactly
+    /// `spec.inputs`, and the program's final output must be the scalar
+    /// loss (so `run_in_place` has something to return).
+    fn check_in_place(
+        &self,
+        state: &ExecState,
+        inputs: &[&Literal],
+    ) -> Result<()> {
+        if state.tensor_count() + inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {}/{} expects {} inputs, got {} donated + {} \
+                 literals",
+                self.spec.config,
+                self.spec.kind,
+                self.spec.inputs.len(),
+                state.tensor_count(),
+                inputs.len()
+            );
+        }
+        let last = self
+            .spec
+            .outputs
+            .last()
+            .ok_or_else(|| anyhow!("program {} has no outputs",
+                                   self.spec.file))?;
+        if last.elements() != 1 {
+            bail!(
+                "program {}/{} has no scalar loss output; use execute()",
+                self.spec.config,
+                self.spec.kind
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute through the buffer-donation path: `state` holds the
+    /// donated parameter (and Adam m/v) tensors, mutated in place;
+    /// `inputs` holds the remaining batch/scalar literals in spec
+    /// order.  Returns the step's scalar loss.
+    pub fn execute_in_place(
+        &self,
+        state: &mut ExecState,
+        inputs: &[&Literal],
+    ) -> Result<f32> {
+        self.check_in_place(state, inputs)?;
+        self.exe.run_in_place(state, inputs)
+    }
+
+    /// Same contract as [`execute_in_place`](Program::execute_in_place)
+    /// but forced through the literal `run()` path (materialize donated
+    /// literals, execute, scatter outputs back).  This is the
+    /// every-backend fallback made callable directly so tests and
+    /// benches can pin that the two paths produce bit-identical
+    /// trajectories — and measure exactly what the donation path saves.
+    pub fn execute_in_place_via_run(
+        &self,
+        state: &mut ExecState,
+        inputs: &[&Literal],
+    ) -> Result<f32> {
+        self.check_in_place(state, inputs)?;
+        backend::bridge_via_run(&mut |full| self.exe.run(full), state,
+                                inputs)
     }
 }
 

@@ -4,11 +4,20 @@
 //! matmuls use the i-k-j order (unit-stride writes, no horizontal
 //! reductions) and dot products keep 8 independent accumulators.  Large
 //! matmuls split output rows across a `std::thread::scope` — results
-//! stay bit-deterministic because each output row is always reduced in
-//! the same sequential order regardless of the thread count.
+//! stay bit-deterministic because each output element is always reduced
+//! in the same sequential order regardless of the thread count.
+//!
+//! Every kernel comes in two forms: an allocating wrapper (`matmul`,
+//! `matmul_bias`, ...) and an `_into` variant that writes a
+//! caller-provided buffer — the form the scratch-arena forward pass
+//! ([`super::model::Scratch`]) uses so steady-state steps allocate
+//! nothing.  The `_into` contract per kernel: `matmul_into` /
+//! `matmul_at_into` ACCUMULATE (the buffer must arrive zeroed);
+//! `matmul_bias_into` / `matmul_bt_into` overwrite every element.
 
-/// Worker threads for large matmuls (cached after first query).
-fn n_threads() -> usize {
+/// Worker threads for large kernels and the k-query SPSA pool (cached
+/// after first query).
+pub fn n_threads() -> usize {
     use std::sync::atomic::{AtomicUsize, Ordering};
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let v = CACHED.load(Ordering::Relaxed);
@@ -27,7 +36,7 @@ fn n_threads() -> usize {
 /// Flop threshold below which threading costs more than it saves.
 const PAR_FLOPS: usize = 1 << 21;
 
-/// Serial i-k-j matmul over a row range: out[r, :] = a[r, :] @ b.
+/// Serial i-k-j matmul over a row range: out[r, :] += a[r, :] @ b.
 fn mm_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     let rows = out.len() / n;
     for i in 0..rows {
@@ -42,17 +51,23 @@ fn mm_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
     }
 }
 
-/// `a [m,k] @ b [k,n] -> [m,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
-    -> Vec<f32>
-{
+/// `out += a [m,k] @ b [k,n]`; `out` must arrive zeroed for a plain
+/// product.  Row-parallel above [`PAR_FLOPS`], bit-deterministic.
+pub fn matmul_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
     let threads = n_threads();
     if threads <= 1 || m < 2 || m * k * n < PAR_FLOPS {
-        mm_rows(a, b, k, n, &mut out);
-        return out;
+        mm_rows(a, b, k, n, out);
+        return;
     }
     let rows_per = (m + threads - 1) / threads;
     std::thread::scope(|sc| {
@@ -62,7 +77,46 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
             sc.spawn(move || mm_rows(a, b, k, n, ochunk));
         }
     });
+}
+
+/// `a [m,k] @ b [k,n] -> [m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+    -> Vec<f32>
+{
+    let mut out = vec![0f32; m * n];
+    matmul_into(a, b, m, k, n, &mut out);
     out
+}
+
+/// `out = a [m,k] @ b [k,n] + bias [n]` — overwrites `out` (each row is
+/// seeded with the bias, then accumulated over).
+pub fn matmul_bias_into(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for row in out.chunks_mut(n) {
+        row.copy_from_slice(bias);
+    }
+    let threads = n_threads();
+    if threads <= 1 || m < 2 || m * k * n < PAR_FLOPS {
+        mm_rows(a, b, k, n, out);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|sc| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let lo = ci * rows_per;
+            let a = &a[lo * k..lo * k + (ochunk.len() / n) * k];
+            sc.spawn(move || mm_rows(a, b, k, n, ochunk));
+        }
+    });
 }
 
 /// `a [m,k] @ b [k,n] + bias [n] -> [m,n]`.
@@ -74,32 +128,71 @@ pub fn matmul_bias(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
-    let mut out = matmul(a, b, m, k, n);
-    for row in out.chunks_mut(n) {
-        for (o, &bv) in row.iter_mut().zip(bias) {
-            *o += bv;
+    let mut out = vec![0f32; m * n];
+    matmul_bias_into(a, b, bias, m, k, n, &mut out);
+    out
+}
+
+/// Serial a^T@b over an output-row (i.e. k-index) range starting at
+/// `k_lo`.  Accumulation over `mm` runs in increasing order for every
+/// output element, independent of how the k range is split.
+fn mm_at_cols(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    k_lo: usize,
+    out: &mut [f32],
+) {
+    for mm in 0..m {
+        let arow = &a[mm * k..(mm + 1) * k];
+        let brow = &b[mm * n..(mm + 1) * n];
+        for (ki, orow) in out.chunks_exact_mut(n).enumerate() {
+            let av = arow[k_lo + ki];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
         }
     }
-    out
+}
+
+/// `out += a^T [k,m] @ b [m,n]` (a stored as [m,k]; dW = x^T dy); `out`
+/// must arrive zeroed for a plain product.  Parallel across output-row
+/// (k-index) chunks above [`PAR_FLOPS`]; the per-element reduction over
+/// `m` stays in sequential order, so results are bit-identical to the
+/// serial path.
+pub fn matmul_at_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    let threads = n_threads();
+    if threads <= 1 || k < 2 || m * k * n < PAR_FLOPS {
+        mm_at_cols(a, b, m, k, n, 0, out);
+        return;
+    }
+    let rows_per = (k + threads - 1) / threads;
+    std::thread::scope(|sc| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let k_lo = ci * rows_per;
+            sc.spawn(move || mm_at_cols(a, b, m, k, n, k_lo, ochunk));
+        }
+    });
 }
 
 /// `a^T [k,m] @ b [m,n] -> [k,n]`  (a stored as [m,k]; dW = x^T dy).
 pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     -> Vec<f32>
 {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
     let mut out = vec![0f32; k * n];
-    for mm in 0..m {
-        let arow = &a[mm * k..(mm + 1) * k];
-        let brow = &b[mm * n..(mm + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    matmul_at_into(a, b, m, k, n, &mut out);
     out
 }
 
@@ -127,7 +220,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// Serial row range of `a @ b^T`.
+/// Serial row range of `a @ b^T` (overwrites).
 fn mm_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
     let rows = out.len() / k;
     for i in 0..rows {
@@ -139,17 +232,22 @@ fn mm_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
     }
 }
 
-/// `a [m,n] @ b [k,n]^T -> [m,k]`  (dx = dy @ W^T; decoder tied logits).
-pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize)
-    -> Vec<f32>
-{
+/// `out = a [m,n] @ b [k,n]^T` — overwrites every element of `out`.
+pub fn matmul_bt_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0f32; m * k];
+    debug_assert_eq!(out.len(), m * k);
     let threads = n_threads();
     if threads <= 1 || m < 2 || m * k * n < PAR_FLOPS {
-        mm_bt_rows(a, b, n, k, &mut out);
-        return out;
+        mm_bt_rows(a, b, n, k, out);
+        return;
     }
     let rows_per = (m + threads - 1) / threads;
     std::thread::scope(|sc| {
@@ -159,7 +257,26 @@ pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize)
             sc.spawn(move || mm_bt_rows(a, b, n, k, ochunk));
         }
     });
+}
+
+/// `a [m,n] @ b [k,n]^T -> [m,k]`  (dx = dy @ W^T; decoder tied logits).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize)
+    -> Vec<f32>
+{
+    let mut out = vec![0f32; m * k];
+    matmul_bt_into(a, b, m, n, k, &mut out);
     out
+}
+
+/// `out[j] += sum_rows a[., j]` — column sums of an [rows, n] matrix,
+/// accumulated row-by-row in order (the bias-gradient kernel).
+pub fn col_sums_into(a: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    for row in a.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
 }
 
 /// tanh-approximation GELU (matches the kernels exactly).
@@ -229,6 +346,18 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matmul_at_matches_serial() {
+        // dW = x^T dy at a size that crosses the PAR_FLOPS threshold
+        let (m, k, n) = (96, 128, 200);
+        let a = randv(m * k, 10);
+        let b = randv(m * n, 11);
+        let got = matmul_at(&a, &b, m, k, n);
+        let mut serial = vec![0f32; k * n];
+        mm_at_cols(&a, &b, m, k, n, 0, &mut serial);
+        assert_eq!(got, serial, "threading must not change dW results");
+    }
+
+    #[test]
     fn transposed_variants() {
         let (m, k, n) = (6, 4, 5);
         let a = randv(m * k, 5);
@@ -262,6 +391,37 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let (m, k, n) = (6, 4, 5);
+        let a = randv(m * k, 12);
+        let b = randv(k * n, 13);
+        let bias = randv(n, 14);
+        let mut out = vec![0f32; m * n];
+        matmul_into(&a, &b, m, k, n, &mut out);
+        assert_eq!(out, matmul(&a, &b, m, k, n));
+        // bias form overwrites stale contents
+        let mut out = vec![7f32; m * n];
+        matmul_bias_into(&a, &b, &bias, m, k, n, &mut out);
+        assert_eq!(out, matmul_bias(&a, &b, &bias, m, k, n));
+        let c = randv(n * k, 15);
+        let mut out = vec![9f32; m * n];
+        matmul_bt_into(&a, &c, m, k, n, &mut out);
+        assert_eq!(out, matmul_bt(&a, &c, m, k, n));
+        let b2 = randv(m * n, 16);
+        let mut out = vec![0f32; k * n];
+        matmul_at_into(&a, &b2, m, k, n, &mut out);
+        assert_eq!(out, matmul_at(&a, &b2, m, k, n));
+    }
+
+    #[test]
+    fn col_sums_accumulate() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0f32; 2];
+        col_sums_into(&a, 2, &mut out);
+        assert_eq!(out, vec![9.0, 12.0]);
     }
 
     #[test]

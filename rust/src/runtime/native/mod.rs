@@ -8,19 +8,37 @@
 //! default backend: hermetic (no XLA, no artifacts, no Python), which
 //! is what makes `cargo test` self-contained on any machine.
 //!
+//! Two execution paths exist per program:
+//! * [`Executable::run`] — the literal-in/literal-out compatibility
+//!   path (clones every parameter tensor in and out; what PJRT speaks).
+//! * [`Executable::run_in_place`] — the buffer-donation hot path: the
+//!   parameter (and Adam m/v) tensors live in a caller-owned
+//!   [`ExecState`] and are mutated in place, and activations come from
+//!   the state's [`Scratch`](model::Scratch) arena, so a steady-state
+//!   step performs zero parameter copies and zero heap allocation.
+//!
+//! `mezo_step_q{k}` (k-query SPSA) runs its k independent two-point
+//! queries on a `std::thread::scope` worker pool: every query is
+//! evaluated at the exact base parameters from cloned-once per-worker
+//! shadows, and the projected gradients are reduced in fixed query
+//! order — so the result is bit-identical for ANY worker count (pinned
+//! against [`mezo_step_multi_reference`] in the tests).
+//!
 //! Submodules: [`rng`] (counter RNG), [`math`] (dense kernels),
-//! [`model`] (forward/backward), [`params`] (canonical layout + init).
+//! [`model`] (forward/backward + scratch arena), [`params`] (canonical
+//! layout + init).
 
 pub mod math;
 pub mod model;
 pub mod params;
 pub mod rng;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::backend::{Backend, Executable};
 use super::literal::Literal;
 use super::manifest::{ConfigInfo, Manifest, ProgramSpec};
+use super::state::ExecState;
 
 /// The native CPU backend (stateless; all state lives per-program).
 #[derive(Debug, Default)]
@@ -104,6 +122,175 @@ pub fn perturb_all(
     }
 }
 
+/// In-place two-point probe: perturbs `w` by +eps z then -2 eps z and
+/// returns the two losses, leaving `w` at (w - eps z); the caller's
+/// restore/update sweep follows (fused/naive single-query paths).
+#[allow(clippy::too_many_arguments)]
+fn two_point_inplace(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    sq: u32,
+    eps: f32,
+    sc: &mut model::Scratch,
+) -> (f32, f32) {
+    perturb_all(cfg, w, sq, eps);
+    let lplus = model::loss(cfg, &*w, ids, mask, labels, bsz, s, sc);
+    perturb_all(cfg, w, sq, -2.0 * eps);
+    let lminus = model::loss(cfg, &*w, ids, mask, labels, bsz, s, sc);
+    (lplus, lminus)
+}
+
+/// Shadow two-point probe for the k-query path: writes `base ± eps z`
+/// into `shadow` (never touching `base`) and returns the two losses.
+/// Both sides are computed FROM the base point, so the result depends
+/// only on `(base, sq)` — not on which worker or in which order the
+/// query ran.
+#[allow(clippy::too_many_arguments)]
+fn two_point_at(
+    cfg: &ConfigInfo,
+    base: &[Vec<f32>],
+    shadow: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    sq: u32,
+    eps: f32,
+    sc: &mut model::Scratch,
+) -> (f32, f32) {
+    for (spec, (src, dst)) in
+        cfg.params.iter().zip(base.iter().zip(shadow.iter_mut()))
+    {
+        rng::perturb_from(src, dst, sq, spec.offset, eps);
+    }
+    let lplus = model::loss(cfg, &*shadow, ids, mask, labels, bsz, s, sc);
+    for (spec, (src, dst)) in
+        cfg.params.iter().zip(base.iter().zip(shadow.iter_mut()))
+    {
+        rng::perturb_from(src, dst, sq, spec.offset, -eps);
+    }
+    let lminus = model::loss(cfg, &*shadow, ids, mask, labels, bsz, s, sc);
+    (lplus, lminus)
+}
+
+/// Evaluate the k two-point query pairs at `base`, fanned out over at
+/// most `workers` scoped threads.  Each worker owns one cloned-once
+/// parameter shadow and a scratch arena (the caller's resident `sc`
+/// when single-worker; private per-thread arenas otherwise — pooling
+/// those across steps is a ROADMAP follow-up).  Query q's pair lands
+/// at `pairs[q]` regardless of scheduling, which is what makes the
+/// reduction order (and therefore the step) deterministic.
+#[allow(clippy::too_many_arguments)]
+fn spsa_pairs(
+    cfg: &ConfigInfo,
+    base: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    q_seeds: &[u32],
+    eps: f32,
+    workers: usize,
+    sc: &mut model::Scratch,
+) -> Vec<(f32, f32)> {
+    let k = q_seeds.len();
+    let mut pairs = vec![(0f32, 0f32); k];
+    let workers = workers.max(1).min(k.max(1));
+    if workers <= 1 {
+        // single-worker path runs on the caller's resident arena, so
+        // steady-state q-step allocation stays at the one shadow clone
+        let mut shadow: Vec<Vec<f32>> = base.to_vec();
+        for (q, pair) in pairs.iter_mut().enumerate() {
+            *pair = two_point_at(cfg, base, &mut shadow, ids, mask,
+                                 labels, bsz, s, q_seeds[q], eps, sc);
+        }
+        return pairs;
+    }
+    let chunk = (k + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        for (ci, out) in pairs.chunks_mut(chunk).enumerate() {
+            let lo = ci * chunk;
+            scope.spawn(move || {
+                let mut shadow: Vec<Vec<f32>> = base.to_vec();
+                let mut sc = model::Scratch::new();
+                for (j, pair) in out.iter_mut().enumerate() {
+                    *pair = two_point_at(cfg, base, &mut shadow, ids,
+                                         mask, labels, bsz, s,
+                                         q_seeds[lo + j], eps, &mut sc);
+                }
+            });
+        }
+    });
+    pairs
+}
+
+/// The k-query step body shared by the production (parallel) path and
+/// the sequential reference: probe pairs at the base point, then reduce
+/// and apply the k update sweeps in fixed query order.
+#[allow(clippy::too_many_arguments)]
+fn mezo_multi_with_workers(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    seed: u32,
+    lr: f32,
+    eps: f32,
+    k: usize,
+    workers: usize,
+    sc: &mut model::Scratch,
+) -> f32 {
+    let q_seeds: Vec<u32> =
+        (0..k).map(|q| rng::hash_u32(seed, q as u32 + 1)).collect();
+    let pairs = spsa_pairs(cfg, &*w, ids, mask, labels, bsz, s,
+                           &q_seeds, eps, workers, sc);
+    let mut gs = Vec::with_capacity(k);
+    let mut losses = 0f32;
+    for &(lplus, lminus) in &pairs {
+        gs.push((lplus - lminus) / (2.0 * eps));
+        losses += 0.5 * (lplus + lminus);
+    }
+    let scale = lr / k as f32;
+    for (&sq, &g) in q_seeds.iter().zip(&gs) {
+        perturb_all(cfg, w, sq, -scale * g);
+    }
+    losses / k as f32
+}
+
+/// Sequential oracle for the k-query step: identical semantics to the
+/// parallel `mezo_step_q{k}` path with the worker pool pinned to one
+/// thread.  Exists so tests/benches can assert (and measure) that
+/// parallelism changes wall-time and nothing else.
+#[allow(clippy::too_many_arguments)]
+pub fn mezo_step_multi_reference(
+    cfg: &ConfigInfo,
+    w: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    seed: u32,
+    lr: f32,
+    eps: f32,
+    k: usize,
+) -> Result<f32> {
+    ensure!(k >= 1, "k-query step needs k >= 1");
+    Ok(mezo_multi_with_workers(cfg, w, ids, mask, labels, bsz, s, seed,
+                               lr, eps, k, 1,
+                               &mut model::Scratch::new()))
+}
+
 /// One fused MeZO-SGD step on `w` in place; returns the reported loss
 /// (mean of the two perturbed evaluations).  Mirrors
 /// `steps.mezo_step` / `mezo_step_naive` / `mezo_step_multi`.
@@ -120,47 +307,34 @@ pub fn mezo_step(
     lr: f32,
     eps: f32,
     kind: ProgramKind,
+    sc: &mut model::Scratch,
 ) -> Result<f32> {
-    let two_point = |w: &mut [Vec<f32>], sq: u32| -> (f32, f32) {
-        perturb_all(cfg, w, sq, eps);
-        let lplus = model::loss(cfg, w, ids, mask, labels, bsz, s);
-        perturb_all(cfg, w, sq, -2.0 * eps);
-        let lminus = model::loss(cfg, w, ids, mask, labels, bsz, s);
-        (lplus, lminus)
-    };
     match kind {
         ProgramKind::Mezo => {
-            let (lplus, lminus) = two_point(w, seed);
+            let (lplus, lminus) = two_point_inplace(cfg, w, ids, mask,
+                                                    labels, bsz, s,
+                                                    seed, eps, sc);
             let g = (lplus - lminus) / (2.0 * eps);
             // restore (+eps z) and update (-lr g z) in ONE sweep
             perturb_all(cfg, w, seed, eps - lr * g);
             Ok(0.5 * (lplus + lminus))
         }
         ProgramKind::MezoNaive => {
-            let (lplus, lminus) = two_point(w, seed);
+            let (lplus, lminus) = two_point_inplace(cfg, w, ids, mask,
+                                                    labels, bsz, s,
+                                                    seed, eps, sc);
             let g = (lplus - lminus) / (2.0 * eps);
             perturb_all(cfg, w, seed, eps); // restore
             perturb_all(cfg, w, seed, -lr * g); // update
             Ok(0.5 * (lplus + lminus))
         }
         ProgramKind::MezoMulti(k) => {
-            // k independent two-point estimates at the SAME point, then
-            // k averaged update sweeps (steps.mezo_step_multi)
-            let q_seeds: Vec<u32> =
-                (0..k).map(|q| rng::hash_u32(seed, q as u32 + 1)).collect();
-            let mut gs = Vec::with_capacity(k);
-            let mut losses = 0f32;
-            for &sq in &q_seeds {
-                let (lplus, lminus) = two_point(w, sq);
-                gs.push((lplus - lminus) / (2.0 * eps));
-                losses += 0.5 * (lplus + lminus);
-                perturb_all(cfg, w, sq, eps); // restore
-            }
-            let scale = lr / k as f32;
-            for (&sq, &g) in q_seeds.iter().zip(&gs) {
-                perturb_all(cfg, w, sq, -scale * g);
-            }
-            Ok(losses / k as f32)
+            // k independent two-point estimates at the SAME point (the
+            // paper's §6.3 data-parallel queries), then k averaged
+            // update sweeps in fixed order
+            Ok(mezo_multi_with_workers(cfg, w, ids, mask, labels, bsz,
+                                       s, seed, lr, eps, k,
+                                       math::n_threads(), sc))
         }
         other => bail!("mezo_step called with {other:?}"),
     }
@@ -182,12 +356,13 @@ pub fn adam_step(
     s: usize,
     t: f32,
     lr: f32,
+    sc: &mut model::Scratch,
 ) -> Result<f32> {
     const BETA1: f32 = 0.9;
     const BETA2: f32 = 0.999;
     const EPS: f32 = 1e-8;
     let (loss, grads) =
-        model::loss_and_grad(cfg, w, ids, mask, labels, bsz, s);
+        model::loss_and_grad(cfg, &*w, ids, mask, labels, bsz, s, sc);
     let bc1 = 1.0 - BETA1.powf(t);
     let bc2 = 1.0 - BETA2.powf(t);
     for ((wt, mt), (vt, gt)) in w
@@ -205,6 +380,9 @@ pub fn adam_step(
             let vhat = v2 / bc2;
             wt[i] -= lr * mhat / (vhat.sqrt() + EPS);
         }
+    }
+    for g in grads {
+        sc.give(g);
     }
     Ok(loss)
 }
@@ -256,7 +434,8 @@ impl Executable for NativeProgram {
                 let lr = inputs[n + 4].f32_scalar()?;
                 let eps = inputs[n + 5].f32_scalar()?;
                 let loss = mezo_step(cfg, &mut w, ids, mask, labels, b, s,
-                                     seed, lr, eps, self.kind)?;
+                                     seed, lr, eps, self.kind,
+                                     &mut model::Scratch::new())?;
                 let mut outs = param_literals(cfg, w)?;
                 outs.push(Literal::from_f32(vec![loss], vec![])?);
                 Ok(outs)
@@ -272,7 +451,8 @@ impl Executable for NativeProgram {
                 let t = inputs[3 * n + 3].f32_scalar()?;
                 let lr = inputs[3 * n + 4].f32_scalar()?;
                 let loss = adam_step(cfg, &mut w, &mut m, &mut v, ids,
-                                     mask, labels, b, s, t, lr)?;
+                                     mask, labels, b, s, t, lr,
+                                     &mut model::Scratch::new())?;
                 let mut outs = param_literals(cfg, w)?;
                 outs.extend(param_literals(cfg, m)?);
                 outs.extend(param_literals(cfg, v)?);
@@ -284,7 +464,8 @@ impl Executable for NativeProgram {
                 let w = take_f32(inputs, 0, n)?;
                 let ids = inputs[n].i32_slice()?;
                 let mask = inputs[n + 1].f32_slice()?;
-                let lg = model::logits(cfg, &w, ids, mask, b, s);
+                let lg = model::logits(cfg, &w, ids, mask, b, s,
+                                       &mut model::Scratch::new());
                 let shape = if cfg.is_decoder() {
                     vec![b, s, cfg.vocab]
                 } else {
@@ -298,9 +479,80 @@ impl Executable for NativeProgram {
                 let ids = inputs[n].i32_slice()?;
                 let mask = inputs[n + 1].f32_slice()?;
                 let labels = inputs[n + 2].i32_slice()?;
-                let loss = model::loss(cfg, &w, ids, mask, labels, b, s);
+                let loss = model::loss(cfg, &w, ids, mask, labels, b, s,
+                                       &mut model::Scratch::new());
                 Ok(vec![Literal::from_f32(vec![loss], vec![])?])
             }
+        }
+    }
+
+    /// The buffer-donation hot path: parameters (and Adam m/v) are
+    /// mutated inside `state` directly — no clone-in, no clone-out —
+    /// and activations come from `state.scratch`.  `inputs` carries
+    /// only the non-donated tensors, in the order they follow the
+    /// donated block in the manifest calling convention.
+    fn run_in_place(
+        &self,
+        state: &mut ExecState,
+        inputs: &[&Literal],
+    ) -> Result<f32> {
+        let cfg = &self.cfg;
+        ensure!(
+            state.w.len() == cfg.params.len(),
+            "ExecState holds {} param tensors, config {} has {}",
+            state.w.len(),
+            cfg.name,
+            cfg.params.len()
+        );
+        match self.kind {
+            ProgramKind::Mezo
+            | ProgramKind::MezoNaive
+            | ProgramKind::MezoMulti(_) => {
+                ensure!(inputs.len() == 6,
+                        "mezo run_in_place takes (ids, mask, labels, \
+                         seed, lr, eps); got {} inputs", inputs.len());
+                let (b, s) = self.batch_dims(inputs[0])?;
+                let ids = inputs[0].i32_slice()?;
+                let mask = inputs[1].f32_slice()?;
+                let labels = inputs[2].i32_slice()?;
+                let seed = inputs[3].u32_scalar()?;
+                let lr = inputs[4].f32_scalar()?;
+                let eps = inputs[5].f32_scalar()?;
+                let (w, _m, _v, scratch) = state.native_parts();
+                mezo_step(cfg, w, ids, mask, labels, b, s, seed, lr,
+                          eps, self.kind, scratch)
+            }
+            ProgramKind::Adam => {
+                ensure!(inputs.len() == 5,
+                        "adam run_in_place takes (ids, mask, labels, t, \
+                         lr); got {} inputs", inputs.len());
+                ensure!(state.has_adam(),
+                        "adam run_in_place needs ExecState::with_adam \
+                         (m/v tensors)");
+                let (b, s) = self.batch_dims(inputs[0])?;
+                let ids = inputs[0].i32_slice()?;
+                let mask = inputs[1].f32_slice()?;
+                let labels = inputs[2].i32_slice()?;
+                let t = inputs[3].f32_scalar()?;
+                let lr = inputs[4].f32_scalar()?;
+                let (w, m, v, scratch) = state.native_parts();
+                adam_step(cfg, w, m, v, ids, mask, labels, b, s, t, lr,
+                          scratch)
+            }
+            ProgramKind::LossEval => {
+                ensure!(inputs.len() == 3,
+                        "loss_eval run_in_place takes (ids, mask, \
+                         labels); got {} inputs", inputs.len());
+                let (b, s) = self.batch_dims(inputs[0])?;
+                let ids = inputs[0].i32_slice()?;
+                let mask = inputs[1].f32_slice()?;
+                let labels = inputs[2].i32_slice()?;
+                let (w, _m, _v, scratch) = state.native_parts();
+                Ok(model::loss(cfg, w, ids, mask, labels, b, s, scratch))
+            }
+            ProgramKind::Eval => bail!(
+                "eval returns logits, not a scalar loss; use run()"
+            ),
         }
     }
 }
@@ -344,11 +596,13 @@ mod tests {
         let labels = vec![2i32, 0];
         let mut fused = init.clone();
         let lf = mezo_step(&cfg, &mut fused, &ids, &mask, &labels, 2, 6,
-                           99, 1e-2, 1e-3, ProgramKind::Mezo)
+                           99, 1e-2, 1e-3, ProgramKind::Mezo,
+                           &mut model::Scratch::new())
             .unwrap();
         let mut naive = init.clone();
         let ln = mezo_step(&cfg, &mut naive, &ids, &mask, &labels, 2, 6,
-                           99, 1e-2, 1e-3, ProgramKind::MezoNaive)
+                           99, 1e-2, 1e-3, ProgramKind::MezoNaive,
+                           &mut model::Scratch::new())
             .unwrap();
         assert_eq!(lf, ln, "identical loss estimate");
         for (a, b) in fused.iter().zip(&naive) {
@@ -369,14 +623,63 @@ mod tests {
         let labels = vec![0i32, 1];
         let run = || {
             let mut w = params::init_params(&cfg);
+            let mut sc = model::Scratch::new();
             for step in 0..3u32 {
                 mezo_step(&cfg, &mut w, &ids, &mask, &labels, 2, 6,
-                          1000 + step, 1e-3, 1e-3, ProgramKind::Mezo)
+                          1000 + step, 1e-3, 1e-3, ProgramKind::Mezo,
+                          &mut sc)
                     .unwrap();
             }
             w
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn parallel_multi_query_matches_sequential_reference() {
+        // the tentpole determinism pin: the threaded mezo_step_q{k}
+        // path must produce bit-identical parameters AND loss to the
+        // one-worker sequential oracle, for every k
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      3, false);
+        let init = params::init_params(&cfg);
+        let ids = vec![1i32, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask =
+            vec![1f32, 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        for k in [1usize, 2, 4] {
+            let mut par = init.clone();
+            let lp = mezo_step(&cfg, &mut par, &ids, &mask, &labels, 2,
+                               6, 321, 1e-2, 1e-3,
+                               ProgramKind::MezoMulti(k),
+                               &mut model::Scratch::new())
+                .unwrap();
+            let mut seq = init.clone();
+            let ls = mezo_step_multi_reference(&cfg, &mut seq, &ids,
+                                               &mask, &labels, 2, 6,
+                                               321, 1e-2, 1e-3, k)
+                .unwrap();
+            assert_eq!(lp.to_bits(), ls.to_bits(),
+                       "k={k}: loss must be bit-identical");
+            assert_eq!(par, seq, "k={k}: params must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn multi_query_moves_params_and_reports_finite_loss() {
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      3, false);
+        let init = params::init_params(&cfg);
+        let mut w = init.clone();
+        let ids = vec![1i32; 12];
+        let mask = vec![1f32; 12];
+        let labels = vec![0i32, 1];
+        let l = mezo_step(&cfg, &mut w, &ids, &mask, &labels, 2, 6, 9,
+                          1e-2, 1e-3, ProgramKind::MezoMulti(3),
+                          &mut model::Scratch::new())
+            .unwrap();
+        assert!(l.is_finite());
+        assert_ne!(w, init, "the averaged update must move the params");
     }
 
     #[test]
@@ -392,9 +695,10 @@ mod tests {
             vec![1f32, 1., 1., 1., 1., 0., 1., 1., 1., 1., 1., 0.];
         let labels = vec![1i32, 0];
         let mut losses = Vec::new();
+        let mut sc = model::Scratch::new();
         for t in 1..=25 {
             let l = adam_step(&cfg, &mut w, &mut m, &mut v, &ids, &mask,
-                              &labels, 2, 6, t as f32, 5e-3)
+                              &labels, 2, 6, t as f32, 5e-3, &mut sc)
                 .unwrap();
             losses.push(l);
         }

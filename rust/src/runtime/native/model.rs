@@ -13,13 +13,21 @@
 //! Parameters arrive as the manifest's ordered flat tensor list; the
 //! index layout is the canonical one from [`super::params::param_specs`]
 //! and is validated once at program-compile time via [`check_layout`].
+//!
+//! All activation and gradient buffers are drawn from a [`Scratch`]
+//! arena threaded through [`logits`]/[`loss`]/[`loss_and_grad`]: after
+//! the first call through a given arena, subsequent forwards/backwards
+//! of the same geometry run with zero heap allocation (the perf-pass
+//! property `scratch_steady_state_allocates_nothing` pins).  Buffer
+//! provenance never changes arithmetic order, so results are
+//! bit-identical to the historical allocating implementation.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::manifest::ConfigInfo;
 
-use super::math::{dgelu, dot, gelu, matmul, matmul_at, matmul_bias,
-                  matmul_bt};
+use super::math::{col_sums_into, dgelu, dot, gelu, matmul_at_into,
+                  matmul_bias_into, matmul_bt_into, matmul_into};
 use super::params;
 
 const LN_EPS: f32 = 1e-5;
@@ -56,6 +64,79 @@ fn final_ln_g(cfg: &ConfigInfo) -> usize {
 
 fn head_w(cfg: &ConfigInfo) -> usize {
     final_ln_g(cfg) + 2
+}
+
+/// A size-bucketed free list of f32 buffers — the forward/backward
+/// scratch arena.
+///
+/// `take`/`take_raw` hand out a buffer of the requested length, reusing
+/// a previously [`give`](Scratch::give)n one when the length matches;
+/// the step programs' buffer demand is identical every call, so after
+/// one warm-up pass every request hits the pool.  The arena is plain
+/// owned state (`&mut` threads it through the pass), so there is no
+/// synchronization and each session/worker owns its own.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// (buffer length, stack of free buffers of that length).
+    pools: Vec<(usize, Vec<Vec<f32>>)>,
+    misses: usize,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zeroed buffer of `n` elements (for accumulation targets).
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.take_raw(n);
+        v.fill(0.0);
+        v
+    }
+
+    /// A buffer of `n` elements with UNSPECIFIED contents — use only
+    /// when every element is overwritten before being read.
+    pub fn take_raw(&mut self, n: usize) -> Vec<f32> {
+        for (sz, pool) in self.pools.iter_mut() {
+            if *sz == n {
+                if let Some(v) = pool.pop() {
+                    return v;
+                }
+                break;
+            }
+        }
+        self.misses += 1;
+        vec![0f32; n]
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, v: Vec<f32>) {
+        let n = v.len();
+        if n == 0 {
+            return;
+        }
+        for (sz, pool) in self.pools.iter_mut() {
+            if *sz == n {
+                pool.push(v);
+                return;
+            }
+        }
+        self.pools.push((n, vec![v]));
+    }
+
+    /// Requests the pool could not serve (i.e. fresh heap allocations).
+    /// Flat across repeated same-geometry calls == steady state.
+    pub fn miss_count(&self) -> usize {
+        self.misses
+    }
+
+    /// Total f32 elements currently parked in the pool.
+    pub fn pooled_elements(&self) -> usize {
+        self.pools
+            .iter()
+            .map(|(sz, pool)| sz * pool.len())
+            .sum()
+    }
 }
 
 /// Verify that a manifest config follows the canonical parameter layout
@@ -100,13 +181,13 @@ pub fn check_layout(cfg: &ConfigInfo) -> Result<()> {
 }
 
 /// Row-wise LayerNorm; returns (out, xhat, rstd-per-row).
-fn layernorm(x: &[f32], g: &[f32], b: &[f32], d: usize)
+fn layernorm(sc: &mut Scratch, x: &[f32], g: &[f32], b: &[f32], d: usize)
     -> (Vec<f32>, Vec<f32>, Vec<f32>)
 {
     let rows = x.len() / d;
-    let mut out = vec![0f32; x.len()];
-    let mut xhat = vec![0f32; x.len()];
-    let mut rstd = vec![0f32; rows];
+    let mut out = sc.take_raw(x.len());
+    let mut xhat = sc.take_raw(x.len());
+    let mut rstd = sc.take_raw(rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let mut mu = 0f32;
@@ -135,6 +216,7 @@ fn layernorm(x: &[f32], g: &[f32], b: &[f32], d: usize)
 
 /// dx, dgamma, dbeta for [`layernorm`].
 fn layernorm_bwd(
+    sc: &mut Scratch,
     dy: &[f32],
     xhat: &[f32],
     rstd: &[f32],
@@ -142,9 +224,9 @@ fn layernorm_bwd(
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let rows = dy.len() / d;
-    let mut dx = vec![0f32; dy.len()];
-    let mut dg = vec![0f32; d];
-    let mut db = vec![0f32; d];
+    let mut dx = sc.take_raw(dy.len());
+    let mut dg = sc.take(d);
+    let mut db = sc.take(d);
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
         let xhr = &xhat[r * d..(r + 1) * d];
@@ -167,16 +249,6 @@ fn layernorm_bwd(
         }
     }
     (dx, dg, db)
-}
-
-fn col_sums(a: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; n];
-    for row in a.chunks_exact(n) {
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
-        }
-    }
-    out
 }
 
 fn add_into(dst: &mut [f32], src: &[f32]) {
@@ -212,8 +284,9 @@ struct EncCache {
     rstdf: Vec<f32>,
 }
 
-/// Gather one head's rows into a contiguous [S, Dh] buffer.
+/// Gather one head's rows into a contiguous [S, Dh] scratch buffer.
 fn gather_head(
+    sc: &mut Scratch,
     x: &[f32],
     b: usize,
     h: usize,
@@ -221,7 +294,7 @@ fn gather_head(
     d: usize,
     dh: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0f32; s * dh];
+    let mut out = sc.take_raw(s * dh);
     for i in 0..s {
         let src = &x[(b * s + i) * d + h * dh..(b * s + i) * d + (h + 1) * dh];
         out[i * dh..(i + 1) * dh].copy_from_slice(src);
@@ -229,7 +302,7 @@ fn gather_head(
     out
 }
 
-/// Scatter-add a contiguous [S, Dh] head buffer back into [B*S, D].
+/// Scatter a contiguous [S, Dh] head buffer back into [B*S, D].
 fn scatter_head(
     dst: &mut [f32],
     src: &[f32],
@@ -255,6 +328,7 @@ fn encode(
     bsz: usize,
     s: usize,
     keep: bool,
+    sc: &mut Scratch,
 ) -> (Vec<f32>, Option<EncCache>) {
     let d = cfg.d_model;
     let heads = cfg.n_heads;
@@ -267,7 +341,7 @@ fn encode(
     // embeddings
     let tok = &p[EMBED_TOK];
     let pos = &p[EMBED_POS];
-    let mut x = vec![0f32; bs * d];
+    let mut x = sc.take_raw(bs * d);
     for b in 0..bsz {
         for i in 0..s {
             let r = b * s + i;
@@ -285,22 +359,32 @@ fn encode(
     for l in 0..cfg.n_layers {
         // --- attention block (pre-LN) ---
         let (h1, xhat1, rstd1) =
-            layernorm(&x, &p[li(l, LN1_G)], &p[li(l, LN1_B)], d);
-        let q = matmul_bias(&h1, &p[li(l, WQ)], &p[li(l, BQ)], bs, d, d);
-        let k = matmul_bias(&h1, &p[li(l, WK)], &p[li(l, BK)], bs, d, d);
-        let v = matmul_bias(&h1, &p[li(l, WV)], &p[li(l, BV)], bs, d, d);
+            layernorm(sc, &x, &p[li(l, LN1_G)], &p[li(l, LN1_B)], d);
+        let mut q = sc.take_raw(bs * d);
+        matmul_bias_into(&h1, &p[li(l, WQ)], &p[li(l, BQ)], bs, d, d,
+                         &mut q);
+        let mut k = sc.take_raw(bs * d);
+        matmul_bias_into(&h1, &p[li(l, WK)], &p[li(l, BK)], bs, d, d,
+                         &mut k);
+        let mut v = sc.take_raw(bs * d);
+        matmul_bias_into(&h1, &p[li(l, WV)], &p[li(l, BV)], bs, d, d,
+                         &mut v);
 
-        let mut a = vec![0f32; bs * d];
-        let mut probs_all =
-            if keep { vec![0f32; bsz * heads * s * s] } else { Vec::new() };
+        let mut a = sc.take_raw(bs * d);
+        let mut probs_all = if keep {
+            sc.take_raw(bsz * heads * s * s)
+        } else {
+            Vec::new()
+        };
         for b in 0..bsz {
             let mrow = &mask[b * s..(b + 1) * s];
             for h in 0..heads {
-                let qh = gather_head(&q, b, h, s, d, dh);
-                let kh = gather_head(&k, b, h, s, d, dh);
-                let vh = gather_head(&v, b, h, s, d, dh);
+                let qh = gather_head(sc, &q, b, h, s, d, dh);
+                let kh = gather_head(sc, &k, b, h, s, d, dh);
+                let vh = gather_head(sc, &v, b, h, s, d, dh);
                 // scores[i,j] = q_i . k_j * scale, masked
-                let mut scores = matmul_bt(&qh, &kh, s, dh, s);
+                let mut scores = sc.take_raw(s * s);
+                matmul_bt_into(&qh, &kh, s, dh, s, &mut scores);
                 for i in 0..s {
                     let row = &mut scores[i * s..(i + 1) * s];
                     for j in 0..s {
@@ -320,25 +404,42 @@ fn encode(
                         *pv /= z;
                     }
                 }
-                let ah = matmul(&scores, &vh, s, s, dh);
+                let mut ah = sc.take(s * dh);
+                matmul_into(&scores, &vh, s, s, dh, &mut ah);
                 scatter_head(&mut a, &ah, b, h, s, d, dh);
                 if keep {
                     let base = (b * heads + h) * s * s;
                     probs_all[base..base + s * s]
                         .copy_from_slice(&scores);
                 }
+                sc.give(qh);
+                sc.give(kh);
+                sc.give(vh);
+                sc.give(scores);
+                sc.give(ah);
             }
         }
-        let o = matmul_bias(&a, &p[li(l, WO)], &p[li(l, BO)], bs, d, d);
+        let mut o = sc.take_raw(bs * d);
+        matmul_bias_into(&a, &p[li(l, WO)], &p[li(l, BO)], bs, d, d,
+                         &mut o);
         add_into(&mut x, &o);
+        sc.give(o);
 
         // --- ffn block (pre-LN) ---
         let (h2, xhat2, rstd2) =
-            layernorm(&x, &p[li(l, LN2_G)], &p[li(l, LN2_B)], d);
-        let u = matmul_bias(&h2, &p[li(l, W1)], &p[li(l, B1)], bs, d, ff);
-        let f1: Vec<f32> = u.iter().map(|&v| gelu(v)).collect();
-        let f2 = matmul_bias(&f1, &p[li(l, W2)], &p[li(l, B2)], bs, ff, d);
+            layernorm(sc, &x, &p[li(l, LN2_G)], &p[li(l, LN2_B)], d);
+        let mut u = sc.take_raw(bs * ff);
+        matmul_bias_into(&h2, &p[li(l, W1)], &p[li(l, B1)], bs, d, ff,
+                         &mut u);
+        let mut f1 = sc.take_raw(bs * ff);
+        for (f, &uv) in f1.iter_mut().zip(u.iter()) {
+            *f = gelu(uv);
+        }
+        let mut f2 = sc.take_raw(bs * d);
+        matmul_bias_into(&f1, &p[li(l, W2)], &p[li(l, B2)], bs, ff, d,
+                         &mut f2);
         add_into(&mut x, &f2);
+        sc.give(f2);
 
         if keep {
             layers.push(LayerCache {
@@ -356,13 +457,32 @@ fn encode(
                 u,
                 f1,
             });
+        } else {
+            sc.give(h1);
+            sc.give(xhat1);
+            sc.give(rstd1);
+            sc.give(q);
+            sc.give(k);
+            sc.give(v);
+            sc.give(a);
+            sc.give(h2);
+            sc.give(xhat2);
+            sc.give(rstd2);
+            sc.give(u);
+            sc.give(f1);
         }
     }
 
     let fln = final_ln_g(cfg);
-    let (y, xhatf, rstdf) = layernorm(&x, &p[fln], &p[fln + 1], d);
-    let cache =
-        if keep { Some(EncCache { layers, xhatf, rstdf }) } else { None };
+    let (y, xhatf, rstdf) = layernorm(sc, &x, &p[fln], &p[fln + 1], d);
+    sc.give(x);
+    let cache = if keep {
+        Some(EncCache { layers, xhatf, rstdf })
+    } else {
+        sc.give(xhatf);
+        sc.give(rstdf);
+        None
+    };
     (y, cache)
 }
 
@@ -377,7 +497,9 @@ fn pool_denoms(mask: &[f32], bsz: usize, s: usize) -> Vec<f32> {
 }
 
 /// Task logits: encoder [B, n_classes]; decoder [B, S, vocab] (tied
-/// embedding).  Flattened row-major.
+/// embedding).  Flattened row-major.  The returned buffer belongs to
+/// the caller (pass it back via [`Scratch::give`] to keep steady-state
+/// allocation at zero).
 pub fn logits(
     cfg: &ConfigInfo,
     p: &[Vec<f32>],
@@ -385,9 +507,12 @@ pub fn logits(
     mask: &[f32],
     bsz: usize,
     s: usize,
+    sc: &mut Scratch,
 ) -> Vec<f32> {
-    let (y, _) = encode(cfg, p, ids, mask, bsz, s, false);
-    logits_from_y(cfg, p, &y, mask, bsz, s)
+    let (y, _) = encode(cfg, p, ids, mask, bsz, s, false, sc);
+    let lg = logits_from_y(cfg, p, &y, mask, bsz, s, sc);
+    sc.give(y);
+    lg
 }
 
 fn logits_from_y(
@@ -397,14 +522,17 @@ fn logits_from_y(
     mask: &[f32],
     bsz: usize,
     s: usize,
+    sc: &mut Scratch,
 ) -> Vec<f32> {
     let d = cfg.d_model;
     if cfg.is_decoder() {
         // [B*S, V] = y @ E^T
-        return matmul_bt(y, &p[EMBED_TOK], bsz * s, d, cfg.vocab);
+        let mut lg = sc.take_raw(bsz * s * cfg.vocab);
+        matmul_bt_into(y, &p[EMBED_TOK], bsz * s, d, cfg.vocab, &mut lg);
+        return lg;
     }
     let denoms = pool_denoms(mask, bsz, s);
-    let mut pooled = vec![0f32; bsz * d];
+    let mut pooled = sc.take(bsz * d);
     for b in 0..bsz {
         let pr = &mut pooled[b * d..(b + 1) * d];
         for i in 0..s {
@@ -421,7 +549,11 @@ fn logits_from_y(
         }
     }
     let hw = head_w(cfg);
-    matmul_bias(&pooled, &p[hw], &p[hw + 1], bsz, d, cfg.n_classes)
+    let mut lg = sc.take_raw(bsz * cfg.n_classes);
+    matmul_bias_into(&pooled, &p[hw], &p[hw + 1], bsz, d, cfg.n_classes,
+                     &mut lg);
+    sc.give(pooled);
+    lg
 }
 
 /// The (row, label, weight) view of the loss: encoder classifies each
@@ -467,8 +599,9 @@ pub fn loss(
     labels: &[i32],
     bsz: usize,
     s: usize,
+    sc: &mut Scratch,
 ) -> f32 {
-    let lg = logits(cfg, p, ids, mask, bsz, s);
+    let lg = logits(cfg, p, ids, mask, bsz, s, sc);
     let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
     let rows = loss_rows(cfg, mask, labels, bsz, s);
     let mut acc = 0f32;
@@ -479,11 +612,14 @@ pub fn loss(
         }
         msum += w;
     }
+    sc.give(lg);
     acc / msum.max(1.0)
 }
 
 /// Loss + parameter gradients — the hand-derived reverse pass that lets
-/// the native backend run `adam_step` without autodiff.
+/// the native backend run `adam_step` without autodiff.  The gradient
+/// buffers come from `sc`; the caller should `give` them back once
+/// applied.
 pub fn loss_and_grad(
     cfg: &ConfigInfo,
     p: &[Vec<f32>],
@@ -492,6 +628,7 @@ pub fn loss_and_grad(
     labels: &[i32],
     bsz: usize,
     s: usize,
+    sc: &mut Scratch,
 ) -> (f32, Vec<Vec<f32>>) {
     let d = cfg.d_model;
     let heads = cfg.n_heads;
@@ -500,9 +637,9 @@ pub fn loss_and_grad(
     let bs = bsz * s;
     let scale = 1.0 / (dh as f32).sqrt();
 
-    let (y, cache) = encode(cfg, p, ids, mask, bsz, s, true);
+    let (y, cache) = encode(cfg, p, ids, mask, bsz, s, true, sc);
     let cache = cache.expect("keep=true retains the cache");
-    let lg = logits_from_y(cfg, p, &y, mask, bsz, s);
+    let lg = logits_from_y(cfg, p, &y, mask, bsz, s, sc);
 
     let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
     let rows = loss_rows(cfg, mask, labels, bsz, s);
@@ -510,7 +647,7 @@ pub fn loss_and_grad(
 
     // loss + dlogits in one sweep
     let mut acc = 0f32;
-    let mut dlogits = vec![0f32; lg.len()];
+    let mut dlogits = sc.take(lg.len());
     for &(r, label, w) in &rows {
         let row = &lg[r * ncols..(r + 1) * ncols];
         if w > 0.0 {
@@ -533,23 +670,25 @@ pub fn loss_and_grad(
         drow[label.max(0) as usize % ncols] -= coeff;
     }
     let loss = acc / msum;
+    sc.give(lg);
 
     let mut grads: Vec<Vec<f32>> = cfg
         .params
         .iter()
-        .map(|spec| vec![0f32; spec.elements()])
+        .map(|spec| sc.take(spec.elements()))
         .collect();
 
     // task head backward -> dy [B*S, D]
     let mut dy;
     if cfg.is_decoder() {
         // logits = y @ E^T : dy = dlogits @ E ; dE += dlogits^T y
-        dy = matmul(&dlogits, &p[EMBED_TOK], bs, cfg.vocab, d);
-        let de = matmul_at(&dlogits, &y, bs, cfg.vocab, d);
-        add_into(&mut grads[EMBED_TOK], &de);
+        dy = sc.take(bs * d);
+        matmul_into(&dlogits, &p[EMBED_TOK], bs, cfg.vocab, d, &mut dy);
+        matmul_at_into(&dlogits, &y, bs, cfg.vocab, d,
+                       &mut grads[EMBED_TOK]);
     } else {
         let denoms = pool_denoms(mask, bsz, s);
-        let mut pooled = vec![0f32; bsz * d];
+        let mut pooled = sc.take(bsz * d);
         for b in 0..bsz {
             let pr = &mut pooled[b * d..(b + 1) * d];
             for i in 0..s {
@@ -566,10 +705,13 @@ pub fn loss_and_grad(
             }
         }
         let hw = head_w(cfg);
-        grads[hw] = matmul_at(&pooled, &dlogits, bsz, d, cfg.n_classes);
-        grads[hw + 1] = col_sums(&dlogits, cfg.n_classes);
-        let dpooled = matmul_bt(&dlogits, &p[hw], bsz, cfg.n_classes, d);
-        dy = vec![0f32; bs * d];
+        matmul_at_into(&pooled, &dlogits, bsz, d, cfg.n_classes,
+                       &mut grads[hw]);
+        col_sums_into(&dlogits, cfg.n_classes, &mut grads[hw + 1]);
+        let mut dpooled = sc.take_raw(bsz * d);
+        matmul_bt_into(&dlogits, &p[hw], bsz, cfg.n_classes, d,
+                       &mut dpooled);
+        dy = sc.take(bs * d);
         for b in 0..bsz {
             let dp = &dpooled[b * d..(b + 1) * d];
             for i in 0..s {
@@ -584,58 +726,79 @@ pub fn loss_and_grad(
                 }
             }
         }
+        sc.give(pooled);
+        sc.give(dpooled);
     }
+    sc.give(dlogits);
+    sc.give(y);
 
     // final LN
+    let EncCache { mut layers, xhatf, rstdf } = cache;
     let fln = final_ln_g(cfg);
     let (mut dx, dgf, dbf) =
-        layernorm_bwd(&dy, &cache.xhatf, &cache.rstdf, &p[fln], d);
+        layernorm_bwd(sc, &dy, &xhatf, &rstdf, &p[fln], d);
     add_into(&mut grads[fln], &dgf);
     add_into(&mut grads[fln + 1], &dbf);
+    sc.give(dgf);
+    sc.give(dbf);
+    sc.give(dy);
+    sc.give(xhatf);
+    sc.give(rstdf);
 
-    for l in (0..cfg.n_layers).rev() {
-        let lc = &cache.layers[l];
+    let mut l = cfg.n_layers;
+    while let Some(lc) = layers.pop() {
+        l -= 1;
         // x_out = x_mid + f2
         let df2 = &dx;
-        grads[li(l, W2)] = matmul_at(&lc.f1, df2, bs, ff, d);
-        grads[li(l, B2)] = col_sums(df2, d);
-        let df1 = matmul_bt(df2, &p[li(l, W2)], bs, d, ff);
-        let mut du = vec![0f32; bs * ff];
+        matmul_at_into(&lc.f1, df2, bs, ff, d, &mut grads[li(l, W2)]);
+        col_sums_into(df2, d, &mut grads[li(l, B2)]);
+        let mut df1 = sc.take_raw(bs * ff);
+        matmul_bt_into(df2, &p[li(l, W2)], bs, d, ff, &mut df1);
+        let mut du = sc.take_raw(bs * ff);
         for i in 0..bs * ff {
             du[i] = df1[i] * dgelu(lc.u[i]);
         }
-        grads[li(l, W1)] = matmul_at(&lc.h2, &du, bs, d, ff);
-        grads[li(l, B1)] = col_sums(&du, ff);
-        let dh2 = matmul_bt(&du, &p[li(l, W1)], bs, ff, d);
+        matmul_at_into(&lc.h2, &du, bs, d, ff, &mut grads[li(l, W1)]);
+        col_sums_into(&du, ff, &mut grads[li(l, B1)]);
+        let mut dh2 = sc.take_raw(bs * d);
+        matmul_bt_into(&du, &p[li(l, W1)], bs, ff, d, &mut dh2);
         let (dxm, dg2, db2) =
-            layernorm_bwd(&dh2, &lc.xhat2, &lc.rstd2, &p[li(l, LN2_G)], d);
-        grads[li(l, LN2_G)] = dg2;
-        grads[li(l, LN2_B)] = db2;
+            layernorm_bwd(sc, &dh2, &lc.xhat2, &lc.rstd2,
+                          &p[li(l, LN2_G)], d);
+        sc.give(std::mem::replace(&mut grads[li(l, LN2_G)], dg2));
+        sc.give(std::mem::replace(&mut grads[li(l, LN2_B)], db2));
         // dx_mid = dx (residual) + dxm
         add_into(&mut dx, &dxm);
+        sc.give(dxm);
+        sc.give(df1);
+        sc.give(du);
+        sc.give(dh2);
 
         // x_mid = x_in + o ; o = a @ Wo + bo
         let do_ = &dx;
-        grads[li(l, WO)] = matmul_at(&lc.a, do_, bs, d, d);
-        grads[li(l, BO)] = col_sums(do_, d);
-        let da = matmul_bt(do_, &p[li(l, WO)], bs, d, d);
+        matmul_at_into(&lc.a, do_, bs, d, d, &mut grads[li(l, WO)]);
+        col_sums_into(do_, d, &mut grads[li(l, BO)]);
+        let mut da = sc.take_raw(bs * d);
+        matmul_bt_into(do_, &p[li(l, WO)], bs, d, d, &mut da);
 
-        let mut dq = vec![0f32; bs * d];
-        let mut dk = vec![0f32; bs * d];
-        let mut dv = vec![0f32; bs * d];
+        let mut dq = sc.take_raw(bs * d);
+        let mut dk = sc.take_raw(bs * d);
+        let mut dv = sc.take_raw(bs * d);
         for b in 0..bsz {
             for h in 0..heads {
-                let qh = gather_head(&lc.q, b, h, s, d, dh);
-                let kh = gather_head(&lc.k, b, h, s, d, dh);
-                let vh = gather_head(&lc.v, b, h, s, d, dh);
-                let dah = gather_head(&da, b, h, s, d, dh);
+                let qh = gather_head(sc, &lc.q, b, h, s, d, dh);
+                let kh = gather_head(sc, &lc.k, b, h, s, d, dh);
+                let vh = gather_head(sc, &lc.v, b, h, s, d, dh);
+                let dah = gather_head(sc, &da, b, h, s, d, dh);
                 let base = (b * heads + h) * s * s;
                 let probs = &lc.probs[base..base + s * s];
                 // dp = dah @ vh^T ; dvh = probs^T @ dah
-                let dp = matmul_bt(&dah, &vh, s, dh, s);
-                let dvh = matmul_at(probs, &dah, s, s, dh);
+                let mut dp = sc.take_raw(s * s);
+                matmul_bt_into(&dah, &vh, s, dh, s, &mut dp);
+                let mut dvh = sc.take(s * dh);
+                matmul_at_into(probs, &dah, s, s, dh, &mut dvh);
                 // softmax backward
-                let mut dscores = vec![0f32; s * s];
+                let mut dscores = sc.take_raw(s * s);
                 for i in 0..s {
                     let pr = &probs[i * s..(i + 1) * s];
                     let dpr = &dp[i * s..(i + 1) * s];
@@ -645,8 +808,10 @@ pub fn loss_and_grad(
                         dsr[j] = pr[j] * (dpr[j] - inner);
                     }
                 }
-                let mut dqh = matmul(&dscores, &kh, s, s, dh);
-                let mut dkh = matmul_at(&dscores, &qh, s, s, dh);
+                let mut dqh = sc.take(s * dh);
+                matmul_into(&dscores, &kh, s, s, dh, &mut dqh);
+                let mut dkh = sc.take(s * dh);
+                matmul_at_into(&dscores, &qh, s, s, dh, &mut dkh);
                 for v_ in dqh.iter_mut() {
                     *v_ *= scale;
                 }
@@ -656,22 +821,56 @@ pub fn loss_and_grad(
                 scatter_head(&mut dq, &dqh, b, h, s, d, dh);
                 scatter_head(&mut dk, &dkh, b, h, s, d, dh);
                 scatter_head(&mut dv, &dvh, b, h, s, d, dh);
+                sc.give(qh);
+                sc.give(kh);
+                sc.give(vh);
+                sc.give(dah);
+                sc.give(dp);
+                sc.give(dvh);
+                sc.give(dscores);
+                sc.give(dqh);
+                sc.give(dkh);
             }
         }
-        grads[li(l, WQ)] = matmul_at(&lc.h1, &dq, bs, d, d);
-        grads[li(l, BQ)] = col_sums(&dq, d);
-        grads[li(l, WK)] = matmul_at(&lc.h1, &dk, bs, d, d);
-        grads[li(l, BK)] = col_sums(&dk, d);
-        grads[li(l, WV)] = matmul_at(&lc.h1, &dv, bs, d, d);
-        grads[li(l, BV)] = col_sums(&dv, d);
-        let mut dh1 = matmul_bt(&dq, &p[li(l, WQ)], bs, d, d);
-        add_into(&mut dh1, &matmul_bt(&dk, &p[li(l, WK)], bs, d, d));
-        add_into(&mut dh1, &matmul_bt(&dv, &p[li(l, WV)], bs, d, d));
+        matmul_at_into(&lc.h1, &dq, bs, d, d, &mut grads[li(l, WQ)]);
+        col_sums_into(&dq, d, &mut grads[li(l, BQ)]);
+        matmul_at_into(&lc.h1, &dk, bs, d, d, &mut grads[li(l, WK)]);
+        col_sums_into(&dk, d, &mut grads[li(l, BK)]);
+        matmul_at_into(&lc.h1, &dv, bs, d, d, &mut grads[li(l, WV)]);
+        col_sums_into(&dv, d, &mut grads[li(l, BV)]);
+        let mut dh1 = sc.take_raw(bs * d);
+        matmul_bt_into(&dq, &p[li(l, WQ)], bs, d, d, &mut dh1);
+        let mut tmp = sc.take_raw(bs * d);
+        matmul_bt_into(&dk, &p[li(l, WK)], bs, d, d, &mut tmp);
+        add_into(&mut dh1, &tmp);
+        matmul_bt_into(&dv, &p[li(l, WV)], bs, d, d, &mut tmp);
+        add_into(&mut dh1, &tmp);
+        sc.give(tmp);
         let (dxi, dg1, db1) =
-            layernorm_bwd(&dh1, &lc.xhat1, &lc.rstd1, &p[li(l, LN1_G)], d);
-        grads[li(l, LN1_G)] = dg1;
-        grads[li(l, LN1_B)] = db1;
+            layernorm_bwd(sc, &dh1, &lc.xhat1, &lc.rstd1,
+                          &p[li(l, LN1_G)], d);
+        sc.give(std::mem::replace(&mut grads[li(l, LN1_G)], dg1));
+        sc.give(std::mem::replace(&mut grads[li(l, LN1_B)], db1));
         add_into(&mut dx, &dxi);
+        sc.give(dxi);
+        sc.give(dh1);
+        sc.give(da);
+        sc.give(dq);
+        sc.give(dk);
+        sc.give(dv);
+        sc.give(lc.h1);
+        sc.give(lc.xhat1);
+        sc.give(lc.rstd1);
+        sc.give(lc.q);
+        sc.give(lc.k);
+        sc.give(lc.v);
+        sc.give(lc.probs);
+        sc.give(lc.a);
+        sc.give(lc.h2);
+        sc.give(lc.xhat2);
+        sc.give(lc.rstd2);
+        sc.give(lc.u);
+        sc.give(lc.f1);
     }
 
     // embeddings
@@ -690,6 +889,7 @@ pub fn loss_and_grad(
             }
         }
     }
+    sc.give(dx);
 
     (loss, grads)
 }
@@ -734,9 +934,48 @@ mod tests {
         let ids = vec![1i32; 2 * 6];
         let mask = vec![1f32; 2 * 6];
         let labels = vec![0i32, 2];
-        let l = loss(&cfg, &init, &ids, &mask, &labels, 2, 6);
+        let l = loss(&cfg, &init, &ids, &mask, &labels, 2, 6,
+                     &mut Scratch::new());
         let chance = (cfg.n_classes as f32).ln();
         assert!((l - chance).abs() < 1e-4, "{l} vs ln(3)={chance}");
+    }
+
+    #[test]
+    fn scratch_steady_state_allocates_nothing() {
+        // after one warm-up pass, forward AND backward must run entirely
+        // from the pool (the perf-pass property this PR establishes)
+        let cfg = tiny();
+        let params = seeded_params(&cfg, 42);
+        let ids = vec![1i32, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask =
+            vec![1f32, 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let mut sc = Scratch::new();
+        let l1 = loss(&cfg, &params, &ids, &mask, &labels, 2, 6, &mut sc);
+        let (lg1, g1) =
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                          &mut sc);
+        for g in g1 {
+            sc.give(g);
+        }
+        let warm = sc.miss_count();
+        assert!(warm > 0, "warm-up must have allocated");
+        let l2 = loss(&cfg, &params, &ids, &mask, &labels, 2, 6, &mut sc);
+        let (lg2, g2) =
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                          &mut sc);
+        for g in g2 {
+            sc.give(g);
+        }
+        assert_eq!(sc.miss_count(), warm,
+                   "steady-state pass must not allocate");
+        // and buffer reuse must not change a single bit
+        assert_eq!(l1, l2);
+        assert_eq!(lg1, lg2);
+        // fresh-arena runs agree too
+        let l3 = loss(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                      &mut Scratch::new());
+        assert_eq!(l1, l3);
     }
 
     #[test]
@@ -750,8 +989,10 @@ mod tests {
         let mask: Vec<f32> =
             vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
         let labels = vec![2i32, 0];
+        let mut sc = Scratch::new();
         let (_, grads) =
-            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6);
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                          &mut sc);
         // probe: (tensor index, element index)
         let probes = [
             (0usize, 9usize),            // embed.tok (token 1 row)
@@ -765,9 +1006,9 @@ mod tests {
             let h = 1e-3f32;
             let mut pp = params.clone();
             pp[t][e] += h;
-            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6, &mut sc);
             pp[t][e] -= 2.0 * h;
-            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6, &mut sc);
             let fd = (lp - lm) / (2.0 * h);
             let an = grads[t][e];
             assert!(
@@ -787,15 +1028,17 @@ mod tests {
         let mask: Vec<f32> =
             vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
         let labels = ids.clone();
+        let mut sc = Scratch::new();
         let (_, grads) =
-            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6);
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                          &mut sc);
         for (t, e) in [(0usize, 42usize), (li(0, WO), 20), (li(0, W2), 9)] {
             let h = 1e-3f32;
             let mut pp = params.clone();
             pp[t][e] += h;
-            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let lp = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6, &mut sc);
             pp[t][e] -= 2.0 * h;
-            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6);
+            let lm = loss(&cfg, &pp, &ids, &mask, &labels, 2, 6, &mut sc);
             let fd = (lp - lm) / (2.0 * h);
             let an = grads[t][e];
             assert!(
@@ -811,12 +1054,13 @@ mod tests {
         let params = seeded_params(&cfg, 5);
         let ids = vec![1i32; 12];
         let mask = vec![1f32; 12];
-        let lg = logits(&cfg, &params, &ids, &mask, 2, 6);
+        let mut sc = Scratch::new();
+        let lg = logits(&cfg, &params, &ids, &mask, 2, 6, &mut sc);
         assert_eq!(lg.len(), 2 * 3);
         let dec = make_config("td", "decoder", 13, 8, 1, 2, 16, 6, 2,
                               false);
         let pd = seeded_params(&dec, 6);
-        let lg = logits(&dec, &pd, &ids, &mask, 2, 6);
+        let lg = logits(&dec, &pd, &ids, &mask, 2, 6, &mut sc);
         assert_eq!(lg.len(), 2 * 6 * 13);
     }
 }

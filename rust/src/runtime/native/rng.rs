@@ -65,6 +65,26 @@ pub fn perturb(w: &mut [f32], seed: u32, base_offset: usize, scale: f32) {
     }
 }
 
+/// `dst[i] = src[i] + scale * z(seed, base_offset + i)` — the shadow
+/// variant of [`perturb`]: reads the base point, writes the perturbed
+/// copy, and leaves `src` untouched.  This is what lets the k-query
+/// SPSA workers evaluate every query at the *exact* base parameters
+/// from cloned-once shadows, independent of worker count.
+pub fn perturb_from(
+    src: &[f32],
+    dst: &mut [f32],
+    seed: u32,
+    base_offset: usize,
+    scale: f32,
+) {
+    debug_assert_eq!(src.len(), dst.len());
+    let base = base_offset as u32;
+    for (i, (d, &x)) in dst.iter_mut().zip(src).enumerate() {
+        let z = gaussian(seed, base.wrapping_add(i as u32));
+        *d = x + scale * z;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +137,20 @@ mod tests {
         for (a, b) in w.iter().zip(&orig) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn perturb_from_matches_in_place_bitwise() {
+        // writing base + scale*z into a shadow must equal perturbing a
+        // copy of the base in place, bit for bit
+        let base: Vec<f32> = (0..97).map(|i| (i as f32).cos()).collect();
+        let orig = base.clone();
+        let mut shadow = vec![0f32; 97];
+        perturb_from(&base, &mut shadow, 0xBEEF, 500, 1e-3);
+        let mut inplace = base.clone();
+        perturb(&mut inplace, 0xBEEF, 500, 1e-3);
+        assert_eq!(shadow, inplace);
+        assert_eq!(base, orig, "the base point must be untouched");
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! >= 0.5 emits 64-bit instruction ids that the crate's xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids.
 //!
+//! This backend implements only the literal `run()` convention; the
+//! session's `run_in_place` calls reach it through the trait's default
+//! bridge (materialize donated literals → run → scatter outputs), so
+//! trajectories stay identical to the native donation path at the cost
+//! of the copies.  True XLA input/output aliasing is a ROADMAP item.
+//!
 //! Building this module requires adding the `xla` crate to
 //! `rust/Cargo.toml` (see the comment there) — it binds a local XLA
 //! install, which the default native backend deliberately avoids.

@@ -1,15 +1,20 @@
-//! Model state: the parameter tensors held between steps, plus binary
-//! (de)serialization for checkpoints.
+//! Model state: the tensors held between steps, in two forms.
 //!
-//! Parameters live as host `Literal`s in manifest order.  The step
-//! programs take them by reference and return fresh ones, so the hot
-//! loop is: build refs → execute → swap in outputs.  No reshaping or
-//! copying happens on the Rust side.
+//! * [`ModelState`] — parameters as host `Literal`s in manifest order;
+//!   the currency of checkpoints, init loading, and the literal-based
+//!   `run()` compatibility path.
+//! * [`ExecState`] — the buffer-donation form the hot loop uses: raw
+//!   backend-owned f32 tensors (params, and for derivative-based
+//!   optimizers the Adam m/v moments) that `run_in_place` mutates
+//!   directly across steps, plus the session's [`Scratch`] activation
+//!   arena.  `Literal`s are materialized from it only at checkpoint /
+//!   eval boundaries.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::literal::{f32_tensor, Literal};
 use super::manifest::ConfigInfo;
+use super::native::model::Scratch;
 
 /// The live parameter set of one model instance.
 pub struct ModelState {
@@ -117,9 +122,197 @@ impl ModelState {
     }
 }
 
-// Tests for ModelState need a ConfigInfo; covered in the integration
-// suite (rust/tests/integration.rs) against the real manifest, where
-// from_raw/to_bytes/from_bytes round-trip over pocket-tiny.
+/// Backend-owned mutable tensors for the `run_in_place` donation path.
+///
+/// The aliasing contract (XLA-style input/output aliasing): the tensors
+/// in `w` (and `m`/`v` for Adam programs) ARE the step program's
+/// donated inputs and its outputs — the program mutates them in place,
+/// and the caller must not read them concurrently with a
+/// `run_in_place` call.  Between calls they always hold the post-step
+/// values.  `scratch` is the activation arena the native backend draws
+/// forward/backward buffers from; it carries no semantic state (only
+/// capacity), so dropping or swapping it never changes results.
+pub struct ExecState {
+    cfg: ConfigInfo,
+    /// Parameter tensors, manifest order.
+    pub w: Vec<Vec<f32>>,
+    /// Adam first-moment tensors (empty for derivative-free sessions).
+    pub m: Vec<Vec<f32>>,
+    /// Adam second-moment tensors (empty for derivative-free sessions).
+    pub v: Vec<Vec<f32>>,
+    /// Reusable activation arena for the native backend.
+    pub scratch: Scratch,
+}
+
+impl ExecState {
+    /// Build from raw per-tensor f32 data, taking ownership (no copy).
+    pub fn from_raw(cfg: &ConfigInfo, raw: Vec<Vec<f32>>)
+        -> Result<ExecState>
+    {
+        ensure!(raw.len() == cfg.params.len(),
+                "expected {} tensors, got {}", cfg.params.len(),
+                raw.len());
+        for (spec, data) in cfg.params.iter().zip(&raw) {
+            ensure!(data.len() == spec.elements(),
+                    "tensor {} has {} values, expected {}", spec.name,
+                    data.len(), spec.elements());
+        }
+        Ok(ExecState {
+            cfg: cfg.clone(),
+            w: raw,
+            m: Vec::new(),
+            v: Vec::new(),
+            scratch: Scratch::new(),
+        })
+    }
+
+    /// Build from a literal-based [`ModelState`] (one copy — a
+    /// boundary crossing, not a per-step cost).
+    pub fn from_model(cfg: &ConfigInfo, params: &ModelState)
+        -> Result<ExecState>
+    {
+        let mut raw = Vec::with_capacity(params.len());
+        for t in &params.tensors {
+            raw.push(t.f32_vec()?);
+        }
+        ExecState::from_raw(cfg, raw)
+    }
+
+    /// Attach zero-initialized Adam m/v moment tensors.
+    pub fn with_adam(mut self) -> ExecState {
+        self.m = self
+            .cfg
+            .params
+            .iter()
+            .map(|s| vec![0f32; s.elements()])
+            .collect();
+        self.v = self.m.clone();
+        self
+    }
+
+    pub fn has_adam(&self) -> bool {
+        !self.m.is_empty()
+    }
+
+    /// Split-borrow every mutable part at once — the shape the native
+    /// backend's `run_in_place` needs (tensors and scratch arena are
+    /// used simultaneously).
+    pub fn native_parts(
+        &mut self,
+    ) -> (
+        &mut Vec<Vec<f32>>,
+        &mut Vec<Vec<f32>>,
+        &mut Vec<Vec<f32>>,
+        &mut Scratch,
+    ) {
+        (&mut self.w, &mut self.m, &mut self.v, &mut self.scratch)
+    }
+
+    /// Total donated tensors a step program sees: params, plus m and v
+    /// when present.
+    pub fn tensor_count(&self) -> usize {
+        self.w.len() + self.m.len() + self.v.len()
+    }
+
+    /// Materialize every donated tensor as a `Literal`, in calling-
+    /// convention order (w, then m, then v).  This is the compatibility
+    /// bridge for backends without a native `run_in_place` (PJRT).
+    pub fn donated_literals(&self) -> Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(self.tensor_count());
+        for set in [&self.w, &self.m, &self.v] {
+            for (spec, data) in self.cfg.params.iter().zip(set.iter()) {
+                out.push(Literal::from_f32(data.clone(),
+                                           spec.shape.clone())?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Materialize ONLY the parameter tensors (eval programs take
+    /// params but never optimizer state).
+    pub fn param_literals(&self) -> Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(self.w.len());
+        for (spec, data) in self.cfg.params.iter().zip(self.w.iter()) {
+            out.push(Literal::from_f32(data.clone(),
+                                       spec.shape.clone())?);
+        }
+        Ok(out)
+    }
+
+    /// Write a `run()` output tuple (minus the trailing loss scalar)
+    /// back into the donated tensors — the scatter half of the
+    /// compatibility bridge.
+    pub fn absorb(&mut self, outs: Vec<Literal>) -> Result<()> {
+        ensure!(outs.len() == self.tensor_count(),
+                "absorb: {} tensors, state holds {}", outs.len(),
+                self.tensor_count());
+        let mut it = outs.into_iter();
+        for set in [&mut self.w, &mut self.m, &mut self.v] {
+            for (spec, slot) in self.cfg.params.iter().zip(set.iter_mut())
+            {
+                let data = it.next().expect("length checked").into_f32()?;
+                ensure!(data.len() == spec.elements(),
+                        "absorb: tensor {} has {} values, expected {}",
+                        spec.name, data.len(), spec.elements());
+                *slot = data;
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the parameters as a literal-based [`ModelState`]
+    /// (checkpoint/eval boundary).
+    pub fn params_model(&self) -> Result<ModelState> {
+        ModelState::from_raw(&self.cfg, &self.w)
+    }
+
+    /// Snapshot the Adam moments (errors for derivative-free state).
+    pub fn adam_model(&self) -> Result<(ModelState, ModelState)> {
+        ensure!(self.has_adam(), "state carries no Adam moments");
+        Ok((
+            ModelState::from_raw(&self.cfg, &self.m)?,
+            ModelState::from_raw(&self.cfg, &self.v)?,
+        ))
+    }
+
+    /// Overwrite the parameters from a [`ModelState`] (checkpoint
+    /// restore).
+    pub fn load_params(&mut self, params: &ModelState) -> Result<()> {
+        ensure!(params.len() == self.w.len(),
+                "load_params: {} tensors, state holds {}", params.len(),
+                self.w.len());
+        for ((spec, slot), t) in self
+            .cfg
+            .params
+            .iter()
+            .zip(self.w.iter_mut())
+            .zip(&params.tensors)
+        {
+            let data = t.f32_vec()?;
+            ensure!(data.len() == spec.elements(),
+                    "load_params: tensor {} has {} values, expected {}",
+                    spec.name, data.len(), spec.elements());
+            *slot = data;
+        }
+        Ok(())
+    }
+
+    /// Overwrite the Adam moments (checkpoint restore).
+    pub fn load_adam(&mut self, m: &ModelState, v: &ModelState)
+        -> Result<()>
+    {
+        ensure!(self.has_adam(), "state carries no Adam moments");
+        ensure!(m.len() == self.m.len() && v.len() == self.v.len(),
+                "load_adam: moment tensor count mismatch");
+        for (slot, t) in self.m.iter_mut().zip(&m.tensors) {
+            *slot = t.f32_vec()?;
+        }
+        for (slot, t) in self.v.iter_mut().zip(&v.tensors) {
+            *slot = t.f32_vec()?;
+        }
+        Ok(())
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -173,5 +366,69 @@ mod tests {
         assert!(ModelState::from_bytes(&cfg, &[0u8; 8]).is_err());
         let raw = vec![vec![0.; 6], vec![0.; 3]];
         assert!(ModelState::from_raw(&cfg, &raw).is_err());
+    }
+
+    #[test]
+    fn exec_state_roundtrips_through_literals() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![1., 2., 3., 4., 5., 6.], vec![7., 8., 9., 10.]];
+        let st = ExecState::from_raw(&cfg, raw.clone()).unwrap();
+        assert_eq!(st.tensor_count(), 2);
+        assert!(!st.has_adam());
+        let lits = st.donated_literals().unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].shape(), &[2, 3]);
+        assert_eq!(lits[1].f32_vec().unwrap(), raw[1]);
+        // snapshot -> ModelState -> back
+        let ms = st.params_model().unwrap();
+        let st2 = ExecState::from_model(&cfg, &ms).unwrap();
+        assert_eq!(st2.w, raw);
+    }
+
+    #[test]
+    fn exec_state_adam_moments_and_absorb() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![0f32; 6], vec![0f32; 4]];
+        let mut st = ExecState::from_raw(&cfg, raw).unwrap().with_adam();
+        assert!(st.has_adam());
+        assert_eq!(st.tensor_count(), 6);
+        // absorb a full w/m/v tuple
+        let mut outs = Vec::new();
+        for i in 0..6u32 {
+            let (len, shape): (usize, Vec<usize>) = if i % 2 == 0 {
+                (6, vec![2, 3])
+            } else {
+                (4, vec![4])
+            };
+            outs.push(
+                Literal::from_f32(vec![i as f32; len], shape).unwrap(),
+            );
+        }
+        st.absorb(outs).unwrap();
+        assert_eq!(st.w[0], vec![0f32; 6]);
+        assert_eq!(st.m[1], vec![3f32; 4]);
+        assert_eq!(st.v[0], vec![4f32; 6]);
+        // wrong arity rejected
+        assert!(st.absorb(Vec::new()).is_err());
+        let (m, v) = st.adam_model().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn exec_state_load_params_validates() {
+        let cfg = tiny_cfg();
+        let mut st =
+            ExecState::from_raw(&cfg, vec![vec![0f32; 6], vec![0f32; 4]])
+                .unwrap();
+        let ms = ModelState::from_raw(
+            &cfg,
+            &[vec![9f32; 6], vec![8f32; 4]],
+        )
+        .unwrap();
+        st.load_params(&ms).unwrap();
+        assert_eq!(st.w[0], vec![9f32; 6]);
+        assert!(st.adam_model().is_err());
+        assert!(st.load_adam(&ms, &ms).is_err());
     }
 }

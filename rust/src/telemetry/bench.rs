@@ -58,6 +58,40 @@ pub fn render(title: &str, ms: &[Measurement]) -> String {
     t.render()
 }
 
+/// Serialize measurements (plus derived scalar metrics) as a JSON
+/// report — the durable form of a bench run (`make bench` writes
+/// `BENCH_*.json` at the repo root so perf changes leave a trail CI
+/// can archive and PRs can diff).
+pub fn dump_json(
+    path: &str,
+    title: &str,
+    ms: &[Measurement],
+    extra: &[(&str, f64)],
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let rows: Vec<Json> = ms
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("name", Json::str(&m.name)),
+                ("mean_ms", Json::num(m.stats.mean() * 1e3)),
+                ("std_ms", Json::num(m.stats.std() * 1e3)),
+                ("min_ms", Json::num(m.stats.min() * 1e3)),
+                ("max_ms", Json::num(m.stats.max() * 1e3)),
+                ("iters", Json::num(m.stats.count() as f64)),
+            ])
+        })
+        .collect();
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("title", Json::str(title)),
+        ("measurements", Json::Arr(rows)),
+    ];
+    for (k, v) in extra {
+        pairs.push((k, Json::num(*v)));
+    }
+    std::fs::write(path, Json::obj(pairs).dump())
+}
+
 /// Read an override from the environment (bench knobs without flags).
 pub fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name)
@@ -111,6 +145,22 @@ mod tests {
         let s = render("T", &[m]);
         assert!(s.contains("x"));
         assert!(s.contains("mean ms"));
+    }
+
+    #[test]
+    fn dump_json_writes_parseable_report() {
+        let m = bench("probe", 0, 2, || {});
+        let path = std::env::temp_dir().join("pocketllm_bench_dump.json");
+        let path = path.to_str().unwrap().to_string();
+        dump_json(&path, "T", &[m], &[("derived_ms", 1.5)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = crate::util::json::parse(&text).unwrap();
+        assert_eq!(json.get("title").as_str(), Some("T"));
+        assert_eq!(json.get("derived_ms").as_f64(), Some(1.5));
+        let rows = json.get("measurements").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").as_str(), Some("probe"));
+        assert_eq!(rows[0].get("iters").as_f64(), Some(2.0));
     }
 
     #[test]

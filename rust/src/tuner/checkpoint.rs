@@ -10,6 +10,11 @@
 //! The asymmetry between optimizers is the paper's point made durable:
 //! a MeZO checkpoint is params + ~100 bytes of JSON; an Adam checkpoint
 //! is 3x the parameters.  `pocketllm report table1` prints both.
+//!
+//! Checkpoints speak literal-based [`ModelState`]s by design: the hot
+//! loop's parameters live in a `runtime::ExecState` mutated in place,
+//! and `Session::params()` / `Session::adam_state()` materialize them
+//! only here, at the durable boundary — never per step.
 
 use std::path::{Path, PathBuf};
 

@@ -2,24 +2,30 @@
 //!
 //! One `Session` = one on-device fine-tuning job.  Its `step()`:
 //!
-//! 1. pulls the next batch from the on-device data pipeline,
-//! 2. assembles the artifact input list (params .. [m, v] .. ids, mask,
-//!    labels, scalars) as literal *references* — no parameter copies,
-//! 3. executes the fused step program on the configured execution
-//!    backend (native interpreter by default, PJRT with `--features
-//!    pjrt`),
-//! 4. swaps the returned parameter (and m/v) tensors into place,
+//! 1. pulls the next batch from the on-device data pipeline (a fixed
+//!    ring window over the deterministic batch stream — recomputed on
+//!    miss, so million-step sessions stay bounded),
+//! 2. builds ONLY the batch/scalar literals — the parameter (and Adam
+//!    m/v) tensors stay resident in the session's `ExecState`,
+//! 3. executes the fused step program through the buffer-donation
+//!    `run_in_place` path (native interpreter by default; backends
+//!    without a native override, like PJRT, transparently fall back to
+//!    the literal `run()` bridge),
+//! 4. the program mutates the resident tensors in place — there is no
+//!    clone-in/clone-out of O(params) data anywhere in the loop,
 //! 5. mirrors the allocation behaviour into the simulated device ledger
 //!    and advances the thermal clock by the *simulated* step time.
 //!
-//! Python is nowhere in this path; the artifacts were lowered at build
-//! time.
+//! `Literal` parameter tensors are materialized only at checkpoint /
+//! eval boundaries ([`Session::params`]).  Python is nowhere in this
+//! path; the artifacts were lowered at build time.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::data::batcher::{Batch, Batcher};
+use crate::data::batcher::{Batch, Batcher, BatcherState};
 use crate::data::bpe::Bpe;
 use crate::data::corpus;
 use crate::data::task::{TaskData, TaskKind};
@@ -28,9 +34,13 @@ use crate::optim::{AdamDriver, MezoDriver, OptimizerKind, Schedule};
 use crate::optim::adam::AdamConfig;
 use crate::optim::mezo::MezoConfig;
 use crate::runtime::literal::{f32_tensor, i32_tensor, Literal};
-use crate::runtime::state::ModelState;
+use crate::runtime::state::{ExecState, ModelState};
 use crate::runtime::{Program, Runtime};
 use crate::telemetry::MetricLog;
+
+/// Batches kept resident per session by default; anything older is
+/// regenerated deterministically on demand.
+pub const DEFAULT_BATCH_WINDOW: usize = 512;
 
 /// Result of one optimization step.
 #[derive(Debug, Clone)]
@@ -74,6 +84,8 @@ pub struct SessionBuilder<'rt> {
     n_eval: usize,
     device: Option<Device>,
     queries: usize,
+    batch_window: usize,
+    compat_exec: bool,
 }
 
 impl<'rt> SessionBuilder<'rt> {
@@ -91,6 +103,8 @@ impl<'rt> SessionBuilder<'rt> {
             n_eval: 128,
             device: None,
             queries: 1,
+            batch_window: DEFAULT_BATCH_WINDOW,
+            compat_exec: false,
         }
     }
 
@@ -136,6 +150,23 @@ impl<'rt> SessionBuilder<'rt> {
     pub fn dataset_size(mut self, train: usize, eval: usize) -> Self {
         self.n_train = train;
         self.n_eval = eval;
+        self
+    }
+
+    /// Cap on the resident batch-cache window (default
+    /// [`DEFAULT_BATCH_WINDOW`]); older batches are regenerated from
+    /// the deterministic stream on demand.
+    pub fn batch_window(mut self, w: usize) -> Self {
+        self.batch_window = w.max(1);
+        self
+    }
+
+    /// Force the literal-based `run()` execution path instead of the
+    /// buffer-donation `run_in_place` path.  Step semantics are
+    /// bit-identical (tested); this exists for parity testing and for
+    /// measuring what donation saves.
+    pub fn compat_exec(mut self, on: bool) -> Self {
+        self.compat_exec = on;
         self
     }
 
@@ -203,9 +234,11 @@ impl<'rt> SessionBuilder<'rt> {
             .ok();
         let eval_prog = self.rt.program(&self.config, "eval", batch).ok();
 
-        // 4. parameters + optimizer state
+        // 4. resident execution state + optimizer driver.  The raw init
+        //    tensors move straight into the ExecState — the session
+        //    never holds a second parameter copy.
         let raw = self.rt.manifest.load_init_params(&self.config)?;
-        let params = ModelState::from_raw(&cfg, &raw)?;
+        let mut state = ExecState::from_raw(&cfg, raw)?;
         let lr = self.lr.unwrap_or(Schedule::Constant(match self.optimizer {
             // SPSA's projected gradient scales with sqrt(P); MeZO needs a
             // much smaller rate than Adam (matches the MeZO paper's grids)
@@ -218,10 +251,10 @@ impl<'rt> SessionBuilder<'rt> {
                 eps: self.eps,
                 master_seed: self.seed,
             })),
-            OptimizerKind::Adam => Driver::Adam(AdamDriver::new(
-                AdamConfig { lr },
-                &cfg,
-            )?),
+            OptimizerKind::Adam => {
+                state = state.with_adam();
+                Driver::Adam(AdamDriver::new(AdamConfig { lr }))
+            }
         };
 
         Ok(Session {
@@ -235,14 +268,18 @@ impl<'rt> SessionBuilder<'rt> {
             step_prog,
             loss_prog,
             eval_prog,
-            params,
+            state,
             driver,
             device,
             footprint: fp,
             step: 0,
             metrics: MetricLog::new(),
             batcher_seed: self.seed ^ 0xBA7C4,
-            batch_cache: Vec::new(),
+            batch_win: VecDeque::new(),
+            win_start: 0,
+            window_cap: self.batch_window,
+            batcher_resume: None,
+            compat_exec: self.compat_exec,
         }
         .finalize())
     }
@@ -266,18 +303,25 @@ pub struct Session {
     step_prog: std::sync::Arc<Program>,
     loss_prog: Option<std::sync::Arc<Program>>,
     eval_prog: Option<std::sync::Arc<Program>>,
-    pub params: ModelState,
+    /// Resident parameters (+ Adam m/v) + scratch arena — the donated
+    /// state `run_in_place` mutates across steps.
+    pub state: ExecState,
     driver: Driver,
     pub device: Option<Device>,
     footprint: Option<crate::device::FootprintBreakdown>,
     pub step: u64,
     pub metrics: MetricLog,
     batcher_seed: u64,
-    /// Batches materialized so far, indexed by step.  The batcher is
-    /// deterministic under (data, seed), so caching keeps long sessions
-    /// O(1) per step instead of O(step) replay, while resume-from-
-    /// checkpoint stays exact (perf pass #1, EXPERIMENTS.md §Perf).
-    batch_cache: Vec<Batch>,
+    /// Ring window over the deterministic batch stream: batches for
+    /// steps [win_start, win_start + batch_win.len()).  Capped at
+    /// `window_cap`; anything outside is regenerated on demand
+    /// (recompute-on-miss), so memory is O(window), not O(steps).
+    batch_win: VecDeque<Batch>,
+    win_start: usize,
+    window_cap: usize,
+    /// (stream position, snapshot) for O(1) sequential extension.
+    batcher_resume: Option<(usize, BatcherState)>,
+    compat_exec: bool,
 }
 
 impl Session {
@@ -313,45 +357,56 @@ impl Session {
         Ok([ids, mask, labels])
     }
 
+    /// Materialize the live parameters as literals — the checkpoint /
+    /// eval boundary (never part of the step loop).
+    pub fn params(&self) -> Result<ModelState> {
+        self.state.params_model()
+    }
+
+    /// Overwrite the live parameters (e.g. from a loaded checkpoint).
+    pub fn load_params(&mut self, p: &ModelState) -> Result<()> {
+        self.state.load_params(p)
+    }
+
+    /// Materialize the Adam (m, v) moments (checkpoint boundary);
+    /// errors for derivative-free sessions.
+    pub fn adam_state(&self) -> Result<(ModelState, ModelState)> {
+        self.state.adam_model()
+    }
+
     /// Execute one optimization step on a prepared batch.
     pub fn step_on(&mut self, b: &Batch) -> Result<StepResult> {
         let [ids, mask, labels] = self.batch_literals(b)?;
-        let n = self.params.len();
         let started = Instant::now();
+        let prog = self.step_prog.clone();
+        let compat = self.compat_exec;
 
         let loss = match &mut self.driver {
             Driver::MeZo(d) => {
                 let scalars = d.scalar_inputs()?;
-                let mut inputs: Vec<&Literal> =
-                    Vec::with_capacity(n + 6);
-                inputs.extend(self.params.refs());
-                inputs.push(&ids);
-                inputs.push(&mask);
-                inputs.push(&labels);
-                inputs.extend(scalars.iter());
-                let mut outs = self.step_prog.execute(&inputs)?;
-                let loss = outs.pop().context("loss output")?.f32_scalar()?;
-                self.params.replace(outs)?;
+                let inputs: [&Literal; 6] = [
+                    &ids, &mask, &labels, &scalars[0], &scalars[1],
+                    &scalars[2],
+                ];
+                let loss = if compat {
+                    prog.execute_in_place_via_run(&mut self.state,
+                                                  &inputs)?
+                } else {
+                    prog.execute_in_place(&mut self.state, &inputs)?
+                };
                 d.advance();
                 loss as f64
             }
             Driver::Adam(d) => {
                 let scalars = d.scalar_inputs()?;
-                let mut inputs: Vec<&Literal> =
-                    Vec::with_capacity(3 * n + 5);
-                inputs.extend(self.params.refs());
-                inputs.extend(d.m.refs());
-                inputs.extend(d.v.refs());
-                inputs.push(&ids);
-                inputs.push(&mask);
-                inputs.push(&labels);
-                inputs.extend(scalars.iter());
-                let mut outs = self.step_prog.execute(&inputs)?;
-                let loss = outs.pop().context("loss output")?.f32_scalar()?;
-                let v_new = outs.split_off(2 * n);
-                let m_new = outs.split_off(n);
-                self.params.replace(outs)?;
-                d.replace_state(m_new, v_new)?;
+                let inputs: [&Literal; 5] =
+                    [&ids, &mask, &labels, &scalars[0], &scalars[1]];
+                let loss = if compat {
+                    prog.execute_in_place_via_run(&mut self.state,
+                                                  &inputs)?
+                } else {
+                    prog.execute_in_place(&mut self.state, &inputs)?
+                };
                 d.advance();
                 loss as f64
             }
@@ -380,43 +435,73 @@ impl Session {
         Ok(r)
     }
 
-    /// Ensure the batch cache covers steps [0, upto).
-    fn fill_batch_cache(&mut self, upto: usize) {
-        if self.batch_cache.len() >= upto {
-            return;
+    /// The batch for step `idx`, from the ring window; on a miss the
+    /// deterministic stream is resumed (sequential case, O(1)) or
+    /// replayed from step 0 (cold rewind), and the window re-centred.
+    fn batch_at(&mut self, idx: usize) -> Batch {
+        if idx < self.win_start {
+            // rewound past the window (e.g. restored an old
+            // checkpoint): recompute from the start of the stream
+            self.batch_win.clear();
+            self.win_start = idx;
         }
-        // the batcher borrows data/bpe immutably; collect first, then
-        // extend the cache (single deterministic stream from step 0)
-        let fresh: Vec<Batch> = {
-            let mut batcher = self.make_batcher();
-            for _ in 0..self.batch_cache.len() {
-                batcher.next();
+        let end = self.win_start + self.batch_win.len();
+        if idx >= end {
+            // only the last window_cap batches up to idx are retained;
+            // anything earlier is generated and discarded so even a
+            // million-step forward jump stays O(window) memory
+            let keep_from = std::cmp::max(
+                end,
+                (idx + 1).saturating_sub(self.window_cap),
+            );
+            let (fresh, resume) = {
+                let mut batcher = self.make_batcher();
+                let mut pos = 0usize;
+                if let Some((p, st)) = &self.batcher_resume {
+                    if *p <= keep_from {
+                        batcher.restore(st);
+                        pos = *p;
+                    }
+                }
+                for _ in pos..keep_from {
+                    batcher.next();
+                }
+                let fresh: Vec<Batch> =
+                    (keep_from..=idx).map(|_| batcher.next()).collect();
+                (fresh, batcher.state())
+            };
+            self.batcher_resume = Some((idx + 1, resume));
+            if keep_from > end {
+                // the jump skipped past the whole resident window
+                self.batch_win.clear();
+                self.win_start = keep_from;
             }
-            (self.batch_cache.len()..upto).map(|_| batcher.next()).collect()
-        };
-        self.batch_cache.extend(fresh);
+            self.batch_win.extend(fresh);
+            while self.batch_win.len() > self.window_cap {
+                self.batch_win.pop_front();
+                self.win_start += 1;
+            }
+        }
+        self.batch_win[idx - self.win_start].clone()
     }
 
     /// Pull the next batch and step (the common path).
     pub fn step(&mut self) -> Result<StepResult> {
         let idx = self.step as usize;
-        self.fill_batch_cache(idx + 1);
-        let batch = self.batch_cache[idx].clone();
+        let batch = self.batch_at(idx);
         self.step_on(&batch)
     }
 
     /// Run `n` steps; returns summary stats.
     pub fn run_steps(&mut self, n: u64) -> Result<SessionStats> {
-        let start = self.step as usize;
-        self.fill_batch_cache(start + n as usize);
-        let batches: Vec<Batch> =
-            self.batch_cache[start..start + n as usize].to_vec();
         let mut first = None;
         let mut last = 0.0;
         let mut host = 0.0;
         let mut sim = 0.0;
-        for batch in &batches {
-            let r = self.step_on(batch)?;
+        for _ in 0..n {
+            let idx = self.step as usize;
+            let batch = self.batch_at(idx);
+            let r = self.step_on(&batch)?;
             first.get_or_insert(r.loss);
             last = r.loss;
             host += r.host_time_s;
@@ -437,11 +522,14 @@ impl Session {
     }
 
     /// Evaluation loss over the held-out split (LM + classification).
+    /// Parameters are materialized once per call (an eval boundary),
+    /// not per batch.
     pub fn eval_loss(&self) -> Result<f64> {
         let prog = self
             .loss_prog
             .as_ref()
             .context("no loss_eval artifact for this config/batch")?;
+        let params = self.state.param_literals()?;
         let mut b = Batcher::new(
             &self.bpe,
             &self.data.eval,
@@ -456,8 +544,7 @@ impl Session {
         for _ in 0..n_batches {
             let batch = b.next();
             let [ids, mask, labels] = self.batch_literals(&batch)?;
-            let mut inputs: Vec<&Literal> = Vec::new();
-            inputs.extend(self.params.refs());
+            let mut inputs: Vec<&Literal> = params.iter().collect();
             inputs.push(&ids);
             inputs.push(&mask);
             inputs.push(&labels);
@@ -476,6 +563,7 @@ impl Session {
             .eval_prog
             .as_ref()
             .context("no eval artifact for this config/batch")?;
+        let params = self.state.param_literals()?;
         let mut b = Batcher::new(
             &self.bpe,
             &self.data.eval,
@@ -491,8 +579,7 @@ impl Session {
         for _ in 0..n_batches {
             let batch = b.next();
             let [ids, mask, _labels] = self.batch_literals(&batch)?;
-            let mut inputs: Vec<&Literal> = Vec::new();
-            inputs.extend(self.params.refs());
+            let mut inputs: Vec<&Literal> = params.iter().collect();
             inputs.push(&ids);
             inputs.push(&mask);
             let outs = prog.execute(&inputs)?;
@@ -539,7 +626,8 @@ impl Session {
             ck.optimizer.label(),
             self.optimizer.label()
         );
-        self.params = ck.load_params(&self.cfg)?;
+        let params = ck.load_params(&self.cfg)?;
+        self.state.load_params(&params)?;
         match &mut self.driver {
             Driver::MeZo(d) => {
                 d.cfg.master_seed = ck.master_seed;
@@ -547,8 +635,7 @@ impl Session {
             }
             Driver::Adam(d) => {
                 let (m, v) = ck.load_adam_state(&self.cfg)?;
-                d.m = m;
-                d.v = v;
+                self.state.load_adam(&m, &v)?;
                 d.step = ck.step;
             }
         }

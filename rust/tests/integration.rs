@@ -194,10 +194,11 @@ fn checkpoint_resume_is_exact() {
         .build()
         .unwrap();
     a.run_steps(4).unwrap();
+    let a_params = a.params().unwrap();
     Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, a.step, 11,
-                     0.0, &a.params, None)
+                     0.0, &a_params, None)
         .unwrap();
-    let params_at_4 = a.params.to_bytes().unwrap();
+    let params_at_4 = a_params.to_bytes().unwrap();
     let a6 = a.run_steps(2).unwrap().last_loss;
 
     // restore the checkpoint into a fresh session and run the same 2
@@ -254,8 +255,9 @@ fn resume_reproduces_seed_and_loss_sequence_with_huge_master_seed() {
     for _ in 0..3 {
         got.push(b.step().unwrap().loss);
     }
+    let b_params = b.params().unwrap();
     Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, b.step,
-                     big_seed, *got.last().unwrap(), &b.params, None)
+                     big_seed, *got.last().unwrap(), &b_params, None)
         .unwrap();
     drop(b);
 
@@ -394,4 +396,168 @@ fn model_state_roundtrip_through_real_config() {
     let st2 = pocketllm::runtime::ModelState::from_bytes(cfg, &bytes).unwrap();
     assert_eq!(st.tensors[0].f32_vec().unwrap(),
                st2.tensors[0].f32_vec().unwrap());
+}
+
+// ---------------------------------------------------------------------
+// buffer-donation (run_in_place) vs literal (run) execution paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn in_place_and_run_paths_are_bit_identical_mezo() {
+    // the donation path must change WHERE tensors live, never what the
+    // step computes: identical loss sequences and identical final
+    // parameter bytes
+    let rt = runtime();
+    let run_with = |compat: bool| {
+        let mut s = SessionBuilder::new(&rt, "pocket-tiny")
+            .optimizer(OptimizerKind::MeZo)
+            .seed(21)
+            .compat_exec(compat)
+            .build()
+            .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            losses.push(s.step().unwrap().loss);
+        }
+        (losses, s.params().unwrap().to_bytes().unwrap())
+    };
+    let (l_inplace, p_inplace) = run_with(false);
+    let (l_run, p_run) = run_with(true);
+    assert_eq!(l_inplace, l_run, "loss trajectories must match");
+    assert_eq!(p_inplace, p_run, "parameter bytes must match");
+}
+
+#[test]
+fn in_place_and_run_paths_are_bit_identical_adam() {
+    let rt = runtime();
+    let run_with = |compat: bool| {
+        let mut s = SessionBuilder::new(&rt, "pocket-tiny-fast")
+            .optimizer(OptimizerKind::Adam)
+            .seed(23)
+            .compat_exec(compat)
+            .build()
+            .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            losses.push(s.step().unwrap().loss);
+        }
+        let (m, v) = s.adam_state().unwrap();
+        (
+            losses,
+            s.params().unwrap().to_bytes().unwrap(),
+            m.to_bytes().unwrap(),
+            v.to_bytes().unwrap(),
+        )
+    };
+    let a = run_with(false);
+    let b = run_with(true);
+    assert_eq!(a.0, b.0, "loss trajectories must match");
+    assert_eq!(a.1, b.1, "parameter bytes must match");
+    assert_eq!(a.2, b.2, "adam m bytes must match");
+    assert_eq!(a.3, b.3, "adam v bytes must match");
+}
+
+#[test]
+fn in_place_path_matches_run_path_across_checkpoint_restore() {
+    // reference: the literal run() path, 6 uninterrupted steps; the
+    // donation path must reproduce it bit-exactly even when split by a
+    // checkpoint save + restore into a fresh session
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("pocketllm_it_inplace_ck");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut r = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(31)
+        .compat_exec(true)
+        .build()
+        .unwrap();
+    let mut ref_losses = Vec::new();
+    for _ in 0..6 {
+        ref_losses.push(r.step().unwrap().loss);
+    }
+    let ref_params = r.params().unwrap().to_bytes().unwrap();
+
+    let mut a = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(31)
+        .build()
+        .unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        got.push(a.step().unwrap().loss);
+    }
+    let a_params = a.params().unwrap();
+    Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, a.step,
+                     31, *got.last().unwrap(), &a_params, None)
+        .unwrap();
+    drop(a);
+
+    let ck = Checkpoint::open(&dir).unwrap();
+    let mut b = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(31)
+        .build()
+        .unwrap();
+    b.restore(&ck).unwrap();
+    assert_eq!(b.step, 3);
+    for _ in 0..3 {
+        got.push(b.step().unwrap().loss);
+    }
+    assert_eq!(got, ref_losses,
+               "restored in-place run must replay the run() trajectory");
+    assert_eq!(b.params().unwrap().to_bytes().unwrap(), ref_params,
+               "final parameters must be bit-identical");
+}
+
+#[test]
+fn parallel_k_query_session_is_deterministic() {
+    // mezo_step_q4 drives the threaded SPSA pool; two sessions must
+    // still agree bit-for-bit (worker count never leaks into results)
+    let rt = runtime();
+    let run = || {
+        let mut s = SessionBuilder::new(&rt, "pocket-roberta")
+            .optimizer(OptimizerKind::MeZo)
+            .queries(4)
+            .seed(17)
+            .build()
+            .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(s.step().unwrap().loss);
+        }
+        (losses, s.params().unwrap().to_bytes().unwrap())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "k-query trajectories must be reproducible");
+}
+
+// ---------------------------------------------------------------------
+// capped batch window (recompute-on-miss)
+// ---------------------------------------------------------------------
+
+#[test]
+fn capped_batch_window_replays_the_same_stream() {
+    // a tiny window forces eviction + deterministic regeneration; the
+    // trajectory must match an uncapped session exactly, and the
+    // resident cache must stay bounded
+    let rt = runtime();
+    let losses_with_window = |w: usize| {
+        let mut s = SessionBuilder::new(&rt, "pocket-tiny")
+            .optimizer(OptimizerKind::MeZo)
+            .seed(37)
+            .batch_window(w)
+            .build()
+            .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            losses.push(s.step().unwrap().loss);
+        }
+        losses
+    };
+    let capped = losses_with_window(2);
+    let wide = losses_with_window(1024);
+    assert_eq!(capped, wide,
+               "window size must never change the batch stream");
 }

@@ -129,9 +129,11 @@ fn golden_configs_match_python_param_layout() {
 fn encoder_loss_and_logits_match_jax() {
     let cfg = golden_enc();
     let p = golden_params(&cfg);
-    let l = model::loss(&cfg, &p, &IDS, &MASK, &LABELS_CLS, 2, 6);
+    let l = model::loss(&cfg, &p, &IDS, &MASK, &LABELS_CLS, 2, 6,
+                        &mut model::Scratch::new());
     close(l, 1.060_763_6, 2e-4, "encoder loss_eval");
-    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6);
+    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6,
+                           &mut model::Scratch::new());
     let want: [f32; 6] = [
         0.012_931_107, -0.083_361_536, 0.058_144_696, 0.013_024_121,
         -0.083_118_81, 0.058_435_928,
@@ -145,9 +147,11 @@ fn encoder_loss_and_logits_match_jax() {
 fn decoder_loss_and_logits_match_jax() {
     let cfg = golden_dec();
     let p = golden_params(&cfg);
-    let l = model::loss(&cfg, &p, &IDS, &MASK, &IDS, 2, 6);
+    let l = model::loss(&cfg, &p, &IDS, &MASK, &IDS, 2, 6,
+                        &mut model::Scratch::new());
     close(l, 2.568_747_3, 3e-4, "decoder loss_eval");
-    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6);
+    let lg = model::logits(&cfg, &p, &IDS, &MASK, 2, 6,
+                           &mut model::Scratch::new());
     let want: [f32; 6] = [
         0.022_800_053, -0.000_762_739_2, 0.001_808_712_5, 0.014_508_689,
         0.004_410_263, -0.005_158_985,
@@ -162,7 +166,8 @@ fn encoder_mezo_step_matches_jax() {
     let cfg = golden_enc();
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
-                         1e-2, 1e-3, ProgramKind::Mezo)
+                         1e-2, 1e-3, ProgramKind::Mezo,
+                 &mut model::Scratch::new())
         .unwrap();
     close(loss, 1.060_764_6, 2e-4, "mezo loss");
     // embed.tok head of the update stream
@@ -185,7 +190,8 @@ fn decoder_mezo_step_matches_jax() {
     let cfg = golden_dec();
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
-                         1e-3, ProgramKind::Mezo)
+                         1e-3, ProgramKind::Mezo,
+                 &mut model::Scratch::new())
         .unwrap();
     close(loss, 2.568_747_5, 3e-4, "mezo loss");
     let want_p0: [f32; 4] =
@@ -206,7 +212,8 @@ fn multi_query_mezo_matches_jax() {
     let cfg = golden_enc();
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
-                         1e-2, 1e-3, ProgramKind::MezoMulti(2))
+                         1e-2, 1e-3, ProgramKind::MezoMulti(2),
+                 &mut model::Scratch::new())
         .unwrap();
     close(loss, 1.060_764_9, 2e-4, "q2 loss");
     let want_p0: [f32; 4] =
@@ -218,7 +225,8 @@ fn multi_query_mezo_matches_jax() {
     let cfg = golden_dec();
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
-                         1e-3, ProgramKind::MezoMulti(2))
+                         1e-3, ProgramKind::MezoMulti(2),
+                 &mut model::Scratch::new())
         .unwrap();
     close(loss, 2.568_747, 3e-4, "q2 dec loss");
     let want_p0: [f32; 4] =
@@ -241,7 +249,8 @@ fn encoder_adam_step_matches_jax_autodiff() {
     let mut m = zeros(&cfg);
     let mut v = zeros(&cfg);
     let loss = adam_step(&cfg, &mut w, &mut m, &mut v, &IDS, &MASK,
-                         &LABELS_CLS, 2, 6, 1.0, 1e-3)
+                         &LABELS_CLS, 2, 6, 1.0, 1e-3,
+                         &mut model::Scratch::new())
         .unwrap();
     close(loss, 1.060_763_6, 2e-4, "adam loss");
     // PAD-token embedding gets exactly zero gradient -> unchanged
@@ -280,7 +289,8 @@ fn decoder_adam_step_matches_jax_autodiff() {
         cfg.params.iter().map(|s| vec![0.0; s.elements()]).collect();
     let mut v = m.clone();
     let loss = adam_step(&cfg, &mut w, &mut m, &mut v, &IDS, &MASK, &IDS,
-                         2, 6, 1.0, 1e-3)
+                         2, 6, 1.0, 1e-3,
+                         &mut model::Scratch::new())
         .unwrap();
     close(loss, 2.568_747_3, 3e-4, "adam dec loss");
     // tied embedding: grads flow into embed.tok row 0 via the LM head
