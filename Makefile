@@ -19,19 +19,22 @@ test:
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
 
-# Perf trail: run the two hot-path benches with fixed iteration counts
-# and write BENCH_hotpath.json / BENCH_walltime.json at the repo root
-# (machine-readable; CI archives them, perf PRs diff them).  Override
-# iteration counts for a smoke run: `make bench HOTPATH_ITERS=2
-# TABLE2_ITERS=2`.
+# Perf trail: run the perf benches with fixed iteration counts and
+# write BENCH_hotpath.json / BENCH_walltime.json / BENCH_fleet.json at
+# the repo root (machine-readable; CI archives them, perf PRs diff
+# them).  Override iteration counts for a smoke run: `make bench
+# HOTPATH_ITERS=2 TABLE2_ITERS=2 FLEET_ITERS=2`.
 HOTPATH_ITERS ?= 30
 TABLE2_ITERS ?= 8
+FLEET_ITERS ?= 5
 
 bench:
 	HOTPATH_ITERS=$(HOTPATH_ITERS) BENCH_JSON=BENCH_hotpath.json \
 	    cargo bench --bench hotpath
 	TABLE2_ITERS=$(TABLE2_ITERS) BENCH_JSON=BENCH_walltime.json \
 	    cargo bench --bench table2_walltime
+	FLEET_ITERS=$(FLEET_ITERS) BENCH_JSON=BENCH_fleet.json \
+	    cargo bench --bench fleet_throughput
 
 # The full bench suite (fig1 curves, memory table, ablations, ...).
 bench-all:

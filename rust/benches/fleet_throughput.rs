@@ -1,0 +1,103 @@
+//! Bench: fleet throughput vs worker count.
+//!
+//! Runs the same N-job fleet (pocket-tiny MeZO, permissive policy so
+//! the measurement is compute, not simulated waiting) at 1 / 2 / 4
+//! workers and reports wall-clock plus derived speedups.  Because the
+//! fleet's determinism contract says results never depend on the
+//! worker count, the bench also cross-checks that the three runs
+//! produced identical outcomes — a perf regression harness and a
+//! correctness canary in one.  Writes `BENCH_fleet.json` (override
+//! with `BENCH_JSON=path`).
+//!
+//! Knobs: `FLEET_ITERS` (timed iterations per worker count, default 5),
+//! `FLEET_JOBS` (jobs per fleet, default 8), `FLEET_STEPS` (steps per
+//! job, default 8).
+
+use pocketllm::coordinator::{CoordinatorConfig, FleetConfig,
+                             FleetScheduler, JobSpec};
+use pocketllm::data::task::TaskKind;
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::scheduler::Policy;
+use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("FLEET_ITERS", 5) as usize;
+    let n_jobs = env_u64("FLEET_JOBS", 8) as usize;
+    let steps = env_u64("FLEET_STEPS", 8);
+    let rt = Runtime::new(
+        Manifest::load_or_builtin("artifacts/manifest.json")?)?;
+
+    let jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|i| {
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(steps)
+                .seed(100 + i as u64)
+        })
+        .collect();
+    let coord = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 4,
+        max_windows: 200,
+        ..Default::default()
+    };
+
+    let mut ms = Vec::new();
+    let mut fingerprints = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig { coord: coord.clone(), workers },
+        );
+        // correctness canary: outcome fingerprint must not depend on W
+        let report = fleet.run(&jobs)?;
+        assert_eq!(report.telemetry.failed, 0, "bench fleet failed");
+        fingerprints.push(format!("{:?}", report.outcomes));
+        ms.push(bench(
+            &format!("fleet {n_jobs} jobs x {steps} steps, \
+                      {workers} workers"),
+            1,
+            iters,
+            || {
+                let fleet = FleetScheduler::new(
+                    &rt,
+                    FleetConfig { coord: coord.clone(), workers },
+                );
+                std::hint::black_box(fleet.run(&jobs).unwrap());
+            },
+        ));
+    }
+    assert!(
+        fingerprints.windows(2).all(|w| w[0] == w[1]),
+        "fleet outcomes changed with worker count"
+    );
+
+    println!("{}", render("Fleet throughput vs worker count", &ms));
+    let mean = |i: usize| ms[i].stats.mean();
+    println!(
+        "speedup: {:.2}x with 2 workers, {:.2}x with 4 workers \
+         (outcomes bit-identical across all three)",
+        mean(0) / mean(1),
+        mean(0) / mean(2)
+    );
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_fleet.json".into());
+    dump_json(
+        &out,
+        "Fleet throughput vs worker count",
+        &ms,
+        &[
+            ("jobs", n_jobs as f64),
+            ("steps_per_job", steps as f64),
+            ("fleet_1w_ms", mean(0) * 1e3),
+            ("fleet_2w_ms", mean(1) * 1e3),
+            ("fleet_4w_ms", mean(2) * 1e3),
+            ("speedup_2w", mean(0) / mean(1)),
+            ("speedup_4w", mean(0) / mean(2)),
+        ],
+    )?;
+    println!("wrote {out}");
+    Ok(())
+}

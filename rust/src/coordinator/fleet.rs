@@ -1,0 +1,240 @@
+//! The fleet scheduler: N personalization jobs, W workers, one shared
+//! [`Runtime`] — the "millions of users" axis of the ROADMAP.
+//!
+//! Each job is an independent [`JobRun`] (own `Session`/`ExecState`,
+//! own simulated device envelope, own `DayTrace`, own policy clock).
+//! Workers pull jobs from a shared ready queue, drive exactly **one
+//! simulated window** ([`JobRun::advance`]), and requeue the job —
+//! window-by-window interleaving, not job-at-a-time, so W workers keep
+//! W sessions resident instead of serializing whole jobs.
+//!
+//! ## Determinism contract
+//!
+//! Fleet results are **bit-identical for any worker count**, pinned in
+//! `rust/tests/fleet.rs` against the sequential
+//! [`Coordinator::run_queue`](super::Coordinator::run_queue) oracle:
+//!
+//! * a `JobRun` touches no shared mutable state — parameters, RNG,
+//!   batcher, trace, thermal clock are all job-local, and the shared
+//!   `Runtime` only serves immutable compiled programs from behind its
+//!   cache lock;
+//! * events and metrics accumulate **per job** and are folded in job
+//!   order after the pool drains, so thread timing can reorder work but
+//!   never observable results.
+//!
+//! What the worker count *does* change is wall-clock — measured by
+//! `benches/fleet_throughput.rs` (`BENCH_fleet.json`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::{CoordinatorConfig, Event, JobOutcome, JobRun, JobSpec,
+            JobStatus};
+use crate::runtime::Runtime;
+use crate::telemetry::MetricLog;
+
+/// Fleet configuration: the per-job coordinator envelope plus the
+/// worker pool width.
+#[derive(Clone)]
+pub struct FleetConfig {
+    /// Per-job policy/device/trace envelope (every job gets its own
+    /// simulated device and trace built from this).
+    pub coord: CoordinatorConfig,
+    /// Worker threads driving the fleet (clamped to >= 1).  Changes
+    /// throughput only, never results.
+    pub workers: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { coord: CoordinatorConfig::default(), workers: 2 }
+    }
+}
+
+/// Fleet-level telemetry aggregated from per-job outcomes and events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetTelemetry {
+    pub jobs: usize,
+    pub completed: usize,
+    pub stalled: usize,
+    pub failed: usize,
+    /// completed / jobs, in [0, 1].
+    pub completion_rate: f64,
+    /// Jobs that were relaunched with MeZO after an Adam admission OOM.
+    pub oom_fallbacks: usize,
+    pub windows_used: usize,
+    pub windows_denied: usize,
+    /// Denied-window histogram by policy reason.
+    pub denied_by_reason: BTreeMap<&'static str, usize>,
+    /// Aggregate simulated device step-seconds across the fleet.
+    pub sim_step_seconds: f64,
+}
+
+impl FleetTelemetry {
+    fn from_results(outcomes: &[JobOutcome], events: &[Event])
+        -> FleetTelemetry
+    {
+        // complete histogram: every policy gate appears, zero or not
+        let denied_by_reason: BTreeMap<&'static str, usize> =
+            crate::scheduler::DenyReason::ALL
+                .iter()
+                .map(|r| (r.label(), 0))
+                .collect();
+        let mut t = FleetTelemetry {
+            jobs: outcomes.len(),
+            completed: 0,
+            stalled: 0,
+            failed: 0,
+            completion_rate: 0.0,
+            oom_fallbacks: 0,
+            windows_used: 0,
+            windows_denied: 0,
+            denied_by_reason,
+            sim_step_seconds: 0.0,
+        };
+        for o in outcomes {
+            match o.status {
+                JobStatus::Completed => t.completed += 1,
+                JobStatus::Stalled => t.stalled += 1,
+                JobStatus::Failed => t.failed += 1,
+            }
+            t.windows_used += o.windows_used;
+            t.windows_denied += o.windows_denied;
+            t.sim_step_seconds += o.sim_step_seconds;
+        }
+        for e in events {
+            match e {
+                Event::OomFallback { .. } => t.oom_fallbacks += 1,
+                Event::Denied { reason, .. } => {
+                    *t.denied_by_reason.entry(*reason).or_insert(0) += 1;
+                }
+                _ => {}
+            }
+        }
+        if !outcomes.is_empty() {
+            t.completion_rate = t.completed as f64 / t.jobs as f64;
+        }
+        t
+    }
+}
+
+/// Everything a fleet run produces.
+pub struct FleetReport {
+    /// Per-job outcomes, in job order.
+    pub outcomes: Vec<JobOutcome>,
+    /// All job events, grouped per job in job order — identical to the
+    /// event stream the sequential `run_queue` oracle records.
+    pub events: Vec<Event>,
+    /// Per-job metric series (`job{i}.loss`) merged in job order.
+    pub metrics: MetricLog,
+    pub telemetry: FleetTelemetry,
+}
+
+/// A unit of queued fleet work: a job not yet admitted, or a live run
+/// between two windows.
+enum Task {
+    Fresh(usize, JobSpec),
+    Running(Box<JobRun>),
+}
+
+/// The fleet scheduler: multiplexes N jobs over W workers sharing one
+/// `Runtime`.
+pub struct FleetScheduler<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: FleetConfig,
+}
+
+impl<'rt> FleetScheduler<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: FleetConfig) -> Self {
+        FleetScheduler { rt, cfg }
+    }
+
+    /// Run every job to a terminal state.  Errors from any worker abort
+    /// the fleet (first error wins; remaining queued work is dropped).
+    pub fn run(&self, jobs: &[JobSpec]) -> Result<FleetReport> {
+        let n = jobs.len();
+        let queue: Mutex<VecDeque<Task>> = Mutex::new(
+            jobs.iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, j)| Task::Fresh(i, j))
+                .collect(),
+        );
+        type Finished = (JobOutcome, Vec<Event>, MetricLog);
+        let finished: Mutex<Vec<Option<Finished>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        let workers = self.cfg.workers.max(1).min(n.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    if failure.lock().unwrap().is_some() {
+                        return;
+                    }
+                    let task = queue.lock().unwrap().pop_front();
+                    let Some(task) = task else { return };
+                    let mut run = match task {
+                        Task::Running(r) => r,
+                        Task::Fresh(idx, spec) => {
+                            match JobRun::new(self.rt, &self.cfg.coord,
+                                              idx, &spec)
+                            {
+                                Ok(r) => Box::new(r),
+                                Err(e) => {
+                                    failure
+                                        .lock()
+                                        .unwrap()
+                                        .get_or_insert(e);
+                                    return;
+                                }
+                            }
+                        }
+                    };
+                    match run.advance() {
+                        Ok(true) => {
+                            // one window done; requeue at the back so
+                            // ready jobs round-robin across workers
+                            queue
+                                .lock()
+                                .unwrap()
+                                .push_back(Task::Running(run));
+                        }
+                        Ok(false) => {
+                            let idx = run.idx;
+                            finished.lock().unwrap()[idx] =
+                                Some(run.finish());
+                        }
+                        Err(e) => {
+                            failure.lock().unwrap().get_or_insert(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
+        }
+
+        // deterministic aggregation: fold per-job streams in job order
+        let mut outcomes = Vec::with_capacity(n);
+        let mut events = Vec::new();
+        let mut metrics = MetricLog::new();
+        for (i, slot) in
+            finished.into_inner().unwrap().into_iter().enumerate()
+        {
+            let (outcome, ev, m) = slot.unwrap_or_else(|| {
+                panic!("job {i} never reached a terminal state")
+            });
+            outcomes.push(outcome);
+            events.extend(ev);
+            metrics.merge(m);
+        }
+        let telemetry = FleetTelemetry::from_results(&outcomes, &events);
+        Ok(FleetReport { outcomes, events, metrics, telemetry })
+    }
+}

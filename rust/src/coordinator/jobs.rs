@@ -54,6 +54,11 @@ pub enum JobStatus {
 }
 
 /// What happened to a job.
+///
+/// No `PartialEq`: `final_loss` is NaN for failed (and zero-step) jobs,
+/// so derived equality would be silently always-false there — compare
+/// via `Debug` formatting (shortest-roundtrip, NaN-stable), as the
+/// fleet determinism tests do.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub status: JobStatus,
@@ -64,6 +69,9 @@ pub struct JobOutcome {
     pub final_loss: f64,
     pub windows_used: usize,
     pub windows_denied: usize,
+    /// Total simulated step wall-clock this job consumed (seconds) —
+    /// the fleet aggregates this into device-time telemetry.
+    pub sim_step_seconds: f64,
 }
 
 #[cfg(test)]

@@ -10,26 +10,40 @@
 //! * OOM handling with **derivative-free fallback**: if a job configured
 //!   with Adam fails device admission — the paper's Table 1 bs=64 event —
 //!   the coordinator relaunches it with MeZO instead of crashing.  This
-//!   is the paper's thesis operationalized as a scheduling policy.
+//!   is the paper's thesis operationalized as a scheduling policy.  The
+//!   OOM is detected by *type* ([`crate::device::OomError`] anywhere in
+//!   the error chain), not by string matching, so context-wrapped or
+//!   reworded errors cannot silently disable the fallback.
 //!
 //! Execution is simulation-clocked: each policy window advances the
 //! phone-state trace, while the underlying steps run for real on the
 //! configured execution backend.
+//!
+//! The per-job lifecycle lives in [`JobRun`], an incremental state
+//! machine ([`JobRun::advance`] consumes exactly one simulated window).
+//! [`Coordinator::run_job`] drives one `JobRun` to completion; the
+//! [`fleet`] scheduler drives many of them window-by-window across a
+//! worker pool, with bit-identical results (each `JobRun` owns its
+//! events and metrics, so aggregation order is a pure function of the
+//! job index, never of thread timing).
 
+pub mod fleet;
 pub mod jobs;
 
+pub use fleet::{FleetConfig, FleetReport, FleetScheduler, FleetTelemetry};
 pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
 use anyhow::Result;
 
-use crate::device::Device;
+use crate::device::{Device, OomError};
 use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::scheduler::{DayTrace, Policy};
 use crate::telemetry::MetricLog;
-use crate::tuner::session::SessionBuilder;
+use crate::tuner::session::{Session, SessionBuilder};
 
 /// Coordinator configuration.
+#[derive(Clone)]
 pub struct CoordinatorConfig {
     pub device_preset: String,
     pub policy: Policy,
@@ -66,6 +80,240 @@ pub enum Event {
     Failed { job: usize, error: String },
 }
 
+/// Typed OOM detection: is there an [`OomError`] anywhere in the error
+/// chain?  This is the admission-failure test the Adam→MeZO fallback
+/// keys on — it sees through any number of `context()` frames, and a
+/// reworded message can't break it (pinned in this module's tests).
+pub fn error_is_oom(e: &anyhow::Error) -> bool {
+    e.is::<OomError>()
+}
+
+/// One job's incremental execution: admission (with OOM fallback)
+/// happens in [`JobRun::new`]; each [`advance`](JobRun::advance) then
+/// consumes exactly one simulated policy window.  Events and metrics
+/// accumulate locally, so many `JobRun`s can progress concurrently and
+/// still aggregate deterministically.
+pub struct JobRun {
+    pub idx: usize,
+    spec: JobSpec,
+    cfg: CoordinatorConfig,
+    trace: DayTrace,
+    session: Option<Session>,
+    optimizer: OptimizerKind,
+    steps_done: u64,
+    last_loss: f64,
+    windows: usize,
+    denied: usize,
+    /// Next window index (counts denied windows too — it is the
+    /// simulated-time axis, matching the old `for w in 0..max_windows`).
+    window_idx: usize,
+    sim_step_seconds: f64,
+    done: Option<JobOutcome>,
+    pub events: Vec<Event>,
+    pub metrics: MetricLog,
+}
+
+impl JobRun {
+    /// Admit a job on a fresh simulated device, falling back from Adam
+    /// to MeZO on a typed OOM.  A non-OOM admission failure yields a
+    /// `JobRun` already in the `Failed` terminal state (with the event
+    /// recorded); only environment errors (unknown preset) are `Err`.
+    pub fn new(
+        rt: &Runtime,
+        cfg: &CoordinatorConfig,
+        idx: usize,
+        spec: &JobSpec,
+    ) -> Result<JobRun> {
+        // jobs are queued while the user is awake (default 09:00); the
+        // overnight policy then makes the coordinator wait for the
+        // charger — exactly the deployment story the paper motivates
+        let trace = DayTrace::new(
+            cfg.trace_seed,
+            cfg.trace_step_minutes,
+            crate::device::spec::preset(&cfg.device_preset)
+                .map(|s| s.ram_bytes)
+                .unwrap_or(12_000_000_000),
+        )
+        .starting_at(9.0);
+
+        let mut events = Vec::new();
+        let mut optimizer = spec.optimizer;
+        let mut session = None;
+        let mut done = None;
+
+        // device admission, with derivative-free fallback on OOM
+        loop {
+            let device = Device::preset(&cfg.device_preset)
+                .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+            let built = SessionBuilder::new(rt, &spec.config)
+                .optimizer(optimizer)
+                .batch_size(spec.batch)
+                .task(spec.task)
+                .seed(spec.seed)
+                .device(device)
+                .build();
+            match built {
+                Ok(s) => {
+                    session = Some(s);
+                    break;
+                }
+                Err(e) if error_is_oom(&e)
+                    && optimizer == OptimizerKind::Adam =>
+                {
+                    events.push(Event::OomFallback {
+                        job: idx,
+                        from: "adam",
+                        to: "mezo",
+                    });
+                    optimizer = OptimizerKind::MeZo;
+                }
+                Err(e) => {
+                    events.push(Event::Failed {
+                        job: idx,
+                        error: format!("{e:#}"),
+                    });
+                    done = Some(JobOutcome {
+                        status: JobStatus::Failed,
+                        optimizer,
+                        steps_done: 0,
+                        final_loss: f64::NAN,
+                        windows_used: 0,
+                        windows_denied: 0,
+                        sim_step_seconds: 0.0,
+                    });
+                    break;
+                }
+            }
+        }
+
+        Ok(JobRun {
+            idx,
+            spec: spec.clone(),
+            cfg: cfg.clone(),
+            trace,
+            session,
+            optimizer,
+            steps_done: 0,
+            last_loss: f64::NAN,
+            windows: 0,
+            denied: 0,
+            window_idx: 0,
+            sim_step_seconds: 0.0,
+            done,
+            events,
+            metrics: MetricLog::new(),
+        })
+    }
+
+    /// Whether the job has reached a terminal state.  (The in-crate
+    /// drivers use [`advance`](JobRun::advance)'s return value instead;
+    /// this and [`outcome`](JobRun::outcome) exist for external callers
+    /// that inspect a run without consuming it via
+    /// [`finish`](JobRun::finish).)
+    pub fn is_done(&self) -> bool {
+        self.done.is_some()
+    }
+
+    /// The terminal outcome, once [`is_done`](JobRun::is_done).
+    pub fn outcome(&self) -> Option<&JobOutcome> {
+        self.done.as_ref()
+    }
+
+    fn outcome_with(&self, status: JobStatus) -> JobOutcome {
+        JobOutcome {
+            status,
+            optimizer: self.optimizer,
+            steps_done: self.steps_done,
+            final_loss: self.last_loss,
+            windows_used: self.windows,
+            windows_denied: self.denied,
+            sim_step_seconds: self.sim_step_seconds,
+        }
+    }
+
+    /// Drive one simulated policy window.  Returns `true` while the job
+    /// still has work; `false` once it is terminal (completed, stalled,
+    /// or failed at admission).
+    pub fn advance(&mut self) -> Result<bool> {
+        if self.done.is_some() {
+            return Ok(false);
+        }
+        if self.steps_done >= self.spec.steps {
+            self.events.push(Event::Completed {
+                job: self.idx,
+                final_loss: self.last_loss,
+            });
+            self.done = Some(self.outcome_with(JobStatus::Completed));
+            return Ok(false);
+        }
+        if self.window_idx >= self.cfg.max_windows {
+            self.done = Some(self.outcome_with(JobStatus::Stalled));
+            return Ok(false);
+        }
+        let w = self.window_idx;
+        self.window_idx += 1;
+
+        let state = self.trace.next().expect("trace is infinite");
+        let session =
+            self.session.as_mut().expect("non-terminal run has a session");
+        match self.cfg.policy.admits(&state) {
+            Err(reason) => {
+                self.denied += 1;
+                self.events.push(Event::Denied {
+                    job: self.idx,
+                    reason: reason.label(),
+                });
+                // phone idles for ONE simulated window: thermal
+                // recovers partially (cool_for), not to ambient — two
+                // adjacent denied ticks must not reset a device that
+                // throttled for an hour
+                if let Some(dev) = session.device.as_mut() {
+                    dev.compute
+                        .cool_for(self.cfg.trace_step_minutes * 60.0);
+                }
+                return Ok(true);
+            }
+            Ok(()) => {
+                self.windows += 1;
+                self.events.push(Event::Admitted {
+                    job: self.idx,
+                    window: w,
+                });
+            }
+        }
+        let n = self
+            .cfg
+            .steps_per_window
+            .min(self.spec.steps - self.steps_done);
+        let stats = session.run_steps(n)?;
+        self.steps_done += n;
+        self.last_loss = stats.last_loss;
+        self.sim_step_seconds += stats.mean_sim_step_s * n as f64;
+        self.metrics.record(
+            &format!("job{}.loss", self.idx),
+            self.steps_done,
+            stats.last_loss,
+        );
+        self.events.push(Event::StepsDone {
+            job: self.idx,
+            steps: self.steps_done,
+            loss: stats.last_loss,
+        });
+        Ok(true)
+    }
+
+    /// Tear down and yield the outcome plus the job-local event and
+    /// metric streams (the unit fleet aggregation folds in job order).
+    pub fn finish(mut self) -> (JobOutcome, Vec<Event>, MetricLog) {
+        let outcome = self
+            .done
+            .take()
+            .expect("finish() called before the job reached a terminal \
+                     state");
+        (outcome, self.events, self.metrics)
+    }
+}
+
 /// The coordinator itself.
 pub struct Coordinator<'rt> {
     rt: &'rt Runtime,
@@ -82,127 +330,172 @@ impl<'rt> Coordinator<'rt> {
     /// Run one job to completion under the phone policy.  Returns the
     /// outcome; events accumulate in `self.events`.
     pub fn run_job(&mut self, idx: usize, job: &JobSpec) -> Result<JobOutcome> {
-        // jobs are queued while the user is awake (default 09:00); the
-        // overnight policy then makes the coordinator wait for the
-        // charger — exactly the deployment story the paper motivates
-        let mut trace = DayTrace::new(
-            self.cfg.trace_seed,
-            self.cfg.trace_step_minutes,
-            crate::device::spec::preset(&self.cfg.device_preset)
-                .map(|s| s.ram_bytes)
-                .unwrap_or(12_000_000_000),
-        )
-        .starting_at(9.0);
-
-        // device admission, with derivative-free fallback on OOM
-        let mut optimizer = job.optimizer;
-        let mut session = loop {
-            let device = Device::preset(&self.cfg.device_preset)
-                .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
-            let built = SessionBuilder::new(self.rt, &job.config)
-                .optimizer(optimizer)
-                .batch_size(job.batch)
-                .task(job.task)
-                .seed(job.seed)
-                .device(device)
-                .build();
-            match built {
-                Ok(s) => break s,
-                Err(e) if e.to_string().contains("OOM")
-                    && optimizer == OptimizerKind::Adam =>
-                {
-                    self.events.push(Event::OomFallback {
-                        job: idx,
-                        from: "adam",
-                        to: "mezo",
-                    });
-                    optimizer = OptimizerKind::MeZo;
-                }
-                Err(e) => {
-                    self.events.push(Event::Failed {
-                        job: idx,
-                        error: e.to_string(),
-                    });
-                    return Ok(JobOutcome {
-                        status: JobStatus::Failed,
-                        optimizer,
-                        steps_done: 0,
-                        final_loss: f64::NAN,
-                        windows_used: 0,
-                        windows_denied: 0,
-                    });
-                }
+        let mut run = JobRun::new(self.rt, &self.cfg, idx, job)?;
+        let err = loop {
+            match run.advance() {
+                Ok(true) => {}
+                Ok(false) => break None,
+                Err(e) => break Some(e),
             }
         };
-
-        let mut steps_done = 0u64;
-        let mut last_loss = f64::NAN;
-        let mut windows = 0usize;
-        let mut denied = 0usize;
-
-        for w in 0..self.cfg.max_windows {
-            if steps_done >= job.steps {
-                break;
-            }
-            let state = trace.next().expect("trace is infinite");
-            match self.cfg.policy.admits(&state) {
-                Err(reason) => {
-                    denied += 1;
-                    self.events.push(Event::Denied {
-                        job: idx,
-                        reason: reason.label(),
-                    });
-                    // phone idles; thermal recovers between windows
-                    if let Some(dev) = session.device.as_mut() {
-                        dev.compute.cool_down();
-                    }
-                    continue;
-                }
-                Ok(()) => {
-                    windows += 1;
-                    self.events.push(Event::Admitted { job: idx, window: w });
-                }
-            }
-            let n = self.cfg.steps_per_window.min(job.steps - steps_done);
-            let stats = session.run_steps(n)?;
-            steps_done += n;
-            last_loss = stats.last_loss;
-            self.metrics.record(
-                &format!("job{idx}.loss"),
-                steps_done,
-                stats.last_loss,
-            );
-            self.events.push(Event::StepsDone {
-                job: idx,
-                steps: steps_done,
-                loss: stats.last_loss,
-            });
+        // fold the job-local streams even when a step errored mid-run:
+        // the events up to the failure (admissions, OOM fallback, step
+        // history) are exactly what a failed run needs for diagnosis
+        self.events.extend(std::mem::take(&mut run.events));
+        self.metrics.merge(std::mem::take(&mut run.metrics));
+        if let Some(e) = err {
+            return Err(e);
         }
-
-        let status = if steps_done >= job.steps {
-            self.events.push(Event::Completed {
-                job: idx,
-                final_loss: last_loss,
-            });
-            JobStatus::Completed
-        } else {
-            JobStatus::Stalled
-        };
-        Ok(JobOutcome {
-            status,
-            optimizer,
-            steps_done,
-            final_loss: last_loss,
-            windows_used: windows,
-            windows_denied: denied,
-        })
+        let (outcome, _, _) = run.finish();
+        Ok(outcome)
     }
 
-    /// Run a queue of jobs sequentially (one model fits a phone at a time).
+    /// Run a queue of jobs sequentially (one model fits a phone at a
+    /// time).  This is also the determinism oracle the fleet scheduler
+    /// is pinned against: for any worker count,
+    /// [`FleetScheduler::run`](fleet::FleetScheduler::run) must produce
+    /// these exact outcomes, events, and metrics.
     pub fn run_queue(&mut self, jobs: &[JobSpec]) -> Result<Vec<JobOutcome>> {
         jobs.iter()
             .enumerate()
             .map(|(i, j)| self.run_job(i, j))
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task::TaskKind;
+    use crate::device::Category;
+    use crate::runtime::Manifest;
+    use anyhow::Context;
+
+    fn oom_error() -> OomError {
+        OomError {
+            requested: 10,
+            available: 5,
+            budget: 8,
+            category: Category::Activations,
+        }
+    }
+
+    #[test]
+    fn oom_detection_survives_context_wrapping() {
+        let plain = anyhow::Error::new(oom_error());
+        assert!(error_is_oom(&plain));
+
+        let wrapped = anyhow::Error::new(oom_error())
+            .context("building session")
+            .context("admitting job 3");
+        assert!(error_is_oom(&wrapped),
+                "context() frames must not hide the typed OomError");
+
+        // reworded string mentioning OOM is NOT an OOM: detection is
+        // typed, so a coincidental message can't trigger the fallback
+        let reworded = anyhow::anyhow!("device said OOM but politely");
+        assert!(!error_is_oom(&reworded));
+        let other: anyhow::Error =
+            std::io::Error::new(std::io::ErrorKind::Other, "disk full")
+                .into();
+        assert!(!error_is_oom(&other));
+    }
+
+    #[test]
+    fn session_build_oom_is_typed_even_with_context() {
+        // the real producer: SessionBuilder admission on a too-small
+        // phone, with an extra caller-side context frame on top
+        let rt = Runtime::new(Manifest::builtin()).unwrap();
+        let device = Device::preset("budget-phone-3gb").unwrap();
+        let err = SessionBuilder::new(&rt, "pocket-roberta")
+            .optimizer(OptimizerKind::Adam)
+            .batch_size(64)
+            .device(device)
+            .build()
+            .err()
+            .expect("adam bs64 must OOM on a 3 GB handset");
+        assert!(error_is_oom(&err));
+        let rewrapped =
+            Err::<(), _>(err).context("coordinator retry").unwrap_err();
+        assert!(error_is_oom(&rewrapped));
+        // the human-readable chain still names the OOM
+        assert!(format!("{rewrapped:#}").contains("OOM"));
+    }
+
+    #[test]
+    fn denied_windows_cool_partially_not_fully() {
+        // a job queued at 09:00 under the overnight policy is denied
+        // (not charging) for many consecutive ticks; a device that was
+        // throttling must cool by the window length, not reset
+        let rt = Runtime::new(Manifest::builtin()).unwrap();
+        let cfg = CoordinatorConfig {
+            policy: Policy::overnight(),
+            trace_step_minutes: 10.0,
+            ..Default::default()
+        };
+        let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                               OptimizerKind::MeZo)
+            .steps(4);
+        let mut run = JobRun::new(&rt, &cfg, 0, &job).unwrap();
+        run.session
+            .as_mut()
+            .unwrap()
+            .device
+            .as_mut()
+            .unwrap()
+            .compute
+            .advance(1800.0);
+
+        let sustained = |r: &JobRun| {
+            r.session
+                .as_ref()
+                .unwrap()
+                .device
+                .as_ref()
+                .unwrap()
+                .compute
+                .sustained_s()
+        };
+        assert!(run.advance().unwrap());
+        assert_eq!(run.denied, 1, "09:00 unplugged must be denied");
+        let after_one = sustained(&run);
+        assert!(run.advance().unwrap());
+        assert_eq!(run.denied, 2);
+        let after_two = sustained(&run);
+        // each denied 10-min tick credits 600 s * COOL_RATE = 300 s
+        assert!((after_one - 1500.0).abs() < 1e-9, "{after_one}");
+        assert!((after_two - 1200.0).abs() < 1e-9, "{after_two}");
+        assert!(after_two > 0.0,
+                "two adjacent denied ticks must not fully reset the \
+                 thermal clock");
+    }
+
+    #[test]
+    fn job_run_matches_run_job_event_stream() {
+        // the state machine IS run_job: same events, same outcome
+        let rt = Runtime::new(Manifest::builtin()).unwrap();
+        let cfg = CoordinatorConfig {
+            policy: Policy::always(),
+            steps_per_window: 2,
+            max_windows: 50,
+            ..Default::default()
+        };
+        let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                               OptimizerKind::MeZo)
+            .steps(6)
+            .seed(13);
+
+        let mut coord = Coordinator::new(&rt, cfg.clone());
+        let outcome = coord.run_job(0, &job).unwrap();
+
+        let mut run = JobRun::new(&rt, &cfg, 0, &job).unwrap();
+        while run.advance().unwrap() {}
+        let (o2, events, metrics) = run.finish();
+
+        assert_eq!(coord.events, events);
+        assert_eq!(format!("{outcome:?}"), format!("{o2:?}"));
+        assert_eq!(coord.metrics.to_csv(), metrics.to_csv());
+        assert_eq!(outcome.status, JobStatus::Completed);
+        assert_eq!(outcome.steps_done, 6);
     }
 }

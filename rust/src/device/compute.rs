@@ -112,12 +112,29 @@ impl ComputeModel {
         }
     }
 
+    /// Seconds of accumulated load one idle second removes: phones shed
+    /// heat slower than they build it under sustained load, so idle
+    /// recovery is deliberately not 1:1.
+    pub const COOL_RATE: f64 = 0.5;
+
     /// Advance the thermal clock by `dt` seconds of sustained load.
     pub fn advance(&mut self, dt: f64) {
         self.sustained_s += dt;
     }
 
-    /// Cool-down (idle): thermal clock resets.
+    /// Partial idle recovery: `dt_s` seconds of idle time walk the
+    /// thermal clock back by `dt_s * COOL_RATE`, clamped at fully
+    /// cool.  This is what a denied scheduler window credits — a
+    /// single idle 10-minute tick must NOT reset a device that has
+    /// been throttling for an hour (that was the old `cool_down()`
+    /// bug; pinned in `cool_for_is_partial_recovery`).
+    pub fn cool_for(&mut self, dt_s: f64) {
+        self.sustained_s =
+            (self.sustained_s - dt_s * Self::COOL_RATE).max(0.0);
+    }
+
+    /// Full cool-down (long idle / session teardown): thermal clock
+    /// resets to ambient.
     pub fn cool_down(&mut self) {
         self.sustained_s = 0.0;
     }
@@ -192,6 +209,41 @@ mod tests {
         let cooled = m.step_time(&ModelDims::roberta_large(),
                                  OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
         assert!((cooled.total_s() - cold.total_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cool_for_is_partial_recovery() {
+        let mut m = reno6();
+        m.advance(1800.0);
+        // two adjacent denied 10-minute windows: each credits
+        // 600 s * COOL_RATE = 300 s of load-clock
+        m.cool_for(600.0);
+        assert!((m.sustained_s() - 1500.0).abs() < 1e-9,
+                "{}", m.sustained_s());
+        m.cool_for(600.0);
+        assert!((m.sustained_s() - 1200.0).abs() < 1e-9,
+                "{}", m.sustained_s());
+        assert!(m.sustained_s() > 0.0,
+                "two denied ticks must not fully reset the thermal clock");
+        // a long idle stretch clamps at fully cool
+        m.cool_for(1e9);
+        assert_eq!(m.sustained_s(), 0.0);
+    }
+
+    #[test]
+    fn cool_for_keeps_hot_device_throttled() {
+        // behavioural version: after an hour of load, one idle tick
+        // must leave step times slower than cold
+        let mut m = reno6();
+        let cold = m.step_time(&ModelDims::roberta_large(),
+                               OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        m.advance(3600.0);
+        m.cool_for(600.0);
+        let warm = m.step_time(&ModelDims::roberta_large(),
+                               OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        assert!(warm.total_s() > cold.total_s() * 1.1,
+                "one denied tick fully cooled the device: {} vs {}",
+                warm.total_s(), cold.total_s());
     }
 
     #[test]

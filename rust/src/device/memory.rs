@@ -312,10 +312,26 @@ pub fn finetune_footprint_grad_accum(
     seq: usize,
     microbatch: usize,
 ) -> FootprintBreakdown {
+    finetune_footprint_grad_accum_with_runtime(dims, batch, seq,
+                                               microbatch,
+                                               (2.6 * 1e9) as u64)
+}
+
+/// Gradient-accumulation footprint with an explicit runtime-overhead
+/// charge, mirroring [`finetune_footprint_with_runtime`]'s signature so
+/// the ablation can model stacks other than Termux+PyTorch (e.g. this
+/// crate's ~0.3 GB rust runtime).
+pub fn finetune_footprint_grad_accum_with_runtime(
+    dims: &ModelDims,
+    batch: usize,
+    seq: usize,
+    microbatch: usize,
+    runtime_bytes: u64,
+) -> FootprintBreakdown {
     let micro = microbatch.min(batch).max(1);
     let full = finetune_footprint_with_runtime(
         dims, OptimizerFamily::DerivativeBased, micro, seq,
-        (2.6 * 1e9) as u64);
+        runtime_bytes);
     // accumulation buffer == gradient tensor (already charged); only the
     // activation term shrinks to the microbatch
     full
@@ -415,6 +431,18 @@ mod tests {
         // ...but the 3 parameter-sized states remain: MeZO still wins
         assert_eq!(accum.gradients, dims.n_params() * 4);
         assert!(accum.total() > mezo.total() + 3 * dims.n_params() * 4);
+
+        // the runtime charge is a parameter, not a Termux constant:
+        // the rust-runtime stack shaves exactly the runtime delta
+        let termux = (2.6 * 1e9) as u64;
+        let rust_rt = (0.3 * 1e9) as u64;
+        let lean = finetune_footprint_grad_accum_with_runtime(
+            &dims, 64, 32, 8, rust_rt);
+        assert_eq!(lean.runtime, rust_rt);
+        assert_eq!(accum.runtime, termux);
+        assert_eq!(accum.total() - lean.total(), termux - rust_rt);
+        assert_eq!(lean.activations, accum.activations);
+        assert_eq!(lean.gradients, accum.gradients);
     }
 
     #[test]

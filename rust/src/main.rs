@@ -8,6 +8,8 @@
 //!              table2, opt13b, ablation, sweep, frontier, all)
 //!   daemon     run the policy-gated personalization coordinator over a
 //!              simulated day of phone state
+//!   fleet      multiplex N personalization jobs over a worker pool
+//!              sharing one runtime (deterministic for any -W)
 //!   devices    list device presets
 //!   artifacts  list AOT programs in the manifest
 //! ```
@@ -21,7 +23,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use pocketllm::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, FleetConfig,
+                             FleetScheduler, JobSpec};
 use pocketllm::data::task::TaskKind;
 use pocketllm::device::Device;
 use pocketllm::optim::{OptimizerKind, Schedule};
@@ -35,13 +38,15 @@ use pocketllm::util::args::Args;
 const VALUE_FLAGS: &[&str] = &[
     "model", "task", "optimizer", "steps", "batch", "lr", "eps", "seed",
     "device", "artifacts", "csv", "checkpoint", "schedule", "windows",
-    "report-steps", "trace-seed", "steps-per-window",
+    "report-steps", "trace-seed", "steps-per-window", "queries",
+    "batch-window", "jobs", "workers", "policy",
 ];
 
 fn usage() -> &'static str {
     "pocketllm — on-device LLM fine-tuning via derivative-free optimization
 
-USAGE: pocketllm <finetune|eval|report|daemon|devices|artifacts> [flags]
+USAGE: pocketllm <finetune|eval|report|daemon|fleet|devices|artifacts>
+                 [flags]
 
 COMMON FLAGS
   --artifacts DIR    artifact directory (default: artifacts)
@@ -53,6 +58,10 @@ COMMON FLAGS
   --lr F | --schedule S   learning rate (const:X, linear:A:B:N, cosine:..)
   --eps F            MeZO perturbation scale (default: 1e-3)
   --seed N           master seed (default: 42)
+  --queries K        k-query SPSA: average K two-point estimates per
+                     step (needs a mezo_step_q{K} artifact; default 1)
+  --batch-window N   resident batch-cache window; older batches are
+                     regenerated deterministically (default 512)
   --device NAME      simulate a device envelope (oppo-reno6, pixel-4a, ...)
   --csv PATH         dump step metrics as CSV
   --checkpoint DIR   save a checkpoint at the end (MeZO sessions)
@@ -64,6 +73,14 @@ REPORT
 DAEMON
   pocketllm daemon [--steps N] [--windows N] [--steps-per-window N]
                    [--trace-seed N]
+
+FLEET
+  pocketllm fleet [--jobs N] [--workers W] [--steps N] [--model NAME]
+                  [--policy overnight|always] [--windows N]
+                  [--steps-per-window N] [--trace-seed N]
+  Runs N independent personalization jobs (seeds 42, 43, ...) over a
+  W-worker pool sharing one runtime.  Outcomes are bit-identical for
+  any W (the determinism contract; see README).
 "
 }
 
@@ -105,6 +122,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("report") => cmd_report(&args),
         Some("daemon") => cmd_daemon(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("devices") => {
             println!("{}", report::devices().render());
             Ok(())
@@ -145,12 +163,21 @@ fn cmd_finetune(args: &Args) -> Result<()> {
                paper's point)");
     }
 
+    let queries = args.get_usize("queries", 1)?;
+    if queries == 0 {
+        bail!("--queries must be >= 1");
+    }
     let mut builder = SessionBuilder::new(&rt, model)
         .optimizer(optimizer)
         .task(task)
         .batch_size(args.get_usize("batch", 0)?)
         .eps(args.get_f64("eps", 1e-3)?)
-        .seed(args.get_u64("seed", 42)?);
+        .seed(args.get_u64("seed", 42)?)
+        .queries(queries)
+        .batch_window(args.get_usize(
+            "batch-window",
+            pocketllm::tuner::session::DEFAULT_BATCH_WINDOW,
+        )?);
     if let Some(s) = parse_schedule(args)? {
         builder = builder.lr(s);
     }
@@ -359,6 +386,95 @@ fn cmd_daemon(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let model = args.get_or("model", "pocket-tiny");
+    let n_jobs = args.get_usize("jobs", 4)?;
+    let workers = args.get_usize("workers", 2)?;
+    let steps = args.get_u64("steps", 8)?;
+    let task = TaskKind::parse(args.get_or("task", "sst2"))
+        .context("bad task")?;
+    let optimizer = OptimizerKind::parse(args.get_or("optimizer", "mezo"))
+        .context("bad optimizer")?;
+    let policy_name = args.get_or("policy", "overnight");
+    let policy = match policy_name {
+        "overnight" => Policy::overnight(),
+        "always" => Policy::always(),
+        other => bail!("bad --policy '{other}' (overnight|always)"),
+    };
+    let coord = CoordinatorConfig {
+        device_preset: args.get_or("device", "oppo-reno6").into(),
+        policy,
+        steps_per_window: args.get_u64("steps-per-window", 4)?,
+        max_windows: args.get_usize("windows", 2000)?,
+        trace_seed: args.get_u64("trace-seed", 7)?,
+        ..Default::default()
+    };
+    let base_seed = args.get_u64("seed", 42)?;
+    let batch = args.get_usize("batch", 0)?;
+    let jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|i| {
+            JobSpec::new(model, task, optimizer)
+                .batch(batch)
+                .steps(steps)
+                .seed(base_seed + i as u64)
+        })
+        .collect();
+
+    // NOTE: every line this command prints except `host wall: ...` is
+    // deterministic for any --workers; CI diffs the outputs of two
+    // worker counts, so keep worker-dependent detail on that line.
+    println!(
+        "fleet: {n_jobs} jobs x {steps} steps on {model} ({}), \
+         {policy_name} policy",
+        optimizer.label()
+    );
+    let fleet =
+        FleetScheduler::new(&rt, FleetConfig { coord, workers });
+    let t0 = std::time::Instant::now();
+    let report = fleet.run(&jobs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    for (i, o) in report.outcomes.iter().enumerate() {
+        println!(
+            "job {i:>3}: {:<9?} {:<4} steps {:>6}  loss {:.6}  \
+             windows {}  denied {}",
+            o.status,
+            o.optimizer.label(),
+            o.steps_done,
+            o.final_loss,
+            o.windows_used,
+            o.windows_denied
+        );
+    }
+    let t = &report.telemetry;
+    println!(
+        "fleet outcomes: {}/{} completed ({:.1}%), {} stalled, {} failed",
+        t.completed,
+        t.jobs,
+        t.completion_rate * 100.0,
+        t.stalled,
+        t.failed
+    );
+    println!("fleet oom fallbacks: {}", t.oom_fallbacks);
+    let denies: Vec<String> = t
+        .denied_by_reason
+        .iter()
+        .map(|(r, c)| format!("{r} {c}"))
+        .collect();
+    println!(
+        "fleet denied windows: {}  [{}]",
+        t.windows_denied,
+        denies.join(", ")
+    );
+    println!(
+        "fleet simulated step-seconds: {:.1}",
+        t.sim_step_seconds
+    );
+    println!("host wall: {wall:.2}s with {workers} workers");
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let mut t = pocketllm::telemetry::Table::new("AOT programs")
@@ -376,4 +492,46 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     println!("{}", t.render());
     println!("platform: {}", rt.platform());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn value_flags_cover_queries_and_batch_window() {
+        // the PR-2 regression: k-query SPSA existed in the library but
+        // `--queries` was not a value flag, so the binary couldn't
+        // reach it (the next token was swallowed as a boolean)
+        let a = Args::parse(
+            &argv(&["finetune", "--queries", "4", "--batch-window",
+                    "64", "--steps", "2"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.get_usize("queries", 1).unwrap(), 4);
+        assert_eq!(a.get_usize("batch-window", 512).unwrap(), 64);
+        assert_eq!(a.get_u64("steps", 0).unwrap(), 2);
+        assert!(a.positional.is_empty(),
+                "values must not leak into positionals");
+    }
+
+    #[test]
+    fn value_flags_cover_fleet_knobs() {
+        let a = Args::parse(
+            &argv(&["fleet", "--jobs", "3", "--workers", "2",
+                    "--policy", "always"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fleet"));
+        assert_eq!(a.get_usize("jobs", 0).unwrap(), 3);
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
+        assert_eq!(a.get_or("policy", "overnight"), "always");
+        assert!(a.positional.is_empty());
+    }
 }

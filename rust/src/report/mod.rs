@@ -180,6 +180,15 @@ pub fn ablation_memory() -> Table {
         fmt_gb(accum.total()),
         format!("+{}", fmt_gb(accum.total().saturating_sub(full))),
     ]);
+    // same grad-accum job on this crate's lean runtime instead of the
+    // paper's Termux+PyTorch stack: the runtime charge is a parameter
+    let lean = memory::finetune_footprint_grad_accum_with_runtime(
+        &dims, 64, SST2_SEQ, 8, (0.3 * 1e9) as u64);
+    t.row(&[
+        "Adam + grad-accum (rust runtime)".into(),
+        fmt_gb(lean.total()),
+        format!("+{}", fmt_gb(lean.total().saturating_sub(full))),
+    ]);
     t
 }
 

@@ -13,6 +13,17 @@ pub enum DenyReason {
 }
 
 impl DenyReason {
+    /// Every deny reason, in gate order — lets telemetry render a
+    /// complete denied-window histogram (zero counts included) instead
+    /// of only the reasons that happened to fire.
+    pub const ALL: [DenyReason; 5] = [
+        DenyReason::NotCharging,
+        DenyReason::BatteryLow,
+        DenyReason::ScreenOn,
+        DenyReason::TooHot,
+        DenyReason::MemoryPressure,
+    ];
+
     pub fn label(&self) -> &'static str {
         match self {
             DenyReason::NotCharging => "not charging",

@@ -65,9 +65,31 @@ impl MetricLog {
         self.series.get(name)
     }
 
+    /// Fold `other` into this log (series merged by name, points
+    /// appended in `other`'s order).  Consumes the source — the fleet
+    /// aggregation path drops it anyway, and moving the buffers avoids
+    /// re-cloning every point of fleet-scale per-job logs.
+    pub fn merge(&mut self, other: MetricLog) {
+        for (name, mut s) in other.series {
+            self.series
+                .entry(name)
+                .or_default()
+                .points
+                .append(&mut s.points);
+        }
+    }
+
     /// CSV with a `step` column and one column per series (empty cells
     /// where a series has no point at that step).
+    ///
+    /// Single merge pass with one cursor per series — O(total points ·
+    /// log) — replacing the old per-cell linear `find`, which was
+    /// quadratic in run length and pathological for fleet-scale logs
+    /// (pinned by `to_csv_large_log_is_not_quadratic`).  Cell semantics
+    /// are unchanged: for duplicate steps within a series, the
+    /// first-recorded value wins (stable sort preserves record order).
     pub fn to_csv(&self) -> String {
+        // global step axis
         let mut steps: Vec<u64> = Vec::new();
         for s in self.series.values() {
             for &(st, _) in &s.points {
@@ -77,22 +99,42 @@ impl MetricLog {
         steps.sort();
         steps.dedup();
 
-        let names: Vec<&String> = self.series.keys().collect();
+        // per-series step-sorted view (indices; stable for ties) +
+        // cursor
+        let cols: Vec<(&String, &Series, Vec<usize>)> = self
+            .series
+            .iter()
+            .map(|(name, s)| {
+                let mut idx: Vec<usize> = (0..s.points.len()).collect();
+                idx.sort_by_key(|&i| s.points[i].0);
+                (name, s, idx)
+            })
+            .collect();
+        let mut cursors = vec![0usize; cols.len()];
+
         let mut out = String::from("step");
-        for n in &names {
+        for (name, _, _) in &cols {
             out.push(',');
-            out.push_str(n);
+            out.push_str(name);
         }
         out.push('\n');
         for st in steps {
             out.push_str(&st.to_string());
-            for n in &names {
+            for (ci, (_, s, idx)) in cols.iter().enumerate() {
                 out.push(',');
-                let s = &self.series[*n];
-                if let Some(&(_, v)) =
-                    s.points.iter().find(|&&(p, _)| p == st)
-                {
+                let cur = &mut cursors[ci];
+                while *cur < idx.len() && s.points[idx[*cur]].0 < st {
+                    *cur += 1;
+                }
+                if *cur < idx.len() && s.points[idx[*cur]].0 == st {
+                    let v = s.points[idx[*cur]].1;
                     out.push_str(&format!("{v}"));
+                    // skip duplicates of this step; they were never
+                    // emitted by the old code either
+                    while *cur < idx.len() && s.points[idx[*cur]].0 == st
+                    {
+                        *cur += 1;
+                    }
                 }
             }
             out.push('\n');
@@ -165,6 +207,92 @@ mod tests {
         assert_eq!(lines[0], "step,a,b");
         assert_eq!(lines[1], "0,1,");
         assert_eq!(lines[2], "1,,2");
+    }
+
+    /// The pre-rewrite per-cell linear-scan implementation, kept as the
+    /// shape oracle for the merge-pass `to_csv`.
+    fn to_csv_reference(m: &MetricLog) -> String {
+        let mut steps: Vec<u64> = Vec::new();
+        for s in m.series.values() {
+            for &(st, _) in &s.points {
+                steps.push(st);
+            }
+        }
+        steps.sort();
+        steps.dedup();
+        let names: Vec<&String> = m.series.keys().collect();
+        let mut out = String::from("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for st in steps {
+            out.push_str(&st.to_string());
+            for n in &names {
+                out.push(',');
+                let s = &m.series[*n];
+                if let Some(&(_, v)) =
+                    s.points.iter().find(|&&(p, _)| p == st)
+                {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    #[test]
+    fn csv_merge_pass_matches_reference_shape() {
+        // sparse, interleaved, duplicate and out-of-order steps — every
+        // corner the per-series cursors must reproduce
+        let mut m = MetricLog::new();
+        for (st, v) in [(0, 1.0), (2, 2.0), (2, 99.0), (7, 3.0)] {
+            m.record("a", st, v);
+        }
+        for (st, v) in [(5, 4.0), (1, 5.0), (1, 6.0), (2, 7.0)] {
+            m.record("b", st, v); // out of order + duplicate step 1
+        }
+        m.record("c", 1_000_000, 8.0);
+        assert_eq!(m.to_csv(), to_csv_reference(&m));
+        // and the duplicate-step rule is first-recorded-wins
+        assert!(m.to_csv().contains("\n2,2,7,\n"), "{}", m.to_csv());
+    }
+
+    #[test]
+    fn to_csv_large_log_is_not_quadratic() {
+        // fleet-scale smoke: 4 series x 20k points with disjoint step
+        // ranges (worst case for the old per-cell scan: 80k rows x 4
+        // series x 20k finds).  The merge pass renders this instantly;
+        // the old code would hang the test suite.
+        let mut m = MetricLog::new();
+        for j in 0..4u64 {
+            for i in 0..20_000u64 {
+                m.record(&format!("job{j}.loss"), j * 20_000 + i,
+                         i as f64);
+            }
+        }
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 4 * 20_000);
+        let first = csv.lines().nth(1).unwrap();
+        assert_eq!(first, "0,0,,,");
+        let last = csv.lines().last().unwrap();
+        assert_eq!(last, "79999,,,,19999");
+    }
+
+    #[test]
+    fn merge_appends_series_by_name() {
+        let mut a = MetricLog::new();
+        a.record("loss", 0, 1.0);
+        a.record("loss", 1, 0.5);
+        let mut b = MetricLog::new();
+        b.record("loss", 2, 0.25);
+        b.record("aux", 0, 9.0);
+        a.merge(b);
+        assert_eq!(a.get("loss").unwrap().points,
+                   vec![(0, 1.0), (1, 0.5), (2, 0.25)]);
+        assert_eq!(a.get("aux").unwrap().points, vec![(0, 9.0)]);
     }
 
     #[test]

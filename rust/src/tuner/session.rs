@@ -204,13 +204,22 @@ impl<'rt> SessionBuilder<'rt> {
 
         // 1. simulated-device admission (the paper's OOM gate) happens
         //    BEFORE any real allocation, like a real runtime would.
+        //    An OOM crosses this boundary as a *typed* OomError inside
+        //    the anyhow chain (not a string), so the coordinator's
+        //    Adam->MeZO fallback keeps firing however many context
+        //    frames later callers add.
         let mut device = self.device;
         let fp = if let Some(dev) = device.as_mut() {
             let dims = dev_dims(&cfg);
+            let dev_name = dev.spec.name.clone();
             let fp = dev
                 .admit_finetune(&dims, self.optimizer.family(), batch,
                                 cfg.max_seq)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .map_err(anyhow::Error::new)
+                .with_context(|| {
+                    format!("device admission on {dev_name} for {}",
+                            cfg.name)
+                })?;
             Some(fp)
         } else {
             None

@@ -18,8 +18,11 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
     assert!(ok);
-    for cmd in ["finetune", "report", "daemon", "devices"] {
+    for cmd in ["finetune", "report", "daemon", "fleet", "devices"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+    for flag in ["--queries", "--batch-window", "--workers"] {
+        assert!(text.contains(flag), "missing {flag} in help");
     }
 }
 
@@ -95,6 +98,62 @@ fn adam_checkpoint_is_refused_with_explanation() {
     ]);
     assert!(!ok);
     assert!(text.contains("3x params"), "{text}");
+}
+
+#[test]
+fn finetune_queries_and_batch_window_reach_the_session() {
+    // PR-2 regression: the parallel k-query SPSA path existed but the
+    // binary had no --queries flag.  pocket-roberta ships a
+    // mezo_step_q4 artifact at bs 8 in the builtin manifest.
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-roberta", "--queries", "4",
+        "--batch", "8", "--batch-window", "4", "--steps", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("final loss"));
+
+    // a k with no artifact must fail loudly, proving the flag reached
+    // SessionBuilder::queries (mezo_step_q3 is not in the manifest)
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-roberta", "--queries", "3",
+        "--steps", "1",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("mezo_step_q3"), "{text}");
+
+    let (ok, text) = run(&["finetune", "--queries", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--queries"), "{text}");
+}
+
+#[test]
+fn fleet_smoke_and_worker_count_determinism() {
+    // the CLI-level determinism contract: identical output (minus the
+    // host-wall line) for any --workers
+    let fleet_out = |workers: &str| {
+        let (ok, text) = run(&[
+            "fleet", "--jobs", "2", "--workers", workers, "--steps",
+            "4", "--policy", "always", "--model", "pocket-tiny",
+        ]);
+        assert!(ok, "{text}");
+        text.lines()
+            .filter(|l| !l.starts_with("host wall"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let w1 = fleet_out("1");
+    let w2 = fleet_out("2");
+    assert_eq!(w1, w2, "fleet output must not depend on --workers");
+    assert!(w1.contains("fleet outcomes: 2/2 completed"), "{w1}");
+    assert!(w1.contains("Completed"), "{w1}");
+    assert!(w1.contains("fleet simulated step-seconds"), "{w1}");
+}
+
+#[test]
+fn fleet_rejects_bad_policy() {
+    let (ok, text) = run(&["fleet", "--policy", "sometimes"]);
+    assert!(!ok);
+    assert!(text.contains("overnight|always"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,248 @@
+//! Fleet determinism contract: `FleetScheduler` results must be
+//! bit-identical for any worker count and identical to the sequential
+//! `Coordinator::run_queue` oracle — losses, events, job statuses,
+//! metrics.  Thread timing may reorder *work*, never *results*.
+
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, Event,
+                             FleetConfig, FleetScheduler, JobSpec,
+                             JobStatus};
+use pocketllm::data::task::TaskKind;
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::scheduler::Policy;
+
+fn runtime() -> Runtime {
+    let m = Manifest::load_or_builtin("artifacts/manifest.json")
+        .expect("manifest");
+    Runtime::new(m).expect("native runtime")
+}
+
+fn mixed_jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(6)
+            .seed(11),
+        JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                     OptimizerKind::Adam)
+            .steps(4)
+            .seed(12),
+        JobSpec::new("pocket-tiny", TaskKind::Rte, OptimizerKind::MeZo)
+            .steps(8)
+            .seed(13),
+    ]
+}
+
+/// A worker-count-independent fingerprint of everything a fleet run
+/// produces.  Debug formatting of f64 is shortest-roundtrip, so equal
+/// strings mean bit-equal floats.
+fn fingerprint(
+    outcomes: &[pocketllm::coordinator::JobOutcome],
+    events: &[Event],
+    csv: &str,
+) -> String {
+    format!("{outcomes:?}\n===\n{events:?}\n===\n{csv}")
+}
+
+#[test]
+fn fleet_matches_sequential_oracle_for_any_worker_count() {
+    let rt = runtime();
+    // overnight policy + 30-min ticks: the trace denies plenty of
+    // daytime windows, so interleaving covers the deny path too
+    let cfg = CoordinatorConfig {
+        policy: Policy::overnight(),
+        steps_per_window: 4,
+        trace_step_minutes: 30.0,
+        max_windows: 500,
+        trace_seed: 3,
+        ..Default::default()
+    };
+    let jobs = mixed_jobs();
+
+    // the oracle: one job at a time, in order
+    let mut oracle = Coordinator::new(&rt, cfg.clone());
+    let oracle_outcomes = oracle.run_queue(&jobs).unwrap();
+    let want = fingerprint(&oracle_outcomes, &oracle.events,
+                           &oracle.metrics.to_csv());
+    assert!(
+        oracle_outcomes.iter().all(|o| o.status == JobStatus::Completed),
+        "oracle jobs must complete: {oracle_outcomes:?}"
+    );
+    assert!(
+        oracle_outcomes.iter().any(|o| o.windows_denied > 0),
+        "trace must exercise denied windows"
+    );
+
+    for workers in [1usize, 2, 4] {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig { coord: cfg.clone(), workers },
+        );
+        let report = fleet.run(&jobs).unwrap();
+        let got = fingerprint(&report.outcomes, &report.events,
+                              &report.metrics.to_csv());
+        assert_eq!(got, want,
+                   "fleet with {workers} workers diverged from the \
+                    sequential oracle");
+        // telemetry is derived from the same streams, so it is equally
+        // pinned
+        assert_eq!(report.telemetry.jobs, jobs.len());
+        assert_eq!(report.telemetry.completed, jobs.len());
+        assert_eq!(report.telemetry.completion_rate, 1.0);
+        assert_eq!(
+            report.telemetry.windows_denied,
+            oracle_outcomes.iter().map(|o| o.windows_denied).sum::<usize>()
+        );
+        assert!(report.telemetry.sim_step_seconds > 0.0);
+        let histogram_total: usize =
+            report.telemetry.denied_by_reason.values().sum();
+        assert_eq!(histogram_total, report.telemetry.windows_denied);
+    }
+}
+
+#[test]
+fn fleet_oom_fallback_fires_via_typed_downcast() {
+    let rt = runtime();
+    // an Adam job that must OOM on a 3 GB handset and fall back to
+    // MeZO — the paper's headline event, at fleet scale and behind a
+    // context()-wrapped error chain
+    let cfg = CoordinatorConfig {
+        device_preset: "budget-phone-3gb".into(),
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 50,
+        ..Default::default()
+    };
+    let jobs = vec![
+        JobSpec::new("pocket-roberta", TaskKind::Sst2,
+                     OptimizerKind::Adam)
+            .batch(64)
+            .steps(4)
+            .seed(21),
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(22),
+    ];
+
+    let mut oracle = Coordinator::new(&rt, cfg.clone());
+    let oracle_outcomes = oracle.run_queue(&jobs).unwrap();
+    assert_eq!(oracle_outcomes[0].optimizer, OptimizerKind::MeZo,
+               "oracle must fall back from adam");
+
+    let mut fingerprints = Vec::new();
+    for workers in [1usize, 2] {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig { coord: cfg.clone(), workers },
+        );
+        let report = fleet.run(&jobs).unwrap();
+        assert_eq!(report.outcomes[0].optimizer, OptimizerKind::MeZo,
+                   "fleet job 0 should have fallen back to \
+                    derivative-free");
+        assert_eq!(report.outcomes[0].status, JobStatus::Completed);
+        assert_eq!(report.telemetry.oom_fallbacks, 1);
+        assert!(report
+            .events
+            .iter()
+            .any(|e| matches!(e, Event::OomFallback { job: 0, .. })));
+        fingerprints.push(fingerprint(&report.outcomes, &report.events,
+                                      &report.metrics.to_csv()));
+    }
+    assert_eq!(fingerprints[0], fingerprints[1]);
+    assert_eq!(
+        fingerprints[0],
+        fingerprint(&oracle_outcomes, &oracle.events,
+                    &oracle.metrics.to_csv())
+    );
+}
+
+#[test]
+fn fleet_metrics_are_per_job_series_in_job_order() {
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 20,
+        ..Default::default()
+    };
+    let jobs: Vec<JobSpec> = (0..3)
+        .map(|i| {
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(4)
+                .seed(30 + i)
+        })
+        .collect();
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 3 },
+    );
+    let report = fleet.run(&jobs).unwrap();
+    for i in 0..3 {
+        let s = report
+            .metrics
+            .get(&format!("job{i}.loss"))
+            .unwrap_or_else(|| panic!("missing job{i}.loss series"));
+        // 4 steps at 2 per window = 2 recorded points, steps 2 and 4
+        assert_eq!(s.points.len(), 2);
+        assert_eq!(s.points[0].0, 2);
+        assert_eq!(s.points[1].0, 4);
+        assert!(s.points.iter().all(|&(_, v)| v.is_finite()));
+    }
+    // and the CSV renders one row per distinct step across the fleet
+    let csv = report.metrics.to_csv();
+    assert_eq!(csv.lines().next().unwrap(),
+               "step,job0.loss,job1.loss,job2.loss");
+    assert_eq!(csv.lines().count(), 1 + 2);
+}
+
+#[test]
+fn fleet_with_more_workers_than_jobs_is_fine() {
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 4,
+        max_windows: 10,
+        ..Default::default()
+    };
+    let jobs = vec![JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                                 OptimizerKind::MeZo)
+        .steps(4)
+        .seed(5)];
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 8 },
+    );
+    let report = fleet.run(&jobs).unwrap();
+    assert_eq!(report.outcomes.len(), 1);
+    assert_eq!(report.outcomes[0].status, JobStatus::Completed);
+    assert_eq!(report.telemetry.completion_rate, 1.0);
+}
+
+#[test]
+fn fleet_stalled_jobs_are_counted_not_dropped() {
+    let rt = runtime();
+    // a policy no daytime trace can satisfy quickly + a 2-window cap:
+    // the job must stall, and the fleet must report it
+    let cfg = CoordinatorConfig {
+        policy: Policy::overnight(),
+        steps_per_window: 4,
+        trace_step_minutes: 10.0,
+        max_windows: 2,
+        ..Default::default()
+    };
+    let jobs = vec![JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                                 OptimizerKind::MeZo)
+        .steps(4)
+        .seed(7)];
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 2 },
+    );
+    let report = fleet.run(&jobs).unwrap();
+    assert_eq!(report.outcomes[0].status, JobStatus::Stalled);
+    assert_eq!(report.telemetry.stalled, 1);
+    assert_eq!(report.telemetry.completed, 0);
+    assert_eq!(report.telemetry.completion_rate, 0.0);
+    assert_eq!(report.outcomes[0].windows_denied, 2,
+               "both 09:00 daytime windows must be denied");
+}

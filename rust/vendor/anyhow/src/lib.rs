@@ -6,6 +6,13 @@
 //! An [`Error`] carries a message chain; `{e}` prints the outermost
 //! message, `{e:#}` the full `outer: inner: root` chain (matching the
 //! real crate's alternate formatting).
+//!
+//! Errors built from a typed `std::error::Error` (via `?`, `From`, or
+//! [`Error::new`]) keep that value as the typed root cause, so
+//! [`Error::downcast_ref`] / [`Error::is`] see through any number of
+//! `context()` frames — like the real crate's downcasting, minus
+//! intermediate-frame types (only the root is preserved, which is the
+//! case the workspace relies on).
 
 use std::fmt;
 
@@ -15,12 +22,31 @@ use std::fmt;
 pub struct Error {
     /// Outermost context first.
     chain: Vec<String>,
+    /// Typed root cause, when built from a `std::error::Error`.
+    /// Message-only errors (`anyhow!`) have no typed root.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Build from anything displayable (the `anyhow!` macro's backend).
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], source: None }
+    }
+
+    /// Build from a typed error, keeping it as the typed root cause so
+    /// [`downcast_ref`](Error::downcast_ref) works through later
+    /// `context()` wrapping.
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![e.to_string()];
+        let mut src = std::error::Error::source(&e);
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, source: Some(Box::new(e)) }
     }
 
     /// Push an outer context frame.
@@ -37,6 +63,36 @@ impl Error {
     /// Iterate the context chain, outermost first.
     pub fn chain(&self) -> impl Iterator<Item = &str> {
         self.chain.iter().map(String::as_str)
+    }
+
+    /// The typed root cause and its `source()` chain, outermost first.
+    /// Empty for message-only errors.
+    pub fn cause_chain(
+        &self,
+    ) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            match &self.source {
+                Some(b) => Some(&**b),
+                None => None,
+            };
+        std::iter::from_fn(move || {
+            let e = cur?;
+            cur = e.source();
+            Some(e)
+        })
+    }
+
+    /// Look for a `T` anywhere in the typed cause chain (see
+    /// [`cause_chain`](Error::cause_chain)).
+    pub fn downcast_ref<T: std::error::Error + 'static>(
+        &self,
+    ) -> Option<&T> {
+        self.cause_chain().find_map(|e| e.downcast_ref::<T>())
+    }
+
+    /// Whether the typed cause chain contains a `T`.
+    pub fn is<T: std::error::Error + 'static>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 }
 
@@ -59,13 +115,7 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        let mut chain = vec![e.to_string()];
-        let mut src = std::error::Error::source(&e);
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Error { chain }
+        Error::new(e)
     }
 }
 
@@ -183,5 +233,44 @@ mod tests {
         let r: Result<()> = Err(anyhow!("inner"));
         let e = r.context("outer").unwrap_err();
         assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[derive(Debug)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_survives_context_frames() {
+        let e = Error::new(Typed(7))
+            .context("middle")
+            .context("outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: typed error 7");
+        assert!(e.is::<Typed>());
+        assert_eq!(e.downcast_ref::<Typed>().unwrap().0, 7);
+        assert!(!e.is::<std::io::Error>());
+    }
+
+    #[test]
+    fn message_errors_have_no_typed_cause() {
+        let e: Error = anyhow!("typed error 7 (as text)");
+        assert!(!e.is::<Typed>());
+        assert_eq!(e.cause_chain().count(), 0);
+    }
+
+    #[test]
+    fn question_mark_preserves_type() {
+        fn f() -> Result<()> {
+            Err(Typed(3))?;
+            Ok(())
+        }
+        let e = f().context("wrapped").unwrap_err();
+        assert!(e.is::<Typed>());
     }
 }
