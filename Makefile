@@ -20,13 +20,15 @@ artifacts:
 	cd python && python -m compile.aot --out ../artifacts
 
 # Perf trail: run the perf benches with fixed iteration counts and
-# write BENCH_hotpath.json / BENCH_walltime.json / BENCH_fleet.json at
-# the repo root (machine-readable; CI archives them, perf PRs diff
-# them).  Override iteration counts for a smoke run: `make bench
-# HOTPATH_ITERS=2 TABLE2_ITERS=2 FLEET_ITERS=2`.
+# write BENCH_hotpath.json / BENCH_walltime.json / BENCH_fleet.json /
+# BENCH_quant.json at the repo root (machine-readable; CI archives
+# them, perf PRs diff them).  Override iteration counts for a smoke
+# run: `make bench HOTPATH_ITERS=2 TABLE2_ITERS=2 FLEET_ITERS=2
+# QUANT_ITERS=2`.
 HOTPATH_ITERS ?= 30
 TABLE2_ITERS ?= 8
 FLEET_ITERS ?= 5
+QUANT_ITERS ?= 8
 
 bench:
 	HOTPATH_ITERS=$(HOTPATH_ITERS) BENCH_JSON=BENCH_hotpath.json \
@@ -35,6 +37,8 @@ bench:
 	    cargo bench --bench table2_walltime
 	FLEET_ITERS=$(FLEET_ITERS) BENCH_JSON=BENCH_fleet.json \
 	    cargo bench --bench fleet_throughput
+	QUANT_ITERS=$(QUANT_ITERS) BENCH_JSON=BENCH_quant.json \
+	    cargo bench --bench quant_residency
 
 # The full bench suite (fig1 curves, memory table, ablations, ...).
 bench-all:

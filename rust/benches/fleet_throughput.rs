@@ -17,6 +17,7 @@ use pocketllm::coordinator::{CoordinatorConfig, FleetConfig,
                              FleetScheduler, JobSpec};
 use pocketllm::data::task::TaskKind;
 use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::native::math;
 use pocketllm::runtime::{Manifest, Runtime};
 use pocketllm::scheduler::Policy;
 use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
@@ -81,6 +82,23 @@ fn main() -> anyhow::Result<()> {
         mean(0) / mean(1),
         mean(0) / mean(2)
     );
+    // the shared compute budget: each fleet worker's kernels get
+    // host_threads/W threads (floor 1), so W workers no longer
+    // request W x host threads above PAR_FLOPS.  Measured through the
+    // same guard + n_threads() the fleet actually runs under, so a
+    // policy change in math.rs shows up here instead of a stale
+    // hand-inlined formula.
+    let host = math::host_threads();
+    let budget_under = |w: usize| {
+        let _guard = math::register_pool_workers(w);
+        math::n_threads()
+    };
+    let per_worker_2w = budget_under(2);
+    let per_worker_4w = budget_under(4);
+    println!(
+        "kernel thread budget: host {host}; per-worker at W=2: \
+         {per_worker_2w}, W=4: {per_worker_4w}"
+    );
 
     let out = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_fleet.json".into());
@@ -96,6 +114,9 @@ fn main() -> anyhow::Result<()> {
             ("fleet_4w_ms", mean(2) * 1e3),
             ("speedup_2w", mean(0) / mean(1)),
             ("speedup_4w", mean(0) / mean(2)),
+            ("kernel_threads_host", host as f64),
+            ("kernel_threads_per_worker_2w", per_worker_2w as f64),
+            ("kernel_threads_per_worker_4w", per_worker_4w as f64),
         ],
     )?;
     println!("wrote {out}");

@@ -1,0 +1,89 @@
+//! Bench: precision sweep — resident parameter bytes and step
+//! wall-clock for f32 / f16 / int8 storage at the largest builtin
+//! config (pocket-roberta).
+//!
+//! The paper's feasibility claims are quantized deployments; this
+//! bench pins what the runtime *actually* keeps resident per
+//! precision (measured from the session's `ExecState`, not the
+//! analytic model) and what the dequantize/requantize residency loop
+//! costs per step.  Writes `BENCH_quant.json` (override with
+//! `BENCH_JSON=path`); CI runs it as a smoke step and archives the
+//! JSON next to the other bench artifacts.
+//!
+//! Knobs: `QUANT_ITERS` (timed iterations per precision, default 8),
+//! `QUANT_STEPS` (steps per iteration, default 2).
+
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
+use pocketllm::tuner::session::SessionBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("QUANT_ITERS", 8) as usize;
+    let steps = env_u64("QUANT_STEPS", 2);
+    let rt = Runtime::new(
+        Manifest::load_or_builtin("artifacts/manifest.json")?)?;
+    // the largest builtin config with a bs-8 mezo_step artifact
+    let config = "pocket-roberta";
+
+    let mut ms = Vec::new();
+    let mut resident = Vec::new();
+    let mut losses = Vec::new();
+    for precision in Precision::ALL {
+        let mut s = SessionBuilder::new(&rt, config)
+            .optimizer(OptimizerKind::MeZo)
+            .seed(9)
+            .precision(precision)
+            .build()?;
+        resident.push(s.resident_param_bytes());
+        ms.push(bench(
+            &format!("{config} mezo step x{steps} ({precision})"),
+            1,
+            iters,
+            || {
+                s.run_steps(steps).unwrap();
+            },
+        ));
+        // sanity: every precision must still optimize something finite
+        let l = s.run_steps(1)?.last_loss;
+        assert!(l.is_finite(), "{precision} produced a non-finite loss");
+        losses.push(l);
+    }
+
+    println!("{}", render("Precision sweep (resident + step time)", &ms));
+    for (p, r) in Precision::ALL.iter().zip(&resident) {
+        println!("resident param bytes ({p}): {r}");
+    }
+    let step_ms =
+        |i: usize| ms[i].stats.mean() * 1e3 / steps as f64;
+
+    assert_eq!(resident[1] * 2, resident[0],
+               "f16 residency must be exactly half of f32");
+    assert!(resident[2] < resident[1],
+            "int8 residency must undercut f16");
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_quant.json".into());
+    dump_json(
+        &out,
+        "Precision sweep (resident + step time)",
+        &ms,
+        &[
+            ("steps_per_iter", steps as f64),
+            ("resident_bytes_f32", resident[0] as f64),
+            ("resident_bytes_f16", resident[1] as f64),
+            ("resident_bytes_int8", resident[2] as f64),
+            ("resident_ratio_f16", resident[1] as f64 / resident[0] as f64),
+            ("resident_ratio_int8",
+             resident[2] as f64 / resident[0] as f64),
+            ("step_ms_f32", step_ms(0)),
+            ("step_ms_f16", step_ms(1)),
+            ("step_ms_int8", step_ms(2)),
+            ("loss_f32", losses[0]),
+            ("loss_f16", losses[1]),
+            ("loss_int8", losses[2]),
+        ],
+    )?;
+    println!("wrote {out}");
+    Ok(())
+}

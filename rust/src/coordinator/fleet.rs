@@ -70,6 +70,18 @@ pub struct FleetTelemetry {
     pub denied_by_reason: BTreeMap<&'static str, usize>,
     /// Aggregate simulated device step-seconds across the fleet.
     pub sim_step_seconds: f64,
+    /// Shared tokenizer/corpus artifact cache hits during this run
+    /// (sessions that reused a previously built (task, seed) artifact
+    /// set instead of training their own BPE).  Deterministic for any
+    /// worker count given the same process-wide cache state: same-key
+    /// racers serialize on a per-key cell, so they always resolve to
+    /// one build + N-1 hits.  Measured as a process-global delta —
+    /// exact for the one-fleet-per-process CLI; concurrent fleets in
+    /// one process fold each other's builds into their deltas (see
+    /// `data::artifact_cache_stats`).
+    pub tokenizer_cache_hits: u64,
+    /// Artifact sets actually built during this run (same caveat).
+    pub tokenizer_cache_builds: u64,
 }
 
 impl FleetTelemetry {
@@ -93,6 +105,8 @@ impl FleetTelemetry {
             windows_denied: 0,
             denied_by_reason,
             sim_step_seconds: 0.0,
+            tokenizer_cache_hits: 0,
+            tokenizer_cache_builds: 0,
         };
         for o in outcomes {
             match o.status {
@@ -168,6 +182,16 @@ impl<'rt> FleetScheduler<'rt> {
         let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
         let workers = self.cfg.workers.max(1).min(n.max(1));
+        // shared compute budget: W workers each drive sessions whose
+        // kernels would otherwise size their own thread pools to the
+        // whole host — register the worker count so every kernel (and
+        // SPSA pool) gets budget/W threads for the duration of the run
+        // (RAII guard: released on any exit, panics included;
+        // overlapping fleets sum their counts).  Pure scheduling:
+        // kernel results are thread-count-invariant.
+        use crate::runtime::native::math;
+        let (hits0, builds0) = crate::data::artifact_cache_stats();
+        let _budget = math::register_pool_workers(workers);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
@@ -234,7 +258,12 @@ impl<'rt> FleetScheduler<'rt> {
             events.extend(ev);
             metrics.merge(m);
         }
-        let telemetry = FleetTelemetry::from_results(&outcomes, &events);
+        let mut telemetry =
+            FleetTelemetry::from_results(&outcomes, &events);
+        let (hits1, builds1) = crate::data::artifact_cache_stats();
+        telemetry.tokenizer_cache_hits = hits1.saturating_sub(hits0);
+        telemetry.tokenizer_cache_builds =
+            builds1.saturating_sub(builds0);
         Ok(FleetReport { outcomes, events, metrics, telemetry })
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::data::task::TaskKind;
 use crate::optim::OptimizerKind;
+use crate::runtime::Precision;
 
 /// A queued fine-tuning job.
 #[derive(Debug, Clone)]
@@ -12,6 +13,10 @@ pub struct JobSpec {
     pub batch: usize,
     pub steps: u64,
     pub seed: u64,
+    /// Parameter-storage precision for the job's session (default
+    /// f32; fp16/int8 halve/quarter both the host-resident bytes and
+    /// the simulated ledger's parameter charge).
+    pub precision: Precision,
 }
 
 impl JobSpec {
@@ -25,6 +30,7 @@ impl JobSpec {
             batch: 0, // manifest default
             steps: 20,
             seed: 42,
+            precision: Precision::F32,
         }
     }
 
@@ -40,6 +46,11 @@ impl JobSpec {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
+        self
+    }
+
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
         self
     }
 }

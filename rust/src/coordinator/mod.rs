@@ -150,6 +150,7 @@ impl JobRun {
                 .batch_size(spec.batch)
                 .task(spec.task)
                 .seed(spec.seed)
+                .precision(spec.precision)
                 .device(device)
                 .build();
             match built {

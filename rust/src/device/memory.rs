@@ -14,6 +14,15 @@
 //! | activations     | ~per-layer inputs, ∝ batch·seq   | one live layer, tiny   |
 //! | runtime         | framework fixed cost             | framework fixed cost   |
 //!
+//! The parameters row charges `ModelDims::param_bytes` — the *storage*
+//! byte-width of the session's [`Precision`](crate::runtime::Precision)
+//! (4 f32, 2 f16, 1 int8), threaded from
+//! `ConfigInfo::model_dims_at`.  Gradients and Adam moments stay
+//! fp32 regardless (mixed-precision practice), which is why an fp16
+//! Adam job saves only one of its four parameter-scale tensors while
+//! fp16 MeZO halves its entire model-state footprint — the asymmetry
+//! behind the paper's OPT-1.3B-in-6.5-GB figure.
+//!
 //! MeZO's column is the paper's contribution: regenerating z from a seed
 //! erases the three parameter-scale tensors, and forward-without-autograd
 //! erases the batch-proportional activation term — which is why Table 1
@@ -403,6 +412,33 @@ mod tests {
                                    OptimizerFamily::DerivativeFree, 16, 128);
         assert!(m.total() < 8 * GB, "{}", m.total());
         assert!(m.total() > 4 * GB, "{}", m.total());
+    }
+
+    #[test]
+    fn param_row_charges_storage_byte_width() {
+        // fp16 storage halves ONLY the parameter row; grads + moments
+        // stay fp32 — the simulated ledger now matches what the host
+        // keeps resident per precision
+        let mut half = rl();
+        half.param_bytes = 2;
+        let f32_fp = finetune_footprint(
+            &rl(), OptimizerFamily::DerivativeBased, 8, 32);
+        let f16_fp = finetune_footprint(
+            &half, OptimizerFamily::DerivativeBased, 8, 32);
+        assert_eq!(f16_fp.parameters * 2, f32_fp.parameters);
+        assert_eq!(f16_fp.gradients, f32_fp.gradients);
+        assert_eq!(f16_fp.optimizer_state, f32_fp.optimizer_state);
+        assert_eq!(f16_fp.activations, f32_fp.activations);
+        // MeZO at fp16 halves its whole model-state footprint
+        let m32 = finetune_footprint(
+            &rl(), OptimizerFamily::DerivativeFree, 8, 32);
+        let m16 = finetune_footprint(
+            &half, OptimizerFamily::DerivativeFree, 8, 32);
+        assert_eq!(
+            m32.parameters - m16.parameters,
+            rl().n_params() * 2,
+            "fp16 MeZO saves 2 bytes/param of resident storage"
+        );
     }
 
     #[test]

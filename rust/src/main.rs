@@ -29,7 +29,7 @@ use pocketllm::data::task::TaskKind;
 use pocketllm::device::Device;
 use pocketllm::optim::{OptimizerKind, Schedule};
 use pocketllm::report;
-use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::runtime::{Manifest, Precision, Runtime};
 use pocketllm::scheduler::Policy;
 use pocketllm::tuner::checkpoint::Checkpoint;
 use pocketllm::tuner::session::SessionBuilder;
@@ -39,7 +39,7 @@ const VALUE_FLAGS: &[&str] = &[
     "model", "task", "optimizer", "steps", "batch", "lr", "eps", "seed",
     "device", "artifacts", "csv", "checkpoint", "schedule", "windows",
     "report-steps", "trace-seed", "steps-per-window", "queries",
-    "batch-window", "jobs", "workers", "policy",
+    "batch-window", "jobs", "workers", "policy", "precision",
 ];
 
 fn usage() -> &'static str {
@@ -62,6 +62,10 @@ COMMON FLAGS
                      step (needs a mezo_step_q{K} artifact; default 1)
   --batch-window N   resident batch-cache window; older batches are
                      regenerated deterministically (default 512)
+  --precision P      parameter storage: f32 | f16 | int8 (default f32).
+                     Params stay at P between steps (compute is f32);
+                     the simulated ledger charges the same byte-width.
+                     For fleet runs, applies to every job
   --device NAME      simulate a device envelope (oppo-reno6, pixel-4a, ...)
   --csv PATH         dump step metrics as CSV
   --checkpoint DIR   save a checkpoint at the end (MeZO sessions)
@@ -136,6 +140,11 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+fn parse_precision(args: &Args) -> Result<Precision> {
+    Precision::parse(args.get_or("precision", "f32"))
+        .context("bad --precision (f32|f16|int8)")
+}
+
 fn parse_schedule(args: &Args) -> Result<Option<Schedule>> {
     if let Some(s) = args.flag("schedule") {
         return Ok(Some(
@@ -167,6 +176,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     if queries == 0 {
         bail!("--queries must be >= 1");
     }
+    let precision = parse_precision(args)?;
     let mut builder = SessionBuilder::new(&rt, model)
         .optimizer(optimizer)
         .task(task)
@@ -174,6 +184,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         .eps(args.get_f64("eps", 1e-3)?)
         .seed(args.get_u64("seed", 42)?)
         .queries(queries)
+        .precision(precision)
         .batch_window(args.get_usize(
             "batch-window",
             pocketllm::tuner::session::DEFAULT_BATCH_WINDOW,
@@ -196,8 +207,10 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         anyhow::anyhow!("session admission failed: {e:#}")
     })?;
     println!(
-        "fine-tuning {model} ({} params) with {} on {}, batch {}, {} steps",
+        "fine-tuning {model} ({} params, {} storage) with {} on {}, \
+         batch {}, {} steps",
         session.cfg.n_params,
+        precision,
         optimizer.label(),
         task.label(),
         session.batch,
@@ -223,6 +236,26 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     if let Some(peak) = pocketllm::telemetry::bench::peak_rss_bytes() {
         // machine-readable for the table1 bench (subprocess isolation)
         println!("host peak RSS bytes: {peak}");
+    }
+
+    // step-log footer: the simulated ledger models the *paper's* phone
+    // at paper scale, while the host keeps pocket-scale tensors
+    // resident — print BOTH so the gap is visible for any precision
+    // instead of implying they are the same number.
+    println!(
+        "params resident on host: {} ({} x {} storage)",
+        pocketllm::util::bytes::fmt_human(session.resident_param_bytes()),
+        session.cfg.n_params,
+        session.precision()
+    );
+    if let Some(dev) = session.device.as_ref() {
+        println!(
+            "simulated ledger parameters: {} (model-scale, {} B/param)",
+            pocketllm::util::bytes::fmt_human(
+                dev.ledger.category(pocketllm::device::Category::Parameters)
+            ),
+            session.precision().param_bytes()
+        );
     }
 
     if let Some(curve) = session.metrics.get("loss") {
@@ -412,12 +445,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     let base_seed = args.get_u64("seed", 42)?;
     let batch = args.get_usize("batch", 0)?;
+    let precision = parse_precision(args)?;
     let jobs: Vec<JobSpec> = (0..n_jobs)
         .map(|i| {
             JobSpec::new(model, task, optimizer)
                 .batch(batch)
                 .steps(steps)
                 .seed(base_seed + i as u64)
+                .precision(precision)
         })
         .collect();
 
@@ -471,6 +506,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet simulated step-seconds: {:.1}",
         t.sim_step_seconds
     );
+    println!(
+        "fleet tokenizer cache: {} builds, {} hits",
+        t.tokenizer_cache_builds, t.tokenizer_cache_hits
+    );
     println!("host wall: {wall:.2}s with {workers} workers");
     Ok(())
 }
@@ -518,6 +557,24 @@ mod tests {
         assert_eq!(a.get_u64("steps", 0).unwrap(), 2);
         assert!(a.positional.is_empty(),
                 "values must not leak into positionals");
+    }
+
+    #[test]
+    fn value_flags_cover_precision() {
+        let a = Args::parse(
+            &argv(&["finetune", "--precision", "f16", "--steps", "2"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(parse_precision(&a).unwrap(), Precision::F16);
+        assert!(a.positional.is_empty(),
+                "precision value must not leak into positionals");
+        let bad = Args::parse(
+            &argv(&["finetune", "--precision", "fp64"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert!(parse_precision(&bad).is_err());
     }
 
     #[test]

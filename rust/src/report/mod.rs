@@ -108,12 +108,42 @@ pub fn opt13b() -> Table {
         .step_time(&dims, OptimizerFamily::DerivativeFree, OPT_BATCH, OPT_SEQ)
         .total_s();
 
+    // measured fp16 residency: an actual pocket-opt ExecState (not
+    // the analytic model) — the runtime really keeps half the bytes
+    // resident, which is what makes the paper's 6.5 GB figure
+    // reachable at 1.3B scale.  The f32 side is the same 4 B/elem sum
+    // an F32 state reports, taken from the raw tensors so the params
+    // are generated (and quantized) exactly once.
+    let (res_f32, res_f16) = {
+        use crate::runtime::{ExecState, Manifest, Precision};
+        let m = Manifest::builtin();
+        let cfg = m.config("pocket-opt").expect("builtin config");
+        let raw = m
+            .load_init_params("pocket-opt")
+            .expect("builtin init params");
+        let f32b: u64 = raw.iter().map(|t| 4 * t.len() as u64).sum();
+        let f16b = ExecState::from_raw_at(cfg, raw, Precision::F16)
+            .expect("f16 state")
+            .resident_param_bytes();
+        (f32b, f16b)
+    };
+
     let mut t = Table::new("§4.3/4.4 — OPT-1.3B with MeZO (fp16)")
         .header(&["quantity", "paper", "model"]);
     t.row(&[
         "memory on Reno 6".into(),
         "≈6.5 GB".into(),
         fmt_gb(fp.total()),
+    ]);
+    t.row(&[
+        "resident param bytes (pocket-opt, measured)".into(),
+        "fp16 deployment".into(),
+        format!(
+            "{} fp16 vs {} f32 ({:.2}x)",
+            crate::util::bytes::fmt_human(res_f16),
+            crate::util::bytes::fmt_human(res_f32),
+            res_f16 as f64 / res_f32 as f64
+        ),
     ]);
     t.row(&[
         "fits 12 GB phone".into(),
@@ -400,6 +430,15 @@ mod tests {
     fn opt13b_gap_order_of_magnitude() {
         let s = opt13b().render();
         assert!(s.contains("x"), "{s}");
+    }
+
+    #[test]
+    fn opt13b_measured_fp16_residency_is_half() {
+        // the measured row comes from a real ExecState, and f16
+        // storage is exactly half of f32 (2 B vs 4 B per param)
+        let s = opt13b().render();
+        assert!(s.contains("resident param bytes"), "{s}");
+        assert!(s.contains("0.50x"), "{s}");
     }
 
     #[test]

@@ -9,16 +9,26 @@
 //! backend converts to/from `xla::Literal` internally, the native
 //! backend operates on these buffers directly.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::manifest::Dtype;
+use super::precision::{self, Precision};
 
 /// Typed element storage of one literal.
+///
+/// `F32`/`I32`/`U32` are the program calling-convention types; `F16`
+/// and `I8` are reduced-precision *parameter storage* (see
+/// [`Precision`]) with the conversion semantics documented in
+/// [`precision`](super::precision): f16 is IEEE binary16 with
+/// round-to-nearest-even encode, int8 is symmetric per-tensor absmax
+/// with an f32 scale.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LiteralData {
     F32(Vec<f32>),
     I32(Vec<i32>),
     U32(Vec<u32>),
+    F16(Vec<u16>),
+    I8 { data: Vec<i8>, scale: f32 },
 }
 
 /// A host tensor: row-major data plus shape.
@@ -52,6 +62,134 @@ impl Literal {
         Ok(Literal { shape, data: LiteralData::U32(data) })
     }
 
+    /// f16 tensor from raw binary16 bits.
+    pub fn from_f16_bits(data: Vec<u16>, shape: Vec<usize>)
+        -> Result<Literal>
+    {
+        Self::check(data.len(), &shape)?;
+        Ok(Literal { shape, data: LiteralData::F16(data) })
+    }
+
+    /// int8 tensor with its per-tensor scale.
+    pub fn from_i8(data: Vec<i8>, scale: f32, shape: Vec<usize>)
+        -> Result<Literal>
+    {
+        Self::check(data.len(), &shape)?;
+        Ok(Literal { shape, data: LiteralData::I8 { data, scale } })
+    }
+
+    /// Quantize f32 data into a literal stored at `precision`
+    /// (`Precision::F32` stores it as-is).  Rounding semantics are the
+    /// documented ones in [`precision`]: RNE for f16, absmax/127 with
+    /// ties-away rounding for int8.
+    pub fn quantize_from_f32(
+        data: &[f32],
+        shape: &[usize],
+        precision: Precision,
+    ) -> Result<Literal> {
+        Self::check(data.len(), shape)?;
+        let stored = match precision {
+            Precision::F32 => LiteralData::F32(data.to_vec()),
+            Precision::F16 => {
+                let mut bits = vec![0u16; data.len()];
+                precision::f16_encode_into(data, &mut bits);
+                LiteralData::F16(bits)
+            }
+            Precision::Int8 => {
+                let mut q = vec![0i8; data.len()];
+                let scale = precision::i8_quantize_into(data, &mut q);
+                LiteralData::I8 { data: q, scale }
+            }
+        };
+        Ok(Literal { shape: shape.to_vec(), data: stored })
+    }
+
+    /// Overwrite this literal's storage by re-quantizing `src` in
+    /// place — the zero-allocation writeback half of the precision
+    /// residency loop (int8 recomputes its per-tensor scale).
+    pub fn requantize_from_f32(&mut self, src: &[f32]) -> Result<()> {
+        ensure!(src.len() == self.element_count(),
+                "requantize: {} values into a {}-element literal",
+                src.len(), self.element_count());
+        match &mut self.data {
+            LiteralData::F32(v) => v.copy_from_slice(src),
+            LiteralData::F16(v) => precision::f16_encode_into(src, v),
+            LiteralData::I8 { data, scale } => {
+                *scale = precision::i8_quantize_into(src, data);
+            }
+            other => bail!(
+                "requantize_from_f32 on non-parameter dtype {:?}",
+                match other {
+                    LiteralData::I32(_) => Dtype::I32,
+                    _ => Dtype::U32,
+                }
+            ),
+        }
+        Ok(())
+    }
+
+    /// Dequantize into a caller-provided f32 buffer (exact for f32 and
+    /// f16 storage; `q * scale` for int8).  The hot-path form of
+    /// [`as_f32_iter`](Literal::as_f32_iter).
+    pub fn dequantize_into(&self, out: &mut [f32]) -> Result<()> {
+        ensure!(out.len() == self.element_count(),
+                "dequantize: {}-element buffer for a {}-element literal",
+                out.len(), self.element_count());
+        match &self.data {
+            LiteralData::F32(v) => out.copy_from_slice(v),
+            LiteralData::F16(v) => precision::f16_decode_into(v, out),
+            LiteralData::I8 { data, scale } => {
+                precision::i8_dequantize_into(data, *scale, out)
+            }
+            _ => bail!("dequantize on non-parameter dtype {:?}",
+                       self.dtype()),
+        }
+        Ok(())
+    }
+
+    /// Every element as f32, whatever the parameter storage dtype —
+    /// the round-trip accessor: f32 passes through, f16 decodes
+    /// exactly, int8 yields `q * scale`.  Errors for i32/u32 literals.
+    pub fn as_f32_iter(
+        &self,
+    ) -> Result<Box<dyn Iterator<Item = f32> + '_>> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(Box::new(v.iter().copied())),
+            LiteralData::F16(v) => Ok(Box::new(
+                v.iter().map(|&h| precision::f16_bits_to_f32(h)),
+            )),
+            LiteralData::I8 { data, scale } => {
+                let s = *scale;
+                Ok(Box::new(data.iter().map(move |&q| q as f32 * s)))
+            }
+            _ => bail!("as_f32_iter on non-parameter dtype {:?}",
+                       self.dtype()),
+        }
+    }
+
+    /// The storage precision of a parameter literal (`None` for the
+    /// integer calling-convention dtypes).
+    pub fn storage_precision(&self) -> Option<Precision> {
+        match self.data {
+            LiteralData::F32(_) => Some(Precision::F32),
+            LiteralData::F16(_) => Some(Precision::F16),
+            LiteralData::I8 { .. } => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Actual host bytes this literal's element storage occupies
+    /// (int8 includes its 4-byte scale).
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.data {
+            LiteralData::F32(v) => 4 * v.len() as u64,
+            LiteralData::I32(v) => 4 * v.len() as u64,
+            LiteralData::U32(v) => 4 * v.len() as u64,
+            LiteralData::F16(v) => 2 * v.len() as u64,
+            LiteralData::I8 { data, .. } => data.len() as u64 + 4,
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
@@ -61,6 +199,8 @@ impl Literal {
             LiteralData::F32(_) => Dtype::F32,
             LiteralData::I32(_) => Dtype::I32,
             LiteralData::U32(_) => Dtype::U32,
+            LiteralData::F16(_) => Dtype::F16,
+            LiteralData::I8 { .. } => Dtype::I8,
         }
     }
 
@@ -70,6 +210,8 @@ impl Literal {
             LiteralData::F32(v) => v.len(),
             LiteralData::I32(v) => v.len(),
             LiteralData::U32(v) => v.len(),
+            LiteralData::F16(v) => v.len(),
+            LiteralData::I8 { data, .. } => data.len(),
         }
     }
 
@@ -133,7 +275,9 @@ impl Literal {
         }
     }
 
-    /// Raw little-endian bytes (checkpoint format).
+    /// Raw little-endian bytes (checkpoint format).  Quantized storage
+    /// serializes its resident form: u16 LE for f16, and a 4-byte f32
+    /// scale followed by the code bytes for int8.
     pub fn to_le_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.element_count() * 4);
         match &self.data {
@@ -149,6 +293,17 @@ impl Literal {
             }
             LiteralData::U32(v) => {
                 for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            LiteralData::F16(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            LiteralData::I8 { data, scale } => {
+                out.extend_from_slice(&scale.to_le_bytes());
+                for x in data {
                     out.extend_from_slice(&x.to_le_bytes());
                 }
             }
@@ -219,5 +374,77 @@ mod tests {
         assert_eq!(b.len(), 8);
         assert_eq!(&b[0..4], &1.0f32.to_le_bytes());
         assert_eq!(&b[4..8], &(-2.0f32).to_le_bytes());
+    }
+
+    #[test]
+    fn quantized_literals_keep_shape_and_dtype_invariants() {
+        let data = [1.0f32, -0.5, 0.25, 0.75];
+        for p in Precision::ALL {
+            let l = Literal::quantize_from_f32(&data, &[2, 2], p)
+                .unwrap();
+            assert_eq!(l.shape(), &[2, 2]);
+            assert_eq!(l.element_count(), 4);
+            assert_eq!(l.dtype(), p.dtype());
+            assert_eq!(l.storage_precision(), Some(p));
+            let back: Vec<f32> = l.as_f32_iter().unwrap().collect();
+            assert_eq!(back.len(), 4);
+            // shape mismatch rejected for every precision
+            assert!(Literal::quantize_from_f32(&data, &[3], p).is_err());
+        }
+        // resident bytes follow the dtype widths
+        let f32l =
+            Literal::quantize_from_f32(&data, &[4], Precision::F32)
+                .unwrap();
+        let f16l =
+            Literal::quantize_from_f32(&data, &[4], Precision::F16)
+                .unwrap();
+        let i8l =
+            Literal::quantize_from_f32(&data, &[4], Precision::Int8)
+                .unwrap();
+        assert_eq!(f32l.resident_bytes(), 16);
+        assert_eq!(f16l.resident_bytes(), 8);
+        assert_eq!(i8l.resident_bytes(), 4 + 4); // codes + scale
+    }
+
+    #[test]
+    fn f16_literal_roundtrip_is_lossless_for_f16_values() {
+        // values already representable in f16 survive the full
+        // quantize -> as_f32_iter -> requantize loop bit-exactly
+        let data = [1.0f32, -2.5, 0.0009765625, 65504.0];
+        let mut l =
+            Literal::quantize_from_f32(&data, &[4], Precision::F16)
+                .unwrap();
+        let back: Vec<f32> = l.as_f32_iter().unwrap().collect();
+        assert_eq!(back, data);
+        let before = l.clone();
+        l.requantize_from_f32(&back).unwrap();
+        assert_eq!(l, before);
+    }
+
+    #[test]
+    fn dequantize_into_matches_iter() {
+        let data = [0.11f32, -0.7, 0.0, 3.3];
+        for p in Precision::ALL {
+            let l = Literal::quantize_from_f32(&data, &[4], p).unwrap();
+            let mut buf = [9f32; 4];
+            l.dequantize_into(&mut buf).unwrap();
+            let it: Vec<f32> = l.as_f32_iter().unwrap().collect();
+            assert_eq!(buf.to_vec(), it, "{p}");
+            assert!(l.dequantize_into(&mut [0f32; 3]).is_err());
+        }
+        // integer calling-convention literals refuse the accessors
+        let u = u32_1(7).unwrap();
+        assert!(u.as_f32_iter().is_err());
+        assert!(u.dequantize_into(&mut [0f32; 1]).is_err());
+        assert_eq!(u.storage_precision(), None);
+    }
+
+    #[test]
+    fn i8_literal_le_bytes_lead_with_scale() {
+        let l = Literal::from_i8(vec![1, -2, 3], 0.5, vec![3]).unwrap();
+        let b = l.to_le_bytes();
+        assert_eq!(b.len(), 7);
+        assert_eq!(&b[0..4], &0.5f32.to_le_bytes());
+        assert_eq!(b[4], 1);
     }
 }

@@ -10,12 +10,22 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
-/// Element type of a program input/output.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Element type of a program input/output or resident tensor.
+///
+/// `F32`/`I32`/`U32` are the step-program calling-convention types;
+/// `F16`/`I8` are parameter *storage* types (see
+/// [`Precision`](super::Precision)) — programs still compute in f32,
+/// but resident tensors and checkpoint-adjacent plumbing may carry
+/// them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
     F32,
     I32,
     U32,
+    /// IEEE binary16 (parameter storage).
+    F16,
+    /// Symmetric per-tensor int8 (parameter storage, + f32 scale).
+    I8,
 }
 
 impl Dtype {
@@ -24,12 +34,18 @@ impl Dtype {
             "f32" => Ok(Dtype::F32),
             "i32" => Ok(Dtype::I32),
             "u32" => Ok(Dtype::U32),
+            "f16" => Ok(Dtype::F16),
+            "i8" => Ok(Dtype::I8),
             other => bail!("unknown dtype {other}"),
         }
     }
 
     pub fn size_bytes(&self) -> usize {
-        4
+        match self {
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
     }
 }
 
@@ -84,8 +100,18 @@ impl ConfigInfo {
         self.kind == "decoder"
     }
 
-    /// The device-simulator dimensions for this config (fp32 artifacts).
+    /// The device-simulator dimensions for this config (fp32 storage).
     pub fn model_dims(&self) -> crate::device::ModelDims {
+        self.model_dims_at(crate::runtime::Precision::F32)
+    }
+
+    /// Device-simulator dimensions with the parameter byte-width taken
+    /// from an explicit storage precision, so the simulated ledger
+    /// charges what the host actually keeps resident.
+    pub fn model_dims_at(
+        &self,
+        precision: crate::runtime::Precision,
+    ) -> crate::device::ModelDims {
         crate::device::ModelDims {
             name: self.name.clone(),
             vocab: self.vocab,
@@ -95,7 +121,7 @@ impl ConfigInfo {
             d_ff: self.d_ff,
             max_seq: self.max_seq,
             decoder: self.is_decoder(),
-            param_bytes: 4,
+            param_bytes: precision.param_bytes(),
         }
     }
 }

@@ -22,12 +22,14 @@ pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod precision;
 pub mod state;
 
 pub use backend::{Backend, Executable};
 pub use literal::{f32_1, f32_tensor, i32_tensor, u32_1, Literal};
 pub use manifest::{ConfigInfo, Dtype, Manifest, ParamSpecInfo, ProgramSpec,
                    TensorSpec};
+pub use precision::Precision;
 pub use state::{ExecState, ModelState};
 
 use std::collections::HashMap;

@@ -15,10 +15,16 @@
 //! `matmul_at_into` ACCUMULATE (the buffer must arrive zeroed);
 //! `matmul_bias_into` / `matmul_bt_into` overwrite every element.
 
-/// Worker threads for large kernels and the k-query SPSA pool (cached
-/// after first query).
-pub fn n_threads() -> usize {
-    use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How many pool workers (fleet threads driving sessions) are
+/// registered right now; the per-kernel budget divides by this.  0
+/// outside fleet runs (treated as 1).
+static ACTIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// The host's undivided kernel thread budget (cached after first
+/// query).
+pub fn host_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let v = CACHED.load(Ordering::Relaxed);
     if v != 0 {
@@ -31,6 +37,45 @@ pub fn n_threads() -> usize {
         .max(1);
     CACHED.store(t, Ordering::Relaxed);
     t
+}
+
+/// RAII registration of pool workers: holds `n` slots of the shared
+/// compute budget and releases them on drop — panic- and
+/// overlap-safe, unlike a swap/restore (two concurrent fleets simply
+/// sum their worker counts, and an unwinding worker still releases).
+pub struct PoolWorkers {
+    n: usize,
+}
+
+impl Drop for PoolWorkers {
+    fn drop(&mut self) {
+        ACTIVE_WORKERS.fetch_sub(self.n, Ordering::Relaxed);
+    }
+}
+
+/// Register `n` pool workers that will concurrently drive kernels
+/// (the fleet scheduler holds this guard for the duration of its run;
+/// see `coordinator::fleet`).  While any guards are live, each kernel
+/// invocation (and SPSA pool) gets `host_threads / total` threads —
+/// W workers above `PAR_FLOPS` used to request W×budget threads and
+/// oversubscribe the host.  Thread counts never change kernel
+/// *results* (pinned by the `*_matches_serial` tests), only how many
+/// cores one kernel may occupy.
+pub fn register_pool_workers(n: usize) -> PoolWorkers {
+    ACTIVE_WORKERS.fetch_add(n, Ordering::Relaxed);
+    PoolWorkers { n }
+}
+
+/// The currently registered pool-worker count (min 1).
+pub fn active_workers() -> usize {
+    ACTIVE_WORKERS.load(Ordering::Relaxed).max(1)
+}
+
+/// Worker threads available to ONE kernel invocation (and to the
+/// k-query SPSA pool): the host budget divided by the active pool
+/// workers, floored at 1.
+pub fn n_threads() -> usize {
+    (host_threads() / active_workers()).max(1)
 }
 
 /// Flop threshold below which threading costs more than it saves.
@@ -331,6 +376,41 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn kernel_budget_divides_by_active_workers() {
+        // the fleet's compute-budget contract: W registered workers
+        // shrink the per-kernel budget to host/W (floor 1), guards
+        // stack additively and release on drop, and the division
+        // changes scheduling only, never results.  (This test is the
+        // only writer in the lib test binary; fleet runs live in
+        // separate integration-test processes.)
+        let host = host_threads();
+        assert_eq!(n_threads(), host);
+        {
+            let _two = register_pool_workers(2);
+            assert_eq!(n_threads(), (host / 2).max(1));
+            {
+                // keep this window tiny: while it is open, every
+                // concurrent test's kernels fall to 1 thread
+                let _more = register_pool_workers(62);
+                assert_eq!(active_workers(), 64, "guards stack");
+                assert_eq!(n_threads(), 1, "budget floors at one");
+            }
+            assert_eq!(active_workers(), 2, "inner guard released");
+            // a PAR_FLOPS-crossing matmul under a divided (but still
+            // multi-thread on CI hosts) budget is bit-identical to
+            // the serial kernel
+            let (m, k, n) = (128, 64, 300);
+            let a = randv(m * k, 21);
+            let b = randv(k * n, 22);
+            let divided = matmul(&a, &b, m, k, n);
+            let mut serial = vec![0f32; m * n];
+            mm_rows(&a, &b, k, n, &mut serial);
+            assert_eq!(divided, serial);
+        }
+        assert_eq!(n_threads(), host, "all guards released");
     }
 
     #[test]

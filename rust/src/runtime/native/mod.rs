@@ -491,12 +491,23 @@ impl Executable for NativeProgram {
     /// and activations come from `state.scratch`.  `inputs` carries
     /// only the non-donated tensors, in the order they follow the
     /// donated block in the manifest calling convention.
+    ///
+    /// Precision residency: for a reduced-precision `ExecState` the
+    /// parameters are dequantized into transient f32 working buffers
+    /// before the step and re-quantized (then freed) on writeback —
+    /// the step math itself is always f32, so an `F32` state keeps the
+    /// historical bit-exact zero-copy behaviour, and between steps a
+    /// quantized state keeps only its quantized bytes resident.
+    /// `loss_eval` reads params without mutating them, so its working
+    /// set is discarded instead of written back (an int8 re-scale
+    /// would otherwise perturb storage).
     fn run_in_place(
         &self,
         state: &mut ExecState,
         inputs: &[&Literal],
     ) -> Result<f32> {
         let cfg = &self.cfg;
+        state.materialize();
         ensure!(
             state.w.len() == cfg.params.len(),
             "ExecState holds {} param tensors, config {} has {}",
@@ -504,6 +515,28 @@ impl Executable for NativeProgram {
             cfg.name,
             cfg.params.len()
         );
+        let result = self.run_materialized(state, inputs);
+        if matches!(self.kind, ProgramKind::LossEval) || result.is_err()
+        {
+            // read-only program (or a failed step whose partial
+            // working set must not overwrite good residency)
+            state.discard_materialized();
+        } else {
+            state.writeback();
+        }
+        result
+    }
+}
+
+impl NativeProgram {
+    /// The step body `run_in_place` wraps between materialize and
+    /// writeback: operates on the f32 working set in `state.w`.
+    fn run_materialized(
+        &self,
+        state: &mut ExecState,
+        inputs: &[&Literal],
+    ) -> Result<f32> {
+        let cfg = &self.cfg;
         match self.kind {
             ProgramKind::Mezo
             | ProgramKind::MezoNaive

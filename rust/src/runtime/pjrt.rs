@@ -83,6 +83,13 @@ fn to_xla(l: &Literal) -> Result<xla::Literal> {
         Dtype::F32 => (xla::ElementType::F32, bytes_of(l.f32_slice()?)),
         Dtype::I32 => (xla::ElementType::S32, bytes_of(l.i32_slice()?)),
         Dtype::U32 => (xla::ElementType::U32, bytes_of(l.u32_slice()?)),
+        // reduced-precision storage never crosses the PJRT boundary:
+        // ExecState dequantizes to f32 in donated_literals()
+        Dtype::F16 | Dtype::I8 => bail!(
+            "pjrt backend takes f32 calling-convention literals; \
+             dequantize {:?} storage first",
+            l.dtype()
+        ),
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, l.shape(), bytes)
         .map_err(|e| anyhow!("building xla literal: {e:?}"))
@@ -108,6 +115,11 @@ fn from_xla(l: &xla::Literal, want: &super::manifest::TensorSpec)
             l.to_vec::<u32>()
                 .map_err(|e| anyhow!("literal->u32: {e:?}"))?,
             shape,
+        ),
+        Dtype::F16 | Dtype::I8 => bail!(
+            "manifest outputs are f32 calling-convention tensors; \
+             got storage dtype {:?}",
+            want.dtype
         ),
     }
 }

@@ -1,0 +1,375 @@
+//! First-class parameter-storage precision.
+//!
+//! The paper's feasibility numbers are quantized deployments: OPT-1.3B
+//! fits the Reno 6 in ~6.5 GB only because the parameters are fp16
+//! (`device/spec.rs` `bytes_per_param`).  [`Precision`] makes that a
+//! property of the tensor API instead of a simulation-only constant:
+//! the session's resident parameters ([`ExecState`](super::ExecState))
+//! are stored at this precision *between* steps and dequantized into
+//! f32 scratch buffers only for compute.
+//!
+//! ## Conversion semantics (the contract the tests pin)
+//!
+//! * **f16** — IEEE 754 binary16.  f32 → f16 rounds to nearest, ties
+//!   to even (RNE), exactly like hardware conversion instructions:
+//!   values above 65504+16 overflow to ±inf, f16-subnormal magnitudes
+//!   (below 2^-14) are rounded into the subnormal grid, magnitudes at
+//!   or below 2^-25 underflow to ±0 (the 2^-25 tie rounds to the even
+//!   candidate, zero), NaN maps to a canonical quiet NaN (payloads are
+//!   not preserved), and ±inf / ±0 map through exactly.  f16 → f32 is
+//!   exact for every non-NaN value, so re-encoding a decoded f16 is
+//!   the identity (exhaustively tested over all 65536 bit patterns).
+//! * **int8** — symmetric per-tensor absmax quantization: `scale =
+//!   absmax / 127` over the *finite* elements, `q = clamp(round(x /
+//!   scale), -127, 127)` with Rust's `round` (ties away from zero).
+//!   An all-zero (or all-non-finite) tensor stores `scale = 0` and
+//!   dequantizes to exact zeros.  Non-finite inputs: NaN → 0, ±inf →
+//!   ±127.  A quantize → dequantize → quantize round trip reproduces
+//!   the same codes (the absmax element sits exactly at ±127), so
+//!   repeated boundary crossings do not drift.
+
+use super::manifest::Dtype;
+
+/// Parameter-storage policy for a session's resident tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full precision — the historical layout; the hot loop operates
+    /// on the resident buffers directly and trajectories are
+    /// bit-identical to the pre-precision API.
+    F32,
+    /// IEEE binary16 storage; f32 compute with round-to-nearest-even
+    /// writeback.  Halves resident parameter bytes.
+    F16,
+    /// Symmetric per-tensor absmax int8 storage (+4-byte scale).
+    /// Quarter resident bytes; lossy — the scale is recomputed at
+    /// every writeback, and with no f32 master copy any per-element
+    /// update smaller than half the quantization step (absmax/254)
+    /// is absorbed entirely by the re-rounding.  This makes int8 a
+    /// *residency/footprint* mode (inference, storage experiments,
+    /// the BENCH_quant sweep), not a training-accuracy mode — MeZO's
+    /// tiny per-step updates typically round away.  fp16 is the
+    /// precision the paper's fine-tuning feasibility claims use.
+    Int8,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] =
+        [Precision::F32, Precision::F16, Precision::Int8];
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" => Some(Precision::F32),
+            "f16" | "fp16" | "half" => Some(Precision::F16),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Storage bytes per parameter element (what the device ledger and
+    /// the analytic footprint model charge).  Int8's per-tensor scale
+    /// is amortized to zero here; [`Literal::resident_bytes`]
+    /// (super::Literal::resident_bytes) counts it exactly.
+    pub fn param_bytes(&self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    /// The element dtype resident tensors of this precision carry.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Precision::F32 => Dtype::F32,
+            Precision::F16 => Dtype::F16,
+            Precision::Int8 => Dtype::I8,
+        }
+    }
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::F32
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> f16 (IEEE binary16), round-to-nearest-even
+// ---------------------------------------------------------------------
+
+/// Encode one f32 as IEEE binary16 bits, rounding to nearest-even.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let bits = value.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf stays inf; every NaN becomes the canonical quiet NaN
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+    let e = exp - 127 + 15; // rebias
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // f16 subnormal (or underflow to zero)
+        if e < -10 {
+            // magnitude <= 2^-25: below half the smallest subnormal,
+            // or the exact 2^-25 tie whose even neighbour is zero
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 13 mantissa bits + (1 - e)
+        let half = 1u32 << (shift - 1);
+        let rem = man & ((1u32 << shift) - 1);
+        let base = man >> shift;
+        let up = rem > half || (rem == half && base & 1 == 1);
+        return sign | (base + up as u32) as u16;
+    }
+    // normal: drop 13 mantissa bits with RNE; a mantissa carry
+    // correctly bumps the exponent (and may round up to inf)
+    let base = man >> 13;
+    let rem = man & 0x1FFF;
+    let up = rem > 0x1000 || (rem == 0x1000 && base & 1 == 1);
+    sign | (((e as u32) << 10 | base) + up as u32) as u16
+}
+
+/// Decode IEEE binary16 bits to f32 (exact for all non-NaN inputs; NaN
+/// payload bits are carried into the f32 mantissa).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // +-0
+        } else {
+            // subnormal: value = man * 2^-24; normalize into f32
+            let mut m = man;
+            let mut shifts = 0u32;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                shifts += 1;
+            }
+            sign | ((113 - shifts) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice (round-to-nearest-even per element).
+pub fn f16_encode_into(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16_bits(x);
+    }
+}
+
+/// Decode a slice (exact).
+pub fn f16_decode_into(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = f16_bits_to_f32(h);
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> int8 (symmetric per-tensor absmax)
+// ---------------------------------------------------------------------
+
+/// Quantize into a caller-provided buffer; returns the per-tensor
+/// scale (`absmax / 127` over finite elements; 0 for an all-zero or
+/// all-non-finite tensor).
+pub fn i8_quantize_into(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let absmax = src
+        .iter()
+        .filter(|x| x.is_finite())
+        .fold(0f32, |a, &x| a.max(x.abs()));
+    if absmax == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = absmax / 127.0;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        // NaN `as`-casts to 0; +-inf clamps to +-127
+        *d = (x / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Dequantize: `out[i] = data[i] * scale` (exact zeros for scale 0).
+pub fn i8_dequantize_into(src: &[i8], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &q) in dst.iter_mut().zip(src) {
+        *d = q as f32 * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Precision::parse("f16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("fp16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("bf16"), None);
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.label()), Some(p));
+        }
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn param_bytes_ordering() {
+        assert_eq!(Precision::F32.param_bytes(), 4);
+        assert_eq!(Precision::F16.param_bytes(), 2);
+        assert_eq!(Precision::Int8.param_bytes(), 1);
+    }
+
+    #[test]
+    fn f16_known_values() {
+        // (f32, f16 bits) pins from the IEEE 754 tables
+        let cases: [(f32, u16); 8] = [
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-2.0, 0xC000),
+            (65504.0, 0x7BFF),         // f16 max
+            (6.103_515_6e-5, 0x0400),  // smallest normal, 2^-14
+            (5.960_464_5e-8, 0x0001),  // smallest subnormal, 2^-24
+            (0.333_251_95, 0x3555),    // 1/3 rounded to f16
+        ];
+        for (x, h) in cases {
+            assert_eq!(f32_to_f16_bits(x), h, "encode {x}");
+            assert_eq!(f16_bits_to_f32(h).to_bits(), x.to_bits(),
+                       "decode {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between f16(1.0) and the next
+        // representable 1 + 2^-10: RNE picks the even mantissa (1.0)
+        let tie_down = 1.0f32 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_down), 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 (odd mantissa) and
+        // 1+2^-9 (even mantissa): RNE rounds UP to the even one
+        let tie_up = 1.0f32 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3C02);
+        // just off the tie rounds to nearest as usual
+        assert_eq!(f32_to_f16_bits(tie_down + 1e-7), 0x3C01);
+        assert_eq!(f32_to_f16_bits(tie_down - 1e-7), 0x3C00);
+    }
+
+    #[test]
+    fn f16_nan_inf_subnormal_edges() {
+        // NaN -> canonical quiet NaN, still NaN after decode
+        let h = f32_to_f16_bits(f32::NAN);
+        assert_eq!(h & 0x7C00, 0x7C00);
+        assert_ne!(h & 0x03FF, 0);
+        assert!(f16_bits_to_f32(h).is_nan());
+        // infinities map through with sign
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        // overflow -> inf (65520 ties between 65504 and 65536; the
+        // 65504 mantissa is odd, so RNE overflows to inf)
+        assert_eq!(f32_to_f16_bits(1e5), 0x7C00);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7BFF);
+        // f32 values inside the f16-subnormal range round onto the
+        // subnormal grid
+        let x = 1.5 * 2f32.powi(-24); // 1.5 * smallest subnormal: tie
+        assert_eq!(f32_to_f16_bits(x), 0x0002, "tie to even (2)");
+        assert_eq!(f32_to_f16_bits(1.25 * 2f32.powi(-24)), 0x0001);
+        // underflow: at or below 2^-25 becomes signed zero
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(-2f32.powi(-26)), 0x8000);
+        // an f32 subnormal (way below 2^-25) underflows too
+        assert_eq!(f32_to_f16_bits(f32::from_bits(1)), 0x0000);
+    }
+
+    #[test]
+    fn f16_decode_encode_is_identity_for_all_bit_patterns() {
+        // decode is exact, so re-encoding must reproduce every non-NaN
+        // pattern bit-for-bit; NaNs must at least stay NaN
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), h,
+                           "bits {h:#06x} decoded to {x} did not \
+                            re-encode");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_roundtrip_is_stable() {
+        let src = [0.5f32, -1.0, 0.25, 0.999, -0.123, 0.0];
+        let mut q = [0i8; 6];
+        let scale = i8_quantize_into(&src, &mut q);
+        assert!(scale > 0.0);
+        assert_eq!(q[1], -127, "the absmax element must hit the rail");
+        let mut deq = [0f32; 6];
+        i8_dequantize_into(&q, scale, &mut deq);
+        // re-quantizing the dequantized tensor reproduces the codes
+        let mut q2 = [0i8; 6];
+        i8_quantize_into(&deq, &mut q2);
+        assert_eq!(q, q2, "int8 boundary crossings must not drift");
+        // error bounded by half a step
+        for (x, d) in src.iter().zip(&deq) {
+            assert!((x - d).abs() <= scale * 0.5 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn i8_zero_tensor_and_nonfinite() {
+        let mut q = [3i8; 4];
+        let s = i8_quantize_into(&[0.0, 0.0, -0.0, 0.0], &mut q);
+        assert_eq!(s, 0.0);
+        assert_eq!(q, [0i8; 4]);
+        let mut deq = [1f32; 4];
+        i8_dequantize_into(&q, s, &mut deq);
+        assert_eq!(deq, [0f32; 4], "scale 0 dequantizes to exact zeros");
+
+        // non-finite inputs: NaN -> 0, +-inf clamps to the rails;
+        // the scale comes from the finite elements only
+        let src = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0];
+        let mut q = [0i8; 4];
+        let s = i8_quantize_into(&src, &mut q);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q, [0, 127, -127, 127]);
+
+        // all-non-finite: nothing finite to scale by -> zeros
+        let mut q = [5i8; 2];
+        let s = i8_quantize_into(&[f32::NAN, f32::INFINITY], &mut q);
+        assert_eq!(s, 0.0);
+        assert_eq!(q, [0, 0]);
+    }
+}

@@ -15,6 +15,7 @@ use anyhow::{bail, ensure, Result};
 use super::literal::{f32_tensor, Literal};
 use super::manifest::ConfigInfo;
 use super::native::model::Scratch;
+use super::precision::Precision;
 
 /// The live parameter set of one model instance.
 pub struct ModelState {
@@ -132,10 +133,32 @@ impl ModelState {
 /// values.  `scratch` is the activation arena the native backend draws
 /// forward/backward buffers from; it carries no semantic state (only
 /// capacity), so dropping or swapping it never changes results.
+///
+/// ## Precision residency
+///
+/// The state is built at a [`Precision`]:
+///
+/// * `F32` — `w` holds the resident parameters directly (the
+///   historical zero-copy layout; trajectories are bit-identical to
+///   the pre-precision API).
+/// * `F16` / `Int8` — `qw` holds the quantized resident tensors
+///   *between* steps; `w` is empty then.  [`materialize`]
+///   (ExecState::materialize) dequantizes into transient f32 working
+///   buffers for compute, and [`writeback`](ExecState::writeback)
+///   re-quantizes into the existing storage (in place) and frees
+///   them — so between steps the parameters really occupy only their
+///   quantized bytes.  The Adam `m`/`v` moments always stay f32
+///   (standard mixed-precision practice — quantizing second moments
+///   destroys the update direction).
 pub struct ExecState {
     cfg: ConfigInfo,
-    /// Parameter tensors, manifest order.
+    precision: Precision,
+    /// Parameter tensors, manifest order.  For `Precision::F32` this
+    /// is the residency itself; for quantized precisions it holds the
+    /// dequantized working set only while materialized.
     pub w: Vec<Vec<f32>>,
+    /// Quantized resident parameters (empty for `Precision::F32`).
+    qw: Vec<Literal>,
     /// Adam first-moment tensors (empty for derivative-free sessions).
     pub m: Vec<Vec<f32>>,
     /// Adam second-moment tensors (empty for derivative-free sessions).
@@ -149,6 +172,17 @@ impl ExecState {
     pub fn from_raw(cfg: &ConfigInfo, raw: Vec<Vec<f32>>)
         -> Result<ExecState>
     {
+        ExecState::from_raw_at(cfg, raw, Precision::F32)
+    }
+
+    /// Build from raw f32 data stored at an explicit precision; for
+    /// reduced precisions the data is quantized once here and the f32
+    /// source dropped.
+    pub fn from_raw_at(
+        cfg: &ConfigInfo,
+        raw: Vec<Vec<f32>>,
+        precision: Precision,
+    ) -> Result<ExecState> {
         ensure!(raw.len() == cfg.params.len(),
                 "expected {} tensors, got {}", cfg.params.len(),
                 raw.len());
@@ -157,13 +191,108 @@ impl ExecState {
                     "tensor {} has {} values, expected {}", spec.name,
                     data.len(), spec.elements());
         }
+        let (w, qw) = match precision {
+            Precision::F32 => (raw, Vec::new()),
+            _ => {
+                let qw = cfg
+                    .params
+                    .iter()
+                    .zip(&raw)
+                    .map(|(spec, data)| {
+                        Literal::quantize_from_f32(data, &spec.shape,
+                                                   precision)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                (Vec::new(), qw)
+            }
+        };
         Ok(ExecState {
             cfg: cfg.clone(),
-            w: raw,
+            precision,
+            w,
+            qw,
             m: Vec::new(),
             v: Vec::new(),
             scratch: Scratch::new(),
         })
+    }
+
+    /// The parameter-storage precision this state was built at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Whether the quantized working set is currently materialized.
+    fn materialized(&self) -> bool {
+        !self.qw.is_empty() && !self.w.is_empty()
+    }
+
+    /// Dequantize the resident parameters into TRANSIENT f32 working
+    /// buffers.  Deliberately not drawn from (or returned to) the
+    /// scratch arena: parking parameter-sized f32 buffers in the pool
+    /// between steps would keep 4 B/param of host memory alive and
+    /// silently erase the residency saving that is this API's whole
+    /// point.  The working set is allocated here and freed at
+    /// [`writeback`](ExecState::writeback) /
+    /// [`discard_materialized`](ExecState::discard_materialized), so
+    /// between steps only the quantized storage is resident — a
+    /// quantized step pays one O(params) allocation, which is noise
+    /// next to the step's O(params × tokens) compute (the F32 path
+    /// keeps its zero-allocation steady state).  No-op for
+    /// `Precision::F32` or when already materialized.
+    pub fn materialize(&mut self) {
+        if self.qw.is_empty() || self.materialized() {
+            return;
+        }
+        let mut w = Vec::with_capacity(self.qw.len());
+        for q in &self.qw {
+            let mut buf = vec![0f32; q.element_count()];
+            q.dequantize_into(&mut buf)
+                .expect("qw holds parameter-storage literals");
+            w.push(buf);
+        }
+        self.w = w;
+    }
+
+    /// Re-quantize the working set into the resident tensors (in
+    /// place — the storage is overwritten, never reallocated) and
+    /// free the f32 working buffers.  No-op for `Precision::F32` or
+    /// when not materialized.
+    pub fn writeback(&mut self) {
+        if !self.materialized() {
+            return;
+        }
+        for (q, buf) in self.qw.iter_mut().zip(self.w.drain(..)) {
+            q.requantize_from_f32(&buf)
+                .expect("working set matches residency shapes");
+        }
+    }
+
+    /// Drop the working buffers WITHOUT re-quantizing — for read-only
+    /// programs (`loss_eval`) where a writeback would needlessly
+    /// re-scale int8 storage.  No-op for `Precision::F32`.
+    pub fn discard_materialized(&mut self) {
+        if !self.materialized() {
+            return;
+        }
+        self.w.clear();
+    }
+
+    /// Actual host bytes of the *resident* parameter storage (what a
+    /// phone would keep allocated between steps): 4 B/param for f32,
+    /// 2 for f16, 1 (+4/tensor scale) for int8.
+    pub fn resident_param_bytes(&self) -> u64 {
+        if self.qw.is_empty() {
+            self.w.iter().map(|t| 4 * t.len() as u64).sum()
+        } else {
+            self.qw.iter().map(|q| q.resident_bytes()).sum()
+        }
+    }
+
+    /// Number of parameter tensor slots (independent of whether the
+    /// working set is materialized right now).
+    fn param_slots(&self) -> usize {
+        if self.qw.is_empty() { self.w.len() } else { self.qw.len() }
     }
 
     /// Build from a literal-based [`ModelState`] (one copy — a
@@ -196,7 +325,8 @@ impl ExecState {
 
     /// Split-borrow every mutable part at once — the shape the native
     /// backend's `run_in_place` needs (tensors and scratch arena are
-    /// used simultaneously).
+    /// used simultaneously).  Quantized states must be
+    /// [`materialize`](ExecState::materialize)d first.
     pub fn native_parts(
         &mut self,
     ) -> (
@@ -211,15 +341,40 @@ impl ExecState {
     /// Total donated tensors a step program sees: params, plus m and v
     /// when present.
     pub fn tensor_count(&self) -> usize {
-        self.w.len() + self.m.len() + self.v.len()
+        self.param_slots() + self.m.len() + self.v.len()
     }
 
-    /// Materialize every donated tensor as a `Literal`, in calling-
-    /// convention order (w, then m, then v).  This is the compatibility
-    /// bridge for backends without a native `run_in_place` (PJRT).
+    /// An f32 snapshot of every parameter tensor (dequantized for
+    /// reduced-precision residency), in manifest order.
+    fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        if self.qw.is_empty() || self.materialized() {
+            Ok(self.w.clone())
+        } else {
+            self.qw
+                .iter()
+                .map(|q| {
+                    let mut buf = vec![0f32; q.element_count()];
+                    q.dequantize_into(&mut buf)?;
+                    Ok(buf)
+                })
+                .collect()
+        }
+    }
+
+    /// Materialize every donated tensor as an f32 `Literal`, in
+    /// calling-convention order (w, then m, then v).  This is the
+    /// compatibility bridge for backends without a native
+    /// `run_in_place` (PJRT): programs always compute in f32, so
+    /// quantized residency is dequantized here and re-quantized in
+    /// [`absorb`](ExecState::absorb).
     pub fn donated_literals(&self) -> Result<Vec<Literal>> {
         let mut out = Vec::with_capacity(self.tensor_count());
-        for set in [&self.w, &self.m, &self.v] {
+        for (spec, data) in
+            self.cfg.params.iter().zip(self.params_f32()?)
+        {
+            out.push(Literal::from_f32(data, spec.shape.clone())?);
+        }
+        for set in [&self.m, &self.v] {
             for (spec, data) in self.cfg.params.iter().zip(set.iter()) {
                 out.push(Literal::from_f32(data.clone(),
                                            spec.shape.clone())?);
@@ -229,25 +384,51 @@ impl ExecState {
     }
 
     /// Materialize ONLY the parameter tensors (eval programs take
-    /// params but never optimizer state).
+    /// params but never optimizer state), dequantized to f32.
     pub fn param_literals(&self) -> Result<Vec<Literal>> {
-        let mut out = Vec::with_capacity(self.w.len());
-        for (spec, data) in self.cfg.params.iter().zip(self.w.iter()) {
-            out.push(Literal::from_f32(data.clone(),
-                                       spec.shape.clone())?);
+        let mut out = Vec::with_capacity(self.param_slots());
+        for (spec, data) in
+            self.cfg.params.iter().zip(self.params_f32()?)
+        {
+            out.push(Literal::from_f32(data, spec.shape.clone())?);
         }
         Ok(out)
     }
 
     /// Write a `run()` output tuple (minus the trailing loss scalar)
     /// back into the donated tensors — the scatter half of the
-    /// compatibility bridge.
+    /// compatibility bridge.  Quantized residency re-quantizes the
+    /// parameter outputs (same rounding as the native writeback, so
+    /// the two paths stay bit-identical).
     pub fn absorb(&mut self, outs: Vec<Literal>) -> Result<()> {
         ensure!(outs.len() == self.tensor_count(),
                 "absorb: {} tensors, state holds {}", outs.len(),
                 self.tensor_count());
         let mut it = outs.into_iter();
-        for set in [&mut self.w, &mut self.m, &mut self.v] {
+        if self.qw.is_empty() {
+            for (spec, slot) in
+                self.cfg.params.iter().zip(self.w.iter_mut())
+            {
+                let data = it.next().expect("length checked").into_f32()?;
+                ensure!(data.len() == spec.elements(),
+                        "absorb: tensor {} has {} values, expected {}",
+                        spec.name, data.len(), spec.elements());
+                *slot = data;
+            }
+        } else {
+            ensure!(!self.materialized(),
+                    "absorb while a working set is materialized");
+            for (spec, q) in
+                self.cfg.params.iter().zip(self.qw.iter_mut())
+            {
+                let data = it.next().expect("length checked").into_f32()?;
+                ensure!(data.len() == spec.elements(),
+                        "absorb: tensor {} has {} values, expected {}",
+                        spec.name, data.len(), spec.elements());
+                q.requantize_from_f32(&data)?;
+            }
+        }
+        for set in [&mut self.m, &mut self.v] {
             for (spec, slot) in self.cfg.params.iter().zip(set.iter_mut())
             {
                 let data = it.next().expect("length checked").into_f32()?;
@@ -261,9 +442,10 @@ impl ExecState {
     }
 
     /// Snapshot the parameters as a literal-based [`ModelState`]
-    /// (checkpoint/eval boundary).
+    /// (checkpoint/eval boundary).  Quantized residency dequantizes —
+    /// checkpoints stay f32, the durable interchange format.
     pub fn params_model(&self) -> Result<ModelState> {
-        ModelState::from_raw(&self.cfg, &self.w)
+        ModelState::from_raw(&self.cfg, &self.params_f32()?)
     }
 
     /// Snapshot the Adam moments (errors for derivative-free state).
@@ -276,23 +458,32 @@ impl ExecState {
     }
 
     /// Overwrite the parameters from a [`ModelState`] (checkpoint
-    /// restore).
+    /// restore).  Quantized residency re-quantizes the incoming f32
+    /// tensors; restoring a checkpoint that was *written* by the same
+    /// precision is lossless (f16 decode is exact and re-encodes to
+    /// the identical bits; int8 codes reproduce — see `precision`).
     pub fn load_params(&mut self, params: &ModelState) -> Result<()> {
-        ensure!(params.len() == self.w.len(),
+        ensure!(!self.materialized(),
+                "load_params while a working set is materialized");
+        ensure!(params.len() == self.param_slots(),
                 "load_params: {} tensors, state holds {}", params.len(),
-                self.w.len());
-        for ((spec, slot), t) in self
+                self.param_slots());
+        for (i, (spec, t)) in self
             .cfg
             .params
             .iter()
-            .zip(self.w.iter_mut())
             .zip(&params.tensors)
+            .enumerate()
         {
             let data = t.f32_vec()?;
             ensure!(data.len() == spec.elements(),
                     "load_params: tensor {} has {} values, expected {}",
                     spec.name, data.len(), spec.elements());
-            *slot = data;
+            if self.qw.is_empty() {
+                self.w[i] = data;
+            } else {
+                self.qw[i].requantize_from_f32(&data)?;
+            }
         }
         Ok(())
     }
@@ -413,6 +604,84 @@ mod tests {
         let (m, v) = st.adam_model().unwrap();
         assert_eq!(m.len(), 2);
         assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn quantized_state_residency_roundtrip() {
+        let cfg = tiny_cfg();
+        // every value exactly representable in f16
+        let raw = vec![
+            vec![0.5f32, -1.0, 0.25, 0.125, 0.75, -0.5],
+            vec![1.0, 0.0, -0.25, 0.5],
+        ];
+        let mut st =
+            ExecState::from_raw_at(&cfg, raw.clone(), Precision::F16)
+                .unwrap();
+        assert_eq!(st.precision(), Precision::F16);
+        assert_eq!(st.tensor_count(), 2);
+        assert!(st.w.is_empty(), "no f32 residency between steps");
+        assert_eq!(st.resident_param_bytes(), 2 * 10);
+        // the f32 snapshot is exact for f16-representable values
+        let ms = st.params_model().unwrap();
+        assert_eq!(ms.tensors[0].f32_vec().unwrap(), raw[0]);
+        assert_eq!(st.donated_literals().unwrap()[1].f32_vec().unwrap(),
+                   raw[1]);
+        // materialize -> mutate -> writeback persists
+        st.materialize();
+        assert_eq!(st.w.len(), 2);
+        assert_eq!(st.w[0], raw[0]);
+        st.w[0][0] = 0.375;
+        st.writeback();
+        assert!(st.w.is_empty());
+        assert_eq!(
+            st.params_model().unwrap().tensors[0].f32_vec().unwrap()[0],
+            0.375
+        );
+        // discard returns buffers without writing back
+        st.materialize();
+        st.w[0][0] = 99.0;
+        st.discard_materialized();
+        assert_eq!(
+            st.params_model().unwrap().tensors[0].f32_vec().unwrap()[0],
+            0.375
+        );
+        // load_params re-quantizes
+        let ms2 = ModelState::from_raw(&cfg, &raw).unwrap();
+        st.load_params(&ms2).unwrap();
+        assert_eq!(st.params_model().unwrap().tensors[0].f32_vec()
+                       .unwrap(),
+                   raw[0]);
+    }
+
+    #[test]
+    fn resident_bytes_follow_precision() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![0.5f32; 6], vec![0.25f32; 4]];
+        let b = |p: Precision| {
+            ExecState::from_raw_at(&cfg, raw.clone(), p)
+                .unwrap()
+                .resident_param_bytes()
+        };
+        assert_eq!(b(Precision::F32), 40);
+        assert_eq!(b(Precision::F16), 20, "f16 is exactly half");
+        // int8: one byte per element + a 4-byte scale per tensor
+        assert_eq!(b(Precision::Int8), 10 + 2 * 4);
+    }
+
+    #[test]
+    fn quantized_absorb_requantizes() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![0.5f32; 6], vec![0.25f32; 4]];
+        let mut st =
+            ExecState::from_raw_at(&cfg, raw, Precision::F16).unwrap();
+        let outs = vec![
+            Literal::from_f32(vec![0.125f32; 6], vec![2, 3]).unwrap(),
+            Literal::from_f32(vec![2.0f32; 4], vec![4]).unwrap(),
+        ];
+        st.absorb(outs).unwrap();
+        let ms = st.params_model().unwrap();
+        assert_eq!(ms.tensors[0].f32_vec().unwrap(), vec![0.125f32; 6]);
+        assert_eq!(ms.tensors[1].f32_vec().unwrap(), vec![2.0f32; 4]);
     }
 
     #[test]

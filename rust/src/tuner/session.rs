@@ -21,21 +21,21 @@
 //! path; the artifacts were lowered at build time.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::batcher::{Batch, Batcher, BatcherState};
-use crate::data::bpe::Bpe;
-use crate::data::corpus;
-use crate::data::task::{TaskData, TaskKind};
+use crate::data::task::TaskKind;
+use crate::data::{shared_artifacts, SessionArtifacts};
 use crate::device::Device;
 use crate::optim::{AdamDriver, MezoDriver, OptimizerKind, Schedule};
 use crate::optim::adam::AdamConfig;
 use crate::optim::mezo::MezoConfig;
 use crate::runtime::literal::{f32_tensor, i32_tensor, Literal};
 use crate::runtime::state::{ExecState, ModelState};
-use crate::runtime::{Program, Runtime};
+use crate::runtime::{Precision, Program, Runtime};
 use crate::telemetry::MetricLog;
 
 /// Batches kept resident per session by default; anything older is
@@ -86,6 +86,7 @@ pub struct SessionBuilder<'rt> {
     queries: usize,
     batch_window: usize,
     compat_exec: bool,
+    precision: Precision,
 }
 
 impl<'rt> SessionBuilder<'rt> {
@@ -105,7 +106,19 @@ impl<'rt> SessionBuilder<'rt> {
             queries: 1,
             batch_window: DEFAULT_BATCH_WINDOW,
             compat_exec: false,
+            precision: Precision::F32,
         }
+    }
+
+    /// Parameter-storage precision for the resident `ExecState`
+    /// (default [`Precision::F32`], bit-identical to the historical
+    /// behaviour).  Reduced precisions keep the parameters f16/int8
+    /// *between* steps — compute stays f32 — and the simulated device
+    /// ledger charges the matching byte-width, so an fp16 session is
+    /// admitted (and OOMs) like the paper's fp16 deployments.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
     }
 
     /// k-query SPSA (paper §6.3): average k independent two-point
@@ -210,7 +223,10 @@ impl<'rt> SessionBuilder<'rt> {
         //    frames later callers add.
         let mut device = self.device;
         let fp = if let Some(dev) = device.as_mut() {
-            let dims = dev_dims(&cfg);
+            // the ledger charges the *storage* byte-width, so the
+            // simulated parameter row finally matches what the host
+            // keeps resident (f32 4 B, f16 2 B, int8 1 B per param)
+            let dims = cfg.model_dims_at(self.precision);
             let dev_name = dev.spec.name.clone();
             let fp = dev
                 .admit_finetune(&dims, self.optimizer.family(), batch,
@@ -225,14 +241,12 @@ impl<'rt> SessionBuilder<'rt> {
             None
         };
 
-        // 2. data pipeline: corpus -> BPE -> batcher
-        let data = TaskData::generate(task, self.seed, self.n_train,
-                                      self.n_eval);
-        let mut corpus_texts = corpus::tokenizer_corpus(self.seed ^ 0xC0,
-                                                        1024);
-        corpus_texts.extend(data.train_texts());
+        // 2. data pipeline: corpus -> BPE -> batcher.  Artifacts are
+        //    shared process-wide by (task, seed, sizes, vocab): N
+        //    same-key sessions (fleet re-runs, benches) build once.
         let bpe_vocab = cfg.vocab.min(4096).max(260);
-        let bpe = Bpe::train(&corpus_texts, bpe_vocab);
+        let art = shared_artifacts(task, self.seed, self.n_train,
+                                   self.n_eval, bpe_vocab);
 
         // 3. compiled programs
         let step_prog = self.rt.program(&self.config, &program_kind,
@@ -245,9 +259,11 @@ impl<'rt> SessionBuilder<'rt> {
 
         // 4. resident execution state + optimizer driver.  The raw init
         //    tensors move straight into the ExecState — the session
-        //    never holds a second parameter copy.
+        //    never holds a second parameter copy.  At reduced precision
+        //    they are quantized once here and the f32 source dropped.
         let raw = self.rt.manifest.load_init_params(&self.config)?;
-        let mut state = ExecState::from_raw(&cfg, raw)?;
+        let mut state = ExecState::from_raw_at(&cfg, raw,
+                                               self.precision)?;
         let lr = self.lr.unwrap_or(Schedule::Constant(match self.optimizer {
             // SPSA's projected gradient scales with sqrt(P); MeZO needs a
             // much smaller rate than Adam (matches the MeZO paper's grids)
@@ -272,8 +288,7 @@ impl<'rt> SessionBuilder<'rt> {
             batch,
             seq: 0, // set below from cfg
             task,
-            data,
-            bpe,
+            art,
             step_prog,
             loss_prog,
             eval_prog,
@@ -289,15 +304,10 @@ impl<'rt> SessionBuilder<'rt> {
             window_cap: self.batch_window,
             batcher_resume: None,
             compat_exec: self.compat_exec,
+            precision: self.precision,
         }
         .finalize())
     }
-}
-
-fn dev_dims(cfg: &crate::runtime::manifest::ConfigInfo)
-    -> crate::device::ModelDims
-{
-    cfg.model_dims()
 }
 
 /// A live fine-tuning session.
@@ -307,8 +317,8 @@ pub struct Session {
     pub batch: usize,
     seq: usize,
     pub task: TaskKind,
-    data: TaskData,
-    bpe: Bpe,
+    /// Tokenizer + dataset, shared process-wide by (task, seed, ...).
+    art: Arc<SessionArtifacts>,
     step_prog: std::sync::Arc<Program>,
     loss_prog: Option<std::sync::Arc<Program>>,
     eval_prog: Option<std::sync::Arc<Program>>,
@@ -331,6 +341,7 @@ pub struct Session {
     /// (stream position, snapshot) for O(1) sequential extension.
     batcher_resume: Option<(usize, BatcherState)>,
     compat_exec: bool,
+    precision: Precision,
 }
 
 impl Session {
@@ -343,10 +354,22 @@ impl Session {
         self.seq
     }
 
+    /// The parameter-storage precision of the resident state.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Actual host bytes of the resident parameter storage — compare
+    /// against the simulated ledger's parameter row to see the
+    /// simulated-vs-host gap for any precision.
+    pub fn resident_param_bytes(&self) -> u64 {
+        self.state.resident_param_bytes()
+    }
+
     fn make_batcher(&self) -> Batcher<'_> {
         Batcher::new(
-            &self.bpe,
-            &self.data.train,
+            &self.art.bpe,
+            &self.art.data.train,
             self.batch,
             self.seq,
             self.cfg.is_decoder(),
@@ -425,7 +448,7 @@ impl Session {
         // mirror into the simulated device: thermal clock advances by the
         // *simulated* step time, which also is what we report
         let sim_time_s = if let Some(dev) = self.device.as_mut() {
-            let dims = dev_dims(&self.cfg);
+            let dims = self.cfg.model_dims_at(self.precision);
             let t = dev
                 .step_time(&dims, self.optimizer.family(), self.batch,
                            self.seq)
@@ -540,15 +563,15 @@ impl Session {
             .context("no loss_eval artifact for this config/batch")?;
         let params = self.state.param_literals()?;
         let mut b = Batcher::new(
-            &self.bpe,
-            &self.data.eval,
+            &self.art.bpe,
+            &self.art.data.eval,
             self.batch,
             self.seq,
             self.cfg.is_decoder(),
             self.cfg.vocab,
             7,
         );
-        let n_batches = (self.data.eval.len() / self.batch).max(1);
+        let n_batches = (self.art.data.eval.len() / self.batch).max(1);
         let mut total = 0.0;
         for _ in 0..n_batches {
             let batch = b.next();
@@ -574,15 +597,15 @@ impl Session {
             .context("no eval artifact for this config/batch")?;
         let params = self.state.param_literals()?;
         let mut b = Batcher::new(
-            &self.bpe,
-            &self.data.eval,
+            &self.art.bpe,
+            &self.art.data.eval,
             self.batch,
             self.seq,
             false,
             self.cfg.vocab,
             7,
         );
-        let n_batches = (self.data.eval.len() / self.batch).max(1);
+        let n_batches = (self.art.data.eval.len() / self.batch).max(1);
         let mut correct = 0usize;
         let mut total = 0usize;
         for _ in 0..n_batches {

@@ -127,6 +127,33 @@ fn finetune_queries_and_batch_window_reach_the_session() {
 }
 
 #[test]
+fn finetune_precision_f16_end_to_end() {
+    // the precision API's CLI acceptance pin: an fp16 session runs end
+    // to end, reports its storage, and prints BOTH the host-resident
+    // and simulated parameter bytes (the footer bugfix)
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny", "--precision", "f16",
+        "--steps", "3", "--device", "oppo-reno6",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("f16 storage"), "{text}");
+    assert!(text.contains("final loss"), "{text}");
+    assert!(text.contains("params resident on host"), "{text}");
+    assert!(text.contains("simulated ledger parameters"), "{text}");
+
+    // int8 runs too; a bad precision fails loudly
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny", "--precision", "int8",
+        "--steps", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("int8 storage"), "{text}");
+    let (ok, text) = run(&["finetune", "--precision", "fp64"]);
+    assert!(!ok);
+    assert!(text.contains("--precision"), "{text}");
+}
+
+#[test]
 fn fleet_smoke_and_worker_count_determinism() {
     // the CLI-level determinism contract: identical output (minus the
     // host-wall line) for any --workers
@@ -147,6 +174,10 @@ fn fleet_smoke_and_worker_count_determinism() {
     assert!(w1.contains("fleet outcomes: 2/2 completed"), "{w1}");
     assert!(w1.contains("Completed"), "{w1}");
     assert!(w1.contains("fleet simulated step-seconds"), "{w1}");
+    // 2 distinct (task, seed) jobs -> 2 artifact builds, 0 hits, for
+    // any worker count (builds are serialized under the cache lock)
+    assert!(w1.contains("fleet tokenizer cache: 2 builds, 0 hits"),
+            "{w1}");
 }
 
 #[test]

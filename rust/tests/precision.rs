@@ -1,0 +1,216 @@
+//! Precision-polymorphic tensor API: the fp16/int8 parity harness.
+//!
+//! Contract (pattern of `native_golden.rs`'s tolerance pins):
+//!
+//! * `Precision::F32` sessions are **bit-identical** to the default
+//!   (pre-precision-API) trajectories — same path, no conversion
+//!   anywhere.
+//! * An fp16 session must *track* the f32 golden trajectory within
+//!   documented tolerances: parameters are stored at ~2^-11 relative
+//!   rounding between steps, so per-step losses stay within
+//!   `F16_LOSS_TOL` of the f32 run while trajectories slowly diverge
+//!   (they must still both descend / stay finite).
+//! * The native in-place path and the literal `run()` bridge must be
+//!   bit-identical *to each other* at every precision (both dequantize
+//!   with the same decode and re-quantize with the same rounding).
+//! * fp16 resident parameter bytes are exactly half the f32 run's.
+
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::tuner::session::SessionBuilder;
+
+fn runtime() -> Runtime {
+    let m = Manifest::load_or_builtin("artifacts/manifest.json")
+        .expect("manifest");
+    Runtime::new(m).expect("native runtime")
+}
+
+/// Max per-step |loss_f16 - loss_f32| on pocket-tiny.  fp16 parameter
+/// rounding is ~5e-4 relative; through the loss it stays ~1e-3, with
+/// slow trajectory drift on top.  An order of magnitude of headroom
+/// keeps the pin meaningful without being flaky.
+const F16_LOSS_TOL: f64 = 0.05;
+
+fn run_losses(
+    rt: &Runtime,
+    config: &str,
+    opt: OptimizerKind,
+    precision: Precision,
+    compat: bool,
+    steps: usize,
+) -> (Vec<f64>, Vec<u8>, u64) {
+    let mut s = SessionBuilder::new(rt, config)
+        .optimizer(opt)
+        .seed(77)
+        .precision(precision)
+        .compat_exec(compat)
+        .build()
+        .unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(s.step().unwrap().loss);
+    }
+    let bytes = s.params().unwrap().to_bytes().unwrap();
+    (losses, bytes, s.resident_param_bytes())
+}
+
+#[test]
+fn f32_precision_is_bit_identical_to_default() {
+    let rt = runtime();
+    let explicit = run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                              Precision::F32, false, 5);
+    let mut default_s = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(77)
+        .build()
+        .unwrap();
+    let default_losses: Vec<f64> =
+        (0..5).map(|_| default_s.step().unwrap().loss).collect();
+    assert_eq!(explicit.0, default_losses,
+               "F32 precision must not change the trajectory");
+    assert_eq!(explicit.1,
+               default_s.params().unwrap().to_bytes().unwrap());
+}
+
+#[test]
+fn f16_session_tracks_f32_golden_trajectory() {
+    let rt = runtime();
+    let steps = 6;
+    let (golden, _, bytes_f32) =
+        run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                   Precision::F32, false, steps);
+    let (half, _, bytes_f16) =
+        run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                   Precision::F16, false, steps);
+    for (i, (g, h)) in golden.iter().zip(&half).enumerate() {
+        assert!(h.is_finite(), "step {i}: fp16 loss not finite");
+        assert!((g - h).abs() < F16_LOSS_TOL,
+                "step {i}: fp16 loss {h} drifted from f32 golden {g}");
+    }
+    // the acceptance pin: resident parameter bytes exactly halve
+    assert_eq!(bytes_f16 * 2, bytes_f32,
+               "fp16 residency must be exactly half of f32");
+}
+
+#[test]
+fn f16_adam_session_tracks_f32_and_descends() {
+    let rt = runtime();
+    let steps = 8;
+    let (golden, _, _) =
+        run_losses(&rt, "pocket-tiny-fast", OptimizerKind::Adam,
+                   Precision::F32, false, steps);
+    let (half, _, _) =
+        run_losses(&rt, "pocket-tiny-fast", OptimizerKind::Adam,
+                   Precision::F16, false, steps);
+    for (i, (g, h)) in golden.iter().zip(&half).enumerate() {
+        assert!((g - h).abs() < F16_LOSS_TOL,
+                "step {i}: adam fp16 {h} vs f32 {g}");
+    }
+    assert!(half.last().unwrap() < &half[0],
+            "fp16 adam must still descend: {half:?}");
+}
+
+#[test]
+fn in_place_and_bridge_paths_agree_at_every_precision() {
+    // the donation path and the literal run() bridge share the same
+    // dequantize/requantize functions, so they must stay bit-identical
+    // at EVERY precision, not just f32
+    let rt = runtime();
+    for precision in Precision::ALL {
+        let a = run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                           precision, false, 4);
+        let b = run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                           precision, true, 4);
+        assert_eq!(a.0, b.0,
+                   "{precision}: loss trajectories must match");
+        assert_eq!(a.1, b.1,
+                   "{precision}: parameter bytes must match");
+    }
+}
+
+#[test]
+fn int8_session_runs_end_to_end() {
+    // int8 is lossy (per-step scale recompute) but must stay finite
+    // and keep the smallest residency
+    let rt = runtime();
+    let (losses, _, bytes_i8) =
+        run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                   Precision::Int8, false, 4);
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    let (_, _, bytes_f32) =
+        run_losses(&rt, "pocket-tiny", OptimizerKind::MeZo,
+                   Precision::F32, false, 1);
+    assert!(bytes_i8 < bytes_f32 / 3,
+            "int8 {bytes_i8} vs f32 {bytes_f32}");
+}
+
+#[test]
+fn f16_checkpoint_restore_is_bit_exact() {
+    // f16 decode is exact and re-encodes to identical bits, so a
+    // checkpoint written by an fp16 session restores losslessly and
+    // replays the identical tail
+    let rt = runtime();
+    let dir = std::env::temp_dir().join("pocketllm_f16_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let build = || {
+        SessionBuilder::new(&rt, "pocket-tiny")
+            .optimizer(OptimizerKind::MeZo)
+            .seed(91)
+            .precision(Precision::F16)
+            .build()
+            .unwrap()
+    };
+    let mut a = build();
+    let mut ref_losses = Vec::new();
+    for _ in 0..6 {
+        ref_losses.push(a.step().unwrap().loss);
+    }
+
+    let mut b = build();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        got.push(b.step().unwrap().loss);
+    }
+    let params = b.params().unwrap();
+    pocketllm::tuner::checkpoint::Checkpoint::save(
+        &dir, "pocket-tiny", OptimizerKind::MeZo, b.step, 91,
+        *got.last().unwrap(), &params, None,
+    )
+    .unwrap();
+    drop(b);
+
+    let ck =
+        pocketllm::tuner::checkpoint::Checkpoint::open(&dir).unwrap();
+    let mut c = build();
+    c.restore(&ck).unwrap();
+    for _ in 0..3 {
+        got.push(c.step().unwrap().loss);
+    }
+    assert_eq!(got, ref_losses,
+               "fp16 resume must replay the identical loss sequence");
+}
+
+#[test]
+fn f16_device_ledger_charges_half_the_parameter_bytes() {
+    use pocketllm::device::{Category, Device};
+    let rt = runtime();
+    let charged = |p: Precision| -> u64 {
+        let s = SessionBuilder::new(&rt, "pocket-tiny")
+            .device(Device::preset("oppo-reno6").unwrap())
+            .precision(p)
+            .build()
+            .unwrap();
+        s.device
+            .as_ref()
+            .unwrap()
+            .ledger
+            .category(Category::Parameters)
+    };
+    let f32b = charged(Precision::F32);
+    let f16b = charged(Precision::F16);
+    let i8b = charged(Precision::Int8);
+    assert_eq!(f16b * 2, f32b,
+               "simulated ledger must charge the storage byte-width");
+    assert_eq!(i8b * 4, f32b);
+}
