@@ -49,7 +49,8 @@ fn main() -> anyhow::Result<()> {
     for workers in [1usize, 2, 4] {
         let fleet = FleetScheduler::new(
             &rt,
-            FleetConfig { coord: coord.clone(), workers },
+            FleetConfig { coord: coord.clone(), workers,
+                          ..FleetConfig::default() },
         );
         // correctness canary: outcome fingerprint must not depend on W
         let report = fleet.run(&jobs)?;
@@ -63,7 +64,8 @@ fn main() -> anyhow::Result<()> {
             || {
                 let fleet = FleetScheduler::new(
                     &rt,
-                    FleetConfig { coord: coord.clone(), workers },
+                    FleetConfig { coord: coord.clone(), workers,
+                          ..FleetConfig::default() },
                 );
                 std::hint::black_box(fleet.run(&jobs).unwrap());
             },

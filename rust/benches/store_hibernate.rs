@@ -1,0 +1,168 @@
+//! Bench: durable session images + fleet hibernation.
+//!
+//! Two questions, answered in `BENCH_store.json`:
+//!
+//! 1. **Latency** — what does one hibernate (snapshot + encode + store
+//!    write) and one rehydrate (store read + decode + reassemble) cost,
+//!    per precision?  Measured on a live pocket-tiny session cycling
+//!    through a real write-through `SessionStore`.
+//! 2. **Memory** — does a deep queue actually run flat?  The same
+//!    N-job fleet (default 1000 jobs) runs unbounded (historical
+//!    behaviour: every in-flight session stays resident, high-water
+//!    grows linearly with the queue) and with a `resident_budget`
+//!    of 8 sessions; the telemetry's resident parameter high-water
+//!    must collapse from O(jobs) to O(budget + workers).
+//!
+//! Knobs: `STORE_JOBS` (fleet size, default 1000), `STORE_ITERS`
+//! (hibernate/rehydrate reps per precision, default 25).
+
+use pocketllm::coordinator::{CoordinatorConfig, FleetConfig,
+                             FleetScheduler, JobSpec};
+use pocketllm::data::task::TaskKind;
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::scheduler::Policy;
+use pocketllm::store::SessionStore;
+use pocketllm::telemetry::bench::{dump_json, env_u64, render,
+                                  Measurement};
+use pocketllm::tuner::session::SessionBuilder;
+use pocketllm::util::timer::Stats;
+
+fn main() -> anyhow::Result<()> {
+    let n_jobs = env_u64("STORE_JOBS", 1000) as usize;
+    let iters = env_u64("STORE_ITERS", 25) as usize;
+    let rt = Runtime::new(
+        Manifest::load_or_builtin("artifacts/manifest.json")?)?;
+
+    // ---- 1. hibernate / rehydrate latency per precision ----
+    let store_dir =
+        std::env::temp_dir().join("pocketllm_bench_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = SessionStore::with_mem_capacity(&store_dir, 0)?;
+    let mut ms: Vec<Measurement> = Vec::new();
+    let mut extra: Vec<(String, f64)> = Vec::new();
+    for precision in [Precision::F32, Precision::F16, Precision::Int8]
+    {
+        let mut session = SessionBuilder::new(&rt, "pocket-tiny")
+            .optimizer(OptimizerKind::MeZo)
+            .seed(7)
+            .precision(precision)
+            .build()?;
+        session.run_steps(2)?;
+        let resident = session.resident_param_bytes();
+        let mut hib = Stats::new();
+        let mut reh = Stats::new();
+        let mut image_bytes = 0u64;
+        let mut cursor = Some(session);
+        for _ in 0..iters {
+            let live = cursor.take().expect("cycle keeps a session");
+            let t0 = std::time::Instant::now();
+            let (image, remnant) = live.hibernate()?;
+            image_bytes = store.put("bench", &image)?;
+            hib.push(t0.elapsed().as_secs_f64());
+            let t1 = std::time::Instant::now();
+            let image = store.take("bench")?;
+            cursor = Some(remnant.rehydrate(image)?);
+            reh.push(t1.elapsed().as_secs_f64());
+        }
+        // the rehydrated session still steps (sanity, not timed)
+        cursor.take().unwrap().run_steps(1)?;
+        ms.push(Measurement {
+            name: format!("hibernate {precision} ({} resident B)",
+                          resident),
+            stats: hib,
+        });
+        ms.push(Measurement {
+            name: format!("rehydrate {precision}"),
+            stats: reh,
+        });
+        extra.push((format!("image_bytes_{precision}"),
+                    image_bytes as f64));
+        extra.push((format!("resident_bytes_{precision}"),
+                    resident as f64));
+    }
+
+    // ---- 2. resident high-water: unbounded vs budget ----
+    // all jobs share one (task, seed): artifact builds are shared, so
+    // the profile isolates SESSION residency, which is what the
+    // budget governs
+    let jobs: Vec<JobSpec> = (0..n_jobs)
+        .map(|_| {
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(1)
+                .seed(900)
+        })
+        .collect();
+    let coord = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 1,
+        max_windows: 10,
+        ..Default::default()
+    };
+    let workers = 2usize;
+    let one_session = {
+        let s = SessionBuilder::new(&rt, "pocket-tiny")
+            .seed(900)
+            .build()?;
+        s.resident_param_bytes()
+    };
+    let budget = 8 * one_session;
+
+    let run_with = |budget_bytes: Option<u64>| -> anyhow::Result<u64> {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig {
+                coord: coord.clone(),
+                workers,
+                resident_budget_bytes: budget_bytes,
+                store_dir: None,
+            },
+        );
+        let report = fleet.run(&jobs)?;
+        assert_eq!(report.telemetry.completed, n_jobs,
+                   "bench fleet must complete");
+        Ok(report.telemetry.resident_high_water_bytes)
+    };
+    let hw_unbounded = run_with(None)?;
+    let hw_budget = run_with(Some(budget))?;
+    // budget governs the QUEUE; workers hold up to W dispatched
+    // sessions on top, plus up to W evicted victims mid-spill (one
+    // extra session of slack absorbs rehydrate/build overlap)
+    let flat_bound = budget + (2 * workers as u64 + 1) * one_session;
+    assert!(hw_budget <= flat_bound,
+            "budgeted high-water {hw_budget} exceeded {flat_bound}");
+    assert!(hw_unbounded >= hw_budget,
+            "unbounded must not beat the budget");
+
+    println!("{}", render("Session image store", &ms));
+    println!(
+        "resident high-water, {n_jobs}-job queue: unbounded {} vs \
+         budget({}) {} — {}x flatter",
+        hw_unbounded,
+        budget,
+        hw_budget,
+        if hw_budget > 0 { hw_unbounded / hw_budget.max(1) } else { 0 }
+    );
+
+    let mut extra_refs: Vec<(&str, f64)> = vec![
+        ("jobs", n_jobs as f64),
+        ("workers", workers as f64),
+        ("session_param_bytes", one_session as f64),
+        ("resident_budget_bytes", budget as f64),
+        ("high_water_unbounded_bytes", hw_unbounded as f64),
+        ("high_water_budget_bytes", hw_budget as f64),
+        ("high_water_within_budget",
+         (hw_budget <= flat_bound) as u64 as f64),
+    ];
+    for (k, v) in &extra {
+        extra_refs.push((k.as_str(), *v));
+    }
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_store.json".into());
+    dump_json(&out, "Durable session images + fleet hibernation",
+              &ms, &extra_refs)?;
+    println!("wrote {out}");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Ok(())
+}

@@ -3,16 +3,33 @@
 //!
 //! Each job is an independent [`JobRun`] (own `Session`/`ExecState`,
 //! own simulated device envelope, own `DayTrace`, own policy clock).
-//! Workers pull jobs from a shared ready queue, drive exactly **one
-//! simulated window** ([`JobRun::advance`]), and requeue the job —
-//! window-by-window interleaving, not job-at-a-time, so W workers keep
-//! W sessions resident instead of serializing whole jobs.
+//! Workers pull jobs from a shared **Earliest-Deadline-First** queue
+//! (jobs with earlier [`JobSpec::deadline`]s dispatch first;
+//! best-effort jobs sort last; FIFO within a class), drive exactly
+//! **one simulated window** ([`JobRun::advance`]), and requeue the
+//! job — window-by-window interleaving, not job-at-a-time.
+//!
+//! ## Bounded memory: hibernation
+//!
+//! Historically every in-flight job kept its whole session resident
+//! while queued, so memory grew linearly with queue depth.  With
+//! `resident_budget_bytes` set, the scheduler hibernates queued jobs
+//! into a [`SessionStore`] (write-through to disk — the store holds
+//! no parameter bytes in RAM) whenever the summed resident parameter
+//! bytes of queued jobs exceed the budget, evicting the job that
+//! will run **last** in EDF order.  A hibernated job is rehydrated
+//! when a worker next dispatches it.  Hibernate → rehydrate is
+//! bit-identical, so the budget changes memory and latency only —
+//! never results (pinned in `rust/tests/fleet.rs` at every
+//! precision).  `benches/store_hibernate.rs` measures the flat
+//! resident high-water this buys a 1000-job queue.
 //!
 //! ## Determinism contract
 //!
-//! Fleet results are **bit-identical for any worker count**, pinned in
-//! `rust/tests/fleet.rs` against the sequential
-//! [`Coordinator::run_queue`](super::Coordinator::run_queue) oracle:
+//! Fleet results are **bit-identical for any worker count and any
+//! resident budget**, pinned in `rust/tests/fleet.rs` against the
+//! sequential [`Coordinator::run_queue`](super::Coordinator::run_queue)
+//! oracle:
 //!
 //! * a `JobRun` touches no shared mutable state — parameters, RNG,
 //!   batcher, trace, thermal clock are all job-local, and the shared
@@ -20,23 +37,29 @@
 //!   cache lock;
 //! * events and metrics accumulate **per job** and are folded in job
 //!   order after the pool drains, so thread timing can reorder work but
-//!   never observable results.
+//!   never observable results;
+//! * hibernation moves a job's state between RAM and disk verbatim.
 //!
 //! What the worker count *does* change is wall-clock — measured by
-//! `benches/fleet_throughput.rs` (`BENCH_fleet.json`).
+//! `benches/fleet_throughput.rs` (`BENCH_fleet.json`) — and which
+//! jobs happen to hibernate (store counters are telemetry, not part
+//! of the deterministic result).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{CoordinatorConfig, Event, JobOutcome, JobRun, JobSpec,
             JobStatus};
 use crate::runtime::Runtime;
+use crate::store::SessionStore;
 use crate::telemetry::MetricLog;
 
 /// Fleet configuration: the per-job coordinator envelope plus the
-/// worker pool width.
+/// worker pool width and the memory discipline.
 #[derive(Clone)]
 pub struct FleetConfig {
     /// Per-job policy/device/trace envelope (every job gets its own
@@ -45,11 +68,29 @@ pub struct FleetConfig {
     /// Worker threads driving the fleet (clamped to >= 1).  Changes
     /// throughput only, never results.
     pub workers: usize,
+    /// Cap on the summed resident parameter bytes of QUEUED jobs.
+    /// `None` keeps the historical keep-everything-resident
+    /// behaviour; `Some(b)` hibernates queued jobs into the session
+    /// store until the queue fits in `b`.  Changes memory only,
+    /// never results.  (Workers additionally hold up to W dispatched
+    /// sessions resident — the true high-water is budget + W
+    /// sessions; `FleetTelemetry::resident_high_water_bytes` reports
+    /// the measured value.)
+    pub resident_budget_bytes: Option<u64>,
+    /// Where hibernated session images live.  `None` = a fresh
+    /// per-run directory under the system temp dir, removed after
+    /// the run.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { coord: CoordinatorConfig::default(), workers: 2 }
+        FleetConfig {
+            coord: CoordinatorConfig::default(),
+            workers: 2,
+            resident_budget_bytes: None,
+            store_dir: None,
+        }
     }
 }
 
@@ -70,6 +111,9 @@ pub struct FleetTelemetry {
     pub denied_by_reason: BTreeMap<&'static str, usize>,
     /// Aggregate simulated device step-seconds across the fleet.
     pub sim_step_seconds: f64,
+    /// Jobs that blew their EDF deadline (deterministic — derived
+    /// from the per-job outcomes).
+    pub deadline_misses: usize,
     /// Shared tokenizer/corpus artifact cache hits during this run
     /// (sessions that reused a previously built (task, seed) artifact
     /// set instead of training their own BPE).  Deterministic for any
@@ -82,6 +126,19 @@ pub struct FleetTelemetry {
     pub tokenizer_cache_hits: u64,
     /// Artifact sets actually built during this run (same caveat).
     pub tokenizer_cache_builds: u64,
+    /// Hibernations this run performed (0 without a budget).  Which
+    /// jobs hibernate — and therefore this count — depends on worker
+    /// timing; it is telemetry, NOT part of the deterministic result.
+    pub hibernations: u64,
+    /// Rehydrations (every hibernated job is rehydrated before it
+    /// runs again, so this equals `hibernations` once a run drains).
+    pub rehydrations: u64,
+    /// Peak summed resident parameter bytes across queued + dispatched
+    /// jobs (the memory profile `BENCH_store.json` plots).  Timing-
+    /// dependent like `hibernations`.
+    pub resident_high_water_bytes: u64,
+    /// Total image bytes written to the hibernation store.
+    pub store_bytes_spilled: u64,
 }
 
 impl FleetTelemetry {
@@ -105,8 +162,13 @@ impl FleetTelemetry {
             windows_denied: 0,
             denied_by_reason,
             sim_step_seconds: 0.0,
+            deadline_misses: 0,
             tokenizer_cache_hits: 0,
             tokenizer_cache_builds: 0,
+            hibernations: 0,
+            rehydrations: 0,
+            resident_high_water_bytes: 0,
+            store_bytes_spilled: 0,
         };
         for o in outcomes {
             match o.status {
@@ -117,6 +179,7 @@ impl FleetTelemetry {
             t.windows_used += o.windows_used;
             t.windows_denied += o.windows_denied;
             t.sim_step_seconds += o.sim_step_seconds;
+            t.deadline_misses += o.deadline_missed as usize;
         }
         for e in events {
             match e {
@@ -144,14 +207,84 @@ pub struct FleetReport {
     /// Per-job metric series (`job{i}.loss`) merged in job order.
     pub metrics: MetricLog,
     pub telemetry: FleetTelemetry,
+    /// Job indices in first-dispatch order.  With one worker this is
+    /// exactly the EDF admission order (earliest deadline first);
+    /// with more workers it is timing-dependent telemetry.  Never
+    /// part of the determinism contract.
+    pub first_dispatch: Vec<usize>,
 }
 
 /// A unit of queued fleet work: a job not yet admitted, or a live run
-/// between two windows.
+/// between two windows (possibly hibernated into the store).
 enum Task {
     Fresh(usize, JobSpec),
     Running(Box<JobRun>),
 }
+
+impl Task {
+    fn resident_param_bytes(&self) -> u64 {
+        match self {
+            Task::Fresh(..) => 0,
+            Task::Running(r) => r.resident_param_bytes(),
+        }
+    }
+}
+
+/// EDF dispatch key: earliest deadline first (best-effort jobs carry
+/// `f64::INFINITY`), then enqueue order (FIFO within a class, which
+/// also keeps keys unique — `seq` never repeats).
+#[derive(Clone, Copy, Debug)]
+struct QueueKey {
+    deadline: f64,
+    seq: u64,
+}
+
+impl PartialEq for QueueKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for QueueKey {}
+
+impl PartialOrd for QueueKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.deadline
+            .total_cmp(&other.deadline)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Shared scheduler state (one lock; disk I/O happens outside it).
+struct FleetState {
+    queue: BTreeMap<QueueKey, Task>,
+    next_seq: u64,
+    /// Resident parameter bytes of QUEUED tasks (the budgeted set).
+    resident_queued: u64,
+    /// Resident parameter bytes of queued + dispatched tasks.
+    resident_live: u64,
+    high_water: u64,
+    hibernations: u64,
+    rehydrations: u64,
+    first_dispatch: Vec<usize>,
+}
+
+impl FleetState {
+    fn note_live(&mut self, delta_up: u64) {
+        self.resident_live += delta_up;
+        self.high_water = self.high_water.max(self.resident_live);
+    }
+}
+
+/// Distinguishes concurrent fleets in one process (store directories
+/// must not collide).
+static FLEET_RUN_ID: AtomicU64 = AtomicU64::new(0);
 
 /// The fleet scheduler: multiplexes N jobs over W workers sharing one
 /// `Runtime`.
@@ -169,13 +302,56 @@ impl<'rt> FleetScheduler<'rt> {
     /// the fleet (first error wins; remaining queued work is dropped).
     pub fn run(&self, jobs: &[JobSpec]) -> Result<FleetReport> {
         let n = jobs.len();
-        let queue: Mutex<VecDeque<Task>> = Mutex::new(
-            jobs.iter()
+        let budget = self.cfg.resident_budget_bytes;
+        // the hibernation store: write-through (0-byte memory cache),
+        // so hibernated parameters occupy disk, not RAM
+        let (store, scoped_dir) = if budget.is_some() {
+            let dir = match &self.cfg.store_dir {
+                Some(d) => (d.clone(), false),
+                None => {
+                    let run =
+                        FLEET_RUN_ID.fetch_add(1, Ordering::Relaxed);
+                    let d = std::env::temp_dir().join(format!(
+                        "pocketllm_fleet_store_{}_{run}",
+                        std::process::id()
+                    ));
+                    (d, true)
+                }
+            };
+            (
+                Some(
+                    SessionStore::with_mem_capacity(&dir.0, 0)
+                        .context("opening fleet session store")?,
+                ),
+                dir.1,
+            )
+        } else {
+            (None, false)
+        };
+
+        let state = Mutex::new(FleetState {
+            queue: jobs
+                .iter()
                 .cloned()
                 .enumerate()
-                .map(|(i, j)| Task::Fresh(i, j))
+                .map(|(i, j)| {
+                    let key = QueueKey {
+                        deadline: j
+                            .deadline_minutes
+                            .unwrap_or(f64::INFINITY),
+                        seq: i as u64,
+                    };
+                    (key, Task::Fresh(i, j))
+                })
                 .collect(),
-        );
+            next_seq: n as u64,
+            resident_queued: 0,
+            resident_live: 0,
+            high_water: 0,
+            hibernations: 0,
+            rehydrations: 0,
+            first_dispatch: Vec::with_capacity(n),
+        });
         type Finished = (JobOutcome, Vec<Event>, MetricLog);
         let finished: Mutex<Vec<Option<Finished>>> =
             Mutex::new((0..n).map(|_| None).collect());
@@ -191,56 +367,22 @@ impl<'rt> FleetScheduler<'rt> {
         // kernel results are thread-count-invariant.
         use crate::runtime::native::math;
         let (hits0, builds0) = crate::data::artifact_cache_stats();
-        let _budget = math::register_pool_workers(workers);
+        let _budget_guard = math::register_pool_workers(workers);
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| loop {
-                    if failure.lock().unwrap().is_some() {
-                        return;
-                    }
-                    let task = queue.lock().unwrap().pop_front();
-                    let Some(task) = task else { return };
-                    let mut run = match task {
-                        Task::Running(r) => r,
-                        Task::Fresh(idx, spec) => {
-                            match JobRun::new(self.rt, &self.cfg.coord,
-                                              idx, &spec)
-                            {
-                                Ok(r) => Box::new(r),
-                                Err(e) => {
-                                    failure
-                                        .lock()
-                                        .unwrap()
-                                        .get_or_insert(e);
-                                    return;
-                                }
-                            }
-                        }
-                    };
-                    match run.advance() {
-                        Ok(true) => {
-                            // one window done; requeue at the back so
-                            // ready jobs round-robin across workers
-                            queue
-                                .lock()
-                                .unwrap()
-                                .push_back(Task::Running(run));
-                        }
-                        Ok(false) => {
-                            let idx = run.idx;
-                            finished.lock().unwrap()[idx] =
-                                Some(run.finish());
-                        }
-                        Err(e) => {
-                            failure.lock().unwrap().get_or_insert(e);
-                            return;
-                        }
-                    }
+                s.spawn(|| {
+                    self.worker_loop(&state, &finished, &failure,
+                                     store.as_ref(), budget)
                 });
             }
         });
 
         if let Some(e) = failure.into_inner().unwrap() {
+            if scoped_dir {
+                if let Some(st) = &store {
+                    st.cleanup();
+                }
+            }
             return Err(e);
         }
 
@@ -264,6 +406,244 @@ impl<'rt> FleetScheduler<'rt> {
         telemetry.tokenizer_cache_hits = hits1.saturating_sub(hits0);
         telemetry.tokenizer_cache_builds =
             builds1.saturating_sub(builds0);
-        Ok(FleetReport { outcomes, events, metrics, telemetry })
+        let st = state.into_inner().unwrap();
+        telemetry.hibernations = st.hibernations;
+        telemetry.rehydrations = st.rehydrations;
+        telemetry.resident_high_water_bytes = st.high_water;
+        if let Some(store) = &store {
+            telemetry.store_bytes_spilled = store.stats().bytes_spilled;
+            if scoped_dir {
+                store.cleanup();
+            }
+        }
+        Ok(FleetReport {
+            outcomes,
+            events,
+            metrics,
+            telemetry,
+            first_dispatch: st.first_dispatch,
+        })
+    }
+
+    /// One worker: pop the EDF-earliest task, rehydrate it if needed,
+    /// drive one window, requeue, enforce the resident budget.
+    fn worker_loop(
+        &self,
+        state: &Mutex<FleetState>,
+        finished: &Mutex<Vec<Option<(JobOutcome, Vec<Event>,
+                                     MetricLog)>>>,
+        failure: &Mutex<Option<anyhow::Error>>,
+        store: Option<&SessionStore>,
+        budget: Option<u64>,
+    ) {
+        let fail = |e: anyhow::Error| {
+            failure.lock().unwrap().get_or_insert(e);
+        };
+        loop {
+            if failure.lock().unwrap().is_some() {
+                return;
+            }
+            let task = {
+                let mut st = state.lock().unwrap();
+                match st.queue.pop_first() {
+                    Some((_k, task)) => {
+                        st.resident_queued = st
+                            .resident_queued
+                            .saturating_sub(
+                                task.resident_param_bytes(),
+                            );
+                        if let Task::Fresh(idx, _) = &task {
+                            st.first_dispatch.push(*idx);
+                        }
+                        Some(task)
+                    }
+                    None => None,
+                }
+            };
+            let Some(task) = task else { return };
+            let mut run = match task {
+                Task::Running(r) => r,
+                Task::Fresh(idx, spec) => {
+                    match JobRun::new(self.rt, &self.cfg.coord, idx,
+                                      &spec)
+                    {
+                        Ok(r) => {
+                            let r = Box::new(r);
+                            let sz = r.resident_param_bytes();
+                            state.lock().unwrap().note_live(sz);
+                            r
+                        }
+                        Err(e) => {
+                            fail(e);
+                            return;
+                        }
+                    }
+                }
+            };
+            if run.is_hibernated() {
+                let Some(store) = store else {
+                    fail(anyhow::anyhow!(
+                        "hibernated job without a session store"
+                    ));
+                    return;
+                };
+                if let Err(e) = run.rehydrate_from(store) {
+                    fail(e.context(format!(
+                        "rehydrating job {}", run.idx
+                    )));
+                    return;
+                }
+                let sz = run.resident_param_bytes();
+                let mut st = state.lock().unwrap();
+                st.rehydrations += 1;
+                st.note_live(sz);
+            }
+            match run.advance() {
+                Ok(true) => {
+                    // one window done; requeue under the job's EDF
+                    // key (fresh seq keeps FIFO within the class),
+                    // then hibernate whatever no longer fits
+                    let sz = run.resident_param_bytes();
+                    let deadline = run
+                        .deadline_minutes()
+                        .unwrap_or(f64::INFINITY);
+                    let mut victims: Vec<(QueueKey, Box<JobRun>)> =
+                        Vec::new();
+                    {
+                        let mut st = state.lock().unwrap();
+                        let key = QueueKey {
+                            deadline,
+                            seq: st.next_seq,
+                        };
+                        st.next_seq += 1;
+                        st.queue.insert(key, Task::Running(run));
+                        st.resident_queued += sz;
+                        if let Some(budget) = budget {
+                            while st.resident_queued > budget {
+                                // evict the resident job that will
+                                // run LAST (largest EDF key)
+                                let victim_key = st
+                                    .queue
+                                    .iter()
+                                    .rev()
+                                    .find_map(|(k, t)| match t {
+                                        Task::Running(r)
+                                            if !r.is_hibernated()
+                                                && r.resident_param_bytes()
+                                                    > 0 =>
+                                        {
+                                            Some(*k)
+                                        }
+                                        _ => None,
+                                    });
+                                let Some(vk) = victim_key else {
+                                    break;
+                                };
+                                let Some(Task::Running(vr)) =
+                                    st.queue.remove(&vk)
+                                else {
+                                    unreachable!(
+                                        "victim key held a running \
+                                         task under the same lock"
+                                    );
+                                };
+                                st.resident_queued = st
+                                    .resident_queued
+                                    .saturating_sub(
+                                        vr.resident_param_bytes(),
+                                    );
+                                victims.push((vk, vr));
+                            }
+                        }
+                    }
+                    // serialize victims to the store OUTSIDE the
+                    // lock (encode + disk write), then slot the
+                    // shrunken remnants back in under their original
+                    // EDF keys
+                    for (vk, mut vr) in victims {
+                        let vsz = vr.resident_param_bytes();
+                        let Some(store) = store else {
+                            fail(anyhow::anyhow!(
+                                "budget eviction without a store"
+                            ));
+                            return;
+                        };
+                        match vr.hibernate_to(store) {
+                            Ok(_) => {
+                                let mut st = state.lock().unwrap();
+                                st.hibernations += 1;
+                                st.resident_live = st
+                                    .resident_live
+                                    .saturating_sub(vsz);
+                                st.queue
+                                    .insert(vk, Task::Running(vr));
+                            }
+                            Err(e) => {
+                                fail(e.context(
+                                    "hibernating evicted job",
+                                ));
+                                return;
+                            }
+                        }
+                    }
+                }
+                Ok(false) => {
+                    let sz = run.resident_param_bytes();
+                    let idx = run.idx;
+                    let result = run.finish();
+                    finished.lock().unwrap()[idx] = Some(result);
+                    let mut st = state.lock().unwrap();
+                    st.resident_live =
+                        st.resident_live.saturating_sub(sz);
+                }
+                Err(e) => {
+                    fail(e);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(deadline: f64, seq: u64) -> QueueKey {
+        QueueKey { deadline, seq }
+    }
+
+    #[test]
+    fn queue_key_orders_edf_then_fifo() {
+        // earliest deadline first
+        assert!(k(10.0, 5) < k(20.0, 1));
+        // FIFO within a deadline class
+        assert!(k(10.0, 1) < k(10.0, 2));
+        // best-effort (INFINITY) sorts after every deadline
+        assert!(k(1e12, 0) < k(f64::INFINITY, 0));
+        assert!(k(f64::INFINITY, 0) < k(f64::INFINITY, 1));
+        // total order is consistent with itself
+        assert_eq!(k(3.0, 3), k(3.0, 3));
+        let mut keys =
+            vec![k(f64::INFINITY, 2), k(5.0, 9), k(5.0, 1), k(1.0, 7)];
+        keys.sort();
+        assert_eq!(keys,
+                   vec![k(1.0, 7), k(5.0, 1), k(5.0, 9),
+                        k(f64::INFINITY, 2)]);
+    }
+
+    #[test]
+    fn btree_queue_pops_in_edf_order() {
+        let mut q: BTreeMap<QueueKey, usize> = BTreeMap::new();
+        q.insert(k(f64::INFINITY, 0), 0); // best-effort, queued first
+        q.insert(k(30.0, 1), 1);
+        q.insert(k(10.0, 2), 2);
+        q.insert(k(30.0, 3), 3);
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop_first().map(|(_, v)| v)
+        })
+        .collect();
+        assert_eq!(order, vec![2, 1, 3, 0],
+                   "deadline 10 first, 30s FIFO, best-effort last");
     }
 }

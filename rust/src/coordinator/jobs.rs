@@ -17,6 +17,12 @@ pub struct JobSpec {
     /// f32; fp16/int8 halve/quarter both the host-resident bytes and
     /// the simulated ledger's parameter charge).
     pub precision: Precision,
+    /// Completion deadline in **simulated minutes** from queue time
+    /// (`None` = best-effort).  The fleet's EDF queue dispatches
+    /// earlier deadlines first; `None` sorts after every deadline.
+    /// Purely a scheduling/reporting hint — per-job results never
+    /// depend on dispatch order (the determinism contract).
+    pub deadline_minutes: Option<f64>,
 }
 
 impl JobSpec {
@@ -31,6 +37,7 @@ impl JobSpec {
             steps: 20,
             seed: 42,
             precision: Precision::F32,
+            deadline_minutes: None,
         }
     }
 
@@ -51,6 +58,12 @@ impl JobSpec {
 
     pub fn precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// Set a completion deadline in simulated minutes (EDF dispatch).
+    pub fn deadline(mut self, minutes: f64) -> Self {
+        self.deadline_minutes = Some(minutes);
         self
     }
 }
@@ -83,6 +96,10 @@ pub struct JobOutcome {
     /// Total simulated step wall-clock this job consumed (seconds) —
     /// the fleet aggregates this into device-time telemetry.
     pub sim_step_seconds: f64,
+    /// Whether the job blew its [`JobSpec::deadline`]: it finished
+    /// after the deadline's simulated minute, or never completed at
+    /// all.  Always `false` for best-effort jobs.
+    pub deadline_missed: bool,
 }
 
 #[cfg(test)]
@@ -95,10 +112,15 @@ mod tests {
                              OptimizerKind::MeZo)
             .batch(4)
             .steps(10)
-            .seed(1);
+            .seed(1)
+            .deadline(90.0);
         assert_eq!(j.batch, 4);
         assert_eq!(j.steps, 10);
         assert_eq!(j.seed, 1);
         assert_eq!(j.config, "pocket-tiny");
+        assert_eq!(j.deadline_minutes, Some(90.0));
+        let best_effort = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                                       OptimizerKind::MeZo);
+        assert_eq!(best_effort.deadline_minutes, None);
     }
 }

@@ -33,14 +33,16 @@ pub mod jobs;
 pub use fleet::{FleetConfig, FleetReport, FleetScheduler, FleetTelemetry};
 pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::device::{Device, OomError};
 use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::scheduler::{DayTrace, Policy};
+use crate::store::SessionStore;
 use crate::telemetry::MetricLog;
-use crate::tuner::session::{Session, SessionBuilder};
+use crate::tuner::session::{HibernatedSession, Session,
+                            SessionBuilder};
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -99,6 +101,10 @@ pub struct JobRun {
     cfg: CoordinatorConfig,
     trace: DayTrace,
     session: Option<Session>,
+    /// The small host-resident remnant while the session's tensors
+    /// live in the fleet's [`SessionStore`] (see
+    /// [`hibernate_to`](JobRun::hibernate_to)).
+    hibernated: Option<HibernatedSession>,
     optimizer: OptimizerKind,
     steps_done: u64,
     last_loss: f64,
@@ -181,6 +187,8 @@ impl JobRun {
                         windows_used: 0,
                         windows_denied: 0,
                         sim_step_seconds: 0.0,
+                        deadline_missed: spec.deadline_minutes
+                            .is_some(),
                     });
                     break;
                 }
@@ -193,6 +201,7 @@ impl JobRun {
             cfg: cfg.clone(),
             trace,
             session,
+            hibernated: None,
             optimizer,
             steps_done: 0,
             last_loss: f64::NAN,
@@ -215,12 +224,96 @@ impl JobRun {
         self.done.is_some()
     }
 
+    /// This job's EDF deadline, if any (simulated minutes).
+    pub fn deadline_minutes(&self) -> Option<f64> {
+        self.spec.deadline_minutes
+    }
+
+    /// The key this job's image lives under in a [`SessionStore`].
+    pub fn store_key(&self) -> String {
+        format!("job{}", self.idx)
+    }
+
+    /// Host bytes of resident parameter storage this run currently
+    /// pins (0 when hibernated, terminal, or failed at admission) —
+    /// what the fleet's `resident_budget_bytes` meters.
+    pub fn resident_param_bytes(&self) -> u64 {
+        self.session
+            .as_ref()
+            .map(|s| s.resident_param_bytes())
+            .unwrap_or(0)
+    }
+
+    /// Whether the session is currently hibernated into a store.
+    pub fn is_hibernated(&self) -> bool {
+        self.hibernated.is_some()
+    }
+
+    /// Hibernate the live session into `store` under
+    /// [`store_key`](JobRun::store_key): the parameter storage (at
+    /// its resident precision) and optimizer moments become a durable
+    /// image; the simulated device clock, events, and metrics stay
+    /// resident in this `JobRun`.  Returns `false` (and does nothing)
+    /// when there is no live session to hibernate.  A later
+    /// [`rehydrate_from`](JobRun::rehydrate_from) continues the job
+    /// bit-identically — the fleet's eviction discipline relies on it.
+    pub fn hibernate_to(&mut self, store: &SessionStore) -> Result<bool> {
+        if self.done.is_some() || self.hibernated.is_some() {
+            return Ok(false);
+        }
+        let Some(session) = self.session.take() else {
+            return Ok(false);
+        };
+        // `hibernate` consumes the session, so a failure here (only
+        // reachable via programming error) must leave the run in a
+        // DEFINED terminal state — never a session-less zombie whose
+        // next advance() would panic
+        let (image, remnant) = match session.hibernate() {
+            Ok(parts) => parts,
+            Err(e) => {
+                self.events.push(Event::Failed {
+                    job: self.idx,
+                    error: format!("hibernate: {e:#}"),
+                });
+                self.done =
+                    Some(self.outcome_with(JobStatus::Failed));
+                return Err(e);
+            }
+        };
+        // commit the remnant BEFORE the store write: if the put
+        // fails, the store's failure path retains the image bytes in
+        // its memory cache, so this run stays rehydratable
+        self.hibernated = Some(remnant);
+        store.put(&self.store_key(), &image)?;
+        Ok(true)
+    }
+
+    /// Undo [`hibernate_to`](JobRun::hibernate_to): take the image
+    /// back out of the store and reassemble the live session.  No-op
+    /// when not hibernated.
+    pub fn rehydrate_from(&mut self, store: &SessionStore) -> Result<()> {
+        let Some(remnant) = self.hibernated.take() else {
+            return Ok(());
+        };
+        let image = store.take(&self.store_key())?;
+        self.session = Some(remnant.rehydrate(image)?);
+        Ok(())
+    }
+
     /// The terminal outcome, once [`is_done`](JobRun::is_done).
     pub fn outcome(&self) -> Option<&JobOutcome> {
         self.done.as_ref()
     }
 
     fn outcome_with(&self, status: JobStatus) -> JobOutcome {
+        // window_idx is the simulated-time axis (admitted AND denied
+        // windows advance it), so this is the job's completion clock
+        let elapsed_minutes =
+            self.window_idx as f64 * self.cfg.trace_step_minutes;
+        let deadline_missed =
+            self.spec.deadline_minutes.map_or(false, |d| {
+                status != JobStatus::Completed || elapsed_minutes > d
+            });
         JobOutcome {
             status,
             optimizer: self.optimizer,
@@ -229,6 +322,7 @@ impl JobRun {
             windows_used: self.windows,
             windows_denied: self.denied,
             sim_step_seconds: self.sim_step_seconds,
+            deadline_missed,
         }
     }
 
@@ -239,6 +333,8 @@ impl JobRun {
         if self.done.is_some() {
             return Ok(false);
         }
+        ensure!(self.hibernated.is_none(),
+                "advance() on a hibernated job — rehydrate first");
         if self.steps_done >= self.spec.steps {
             self.events.push(Event::Completed {
                 job: self.idx,

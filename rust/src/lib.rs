@@ -10,9 +10,11 @@
 //!   executes step programs through a pluggable backend ([`runtime`]),
 //!   drives MeZO / Adam step programs ([`optim`], [`tuner`]), generates
 //!   and tokenizes on-device personal data ([`data`]), enforces a
-//!   simulated smartphone's memory / compute envelope ([`device`]), and
+//!   simulated smartphone's memory / compute envelope ([`device`]),
 //!   schedules background fine-tuning sessions the way a phone would
-//!   ([`scheduler`], [`coordinator`]).
+//!   ([`scheduler`], [`coordinator`]), and persists sessions as
+//!   durable single-file images so queued fleet jobs hibernate into
+//!   bounded memory ([`store`]).
 //!
 //! Python never runs on the request path — and with the default
 //! **native backend** it never needs to run at all.
@@ -58,6 +60,7 @@ pub mod optim;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod store;
 pub mod telemetry;
 pub mod tuner;
 pub mod util;

@@ -9,7 +9,9 @@
 //!   daemon     run the policy-gated personalization coordinator over a
 //!              simulated day of phone state
 //!   fleet      multiplex N personalization jobs over a worker pool
-//!              sharing one runtime (deterministic for any -W)
+//!              sharing one runtime (deterministic for any -W), with
+//!              EDF deadlines and bounded-memory hibernation
+//!   store      inspect durable session images / legacy checkpoints
 //!   devices    list device presets
 //!   artifacts  list AOT programs in the manifest
 //! ```
@@ -40,13 +42,14 @@ const VALUE_FLAGS: &[&str] = &[
     "device", "artifacts", "csv", "checkpoint", "schedule", "windows",
     "report-steps", "trace-seed", "steps-per-window", "queries",
     "batch-window", "jobs", "workers", "policy", "precision",
+    "resident-budget", "deadline", "store-dir",
 ];
 
 fn usage() -> &'static str {
     "pocketllm — on-device LLM fine-tuning via derivative-free optimization
 
-USAGE: pocketllm <finetune|eval|report|daemon|fleet|devices|artifacts>
-                 [flags]
+USAGE: pocketllm <finetune|eval|report|daemon|fleet|store|devices|
+                 artifacts> [flags]
 
 COMMON FLAGS
   --artifacts DIR    artifact directory (default: artifacts)
@@ -68,7 +71,10 @@ COMMON FLAGS
                      For fleet runs, applies to every job
   --device NAME      simulate a device envelope (oppo-reno6, pixel-4a, ...)
   --csv PATH         dump step metrics as CSV
-  --checkpoint DIR   save a checkpoint at the end (MeZO sessions)
+  --checkpoint PATH  save a single-file session image at the end (the
+                     canonical durable form: params at their resident
+                     precision + optimizer state, CRC-protected;
+                     legacy checkpoint DIRECTORIES stay readable)
 
 REPORT
   pocketllm report [fig1|table1|table2|opt13b|ablation|sweep|frontier|all]
@@ -82,9 +88,26 @@ FLEET
   pocketllm fleet [--jobs N] [--workers W] [--steps N] [--model NAME]
                   [--policy overnight|always] [--windows N]
                   [--steps-per-window N] [--trace-seed N]
+                  [--resident-budget B] [--deadline M] [--store-dir D]
   Runs N independent personalization jobs (seeds 42, 43, ...) over a
   W-worker pool sharing one runtime.  Outcomes are bit-identical for
-  any W (the determinism contract; see README).
+  any W and any budget (the determinism contract; see README).
+  --resident-budget B   cap the summed resident parameter bytes of
+                        queued jobs (suffixes k/m/g); jobs over the
+                        cap hibernate to the session store and
+                        rehydrate on dispatch — thousands of queued
+                        jobs run in flat memory
+  --deadline M          EDF deadlines: job i gets M*(jobs-i) simulated
+                        minutes, so later-queued jobs are tighter and
+                        dispatch first (earliest deadline first)
+  --store-dir D         hibernation store location (default: a
+                        per-run temp directory)
+
+STORE
+  pocketllm store inspect PATH
+  Print a session image's header, tensor directory, and size
+  breakdown (params vs optimizer state vs metadata) after verifying
+  its CRC; also summarizes legacy checkpoint directories.
 "
 }
 
@@ -127,6 +150,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("daemon") => cmd_daemon(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("store") => cmd_store(&args),
         Some("devices") => {
             println!("{}", report::devices().render());
             Ok(())
@@ -165,12 +189,6 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let task = TaskKind::parse(args.get_or("task", "sst2"))
         .context("bad --task (sst2|boolq|rte|chatlm)")?;
     let steps = args.get_u64("steps", 30)?;
-
-    if optimizer == OptimizerKind::Adam && args.has("checkpoint") {
-        bail!("--checkpoint currently supports MeZO sessions (an Adam \
-               checkpoint is 3x params on disk; the asymmetry is the \
-               paper's point)");
-    }
 
     let queries = args.get_usize("queries", 1)?;
     if queries == 0 {
@@ -271,21 +289,22 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         session.metrics.save_csv(std::path::Path::new(path))?;
         println!("metrics -> {path}");
     }
-    if let Some(dir) = args.flag("checkpoint") {
-        // materialize the resident ExecState tensors — the checkpoint
-        // boundary is the only place the hot params become Literals
-        let params = session.params()?;
-        Checkpoint::save(
-            dir,
-            model,
-            optimizer,
-            session.step,
-            args.get_u64("seed", 42)?,
-            last,
-            &params,
-            None,
-        )?;
-        println!("checkpoint -> {dir}");
+    if let Some(path) = args.flag("checkpoint") {
+        // snapshot the resident ExecState AT ITS PRECISION — the
+        // image stores f16/int8 bytes verbatim, never an f32
+        // materialization; Adam sessions carry their moments
+        let image = session.snapshot_image(last)?;
+        let (param_b, moment_b) =
+            (image.param_bytes(), image.moment_bytes());
+        let ck = Checkpoint::save(path, image)?;
+        println!(
+            "checkpoint -> {path} ({}, {} storage: {} params + {} \
+             optimizer state)",
+            pocketllm::util::bytes::fmt_human(ck.size_bytes()?),
+            session.precision(),
+            pocketllm::util::bytes::fmt_human(param_b),
+            pocketllm::util::bytes::fmt_human(moment_b),
+        );
     }
     Ok(())
 }
@@ -295,15 +314,26 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.get_or("model", "pocket-roberta");
     let task = TaskKind::parse(args.get_or("task", "sst2"))
         .context("bad --task")?;
+    // the checkpoint's recorded precision drives the session build,
+    // so an f16/int8 checkpoint evaluates with f16/int8 resident
+    // storage instead of silently widening to f32 (legacy
+    // directories default to f32 — they always stored f32)
+    let ck = args
+        .flag("checkpoint")
+        .map(Checkpoint::open)
+        .transpose()?;
     let mut session = SessionBuilder::new(&rt, model)
         .task(task)
         .seed(args.get_u64("seed", 42)?)
+        .precision(
+            ck.as_ref().map(|c| c.precision).unwrap_or_default(),
+        )
         .build()?;
-    if let Some(dir) = args.flag("checkpoint") {
-        let ck = Checkpoint::open(dir)?;
+    if let Some(ck) = &ck {
         let params = ck.load_params(&session.cfg)?;
         session.load_params(&params)?;
-        println!("loaded checkpoint @ step {}", ck.step);
+        println!("loaded checkpoint @ step {} ({} storage)", ck.step,
+                 ck.precision);
     }
     let loss = session.eval_loss()?;
     println!("eval loss: {loss:.4}");
@@ -446,26 +476,64 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let base_seed = args.get_u64("seed", 42)?;
     let batch = args.get_usize("batch", 0)?;
     let precision = parse_precision(args)?;
+    // --deadline M: job i gets M*(jobs-i) simulated minutes, so
+    // later-queued jobs have TIGHTER deadlines and the EDF queue
+    // dispatches them first — outcomes stay identical (the contract),
+    // only dispatch order and the deadline_missed flags react
+    let deadline_base = match args.flag("deadline") {
+        Some(s) => Some(
+            s.parse::<f64>().context("bad --deadline (minutes)")?,
+        ),
+        None => None,
+    };
+    let resident_budget = match args.flag("resident-budget") {
+        Some(s) => Some(pocketllm::util::bytes::parse_bytes(s).context(
+            "bad --resident-budget (bytes, suffixes k/m/g)",
+        )?),
+        None => None,
+    };
     let jobs: Vec<JobSpec> = (0..n_jobs)
         .map(|i| {
-            JobSpec::new(model, task, optimizer)
+            let mut j = JobSpec::new(model, task, optimizer)
                 .batch(batch)
                 .steps(steps)
                 .seed(base_seed + i as u64)
-                .precision(precision)
+                .precision(precision);
+            if let Some(m) = deadline_base {
+                j = j.deadline(m * (n_jobs - i) as f64);
+            }
+            j
         })
         .collect();
 
-    // NOTE: every line this command prints except `host wall: ...` is
-    // deterministic for any --workers; CI diffs the outputs of two
-    // worker counts, so keep worker-dependent detail on that line.
+    // NOTE: every line this command prints except `host wall: ...`
+    // and `fleet store: ...` is deterministic for any --workers; CI
+    // diffs the outputs of two worker counts, so keep
+    // worker-dependent detail (wall-clock, hibernation counts,
+    // high-water) on those two lines only.
     println!(
         "fleet: {n_jobs} jobs x {steps} steps on {model} ({}), \
          {policy_name} policy",
         optimizer.label()
     );
-    let fleet =
-        FleetScheduler::new(&rt, FleetConfig { coord, workers });
+    if let Some(b) = resident_budget {
+        println!(
+            "fleet resident budget: {} (queued jobs hibernate to the \
+             session store)",
+            pocketllm::util::bytes::fmt_human(b)
+        );
+    }
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig {
+            coord,
+            workers,
+            resident_budget_bytes: resident_budget,
+            store_dir: args
+                .flag("store-dir")
+                .map(std::path::PathBuf::from),
+        },
+    );
     let t0 = std::time::Instant::now();
     let report = fleet.run(&jobs)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -506,11 +574,81 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet simulated step-seconds: {:.1}",
         t.sim_step_seconds
     );
+    println!("fleet deadline misses: {}", t.deadline_misses);
     println!(
         "fleet tokenizer cache: {} builds, {} hits",
         t.tokenizer_cache_builds, t.tokenizer_cache_hits
     );
+    // worker-timing-dependent telemetry: keep on the excluded lines
+    println!(
+        "fleet store: {} hibernations, {} rehydrations, resident \
+         high-water {}, {} spilled",
+        t.hibernations,
+        t.rehydrations,
+        pocketllm::util::bytes::fmt_human(t.resident_high_water_bytes),
+        pocketllm::util::bytes::fmt_human(t.store_bytes_spilled)
+    );
     println!("host wall: {wall:.2}s with {workers} workers");
+    Ok(())
+}
+
+fn cmd_store(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("inspect") => {}
+        other => bail!(
+            "usage: pocketllm store inspect PATH (got {:?})",
+            other
+        ),
+    }
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: pocketllm store inspect PATH")?;
+    let ck = Checkpoint::open(path)?;
+    let human = pocketllm::util::bytes::fmt_human;
+    println!("checkpoint: {path}");
+    match ck.image() {
+        Some(img) => {
+            let total = ck.size_bytes()?;
+            let params = img.param_bytes();
+            let moments = img.moment_bytes();
+            println!("form: session image v{} (CRC verified)",
+                     pocketllm::store::image::VERSION);
+            println!("config: {}", img.config);
+            println!("task: {}", img.task.label());
+            println!("optimizer: {}", img.optimizer.label());
+            println!("precision: {} ({} B/param on disk)",
+                     img.precision, img.precision.param_bytes());
+            println!("step: {}", img.step);
+            println!("master seed: {}", img.master_seed);
+            println!("data seed: {}", img.data_seed);
+            println!("batch: {}  batcher position: {}", img.batch,
+                     img.batcher_pos);
+            println!("tensors: {}", img.params.len());
+            println!("size: {} total = {} params + {} optimizer \
+                      state + {} metadata",
+                     human(total),
+                     human(params),
+                     human(moments),
+                     human(total.saturating_sub(params + moments)));
+            // the paper's Table-1 asymmetry, durable: MeZO images are
+            // params + O(100) bytes; Adam images carry 2x f32 moments
+            if img.adam_m.is_empty() {
+                println!("optimizer state: (master_seed, step) — 16 \
+                          bytes of counters, no tensors");
+            }
+        }
+        None => {
+            println!("form: legacy checkpoint directory (read shim; \
+                      params are f32)");
+            println!("config: {}", ck.config);
+            println!("optimizer: {}", ck.optimizer.label());
+            println!("precision: {}", ck.precision);
+            println!("step: {}", ck.step);
+            println!("master seed: {}", ck.master_seed);
+            println!("size: {} total", human(ck.size_bytes()?));
+        }
+    }
     Ok(())
 }
 
@@ -590,5 +728,37 @@ mod tests {
         assert_eq!(a.get_usize("workers", 0).unwrap(), 2);
         assert_eq!(a.get_or("policy", "overnight"), "always");
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn value_flags_cover_store_and_budget_knobs() {
+        // the ISSUE-5 regression class: a library feature whose CLI
+        // flag swallows the next token as a boolean
+        let a = Args::parse(
+            &argv(&["fleet", "--jobs", "64", "--resident-budget",
+                    "64k", "--deadline", "30", "--store-dir",
+                    "/tmp/s"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.flag("resident-budget"), Some("64k"));
+        assert_eq!(
+            pocketllm::util::bytes::parse_bytes(
+                a.flag("resident-budget").unwrap()
+            ),
+            Some(65536)
+        );
+        assert_eq!(a.flag("deadline"), Some("30"));
+        assert_eq!(a.flag("store-dir"), Some("/tmp/s"));
+        assert!(a.positional.is_empty(),
+                "values must not leak into positionals");
+        // store inspect takes positionals, not flags
+        let s = Args::parse(&argv(&["store", "inspect", "/tmp/x.plsi"]),
+                            VALUE_FLAGS)
+            .unwrap();
+        assert_eq!(s.subcommand.as_deref(), Some("store"));
+        assert_eq!(s.positional,
+                   vec!["inspect".to_string(),
+                        "/tmp/x.plsi".to_string()]);
     }
 }

@@ -104,6 +104,55 @@ impl Literal {
         Ok(Literal { shape: shape.to_vec(), data: stored })
     }
 
+    /// Rebuild a parameter-storage literal from its
+    /// [`to_le_bytes`](Literal::to_le_bytes) serialization — the read
+    /// half of the session-image format.  Exact for every precision:
+    /// the stored bits are installed verbatim, no re-quantization.
+    pub fn from_storage_bytes(
+        precision: Precision,
+        shape: Vec<usize>,
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        ensure!(bytes.len() as u64 == precision.storage_bytes(n),
+                "{} storage of shape {:?} is {} bytes, got {}",
+                precision, shape, precision.storage_bytes(n),
+                bytes.len());
+        match precision {
+            Precision::F32 => {
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Literal::from_f32(data, shape)
+            }
+            Precision::F16 => {
+                let data: Vec<u16> = bytes
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect();
+                Literal::from_f16_bits(data, shape)
+            }
+            Precision::Int8 => {
+                let scale = f32::from_le_bytes([
+                    bytes[0], bytes[1], bytes[2], bytes[3],
+                ]);
+                let data: Vec<i8> =
+                    bytes[4..].iter().map(|&b| b as i8).collect();
+                Literal::from_i8(data, scale, shape)
+            }
+        }
+    }
+
+    /// Replace the shape without touching the element storage (used
+    /// when durable forms, which store tensors flat, are re-attached
+    /// to a manifest's shaped parameter specs).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Literal> {
+        Self::check(self.element_count(), &shape)?;
+        self.shape = shape;
+        Ok(self)
+    }
+
     /// Overwrite this literal's storage by re-quantizing `src` in
     /// place — the zero-allocation writeback half of the precision
     /// residency loop (int8 recomputes its per-tensor scale).
@@ -437,6 +486,37 @@ mod tests {
         assert!(u.as_f32_iter().is_err());
         assert!(u.dequantize_into(&mut [0f32; 1]).is_err());
         assert_eq!(u.storage_precision(), None);
+    }
+
+    #[test]
+    fn storage_bytes_roundtrip_bit_exactly_for_every_precision() {
+        // the session-image contract: to_le_bytes -> from_storage_bytes
+        // must reproduce the literal verbatim (PartialEq covers the
+        // int8 scale and every stored bit)
+        let data = [0.11f32, -0.7, 0.0, 3.3, -1e-5, 65504.0];
+        for p in Precision::ALL {
+            let l = Literal::quantize_from_f32(&data, &[2, 3], p)
+                .unwrap();
+            let bytes = l.to_le_bytes();
+            assert_eq!(bytes.len() as u64, p.storage_bytes(6), "{p}");
+            let back =
+                Literal::from_storage_bytes(p, vec![2, 3], &bytes)
+                    .unwrap();
+            assert_eq!(back, l, "{p}");
+            // wrong byte count rejected
+            assert!(Literal::from_storage_bytes(p, vec![2, 3],
+                                                &bytes[1..])
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn reshaped_validates_element_count() {
+        let l = f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let r = l.clone().reshaped(vec![2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.f32_vec().unwrap(), l.f32_vec().unwrap());
+        assert!(l.reshaped(vec![3]).is_err());
     }
 
     #[test]

@@ -93,6 +93,39 @@ impl Precision {
             Precision::Int8 => Dtype::I8,
         }
     }
+
+    /// Stable one-byte wire code used by the durable session-image
+    /// format (`store::image`).  These values are part of the on-disk
+    /// contract: never renumber, only append.
+    pub fn code(&self) -> u8 {
+        match self {
+            Precision::F32 => 0,
+            Precision::F16 => 1,
+            Precision::Int8 => 2,
+        }
+    }
+
+    /// Inverse of [`code`](Precision::code).
+    pub fn from_code(c: u8) -> Option<Precision> {
+        match c {
+            0 => Some(Precision::F32),
+            1 => Some(Precision::F16),
+            2 => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Bytes one tensor of `elems` elements occupies in storage form —
+    /// both resident (`Literal::resident_bytes`) and on disk
+    /// (`Literal::to_le_bytes`): 4/2/1 B per element, plus int8's
+    /// 4-byte per-tensor scale.
+    pub fn storage_bytes(&self, elems: usize) -> u64 {
+        match self {
+            Precision::F32 => 4 * elems as u64,
+            Precision::F16 => 2 * elems as u64,
+            Precision::Int8 => elems as u64 + 4,
+        }
+    }
 }
 
 impl Default for Precision {
@@ -248,6 +281,26 @@ mod tests {
         assert_eq!(Precision::F32.param_bytes(), 4);
         assert_eq!(Precision::F16.param_bytes(), 2);
         assert_eq!(Precision::Int8.param_bytes(), 1);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip_and_stay_stable() {
+        // on-disk contract: these numbers are baked into session images
+        assert_eq!(Precision::F32.code(), 0);
+        assert_eq!(Precision::F16.code(), 1);
+        assert_eq!(Precision::Int8.code(), 2);
+        for p in Precision::ALL {
+            assert_eq!(Precision::from_code(p.code()), Some(p));
+        }
+        assert_eq!(Precision::from_code(3), None);
+    }
+
+    #[test]
+    fn storage_bytes_count_the_int8_scale() {
+        assert_eq!(Precision::F32.storage_bytes(10), 40);
+        assert_eq!(Precision::F16.storage_bytes(10), 20);
+        assert_eq!(Precision::Int8.storage_bytes(10), 14);
+        assert_eq!(Precision::Int8.storage_bytes(0), 4);
     }
 
     #[test]

@@ -295,6 +295,181 @@ impl ExecState {
         if self.qw.is_empty() { self.w.len() } else { self.qw.len() }
     }
 
+    /// Clone the resident parameter storage *at its precision* — the
+    /// durable form a session image records: f32 residency yields f32
+    /// literals, quantized residency yields the quantized literals
+    /// verbatim (never a dequantized copy).
+    pub fn storage_literals(&self) -> Result<Vec<Literal>> {
+        if self.qw.is_empty() {
+            ensure!(self.w.len() == self.cfg.params.len(),
+                    "f32 state holds {} tensors, config has {}",
+                    self.w.len(), self.cfg.params.len());
+            self.cfg
+                .params
+                .iter()
+                .zip(&self.w)
+                .map(|(spec, data)| {
+                    Literal::from_f32(data.clone(), spec.shape.clone())
+                })
+                .collect()
+        } else {
+            Ok(self.qw.clone())
+        }
+    }
+
+    /// Consume the state into its storage parts: the resident
+    /// parameter literals (at their precision, moved — zero copy) plus
+    /// the Adam moments (empty vecs for derivative-free state).  The
+    /// hibernate boundary; errors if a quantized working set is still
+    /// materialized (hibernating mid-step would lose the working set).
+    pub fn into_storage(
+        mut self,
+    ) -> Result<(Vec<Literal>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        ensure!(!self.materialized(),
+                "hibernate while a working set is materialized");
+        let m = std::mem::take(&mut self.m);
+        let v = std::mem::take(&mut self.v);
+        let params = if self.qw.is_empty() {
+            ensure!(self.w.len() == self.cfg.params.len(),
+                    "f32 state holds {} tensors, config has {}",
+                    self.w.len(), self.cfg.params.len());
+            let shapes: Vec<Vec<usize>> = self
+                .cfg
+                .params
+                .iter()
+                .map(|s| s.shape.clone())
+                .collect();
+            std::mem::take(&mut self.w)
+                .into_iter()
+                .zip(shapes)
+                .map(|(data, shape)| Literal::from_f32(data, shape))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            std::mem::take(&mut self.qw)
+        };
+        Ok((params, m, v))
+    }
+
+    /// Rebuild a state from [`into_storage`](ExecState::into_storage)
+    /// parts (the rehydrate boundary).  The storage literals are
+    /// installed verbatim — no quantize/dequantize round trip — so a
+    /// hibernate → rehydrate cycle is bit-identical at every
+    /// precision.  Tensors may arrive flat (durable forms store no
+    /// shapes); they are re-attached to the config's shapes here.
+    pub fn from_storage(
+        cfg: &ConfigInfo,
+        precision: Precision,
+        params: Vec<Literal>,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    ) -> Result<ExecState> {
+        let shaped = Self::shape_storage(cfg, precision, params)?;
+        ensure!(m.len() == v.len(),
+                "adam moments disagree: {} m vs {} v tensors", m.len(),
+                v.len());
+        for set in [&m, &v] {
+            ensure!(set.is_empty() || set.len() == cfg.params.len(),
+                    "expected {} moment tensors, got {}",
+                    cfg.params.len(), set.len());
+            for (spec, t) in cfg.params.iter().zip(set.iter()) {
+                ensure!(t.len() == spec.elements(),
+                        "moment tensor {} has {} values, expected {}",
+                        spec.name, t.len(), spec.elements());
+            }
+        }
+        let (w, qw) = match precision {
+            Precision::F32 => (
+                shaped
+                    .into_iter()
+                    .map(|l| l.into_f32())
+                    .collect::<Result<Vec<_>>>()?,
+                Vec::new(),
+            ),
+            _ => (Vec::new(), shaped),
+        };
+        Ok(ExecState {
+            cfg: cfg.clone(),
+            precision,
+            w,
+            qw,
+            m,
+            v,
+            scratch: Scratch::new(),
+        })
+    }
+
+    /// Overwrite the resident parameter storage verbatim (precision
+    /// must match — this is the lossless restore path for durable
+    /// forms written at the session's own precision; cross-precision
+    /// restores go through [`load_params`](ExecState::load_params)).
+    pub fn install_storage(&mut self, params: Vec<Literal>)
+        -> Result<()>
+    {
+        ensure!(!self.materialized(),
+                "install_storage while a working set is materialized");
+        let shaped =
+            Self::shape_storage(&self.cfg, self.precision, params)?;
+        if self.qw.is_empty() {
+            self.w = shaped
+                .into_iter()
+                .map(|l| l.into_f32())
+                .collect::<Result<Vec<_>>>()?;
+        } else {
+            self.qw = shaped;
+        }
+        Ok(())
+    }
+
+    /// Validate storage literals against the config (count, element
+    /// counts, storage precision) and attach the manifest shapes.
+    fn shape_storage(
+        cfg: &ConfigInfo,
+        precision: Precision,
+        params: Vec<Literal>,
+    ) -> Result<Vec<Literal>> {
+        ensure!(params.len() == cfg.params.len(),
+                "expected {} tensors, got {}", cfg.params.len(),
+                params.len());
+        let mut shaped = Vec::with_capacity(params.len());
+        for (spec, lit) in cfg.params.iter().zip(params) {
+            ensure!(lit.element_count() == spec.elements(),
+                    "tensor {} has {} elements, expected {}", spec.name,
+                    lit.element_count(), spec.elements());
+            ensure!(lit.storage_precision() == Some(precision),
+                    "tensor {} stored as {:?}, state is {}", spec.name,
+                    lit.dtype(), precision);
+            shaped.push(lit.reshaped(spec.shape.clone())?);
+        }
+        Ok(shaped)
+    }
+
+    /// A zero-tensor placeholder used to steal a real state out of a
+    /// `Drop` type (`Session::hibernate`).  Never executable.
+    pub(crate) fn hollow() -> ExecState {
+        ExecState {
+            cfg: ConfigInfo {
+                name: String::new(),
+                kind: "encoder".into(),
+                vocab: 0,
+                d_model: 0,
+                n_layers: 0,
+                n_heads: 0,
+                d_ff: 0,
+                max_seq: 0,
+                n_classes: 0,
+                use_pallas: false,
+                n_params: 0,
+                params: Vec::new(),
+            },
+            precision: Precision::F32,
+            w: Vec::new(),
+            qw: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            scratch: Scratch::new(),
+        }
+    }
+
     /// Build from a literal-based [`ModelState`] (one copy — a
     /// boundary crossing, not a per-step cost).
     pub fn from_model(cfg: &ConfigInfo, params: &ModelState)
@@ -682,6 +857,92 @@ mod tests {
         let ms = st.params_model().unwrap();
         assert_eq!(ms.tensors[0].f32_vec().unwrap(), vec![0.125f32; 6]);
         assert_eq!(ms.tensors[1].f32_vec().unwrap(), vec![2.0f32; 4]);
+    }
+
+    #[test]
+    fn storage_roundtrip_is_verbatim_for_every_precision() {
+        let cfg = tiny_cfg();
+        let raw = vec![
+            vec![0.51f32, -1.03, 0.27, 0.13, 0.74, -0.56],
+            vec![1.01, 0.0, -0.26, 0.47],
+        ];
+        for p in Precision::ALL {
+            let st =
+                ExecState::from_raw_at(&cfg, raw.clone(), p).unwrap();
+            let before = st.storage_literals().unwrap();
+            let bytes_before: Vec<Vec<u8>> =
+                before.iter().map(|l| l.to_le_bytes()).collect();
+            // consume -> rebuild -> identical storage bits
+            let (params, m, v) = st.into_storage().unwrap();
+            assert!(m.is_empty() && v.is_empty());
+            let st2 =
+                ExecState::from_storage(&cfg, p, params, m, v).unwrap();
+            let after = st2.storage_literals().unwrap();
+            let bytes_after: Vec<Vec<u8>> =
+                after.iter().map(|l| l.to_le_bytes()).collect();
+            assert_eq!(bytes_before, bytes_after, "{p}");
+            assert_eq!(st2.precision(), p);
+            assert_eq!(st2.tensor_count(), 2);
+            // shapes re-attached from the config
+            assert_eq!(after[0].shape(), &[2, 3]);
+        }
+    }
+
+    #[test]
+    fn storage_roundtrip_carries_adam_moments() {
+        let cfg = tiny_cfg();
+        let raw = vec![vec![0.5f32; 6], vec![0.25f32; 4]];
+        let mut st = ExecState::from_raw(&cfg, raw).unwrap().with_adam();
+        st.m[0][0] = 7.0;
+        st.v[1][3] = 9.0;
+        let (params, m, v) = st.into_storage().unwrap();
+        assert_eq!(m.len(), 2);
+        let st2 = ExecState::from_storage(&cfg, Precision::F32, params,
+                                          m, v)
+            .unwrap();
+        assert!(st2.has_adam());
+        assert_eq!(st2.m[0][0], 7.0);
+        assert_eq!(st2.v[1][3], 9.0);
+    }
+
+    #[test]
+    fn from_storage_validates_shape_count_and_precision() {
+        let cfg = tiny_cfg();
+        let ok = |p: Precision| -> Vec<Literal> {
+            vec![
+                Literal::quantize_from_f32(&[0.5; 6], &[6], p).unwrap(),
+                Literal::quantize_from_f32(&[0.5; 4], &[4], p).unwrap(),
+            ]
+        };
+        // flat shapes are fine (re-attached), but wrong counts are not
+        let st = ExecState::from_storage(&cfg, Precision::F16,
+                                         ok(Precision::F16),
+                                         vec![], vec![])
+            .unwrap();
+        assert_eq!(st.storage_literals().unwrap()[0].shape(), &[2, 3]);
+        assert!(ExecState::from_storage(&cfg, Precision::F16,
+                                        ok(Precision::F32), vec![],
+                                        vec![])
+            .is_err(), "precision mismatch must be rejected");
+        let mut short = ok(Precision::F16);
+        short.pop();
+        assert!(ExecState::from_storage(&cfg, Precision::F16, short,
+                                        vec![], vec![])
+            .is_err());
+        // lopsided moments rejected
+        assert!(ExecState::from_storage(&cfg, Precision::F16,
+                                        ok(Precision::F16),
+                                        vec![vec![0.0; 6]], vec![])
+            .is_err());
+        // install_storage is the in-place form of the same contract
+        let mut st = ExecState::from_raw_at(
+            &cfg,
+            vec![vec![0f32; 6], vec![0f32; 4]],
+            Precision::F16,
+        )
+        .unwrap();
+        st.install_storage(ok(Precision::F16)).unwrap();
+        assert!(st.install_storage(ok(Precision::F32)).is_err());
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! The durable session image: one file, one session.
+//!
+//! ## Format (version 1, little-endian throughout)
+//!
+//! ```text
+//!   magic        4 B   b"PLSI"
+//!   version      u32   1
+//!   optimizer    u8    0 = mezo, 1 = adam
+//!   precision    u8    Precision::code (0 f32, 1 f16, 2 int8)
+//!   flags        u8    bit0 = Adam m/v moment payload present
+//!   reserved     u8    0
+//!   config       u32 len + UTF-8 bytes (manifest config name)
+//!   task         u32 len + UTF-8 bytes (TaskKind label)
+//!   step         u64   completed optimization steps
+//!   master_seed  u64   MeZO seed-schedule master (0 for Adam)
+//!   data_seed    u64   session seed driving the data pipeline
+//!   batcher_pos  u64   batches consumed from the deterministic stream
+//!   last_loss    u64   f64 bits (NaN when unknown)
+//!   batch        u32   batch size the step program was compiled for
+//!   n_tensors    u32   parameter tensor count
+//!   directory    n_tensors x { dtype u8 (Precision::code), elems u64 }
+//!   payload      parameter records, each Literal::to_le_bytes —
+//!                tensors are stored AT THEIR RESIDENT PRECISION
+//!                (2 B/elem f16, 1 B/elem + 4 B scale int8); then,
+//!                iff flags bit0, the Adam m and v records (f32)
+//!   crc32        u32   CRC-32/IEEE over every preceding byte
+//! ```
+//!
+//! Shapes are not stored: tensors travel flat and are re-attached to
+//! the manifest's parameter specs at load ([`ExecState::from_storage`]
+//! (crate::runtime::ExecState::from_storage) validates element
+//! counts).  That keeps a MeZO image at params + ~100 bytes + 9 bytes
+//! per tensor of metadata — the paper's Table-1 asymmetry, durable.
+//!
+//! Every load verifies magic, version, and CRC before parsing; a
+//! truncated or bit-flipped file is an error, never a garbled session.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::task::TaskKind;
+use crate::optim::OptimizerKind;
+use crate::runtime::literal::Literal;
+use crate::runtime::precision::Precision;
+
+use super::crc32;
+
+pub const MAGIC: &[u8; 4] = b"PLSI";
+pub const VERSION: u32 = 1;
+
+const FLAG_ADAM: u8 = 1;
+
+/// A decoded session image — everything durable about one session.
+/// The non-durable rest (compiled programs, shared data artifacts,
+/// the simulated device clock) lives in
+/// [`HibernatedSession`](crate::tuner::session::HibernatedSession) or
+/// is rebuilt from the manifest.
+#[derive(Debug, Clone)]
+pub struct SessionImage {
+    pub config: String,
+    pub optimizer: OptimizerKind,
+    /// Storage precision of the parameter records.
+    pub precision: Precision,
+    pub task: TaskKind,
+    pub step: u64,
+    /// MeZO seed-schedule master seed (0 for Adam images).
+    pub master_seed: u64,
+    /// The session seed that drives the data pipeline.
+    pub data_seed: u64,
+    /// Batches consumed from the deterministic batch stream (the
+    /// entire durable batcher state — `Batcher::skip` rebuilds the
+    /// resume snapshot from it).
+    pub batcher_pos: u64,
+    pub last_loss: f64,
+    pub batch: u32,
+    /// Parameter tensors at their resident precision, manifest order.
+    pub params: Vec<Literal>,
+    /// Adam first moments (f32); empty for derivative-free images.
+    pub adam_m: Vec<Vec<f32>>,
+    /// Adam second moments (f32); empty for derivative-free images.
+    pub adam_v: Vec<Vec<f32>>,
+}
+
+fn optimizer_code(o: OptimizerKind) -> u8 {
+    match o {
+        OptimizerKind::MeZo => 0,
+        OptimizerKind::Adam => 1,
+    }
+}
+
+fn optimizer_from_code(c: u8) -> Option<OptimizerKind> {
+    match c {
+        0 => Some(OptimizerKind::MeZo),
+        1 => Some(OptimizerKind::Adam),
+        _ => None,
+    }
+}
+
+impl SessionImage {
+    /// Bytes the parameter payload occupies (on disk and resident —
+    /// the storage form is the same): the "no f32 materialization"
+    /// guarantee in number form.
+    pub fn param_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|l| self.precision.storage_bytes(l.element_count()))
+            .sum()
+    }
+
+    /// Bytes the Adam moment payload occupies (always f32; 0 for
+    /// MeZO images — the paper's asymmetry).
+    pub fn moment_bytes(&self) -> u64 {
+        let elems: usize = self
+            .adam_m
+            .iter()
+            .chain(self.adam_v.iter())
+            .map(|t| t.len())
+            .sum();
+        4 * elems as u64
+    }
+
+    /// Structural sanity of the image: the optimizer and the moment
+    /// payload must agree (an Adam image carries m AND v, one per
+    /// parameter tensor; a MeZO image carries none).  Both write
+    /// paths ([`Checkpoint::save`](crate::tuner::Checkpoint::save)
+    /// and [`SessionStore::put`](super::SessionStore::put)) call this
+    /// so a malformed image fails at the writer, not at a much later
+    /// restore.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.adam_m.len() == self.adam_v.len(),
+                "adam moments disagree: {} m vs {} v tensors",
+                self.adam_m.len(), self.adam_v.len());
+        match self.optimizer {
+            OptimizerKind::Adam => ensure!(
+                self.adam_m.len() == self.params.len(),
+                "adam image needs one m/v pair per tensor (got {} \
+                 for {} tensors)",
+                self.adam_m.len(),
+                self.params.len()
+            ),
+            OptimizerKind::MeZo => ensure!(
+                self.adam_m.is_empty(),
+                "mezo image must not carry optimizer moments"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Header + directory + CRC overhead for this image.
+    pub fn metadata_bytes(&self) -> u64 {
+        // magic+version(8) + codes(4) + 2 length-prefixed strings +
+        // 5 u64 counters(40) + batch+n_tensors(8) + 9 B/tensor dir +
+        // trailing crc(4)
+        8 + 4
+            + (4 + self.config.len() as u64)
+            + (4 + self.task.label().len() as u64)
+            + 40
+            + 8
+            + 9 * self.params.len() as u64
+            + 4
+    }
+
+    /// Serialize (the exact layout documented at module level).
+    pub fn encode(&self) -> Vec<u8> {
+        let cap = (self.metadata_bytes() + self.param_bytes()
+            + self.moment_bytes()) as usize;
+        let mut out = Vec::with_capacity(cap);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(optimizer_code(self.optimizer));
+        out.push(self.precision.code());
+        let has_adam = !self.adam_m.is_empty();
+        out.push(if has_adam { FLAG_ADAM } else { 0 });
+        out.push(0); // reserved
+        for s in [self.config.as_str(), self.task.label()] {
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        for v in [self.step, self.master_seed, self.data_seed,
+                  self.batcher_pos, self.last_loss.to_bits()]
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(
+            &(self.params.len() as u32).to_le_bytes(),
+        );
+        for p in &self.params {
+            out.push(self.precision.code());
+            out.extend_from_slice(
+                &(p.element_count() as u64).to_le_bytes(),
+            );
+        }
+        for p in &self.params {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        if has_adam {
+            for set in [&self.adam_m, &self.adam_v] {
+                for t in set.iter() {
+                    for x in t {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify an image.  Magic, version, and CRC are checked
+    /// before any payload is trusted; truncation at any point is an
+    /// error.
+    pub fn decode(bytes: &[u8]) -> Result<SessionImage> {
+        ensure!(bytes.len() >= 12,
+                "session image truncated ({} bytes)", bytes.len());
+        ensure!(&bytes[0..4] == MAGIC,
+                "not a session image (bad magic)");
+        let version = u32::from_le_bytes([
+            bytes[4], bytes[5], bytes[6], bytes[7],
+        ]);
+        ensure!(version == VERSION,
+                "session image version {version} (this build reads {})",
+                VERSION);
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32::from_le_bytes([
+            bytes[bytes.len() - 4],
+            bytes[bytes.len() - 3],
+            bytes[bytes.len() - 2],
+            bytes[bytes.len() - 1],
+        ]);
+        let actual = crc32(body);
+        ensure!(stored == actual,
+                "session image corrupt: CRC {stored:#010x} on disk, \
+                 {actual:#010x} computed");
+
+        let mut r = Reader { buf: body, pos: 8 };
+        let optimizer = optimizer_from_code(r.u8()?)
+            .context("unknown optimizer code")?;
+        let precision = Precision::from_code(r.u8()?)
+            .context("unknown precision code")?;
+        let flags = r.u8()?;
+        let _reserved = r.u8()?;
+        // the moment payload and the optimizer must agree: an Adam
+        // image without moments (or a MeZO image with them) is a
+        // writer bug, not something to round-trip quietly
+        ensure!((flags & FLAG_ADAM != 0)
+                    == (optimizer == OptimizerKind::Adam),
+                "image optimizer {} disagrees with its moment payload",
+                optimizer.label());
+        let config = r.string()?;
+        let task_label = r.string()?;
+        let task = TaskKind::parse(&task_label).with_context(|| {
+            format!("unknown task '{task_label}' in session image")
+        })?;
+        let step = r.u64()?;
+        let master_seed = r.u64()?;
+        let data_seed = r.u64()?;
+        let batcher_pos = r.u64()?;
+        let last_loss = f64::from_bits(r.u64()?);
+        let batch = r.u32()?;
+        let n_tensors = r.u32()? as usize;
+        ensure!(n_tensors <= 1 << 20,
+                "implausible tensor count {n_tensors}");
+        let mut dir = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let dt = Precision::from_code(r.u8()?)
+                .context("unknown tensor dtype code")?;
+            ensure!(dt == precision,
+                    "tensor stored as {dt}, image tagged {precision}");
+            let elems = r.u64()?;
+            // every element costs >= 1 payload byte, so a valid count
+            // can never exceed the file size — this also keeps the
+            // payload-size arithmetic below far from overflow
+            ensure!(elems <= body.len() as u64,
+                    "implausible tensor size {elems} in a {}-byte \
+                     image",
+                    body.len());
+            dir.push(elems as usize);
+        }
+        let mut params = Vec::with_capacity(n_tensors);
+        for &elems in &dir {
+            let len = precision.storage_bytes(elems) as usize;
+            let payload = r.bytes(len)?;
+            params.push(Literal::from_storage_bytes(
+                precision,
+                vec![elems],
+                payload,
+            )?);
+        }
+        fn read_moments(
+            r: &mut Reader<'_>,
+            dir: &[usize],
+        ) -> Result<Vec<Vec<f32>>> {
+            let mut set = Vec::with_capacity(dir.len());
+            for &elems in dir {
+                let raw = r.bytes(4 * elems)?;
+                let t: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| {
+                        f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                    })
+                    .collect();
+                set.push(t);
+            }
+            Ok(set)
+        }
+        let (adam_m, adam_v) = if flags & FLAG_ADAM != 0 {
+            let m = read_moments(&mut r, &dir)?;
+            let v = read_moments(&mut r, &dir)?;
+            (m, v)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        ensure!(r.pos == body.len(),
+                "session image has {} trailing bytes",
+                body.len() - r.pos);
+        Ok(SessionImage {
+            config,
+            optimizer,
+            precision,
+            task,
+            step,
+            master_seed,
+            data_seed,
+            batcher_pos,
+            last_loss,
+            batch,
+            params,
+            adam_m,
+            adam_v,
+        })
+    }
+}
+
+/// Bounds-checked little-endian cursor.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            bail!("session image truncated at byte {}", self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len <= 4096, "implausible string length {len}");
+        let b = self.bytes(len)?;
+        Ok(String::from_utf8(b.to_vec())
+            .map_err(|_| anyhow::anyhow!("non-UTF-8 string in image"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(precision: Precision, adam: bool) -> SessionImage {
+        let data = [0.51f32, -1.25, 0.0, 0.125, 3.7, -0.002];
+        let params = vec![
+            Literal::quantize_from_f32(&data, &[6], precision).unwrap(),
+            Literal::quantize_from_f32(&data[..4], &[4], precision)
+                .unwrap(),
+        ];
+        let (adam_m, adam_v) = if adam {
+            (
+                vec![vec![0.1f32; 6], vec![0.2f32; 4]],
+                vec![vec![0.3f32; 6], vec![0.4f32; 4]],
+            )
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        SessionImage {
+            config: "pocket-tiny".into(),
+            optimizer: if adam {
+                OptimizerKind::Adam
+            } else {
+                OptimizerKind::MeZo
+            },
+            precision,
+            task: TaskKind::Sst2,
+            step: (1u64 << 53) + 3,
+            master_seed: u64::MAX - 1,
+            data_seed: 42,
+            batcher_pos: 17,
+            last_loss: 0.625,
+            batch: 4,
+            params,
+            adam_m,
+            adam_v,
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_precision() {
+        for p in Precision::ALL {
+            let img = sample(p, false);
+            let bytes = img.encode();
+            let back = SessionImage::decode(&bytes).unwrap();
+            assert_eq!(back.config, "pocket-tiny");
+            assert_eq!(back.optimizer, OptimizerKind::MeZo);
+            assert_eq!(back.precision, p);
+            assert_eq!(back.task, TaskKind::Sst2);
+            assert_eq!(back.step, (1u64 << 53) + 3, "u64 exact");
+            assert_eq!(back.master_seed, u64::MAX - 1, "u64 exact");
+            assert_eq!(back.batcher_pos, 17);
+            assert_eq!(back.last_loss, 0.625);
+            assert_eq!(back.batch, 4);
+            // tensor payloads are byte-identical at storage precision
+            for (a, b) in img.params.iter().zip(&back.params) {
+                assert_eq!(a.to_le_bytes(), b.to_le_bytes(), "{p}");
+                assert_eq!(b.storage_precision(), Some(p));
+            }
+            assert!(back.adam_m.is_empty());
+        }
+    }
+
+    #[test]
+    fn adam_image_carries_moments_mezo_image_does_not() {
+        let adam = sample(Precision::F32, true);
+        let bytes = adam.encode();
+        let back = SessionImage::decode(&bytes).unwrap();
+        assert_eq!(back.adam_m, adam.adam_m);
+        assert_eq!(back.adam_v, adam.adam_v);
+        assert_eq!(adam.moment_bytes(), 2 * 10 * 4);
+        // the Table-1 asymmetry on disk: adam ~= 3x params + metadata
+        let mezo = sample(Precision::F32, false);
+        assert_eq!(mezo.moment_bytes(), 0);
+        assert_eq!(bytes.len() as u64,
+                   adam.param_bytes() + adam.moment_bytes()
+                       + adam.metadata_bytes());
+        assert_eq!(mezo.encode().len() as u64,
+                   mezo.param_bytes() + mezo.metadata_bytes());
+    }
+
+    #[test]
+    fn quantized_images_store_reduced_bytes_on_disk() {
+        // 10 elements across 2 tensors: f32 40 B, f16 20 B,
+        // int8 10 B + 2 scales
+        let f32b = sample(Precision::F32, false).param_bytes();
+        let f16b = sample(Precision::F16, false).param_bytes();
+        let i8b = sample(Precision::Int8, false).param_bytes();
+        assert_eq!(f32b, 40);
+        assert_eq!(f16b, 20, "f16 must be 2 B/element on disk");
+        assert_eq!(i8b, 10 + 8, "int8 must be 1 B/element + scales");
+        // and the file sizes differ by exactly the payload difference
+        let lf32 = sample(Precision::F32, false).encode().len() as u64;
+        let lf16 = sample(Precision::F16, false).encode().len() as u64;
+        assert_eq!(lf32 - lf16, f32b - f16b);
+    }
+
+    #[test]
+    fn mezo_metadata_is_small() {
+        // the durable MeZO optimizer state is (master_seed, step) plus
+        // framing: metadata must stay ~100 bytes + 9 B/tensor
+        let img = sample(Precision::F32, false);
+        let meta = img.encode().len() as u64 - img.param_bytes();
+        assert_eq!(meta, img.metadata_bytes());
+        assert!(meta <= 100 + 9 * img.params.len() as u64,
+                "metadata {meta} B");
+    }
+
+    #[test]
+    fn corrupt_and_truncated_images_are_rejected() {
+        let bytes = sample(Precision::F16, false).encode();
+        // pristine decodes
+        SessionImage::decode(&bytes).unwrap();
+        // every single-byte corruption is caught by the CRC (or the
+        // magic/version gate)
+        for pos in [0usize, 5, 9, 20, bytes.len() / 2, bytes.len() - 1]
+        {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            let err = SessionImage::decode(&bad)
+                .expect_err("corruption undetected");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("CRC") || msg.contains("magic")
+                        || msg.contains("version"),
+                    "byte {pos}: {msg}");
+        }
+        // truncation anywhere is an error
+        for cut in [0usize, 3, 11, 20, bytes.len() - 5, bytes.len() - 1]
+        {
+            assert!(SessionImage::decode(&bytes[..cut]).is_err(),
+                    "truncation to {cut} bytes undetected");
+        }
+        // a file of garbage is not an image
+        assert!(SessionImage::decode(&[0u8; 64]).is_err());
+    }
+
+    #[test]
+    fn validate_pins_the_optimizer_moment_invariant() {
+        assert!(sample(Precision::F32, false).validate().is_ok());
+        assert!(sample(Precision::F32, true).validate().is_ok());
+        let mut adam = sample(Precision::F32, true);
+        adam.adam_v.pop();
+        assert!(adam.validate().is_err(), "lopsided m/v");
+        let mut adam = sample(Precision::F32, true);
+        adam.adam_m.clear();
+        adam.adam_v.clear();
+        assert!(adam.validate().is_err(), "adam without moments");
+        let mut mezo = sample(Precision::F32, false);
+        mezo.adam_m = vec![vec![0.0; 6], vec![0.0; 4]];
+        mezo.adam_v = mezo.adam_m.clone();
+        assert!(mezo.validate().is_err(), "mezo with moments");
+    }
+
+    #[test]
+    fn decoded_flags_must_match_the_optimizer() {
+        // a hand-built MeZO image that smuggles a moment payload (the
+        // encoder keys flags off adam_m) must be rejected at decode
+        let mut img = sample(Precision::F32, true);
+        img.optimizer = OptimizerKind::MeZo;
+        let bytes = img.encode();
+        let err = SessionImage::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("disagrees"), "{err:#}");
+    }
+
+    #[test]
+    fn implausible_tensor_sizes_error_instead_of_panicking() {
+        // craft a CRC-valid image whose directory claims a huge
+        // tensor: decode must return an error, never overflow/panic
+        let mut bytes = sample(Precision::Int8, false).encode();
+        let body_len = bytes.len() - 4;
+        // the first directory entry's elems u64 sits right after the
+        // fixed header + two strings + counters + batch + n_tensors +
+        // 1-byte dtype; locate it structurally instead of hardcoding
+        let dir_off = 8 + 4 + (4 + "pocket-tiny".len())
+            + (4 + "sst2".len()) + 40 + 8 + 1;
+        bytes[dir_off..dir_off + 8]
+            .copy_from_slice(&(u64::MAX - 1).to_le_bytes());
+        let crc = crate::store::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = SessionImage::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_not_misparsed() {
+        let mut bytes = sample(Precision::F32, false).encode();
+        bytes[4] = 2; // version 2
+        let err = SessionImage::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
+    }
+}

@@ -1,0 +1,379 @@
+//! The hibernation store: bounded memory in front of durable disk.
+//!
+//! A [`SessionStore`] holds encoded [`SessionImage`]s by key.  The
+//! most recently stored images stay in a memory cache bounded by
+//! `mem_capacity` bytes; when the cache overflows, the
+//! least-recently-used images spill to one file each under the store
+//! directory (`<key>.plsi`).  `take` retrieves (and removes) an image
+//! from wherever it lives — the bytes are identical either way, so
+//! cache hits change latency only, never results.
+//!
+//! A capacity of 0 makes the store write-through: every image lands
+//! on disk immediately and the store holds no parameter bytes in RAM
+//! at all — the configuration the fleet scheduler uses, so a
+//! 1000-job queue's memory profile is genuinely flat.
+//!
+//! Thread-safe: one internal lock, I/O performed inside `put`/`take`
+//! by the calling worker.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::image::SessionImage;
+
+/// Lifetime counters of one store (monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Images stored via `put`.
+    pub puts: u64,
+    /// Images retrieved via `take`.
+    pub takes: u64,
+    /// Takes served from the memory cache.
+    pub mem_hits: u64,
+    /// Takes served from disk.
+    pub disk_hits: u64,
+    /// LRU evictions written to disk.
+    pub spills: u64,
+    /// Total image bytes written to disk.
+    pub bytes_spilled: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Encoded images resident in memory.
+    mem: HashMap<String, Vec<u8>>,
+    /// Keys in recency order: front = least recently used.
+    lru: VecDeque<String>,
+    mem_bytes: u64,
+    /// Keys whose image currently lives on disk.
+    on_disk: HashSet<String>,
+    stats: StoreStats,
+}
+
+/// A capacity-bounded, LRU, disk-backed store of session images.
+pub struct SessionStore {
+    dir: PathBuf,
+    mem_capacity: u64,
+    inner: Mutex<Inner>,
+}
+
+impl SessionStore {
+    /// Open (creating the directory) with a 16 MiB memory cache.
+    pub fn new(dir: impl AsRef<Path>) -> Result<SessionStore> {
+        SessionStore::with_mem_capacity(dir, 16 * 1024 * 1024)
+    }
+
+    /// Open with an explicit memory-cache bound (0 = write-through,
+    /// nothing retained in RAM).
+    pub fn with_mem_capacity(
+        dir: impl AsRef<Path>,
+        mem_capacity: u64,
+    ) -> Result<SessionStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating session store at {}", dir.display())
+        })?;
+        Ok(SessionStore {
+            dir,
+            mem_capacity,
+            inner: Mutex::new(Inner::default()),
+        })
+    }
+
+    /// Where `key`'s image lives when spilled.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.plsi"))
+    }
+
+    fn check_key(key: &str) -> Result<()> {
+        ensure!(
+            !key.is_empty()
+                && key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_'
+                        || c == '-'),
+            "store keys must be [A-Za-z0-9_-]+, got {key:?}"
+        );
+        Ok(())
+    }
+
+    /// Store an image under `key` (replacing any previous image with
+    /// that key).  Returns the encoded size in bytes.  May spill LRU
+    /// entries — possibly this one — to disk to respect the memory
+    /// bound.
+    pub fn put(&self, key: &str, image: &SessionImage) -> Result<u64> {
+        Self::check_key(key)?;
+        image.validate()?;
+        let bytes = image.encode();
+        let len = bytes.len() as u64;
+        let mut spill: Vec<(String, Vec<u8>)> = Vec::new();
+        let stale_disk;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.puts += 1;
+            if let Some(old) = inner.mem.remove(key) {
+                inner.mem_bytes -= old.len() as u64;
+                inner.lru.retain(|k| k != key);
+            }
+            stale_disk = inner.on_disk.remove(key);
+            inner.mem_bytes += len;
+            inner.mem.insert(key.to_string(), bytes);
+            inner.lru.push_back(key.to_string());
+            while inner.mem_bytes > self.mem_capacity {
+                let Some(victim) = inner.lru.pop_front() else {
+                    break;
+                };
+                let data = inner
+                    .mem
+                    .remove(&victim)
+                    .expect("lru key always resident");
+                inner.mem_bytes -= data.len() as u64;
+                spill.push((victim, data));
+            }
+        }
+        if stale_disk {
+            // the key's previous image had spilled; it is replaced now
+            let _ = std::fs::remove_file(self.path_for(key));
+        }
+        // disk writes happen outside the lock; a victim is marked
+        // on_disk only once its file actually exists, and a FAILED
+        // write puts the bytes of EVERY not-yet-spilled victim back
+        // into the memory cache (accepting transient over-capacity)
+        // so an I/O error never loses an image.  Callers own their
+        // keys (one job, one key), so a concurrent take() of a
+        // mid-spill key is theoretical.
+        let mut spill_iter = spill.into_iter();
+        while let Some((victim, data)) = spill_iter.next() {
+            match std::fs::write(self.path_for(&victim), &data) {
+                Ok(()) => {
+                    let vlen = data.len() as u64;
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.on_disk.insert(victim);
+                    inner.stats.spills += 1;
+                    inner.stats.bytes_spilled += vlen;
+                }
+                Err(e) => {
+                    let failed = victim.clone();
+                    let unwritten: Vec<(String, Vec<u8>)> =
+                        std::iter::once((victim, data))
+                            .chain(spill_iter)
+                            .collect();
+                    let mut inner = self.inner.lock().unwrap();
+                    // restore in reverse so the LRU front keeps the
+                    // original oldest-first order
+                    for (v, d) in unwritten.into_iter().rev() {
+                        inner.mem_bytes += d.len() as u64;
+                        inner.mem.insert(v.clone(), d);
+                        inner.lru.push_front(v);
+                    }
+                    return Err(anyhow::Error::new(e).context(format!(
+                        "spilling session image {failed}"
+                    )));
+                }
+            }
+        }
+        Ok(len)
+    }
+
+    /// Retrieve and remove `key`'s image (memory first, disk second).
+    /// A failed disk read leaves the entry in place (retryable); the
+    /// entry is consumed only once its bytes are safely in hand.
+    pub fn take(&self, key: &str) -> Result<SessionImage> {
+        Self::check_key(key)?;
+        let from_mem = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(bytes) = inner.mem.remove(key) {
+                inner.mem_bytes -= bytes.len() as u64;
+                inner.lru.retain(|k| k != key);
+                inner.stats.takes += 1;
+                inner.stats.mem_hits += 1;
+                Some(bytes)
+            } else if inner.on_disk.contains(key) {
+                None // read the file outside the lock
+            } else {
+                bail!("no session image stored under {key:?}")
+            }
+        };
+        let bytes = match from_mem {
+            Some(b) => b,
+            None => {
+                let path = self.path_for(key);
+                let b = std::fs::read(&path).with_context(|| {
+                    format!("reading spilled image {}", path.display())
+                })?;
+                let mut inner = self.inner.lock().unwrap();
+                inner.on_disk.remove(key);
+                inner.stats.takes += 1;
+                inner.stats.disk_hits += 1;
+                drop(inner);
+                let _ = std::fs::remove_file(&path);
+                b
+            }
+        };
+        SessionImage::decode(&bytes)
+            .with_context(|| format!("decoding session image {key:?}"))
+    }
+
+    /// Whether `key` currently has a stored image.
+    pub fn contains(&self, key: &str) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.mem.contains_key(key) || inner.on_disk.contains(key)
+    }
+
+    /// Number of stored images (memory + disk).
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.mem.len() + inner.on_disk.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently held in the memory cache (always <= capacity
+    /// after `put` returns).
+    pub fn mem_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().mem_bytes
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Best-effort removal of the store directory (for run-scoped
+    /// stores; fails silently if images are still present elsewhere).
+    pub fn cleanup(&self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task::TaskKind;
+    use crate::optim::OptimizerKind;
+    use crate::runtime::literal::Literal;
+    use crate::runtime::precision::Precision;
+
+    fn image(tag: f32) -> SessionImage {
+        SessionImage {
+            config: "t".into(),
+            optimizer: OptimizerKind::MeZo,
+            precision: Precision::F32,
+            task: TaskKind::Sst2,
+            step: 1,
+            master_seed: 2,
+            data_seed: 3,
+            batcher_pos: 0,
+            last_loss: 0.5,
+            batch: 4,
+            params: vec![Literal::from_f32(vec![tag; 8], vec![8])
+                .unwrap()],
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pocketllm_store_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn put_take_roundtrip_from_memory() {
+        let store = SessionStore::new(tmp("mem")).unwrap();
+        store.put("job0", &image(1.5)).unwrap();
+        assert!(store.contains("job0"));
+        assert_eq!(store.len(), 1);
+        let back = store.take("job0").unwrap();
+        assert_eq!(back.params[0].f32_vec().unwrap(), vec![1.5; 8]);
+        assert!(!store.contains("job0"));
+        assert!(store.is_empty());
+        let s = store.stats();
+        assert_eq!((s.puts, s.takes, s.mem_hits, s.disk_hits, s.spills),
+                   (1, 1, 1, 0, 0));
+        assert!(store.take("job0").is_err(), "double take must fail");
+    }
+
+    #[test]
+    fn lru_spills_oldest_to_disk_and_takes_still_work() {
+        // capacity fits ~2 images; the third put evicts the oldest
+        let one = image(0.0).encode().len() as u64;
+        let store =
+            SessionStore::with_mem_capacity(tmp("lru"), 2 * one)
+                .unwrap();
+        store.put("job0", &image(0.0)).unwrap();
+        store.put("job1", &image(1.0)).unwrap();
+        store.put("job2", &image(2.0)).unwrap();
+        assert!(store.mem_bytes() <= 2 * one);
+        let s = store.stats();
+        assert_eq!(s.spills, 1, "oldest image must spill");
+        assert!(store.path_for("job0").exists(),
+                "job0 is the LRU victim");
+        // all three still retrievable, with the right payloads
+        for (k, want) in [("job0", 0.0f32), ("job1", 1.0), ("job2", 2.0)]
+        {
+            let img = store.take(k).unwrap();
+            assert_eq!(img.params[0].f32_vec().unwrap(), vec![want; 8]);
+        }
+        let s = store.stats();
+        assert_eq!(s.disk_hits, 1);
+        assert_eq!(s.mem_hits, 2);
+        assert!(!store.path_for("job0").exists(),
+                "take must consume the spilled file");
+    }
+
+    #[test]
+    fn zero_capacity_is_write_through() {
+        let store =
+            SessionStore::with_mem_capacity(tmp("wt"), 0).unwrap();
+        store.put("a", &image(7.0)).unwrap();
+        assert_eq!(store.mem_bytes(), 0,
+                   "write-through must hold nothing in RAM");
+        assert!(store.path_for("a").exists());
+        assert_eq!(store.stats().spills, 1);
+        let back = store.take("a").unwrap();
+        assert_eq!(back.params[0].f32_vec().unwrap(), vec![7.0; 8]);
+        assert_eq!(store.stats().disk_hits, 1);
+    }
+
+    #[test]
+    fn replacing_a_key_keeps_one_image() {
+        let store = SessionStore::new(tmp("replace")).unwrap();
+        store.put("k", &image(1.0)).unwrap();
+        store.put("k", &image(2.0)).unwrap();
+        assert_eq!(store.len(), 1);
+        let back = store.take("k").unwrap();
+        assert_eq!(back.params[0].f32_vec().unwrap(), vec![2.0; 8]);
+    }
+
+    #[test]
+    fn corrupt_spilled_file_fails_loudly() {
+        let store =
+            SessionStore::with_mem_capacity(tmp("corrupt"), 0).unwrap();
+        store.put("x", &image(3.0)).unwrap();
+        // flip one payload byte on disk
+        let path = store.path_for("x");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, bytes).unwrap();
+        let err = store.take("x").unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"),
+                "corruption must surface as a CRC error: {err:#}");
+    }
+
+    #[test]
+    fn bad_keys_rejected() {
+        let store = SessionStore::new(tmp("keys")).unwrap();
+        assert!(store.put("../evil", &image(0.0)).is_err());
+        assert!(store.put("", &image(0.0)).is_err());
+        assert!(store.take("no/slash").is_err());
+        store.put("ok_key-1", &image(0.0)).unwrap();
+    }
+}

@@ -1,20 +1,27 @@
 //! Checkpointing: persist and resume fine-tuning sessions on device.
 //!
-//! Layout (one directory per checkpoint):
+//! The **canonical durable form is the single-file session image**
+//! ([`crate::store::image`]): magic + versioned header + CRC32, with
+//! parameter records stored *at their resident precision* (an f16
+//! session checkpoints 2 bytes per element — no f32 materialization)
+//! plus the optimizer state.  [`Checkpoint::save`] writes it;
+//! [`Checkpoint::open`] reads it.
+//!
+//! Two legacy **directory** layouts remain readable through a shim
+//! (never written anymore):
+//!
 //! ```text
-//!   params.bin   raw f32 LE, manifest order (same format as init_params)
-//!   meta.json    config name, optimizer, step, seeds, loss
-//!   adam_m.bin / adam_v.bin   only for derivative-based sessions
+//!   params.bin   raw f32 LE, manifest order
+//!   meta.json    config, optimizer, step, seeds, loss
+//!                (u64s as JSON numbers pre-PR-1, decimal strings
+//!                 after; `precision` key optional, default f32)
+//!   adam_m.bin / adam_v.bin   derivative-based sessions only
 //! ```
 //!
 //! The asymmetry between optimizers is the paper's point made durable:
-//! a MeZO checkpoint is params + ~100 bytes of JSON; an Adam checkpoint
-//! is 3x the parameters.  `pocketllm report table1` prints both.
-//!
-//! Checkpoints speak literal-based [`ModelState`]s by design: the hot
-//! loop's parameters live in a `runtime::ExecState` mutated in place,
-//! and `Session::params()` / `Session::adam_state()` materialize them
-//! only here, at the durable boundary — never per step.
+//! a MeZO checkpoint is params + ~100 bytes of metadata; an Adam
+//! checkpoint adds two f32 moment tensors.  `pocketllm store inspect`
+//! prints the breakdown for any image or legacy directory.
 
 use std::path::{Path, PathBuf};
 
@@ -23,6 +30,8 @@ use anyhow::{bail, Context, Result};
 use crate::optim::OptimizerKind;
 use crate::runtime::manifest::ConfigInfo;
 use crate::runtime::state::ModelState;
+use crate::runtime::Precision;
+use crate::store::SessionImage;
 use crate::util::json::{self, Json};
 
 /// Read a u64 stored either as a decimal string (current format) or a
@@ -34,93 +43,160 @@ fn json_u64(v: &Json) -> Option<u64> {
     }
 }
 
+/// How the checkpoint is laid out on disk.
+#[derive(Debug, Clone)]
+enum Form {
+    /// Single-file session image (canonical).
+    Image(SessionImage),
+    /// Pre-image directory layout (read-only shim).
+    LegacyDir,
+}
+
 /// A checkpoint on disk.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
-    pub dir: PathBuf,
+    /// Image file path, or the legacy checkpoint directory.
+    pub path: PathBuf,
     pub config: String,
     pub optimizer: OptimizerKind,
+    /// Storage precision of the parameter records.  Legacy
+    /// directories never recorded one and always materialized f32, so
+    /// the shim reports their `precision` key when present and
+    /// defaults to [`Precision::F32`].
+    pub precision: Precision,
     pub step: u64,
     pub master_seed: u64,
     pub last_loss: f64,
+    form: Form,
 }
 
 impl Checkpoint {
-    /// Write a checkpoint.  `adam_state` must be Some((m, v)) iff the
-    /// optimizer is derivative-based.
+    /// Write the canonical single-file session image checkpoint.
+    /// Takes the image by value: the returned `Checkpoint` keeps it
+    /// (for [`image`](Checkpoint::image)) without an O(params) clone.
+    /// Malformed images — an Adam image missing its moments, a MeZO
+    /// image carrying some — are rejected here, at the writer.
     pub fn save(
-        dir: impl AsRef<Path>,
-        config: &str,
-        optimizer: OptimizerKind,
-        step: u64,
-        master_seed: u64,
-        last_loss: f64,
-        params: &ModelState,
-        adam_state: Option<(&ModelState, &ModelState)>,
+        path: impl AsRef<Path>,
+        image: SessionImage,
     ) -> Result<Checkpoint> {
-        let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir)?;
-        std::fs::write(dir.join("params.bin"), params.to_bytes()?)?;
-        match (optimizer, adam_state) {
-            (OptimizerKind::Adam, Some((m, v))) => {
-                std::fs::write(dir.join("adam_m.bin"), m.to_bytes()?)?;
-                std::fs::write(dir.join("adam_v.bin"), v.to_bytes()?)?;
-            }
-            (OptimizerKind::Adam, None) => {
-                bail!("adam checkpoint requires m/v state")
-            }
-            (OptimizerKind::MeZo, None) => {}
-            (OptimizerKind::MeZo, Some(_)) => {
-                bail!("mezo checkpoint carries no optimizer state")
+        image.validate()?;
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
             }
         }
-        // u64s are serialized as decimal STRINGS: the JSON codec's f64
-        // numbers silently lose bits above 2^53, which would break
-        // deterministic MeZO resume for large master seeds.
-        let meta = Json::obj(vec![
-            ("config", Json::str(config)),
-            ("optimizer", Json::str(optimizer.label())),
-            ("step", Json::str(&step.to_string())),
-            ("master_seed", Json::str(&master_seed.to_string())),
-            ("last_loss", Json::num(last_loss)),
-        ]);
-        std::fs::write(dir.join("meta.json"), meta.dump())?;
+        std::fs::write(&path, image.encode()).with_context(|| {
+            format!("writing checkpoint {}", path.display())
+        })?;
         Ok(Checkpoint {
-            dir,
-            config: config.to_string(),
-            optimizer,
-            step,
-            master_seed,
-            last_loss,
+            path,
+            config: image.config.clone(),
+            optimizer: image.optimizer,
+            precision: image.precision,
+            step: image.step,
+            master_seed: image.master_seed,
+            last_loss: image.last_loss,
+            form: Form::Image(image),
         })
     }
 
-    /// Read checkpoint metadata.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Checkpoint> {
-        let dir = dir.as_ref().to_path_buf();
+    /// Open a checkpoint: a session-image file, or (shim) a legacy
+    /// checkpoint directory.
+    pub fn open(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref().to_path_buf();
+        if path.is_dir() {
+            return Checkpoint::open_legacy(path);
+        }
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("reading checkpoint {}", path.display())
+        })?;
+        let image = SessionImage::decode(&bytes).with_context(|| {
+            format!("decoding session image {}", path.display())
+        })?;
+        Ok(Checkpoint {
+            path,
+            config: image.config.clone(),
+            optimizer: image.optimizer,
+            precision: image.precision,
+            step: image.step,
+            master_seed: image.master_seed,
+            last_loss: image.last_loss,
+            form: Form::Image(image),
+        })
+    }
+
+    fn open_legacy(dir: PathBuf) -> Result<Checkpoint> {
         let text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+            .with_context(|| {
+                format!("reading {}/meta.json", dir.display())
+            })?;
         let meta = json::parse(&text)
             .map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
         let optimizer = OptimizerKind::parse(
             meta.get("optimizer").as_str().context("optimizer")?,
         )
         .context("unknown optimizer in checkpoint")?;
+        // legacy checkpoints that predate the precision field always
+        // stored f32 params — default accordingly instead of
+        // silently restoring a quantized session as f32 storage
+        let precision = match meta.get("precision").as_str() {
+            Some(p) => Precision::parse(p)
+                .context("unknown precision in checkpoint")?,
+            None => Precision::F32,
+        };
         Ok(Checkpoint {
-            dir,
+            path: dir,
             config: meta.get("config").as_str().context("config")?.into(),
             optimizer,
+            precision,
             step: json_u64(meta.get("step")).context("step")?,
             master_seed: json_u64(meta.get("master_seed"))
                 .context("seed")?,
             last_loss: meta.get("last_loss").as_f64().context("loss")?,
+            form: Form::LegacyDir,
         })
     }
 
-    /// Load the parameter tensors.
+    /// The decoded session image, when this checkpoint is one (the
+    /// precision-exact restore path; `None` for legacy directories).
+    pub fn image(&self) -> Option<&SessionImage> {
+        match &self.form {
+            Form::Image(img) => Some(img),
+            Form::LegacyDir => None,
+        }
+    }
+
+    /// Load the parameter tensors as f32 [`ModelState`] (dequantized
+    /// for reduced-precision images — the interchange view; use
+    /// [`image`](Checkpoint::image) for the storage-exact records).
     pub fn load_params(&self, cfg: &ConfigInfo) -> Result<ModelState> {
-        let bytes = std::fs::read(self.dir.join("params.bin"))?;
-        ModelState::from_bytes(cfg, &bytes)
+        match &self.form {
+            Form::Image(img) => {
+                let mut raw = Vec::with_capacity(img.params.len());
+                for (spec, lit) in cfg.params.iter().zip(&img.params) {
+                    if lit.element_count() != spec.elements() {
+                        bail!(
+                            "checkpoint tensor {} has {} elements, \
+                             expected {}",
+                            spec.name,
+                            lit.element_count(),
+                            spec.elements()
+                        );
+                    }
+                    let mut buf = vec![0f32; lit.element_count()];
+                    lit.dequantize_into(&mut buf)?;
+                    raw.push(buf);
+                }
+                ModelState::from_raw(cfg, &raw)
+            }
+            Form::LegacyDir => {
+                let bytes =
+                    std::fs::read(self.path.join("params.bin"))?;
+                ModelState::from_bytes(cfg, &bytes)
+            }
+        }
     }
 
     /// Load Adam m/v state (errors for MeZO checkpoints).
@@ -131,30 +207,51 @@ impl Checkpoint {
         if self.optimizer != OptimizerKind::Adam {
             bail!("checkpoint has no optimizer state (MeZO)");
         }
-        let m = ModelState::from_bytes(
-            cfg,
-            &std::fs::read(self.dir.join("adam_m.bin"))?,
-        )?;
-        let v = ModelState::from_bytes(
-            cfg,
-            &std::fs::read(self.dir.join("adam_v.bin"))?,
-        )?;
-        Ok((m, v))
+        match &self.form {
+            Form::Image(img) => {
+                if img.adam_m.is_empty() {
+                    bail!("adam checkpoint image carries no moments");
+                }
+                Ok((
+                    ModelState::from_raw(cfg, &img.adam_m)?,
+                    ModelState::from_raw(cfg, &img.adam_v)?,
+                ))
+            }
+            Form::LegacyDir => {
+                let m = ModelState::from_bytes(
+                    cfg,
+                    &std::fs::read(self.path.join("adam_m.bin"))?,
+                )?;
+                let v = ModelState::from_bytes(
+                    cfg,
+                    &std::fs::read(self.path.join("adam_v.bin"))?,
+                )?;
+                Ok((m, v))
+            }
+        }
     }
 
-    /// Total bytes on disk — the durable cost of each optimizer family.
+    /// Total bytes on disk — the durable cost of each optimizer
+    /// family (and, for images, each precision).
     pub fn size_bytes(&self) -> Result<u64> {
-        let mut total = 0;
-        for entry in std::fs::read_dir(&self.dir)? {
-            total += entry?.metadata()?.len();
+        match &self.form {
+            Form::Image(_) => Ok(std::fs::metadata(&self.path)?.len()),
+            Form::LegacyDir => {
+                let mut total = 0;
+                for entry in std::fs::read_dir(&self.path)? {
+                    total += entry?.metadata()?.len();
+                }
+                Ok(total)
+            }
         }
-        Ok(total)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::task::TaskKind;
+    use crate::runtime::literal::Literal;
     use crate::runtime::manifest::ParamSpecInfo;
 
     fn tiny_cfg() -> ConfigInfo {
@@ -178,93 +275,261 @@ mod tests {
         }
     }
 
+    fn image_for(
+        optimizer: OptimizerKind,
+        precision: Precision,
+        data: &[f32],
+        step: u64,
+        master_seed: u64,
+    ) -> SessionImage {
+        let params = vec![
+            Literal::quantize_from_f32(data, &[6], precision).unwrap(),
+        ];
+        let (adam_m, adam_v) = match optimizer {
+            OptimizerKind::Adam => {
+                (vec![vec![0.5f32; 6]], vec![vec![0.25f32; 6]])
+            }
+            OptimizerKind::MeZo => (Vec::new(), Vec::new()),
+        };
+        SessionImage {
+            config: "t".into(),
+            optimizer,
+            precision,
+            task: TaskKind::Sst2,
+            step,
+            master_seed,
+            data_seed: 42,
+            batcher_pos: 0,
+            last_loss: 0.5,
+            batch: 4,
+            params,
+            adam_m,
+            adam_v,
+        }
+    }
+
     fn tmp(name: &str) -> PathBuf {
-        let d = std::env::temp_dir().join(format!("pocketllm_ckpt_{name}"));
+        let d = std::env::temp_dir()
+            .join(format!("pocketllm_ckpt_{name}"));
         let _ = std::fs::remove_dir_all(&d);
+        let _ = std::fs::remove_file(&d);
         d
     }
 
     #[test]
-    fn mezo_roundtrip() {
+    fn mezo_image_roundtrip() {
         let cfg = tiny_cfg();
-        let params =
-            ModelState::from_raw(&cfg, &[vec![1., 2., 3., 4., 5., 6.]])
-                .unwrap();
-        let dir = tmp("mezo");
-        let ck = Checkpoint::save(&dir, "t", OptimizerKind::MeZo, 17, 99,
-                                  0.5, &params, None)
-            .unwrap();
-        let back = Checkpoint::open(&dir).unwrap();
+        let data = [1., 2., 3., 4., 5., 6.];
+        let path = tmp("mezo.plsi");
+        let ck = Checkpoint::save(
+            &path,
+            image_for(OptimizerKind::MeZo, Precision::F32, &data, 17,
+                       99),
+        )
+        .unwrap();
+        let back = Checkpoint::open(&path).unwrap();
         assert_eq!(back.step, 17);
         assert_eq!(back.master_seed, 99);
         assert_eq!(back.optimizer, OptimizerKind::MeZo);
+        assert_eq!(back.precision, Precision::F32);
         let p = back.load_params(&cfg).unwrap();
-        assert_eq!(p.tensors[0].f32_vec().unwrap(),
-                   vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(p.tensors[0].f32_vec().unwrap(), data.to_vec());
         assert!(back.load_adam_state(&cfg).is_err());
-        // MeZO checkpoint = params + small metadata
+        // MeZO checkpoint = params + small metadata, in ONE file
         assert!(ck.size_bytes().unwrap() < 6 * 4 + 512);
+        assert!(path.is_file());
     }
 
     #[test]
-    fn adam_roundtrip_and_cost() {
+    fn adam_image_roundtrip_and_cost() {
         let cfg = tiny_cfg();
-        let z = || ModelState::zeros_like(&cfg).unwrap();
-        let params = z();
-        let dir = tmp("adam");
-        let ck = Checkpoint::save(&dir, "t", OptimizerKind::Adam, 1, 0, 1.0,
-                                  &params, Some((&z(), &z())))
-            .unwrap();
-        let back = Checkpoint::open(&dir).unwrap();
+        let path = tmp("adam.plsi");
+        let ck = Checkpoint::save(
+            &path,
+            image_for(OptimizerKind::Adam, Precision::F32,
+                       &[0.0; 6], 1, 0),
+        )
+        .unwrap();
+        let back = Checkpoint::open(&path).unwrap();
         let (m, v) = back.load_adam_state(&cfg).unwrap();
-        assert_eq!(m.len(), 1);
-        assert_eq!(v.len(), 1);
+        assert_eq!(m.tensors[0].f32_vec().unwrap(), vec![0.5; 6]);
+        assert_eq!(v.tensors[0].f32_vec().unwrap(), vec![0.25; 6]);
         // Adam durable cost ~3x params
         assert!(ck.size_bytes().unwrap() >= 3 * 6 * 4);
     }
 
     #[test]
-    fn u64_fields_roundtrip_above_f64_precision() {
-        // f64 has 53 mantissa bits; these values would silently round
-        // if serialized through Json::num (the pre-fix bug)
+    fn quantized_image_checkpoints_record_precision_and_bytes() {
+        // the satellite bug: a durable form that never records
+        // precision restores f16 sessions as f32 storage.  The image
+        // tags it AND stores the reduced bytes.
+        let data = [0.5f32, -1.0, 0.25, 0.125, 0.75, -0.5];
+        let f32_path = tmp("prec_f32.plsi");
+        let f16_path = tmp("prec_f16.plsi");
+        let a = Checkpoint::save(
+            &f32_path,
+            image_for(OptimizerKind::MeZo, Precision::F32, &data, 1, 7),
+        )
+        .unwrap();
+        let b = Checkpoint::save(
+            &f16_path,
+            image_for(OptimizerKind::MeZo, Precision::F16, &data, 1, 7),
+        )
+        .unwrap();
+        assert_eq!(Checkpoint::open(&f16_path).unwrap().precision,
+                   Precision::F16);
+        // param payload halves on disk (metadata is identical)
+        assert_eq!(a.size_bytes().unwrap() - b.size_bytes().unwrap(),
+                   6 * 2);
+        // and the f32 interchange view decodes the same values (all
+        // f16-representable)
         let cfg = tiny_cfg();
-        let params = ModelState::zeros_like(&cfg).unwrap();
-        let big_seed = u64::MAX - 1;
-        let big_step = (1u64 << 53) + 3;
-        let dir = tmp("bigseed");
-        Checkpoint::save(&dir, "t", OptimizerKind::MeZo, big_step,
-                         big_seed, 0.25, &params, None)
+        let p = Checkpoint::open(&f16_path)
+            .unwrap()
+            .load_params(&cfg)
             .unwrap();
-        let back = Checkpoint::open(&dir).unwrap();
-        assert_eq!(back.master_seed, big_seed, "seed lost bits");
-        assert_eq!(back.step, big_step, "step lost bits");
-        // and the on-disk form is a string, not a float
-        let meta =
-            std::fs::read_to_string(dir.join("meta.json")).unwrap();
-        assert!(meta.contains(&format!("\"{big_seed}\"")), "{meta}");
+        assert_eq!(p.tensors[0].f32_vec().unwrap(), data.to_vec());
     }
 
     #[test]
-    fn legacy_numeric_meta_still_opens() {
-        let dir = tmp("legacy");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("meta.json"),
-            r#"{"config":"t","optimizer":"mezo","step":17,
-                "master_seed":99,"last_loss":0.5}"#,
+    fn u64_fields_roundtrip_above_f64_precision() {
+        // the image stores u64s as 8 raw bytes — bit-exact by
+        // construction, pinned anyway (the legacy JSON had to work
+        // for this)
+        let big_seed = u64::MAX - 1;
+        let big_step = (1u64 << 53) + 3;
+        let path = tmp("bigseed.plsi");
+        Checkpoint::save(
+            &path,
+            image_for(OptimizerKind::MeZo, Precision::F32, &[0.0; 6],
+                       big_step, big_seed),
         )
         .unwrap();
+        let back = Checkpoint::open(&path).unwrap();
+        assert_eq!(back.master_seed, big_seed, "seed lost bits");
+        assert_eq!(back.step, big_step, "step lost bits");
+    }
+
+    fn write_legacy_dir(dir: &Path, meta: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        let mut params = Vec::new();
+        for x in [1f32, 2., 3., 4., 5., 6.] {
+            params.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(dir.join("params.bin"), params).unwrap();
+    }
+
+    #[test]
+    fn legacy_numeric_meta_still_opens_through_the_shim() {
+        // pre-PR-1 format: u64s as bare JSON numbers
+        let dir = tmp("legacy_num");
+        write_legacy_dir(
+            &dir,
+            r#"{"config":"t","optimizer":"mezo","step":17,
+                "master_seed":99,"last_loss":0.5}"#,
+        );
         let back = Checkpoint::open(&dir).unwrap();
         assert_eq!(back.step, 17);
         assert_eq!(back.master_seed, 99);
+        assert_eq!(back.precision, Precision::F32,
+                   "legacy checkpoints default to f32");
+        assert!(back.image().is_none());
+        let p = back.load_params(&tiny_cfg()).unwrap();
+        assert_eq!(p.tensors[0].f32_vec().unwrap(),
+                   vec![1., 2., 3., 4., 5., 6.]);
     }
 
     #[test]
-    fn adam_without_state_rejected() {
-        let cfg = tiny_cfg();
-        let params = ModelState::zeros_like(&cfg).unwrap();
-        assert!(Checkpoint::save(tmp("bad"), "t", OptimizerKind::Adam, 0, 0,
-                                 0.0, &params, None)
+    fn legacy_string_meta_roundtrips_huge_u64s_through_the_shim() {
+        // PR-1 format: u64s as decimal strings (exact above 2^53)
+        let big = u64::MAX - 1;
+        let dir = tmp("legacy_str");
+        write_legacy_dir(
+            &dir,
+            &format!(
+                r#"{{"config":"t","optimizer":"mezo",
+                     "step":"9007199254740995",
+                     "master_seed":"{big}","last_loss":0.5}}"#
+            ),
+        );
+        let back = Checkpoint::open(&dir).unwrap();
+        assert_eq!(back.master_seed, big, "seed lost bits");
+        assert_eq!(back.step, (1u64 << 53) + 3);
+        assert_eq!(back.precision, Precision::F32);
+    }
+
+    #[test]
+    fn legacy_precision_key_is_honoured() {
+        let dir = tmp("legacy_prec");
+        write_legacy_dir(
+            &dir,
+            r#"{"config":"t","optimizer":"mezo","step":"1",
+                "master_seed":"2","last_loss":0.5,
+                "precision":"f16"}"#,
+        );
+        assert_eq!(Checkpoint::open(&dir).unwrap().precision,
+                   Precision::F16);
+        let dir2 = tmp("legacy_prec_bad");
+        write_legacy_dir(
+            &dir2,
+            r#"{"config":"t","optimizer":"mezo","step":"1",
+                "master_seed":"2","last_loss":0.5,
+                "precision":"fp64"}"#,
+        );
+        assert!(Checkpoint::open(&dir2).is_err(),
+                "unknown precision must not silently default");
+    }
+
+    #[test]
+    fn malformed_optimizer_state_is_rejected_at_save() {
+        // the old directory writer's consistency checks, kept: an
+        // Adam checkpoint without moments (or a MeZO one with them)
+        // must fail at the writer, not at a much later restore
+        let mut adam_no_moments =
+            image_for(OptimizerKind::Adam, Precision::F32, &[0.0; 6],
+                      1, 0);
+        adam_no_moments.adam_m.clear();
+        adam_no_moments.adam_v.clear();
+        assert!(Checkpoint::save(tmp("bad_adam.plsi"),
+                                 adam_no_moments)
             .is_err());
+
+        let mut mezo_with_moments =
+            image_for(OptimizerKind::MeZo, Precision::F32, &[0.0; 6],
+                      1, 0);
+        mezo_with_moments.adam_m = vec![vec![0.0; 6]];
+        mezo_with_moments.adam_v = vec![vec![0.0; 6]];
+        assert!(Checkpoint::save(tmp("bad_mezo.plsi"),
+                                 mezo_with_moments)
+            .is_err());
+
+        // lopsided m/v is rejected too
+        let mut lopsided =
+            image_for(OptimizerKind::Adam, Precision::F32, &[0.0; 6],
+                      1, 0);
+        lopsided.adam_v.clear();
+        assert!(Checkpoint::save(tmp("bad_lopsided.plsi"), lopsided)
+            .is_err());
+    }
+
+    #[test]
+    fn corrupt_image_checkpoint_is_rejected() {
+        let path = tmp("corrupt.plsi");
+        Checkpoint::save(
+            &path,
+            image_for(OptimizerKind::MeZo, Precision::Int8,
+                       &[0.5; 6], 3, 4),
+        )
+        .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x08;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+        // truncation too
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(Checkpoint::open(&path).is_err());
     }
 }

@@ -36,6 +36,7 @@ use crate::optim::mezo::MezoConfig;
 use crate::runtime::literal::{f32_tensor, i32_tensor, Literal};
 use crate::runtime::state::{ExecState, ModelState};
 use crate::runtime::{Precision, Program, Runtime};
+use crate::store::SessionImage;
 use crate::telemetry::MetricLog;
 
 /// Batches kept resident per session by default; anything older is
@@ -298,6 +299,7 @@ impl<'rt> SessionBuilder<'rt> {
             footprint: fp,
             step: 0,
             metrics: MetricLog::new(),
+            data_seed: self.seed,
             batcher_seed: self.seed ^ 0xBA7C4,
             batch_win: VecDeque::new(),
             win_start: 0,
@@ -330,6 +332,10 @@ pub struct Session {
     footprint: Option<crate::device::FootprintBreakdown>,
     pub step: u64,
     pub metrics: MetricLog,
+    /// The builder seed (drives the data pipeline and, for MeZO, the
+    /// master seed) — recorded so durable session images are
+    /// self-describing.
+    data_seed: u64,
     batcher_seed: u64,
     /// Ring window over the deterministic batch stream: batches for
     /// steps [win_start, win_start + batch_win.len()).  Capped at
@@ -495,9 +501,11 @@ impl Session {
                         pos = *p;
                     }
                 }
-                for _ in pos..keep_from {
-                    batcher.next();
-                }
+                // fast-forward over batches nothing will retain:
+                // index arithmetic only, no tokenization (state
+                // evolution identical to next(), pinned in
+                // data::batcher tests)
+                batcher.skip(keep_from - pos);
                 let fresh: Vec<Batch> =
                     (keep_from..=idx).map(|_| batcher.next()).collect();
                 (fresh, batcher.state())
@@ -658,8 +666,20 @@ impl Session {
             ck.optimizer.label(),
             self.optimizer.label()
         );
-        let params = ck.load_params(&self.cfg)?;
-        self.state.load_params(&params)?;
+        match ck.image() {
+            // image checkpoint at the session's own precision:
+            // install the storage records verbatim (bit-exact for
+            // every precision — int8 never re-rounds)
+            Some(img) if img.precision == self.precision => {
+                self.state.install_storage(img.params.clone())?;
+            }
+            // legacy directory, or cross-precision restore: go
+            // through the f32 interchange view and re-quantize
+            _ => {
+                let params = ck.load_params(&self.cfg)?;
+                self.state.load_params(&params)?;
+            }
+        }
         match &mut self.driver {
             Driver::MeZo(d) => {
                 d.cfg.master_seed = ck.master_seed;
@@ -675,6 +695,112 @@ impl Session {
         Ok(())
     }
 
+    /// Snapshot the session's durable state as a [`SessionImage`]
+    /// WITHOUT consuming the session (the checkpoint path).  The
+    /// parameter records are cloned at their resident precision — an
+    /// f16/int8 session checkpoints 2/1 bytes per element, never an
+    /// f32 materialization.
+    pub fn snapshot_image(&self, last_loss: f64) -> Result<SessionImage> {
+        let params = self.state.storage_literals()?;
+        let (adam_m, adam_v) = if self.state.has_adam() {
+            (self.state.m.clone(), self.state.v.clone())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Ok(SessionImage {
+            config: self.cfg.name.clone(),
+            optimizer: self.optimizer,
+            precision: self.precision,
+            task: self.task,
+            step: self.step,
+            master_seed: match &self.driver {
+                Driver::MeZo(d) => d.cfg.master_seed,
+                Driver::Adam(_) => 0,
+            },
+            data_seed: self.data_seed,
+            batcher_pos: self
+                .batcher_resume
+                .as_ref()
+                .map(|(p, _)| *p as u64)
+                .unwrap_or(0),
+            last_loss,
+            batch: self.batch as u32,
+            params,
+            adam_m,
+            adam_v,
+        })
+    }
+
+    /// Disassemble the session into its durable [`SessionImage`] (the
+    /// parameter storage is MOVED, at its resident precision) and a
+    /// small host-resident [`HibernatedSession`] remnant: the
+    /// simulated device (its thermal clock and memory ledger keep
+    /// ticking exactly as if the session had stayed resident), the
+    /// shared program/artifact `Arc`s, the optimizer schedule, and the
+    /// metric log.  `HibernatedSession::rehydrate` with the image
+    /// restores a session that continues **bit-identically** — pinned
+    /// per precision in `rust/tests/integration.rs` and, at fleet
+    /// scale, `rust/tests/fleet.rs`.
+    pub fn hibernate(
+        mut self,
+    ) -> Result<(SessionImage, HibernatedSession)> {
+        // steal the moving parts; the Drop impl then sees an empty
+        // shell (device already None), so close() is a no-op
+        let device = self.device.take();
+        let footprint = self.footprint.take();
+        let state =
+            std::mem::replace(&mut self.state, ExecState::hollow());
+        let driver = std::mem::replace(
+            &mut self.driver,
+            Driver::MeZo(MezoDriver::new(MezoConfig::default())),
+        );
+        let metrics = std::mem::take(&mut self.metrics);
+        let batcher_pos = self
+            .batcher_resume
+            .as_ref()
+            .map(|(p, _)| *p as u64)
+            .unwrap_or(0);
+        let (params, adam_m, adam_v) = state.into_storage()?;
+        let image = SessionImage {
+            config: self.cfg.name.clone(),
+            optimizer: self.optimizer,
+            precision: self.precision,
+            task: self.task,
+            step: self.step,
+            master_seed: match &driver {
+                Driver::MeZo(d) => d.cfg.master_seed,
+                Driver::Adam(_) => 0,
+            },
+            data_seed: self.data_seed,
+            batcher_pos,
+            last_loss: f64::NAN,
+            batch: self.batch as u32,
+            params,
+            adam_m,
+            adam_v,
+        };
+        let remnant = HibernatedSession {
+            cfg: self.cfg.clone(),
+            optimizer: self.optimizer,
+            batch: self.batch,
+            task: self.task,
+            art: self.art.clone(),
+            step_prog: self.step_prog.clone(),
+            loss_prog: self.loss_prog.clone(),
+            eval_prog: self.eval_prog.clone(),
+            driver,
+            device,
+            footprint,
+            metrics,
+            data_seed: self.data_seed,
+            batcher_seed: self.batcher_seed,
+            window_cap: self.window_cap,
+            compat_exec: self.compat_exec,
+            precision: self.precision,
+        };
+        Ok((image, remnant))
+    }
+
     /// Tear down: release the simulated memory reservation.
     pub fn close(&mut self) {
         if let (Some(dev), Some(fp)) =
@@ -683,6 +809,135 @@ impl Session {
             dev.ledger.release_footprint(&fp);
             dev.compute.cool_down();
         }
+    }
+}
+
+/// The host-resident remnant of a hibernated [`Session`]: everything
+/// a rehydrate needs that is NOT durable state — shared `Arc`s
+/// (compiled programs, tokenizer/corpus artifacts), the simulated
+/// device envelope (whose ledger reservation stays charged, exactly
+/// like a suspended process on a phone), the optimizer schedule, and
+/// telemetry.  Holds **no parameter-sized tensors**: the memory the
+/// hibernated job still pins on the host is O(programs + metrics),
+/// not O(params).
+pub struct HibernatedSession {
+    cfg: crate::runtime::manifest::ConfigInfo,
+    optimizer: OptimizerKind,
+    batch: usize,
+    task: TaskKind,
+    art: Arc<SessionArtifacts>,
+    step_prog: Arc<Program>,
+    loss_prog: Option<Arc<Program>>,
+    eval_prog: Option<Arc<Program>>,
+    driver: Driver,
+    device: Option<Device>,
+    footprint: Option<crate::device::FootprintBreakdown>,
+    metrics: MetricLog,
+    data_seed: u64,
+    batcher_seed: u64,
+    window_cap: usize,
+    compat_exec: bool,
+    precision: Precision,
+}
+
+impl HibernatedSession {
+    /// The precision the rehydrated state will be stored at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Reassemble a live [`Session`] from this remnant plus its
+    /// durable image.  The storage literals are installed verbatim
+    /// (no quantize round trip), the optimizer clock is restored from
+    /// the image's `(master_seed, step)`, and the batcher resume
+    /// snapshot is rebuilt from the bare stream position via
+    /// [`Batcher::skip`] — cheap index arithmetic, no tokenization.
+    pub fn rehydrate(mut self, image: SessionImage) -> Result<Session> {
+        ensure!(image.config == self.cfg.name,
+                "image is for config {}, session runs {}", image.config,
+                self.cfg.name);
+        ensure!(image.optimizer == self.optimizer,
+                "image optimizer {} vs session {}",
+                image.optimizer.label(), self.optimizer.label());
+        ensure!(image.precision == self.precision,
+                "image stored at {}, session runs {}", image.precision,
+                self.precision);
+        ensure!(image.batch as usize == self.batch,
+                "image batch {} vs session {}", image.batch, self.batch);
+        ensure!(image.data_seed == self.data_seed,
+                "image data seed {} vs session {}", image.data_seed,
+                self.data_seed);
+        match (&self.driver, image.adam_m.is_empty()) {
+            (Driver::Adam(_), true) => {
+                bail!("adam session image carries no moments")
+            }
+            (Driver::MeZo(_), false) => {
+                bail!("mezo session image must not carry moments")
+            }
+            _ => {}
+        }
+        let state = ExecState::from_storage(
+            &self.cfg,
+            self.precision,
+            image.params,
+            image.adam_m,
+            image.adam_v,
+        )?;
+        match &mut self.driver {
+            Driver::MeZo(d) => {
+                d.cfg.master_seed = image.master_seed;
+                d.step = image.step;
+            }
+            Driver::Adam(d) => {
+                d.step = image.step;
+            }
+        }
+        let seq = self.cfg.max_seq;
+        // rebuild the stream snapshot AND align the (empty) window to
+        // it: with win_start = pos, the next batch_at(step) resumes
+        // from the snapshot in O(1) instead of replaying — and
+        // re-tokenizing — up to window_cap historical batches
+        let (win_start, batcher_resume) = if image.batcher_pos > 0 {
+            let pos = image.batcher_pos as usize;
+            let mut b = Batcher::new(
+                &self.art.bpe,
+                &self.art.data.train,
+                self.batch,
+                seq,
+                self.cfg.is_decoder(),
+                self.cfg.vocab,
+                self.batcher_seed,
+            );
+            b.skip(pos);
+            (pos, Some((pos, b.state())))
+        } else {
+            (0, None)
+        };
+        Ok(Session {
+            cfg: self.cfg,
+            optimizer: self.optimizer,
+            batch: self.batch,
+            seq,
+            task: self.task,
+            art: self.art,
+            step_prog: self.step_prog,
+            loss_prog: self.loss_prog,
+            eval_prog: self.eval_prog,
+            state,
+            driver: self.driver,
+            device: self.device,
+            footprint: self.footprint,
+            step: image.step,
+            metrics: self.metrics,
+            data_seed: self.data_seed,
+            batcher_seed: self.batcher_seed,
+            batch_win: VecDeque::new(),
+            win_start,
+            window_cap: self.window_cap,
+            batcher_resume,
+            compat_exec: self.compat_exec,
+            precision: self.precision,
+        })
     }
 }
 

@@ -32,6 +32,22 @@ pub fn f32_bytes(shape: &[usize]) -> u64 {
     4 * shape.iter().product::<usize>() as u64
 }
 
+/// Parse a human byte count: plain digits, or a `k`/`m`/`g` suffix
+/// (binary multiples, case-insensitive) — `"64k"` = 65536.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = t.strip_suffix('k') {
+        (d, KIB)
+    } else if let Some(d) = t.strip_suffix('m') {
+        (d, MIB)
+    } else if let Some(d) = t.strip_suffix('g') {
+        (d, GIB)
+    } else {
+        (t.as_str(), 1)
+    };
+    digits.trim().parse::<u64>().ok()?.checked_mul(mult)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,5 +64,17 @@ mod tests {
     fn tensor_bytes() {
         assert_eq!(f32_bytes(&[2, 3]), 24);
         assert_eq!(f32_bytes(&[]), 4);
+    }
+
+    #[test]
+    fn parses_suffixed_byte_counts() {
+        assert_eq!(parse_bytes("123"), Some(123));
+        assert_eq!(parse_bytes("64k"), Some(64 * 1024));
+        assert_eq!(parse_bytes("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_bytes(" 1g "), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_bytes("0"), Some(0));
+        assert_eq!(parse_bytes("x"), None);
+        assert_eq!(parse_bytes("12kb"), None);
+        assert_eq!(parse_bytes(""), None);
     }
 }

@@ -73,31 +73,87 @@ fn finetune_smoke_with_device_and_csv() {
 }
 
 #[test]
-fn finetune_checkpoint_then_eval() {
-    let dir = std::env::temp_dir().join("pocketllm_cli_ckpt");
-    let _ = std::fs::remove_dir_all(&dir);
-    let dir_s = dir.to_str().unwrap();
+fn finetune_checkpoint_then_eval_and_inspect() {
+    let path = std::env::temp_dir().join("pocketllm_cli_ckpt.plsi");
+    let _ = std::fs::remove_file(&path);
+    let path_s = path.to_str().unwrap();
     let (ok, text) = run(&[
         "finetune", "--model", "pocket-tiny", "--steps", "3",
-        "--checkpoint", dir_s,
+        "--checkpoint", path_s,
     ]);
     assert!(ok, "{text}");
+    assert!(path.is_file(), "checkpoint must be ONE file");
     let (ok, text) = run(&[
-        "eval", "--model", "pocket-tiny", "--checkpoint", dir_s,
+        "eval", "--model", "pocket-tiny", "--checkpoint", path_s,
     ]);
     assert!(ok, "{text}");
     assert!(text.contains("eval loss"));
     assert!(text.contains("accuracy"));
+    // and the image is inspectable: header + size breakdown
+    let (ok, text) = run(&["store", "inspect", path_s]);
+    assert!(ok, "{text}");
+    assert!(text.contains("session image"), "{text}");
+    assert!(text.contains("CRC verified"), "{text}");
+    assert!(text.contains("config: pocket-tiny"), "{text}");
+    assert!(text.contains("precision: f32"), "{text}");
+    assert!(text.contains("params"), "{text}");
+    assert!(text.contains("(master_seed, step)"),
+            "MeZO images must advertise their 16-byte optimizer \
+             state: {text}");
 }
 
 #[test]
-fn adam_checkpoint_is_refused_with_explanation() {
+fn adam_checkpoint_carries_moments_and_f16_keeps_its_precision() {
+    // Adam checkpoints are now a single image with the m/v payload —
+    // `store inspect` surfaces the Table-1 size asymmetry
+    let adam = std::env::temp_dir().join("pocketllm_cli_adam.plsi");
+    let _ = std::fs::remove_file(&adam);
+    let adam_s = adam.to_str().unwrap();
     let (ok, text) = run(&[
-        "finetune", "--model", "pocket-tiny-fast", "--optimizer", "adam",
-        "--steps", "1", "--checkpoint", "/tmp/should_not_exist_ck",
+        "finetune", "--model", "pocket-tiny-fast", "--optimizer",
+        "adam", "--steps", "2", "--checkpoint", adam_s,
     ]);
+    assert!(ok, "{text}");
+    let (ok, text) = run(&["store", "inspect", adam_s]);
+    assert!(ok, "{text}");
+    assert!(text.contains("optimizer: adam"), "{text}");
+    assert!(!text.contains("(master_seed, step)"), "{text}");
+
+    // an f16 checkpoint records its precision, and eval honours it
+    let f16 = std::env::temp_dir().join("pocketllm_cli_f16.plsi");
+    let _ = std::fs::remove_file(&f16);
+    let f16_s = f16.to_str().unwrap();
+    let (ok, text) = run(&[
+        "finetune", "--model", "pocket-tiny", "--precision", "f16",
+        "--steps", "2", "--checkpoint", f16_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("f16 storage"), "{text}");
+    let (ok, text) = run(&["store", "inspect", f16_s]);
+    assert!(ok, "{text}");
+    assert!(text.contains("precision: f16 (2 B/param on disk)"),
+            "{text}");
+    let (ok, text) = run(&[
+        "eval", "--model", "pocket-tiny", "--checkpoint", f16_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("f16 storage"),
+            "eval must restore the checkpoint's precision: {text}");
+}
+
+#[test]
+fn store_inspect_rejects_garbage_and_missing_files() {
+    let bad = std::env::temp_dir().join("pocketllm_cli_garbage.plsi");
+    std::fs::write(&bad, b"not an image at all").unwrap();
+    let (ok, text) = run(&["store", "inspect", bad.to_str().unwrap()]);
     assert!(!ok);
-    assert!(text.contains("3x params"), "{text}");
+    assert!(text.contains("magic") || text.contains("truncated"),
+            "{text}");
+    let (ok, _) = run(&["store", "inspect", "/tmp/definitely_missing_x"]);
+    assert!(!ok);
+    let (ok, text) = run(&["store"]);
+    assert!(!ok);
+    assert!(text.contains("usage"), "{text}");
 }
 
 #[test]
@@ -163,8 +219,13 @@ fn fleet_smoke_and_worker_count_determinism() {
             "4", "--policy", "always", "--model", "pocket-tiny",
         ]);
         assert!(ok, "{text}");
+        // `host wall` and `fleet store` carry worker-timing detail
+        // (wall-clock, hibernation counts, high-water) by design
         text.lines()
-            .filter(|l| !l.starts_with("host wall"))
+            .filter(|l| {
+                !l.starts_with("host wall")
+                    && !l.starts_with("fleet store")
+            })
             .collect::<Vec<_>>()
             .join("\n")
     };
@@ -178,6 +239,42 @@ fn fleet_smoke_and_worker_count_determinism() {
     // any worker count (builds are serialized under the cache lock)
     assert!(w1.contains("fleet tokenizer cache: 2 builds, 0 hits"),
             "{w1}");
+}
+
+#[test]
+fn fleet_with_resident_budget_is_worker_count_invariant() {
+    // hibernation under a 0-byte budget must not change a single
+    // deterministic output line — and it must actually hibernate
+    let store_dir =
+        std::env::temp_dir().join("pocketllm_cli_fleet_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let fleet_out = |workers: &str| {
+        let (ok, text) = run(&[
+            "fleet", "--jobs", "3", "--workers", workers, "--steps",
+            "4", "--policy", "always", "--model", "pocket-tiny",
+            "--resident-budget", "0", "--deadline", "60",
+        ]);
+        assert!(ok, "{text}");
+        assert!(
+            text.lines().any(|l| l.starts_with("fleet store")
+                && !l.contains("0 hibernations")),
+            "budget 0 must force hibernation: {text}"
+        );
+        text.lines()
+            .filter(|l| {
+                !l.starts_with("host wall")
+                    && !l.starts_with("fleet store")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let w1 = fleet_out("1");
+    let w2 = fleet_out("2");
+    assert_eq!(w1, w2,
+               "hibernating fleet output must not depend on --workers");
+    assert!(w1.contains("fleet outcomes: 3/3 completed"), "{w1}");
+    assert!(w1.contains("fleet resident budget: 0 B"), "{w1}");
+    assert!(w1.contains("fleet deadline misses: 0"), "{w1}");
 }
 
 #[test]

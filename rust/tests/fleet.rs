@@ -75,7 +75,8 @@ fn fleet_matches_sequential_oracle_for_any_worker_count() {
     for workers in [1usize, 2, 4] {
         let fleet = FleetScheduler::new(
             &rt,
-            FleetConfig { coord: cfg.clone(), workers },
+            FleetConfig { coord: cfg.clone(), workers,
+                          ..FleetConfig::default() },
         );
         let report = fleet.run(&jobs).unwrap();
         let got = fingerprint(&report.outcomes, &report.events,
@@ -132,7 +133,8 @@ fn fleet_oom_fallback_fires_via_typed_downcast() {
     for workers in [1usize, 2] {
         let fleet = FleetScheduler::new(
             &rt,
-            FleetConfig { coord: cfg.clone(), workers },
+            FleetConfig { coord: cfg.clone(), workers,
+                          ..FleetConfig::default() },
         );
         let report = fleet.run(&jobs).unwrap();
         assert_eq!(report.outcomes[0].optimizer, OptimizerKind::MeZo,
@@ -174,7 +176,8 @@ fn fleet_metrics_are_per_job_series_in_job_order() {
         .collect();
     let fleet = FleetScheduler::new(
         &rt,
-        FleetConfig { coord: cfg, workers: 3 },
+        FleetConfig { coord: cfg, workers: 3,
+                      ..FleetConfig::default() },
     );
     let report = fleet.run(&jobs).unwrap();
     for i in 0..3 {
@@ -210,12 +213,173 @@ fn fleet_with_more_workers_than_jobs_is_fine() {
         .seed(5)];
     let fleet = FleetScheduler::new(
         &rt,
-        FleetConfig { coord: cfg, workers: 8 },
+        FleetConfig { coord: cfg, workers: 8,
+                      ..FleetConfig::default() },
     );
     let report = fleet.run(&jobs).unwrap();
     assert_eq!(report.outcomes.len(), 1);
     assert_eq!(report.outcomes[0].status, JobStatus::Completed);
     assert_eq!(report.telemetry.completion_rate, 1.0);
+}
+
+#[test]
+fn budget_forced_hibernation_matches_unbounded_oracle() {
+    // THE acceptance pin of the store subsystem: a fleet run whose
+    // resident budget forces every queued job to hibernate (budget 0)
+    // must produce byte-for-byte the oracle's outcomes/events/metrics
+    // — for workers {1, 2, 4}, at f32, f16, AND int8, with an Adam
+    // job in the mix so moments ride through the images too.
+    use pocketllm::runtime::Precision;
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 100,
+        ..Default::default()
+    };
+    for precision in [Precision::F32, Precision::F16, Precision::Int8]
+    {
+        let jobs: Vec<JobSpec> = vec![
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(6)
+                .seed(61)
+                .precision(precision)
+                .deadline(600.0),
+            JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                         OptimizerKind::Adam)
+                .steps(4)
+                .seed(62)
+                .precision(precision),
+            JobSpec::new("pocket-tiny", TaskKind::Rte,
+                         OptimizerKind::MeZo)
+                .steps(6)
+                .seed(63)
+                .precision(precision)
+                .deadline(30.0),
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(4)
+                .seed(64)
+                .precision(precision),
+        ];
+
+        let mut oracle = Coordinator::new(&rt, cfg.clone());
+        let oracle_outcomes = oracle.run_queue(&jobs).unwrap();
+        let want = fingerprint(&oracle_outcomes, &oracle.events,
+                               &oracle.metrics.to_csv());
+
+        for workers in [1usize, 2, 4] {
+            let fleet = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    coord: cfg.clone(),
+                    workers,
+                    // budget 0: every requeued job must hibernate
+                    resident_budget_bytes: Some(0),
+                    store_dir: None,
+                },
+            );
+            let report = fleet.run(&jobs).unwrap();
+            let got = fingerprint(&report.outcomes, &report.events,
+                                  &report.metrics.to_csv());
+            assert_eq!(got, want,
+                       "{precision}, {workers} workers: hibernating \
+                        fleet diverged from the resident oracle");
+            assert!(report.telemetry.hibernations > 0,
+                    "budget 0 must force hibernation");
+            assert_eq!(report.telemetry.rehydrations,
+                       report.telemetry.hibernations,
+                       "every hibernated job must rehydrate");
+            assert!(report.telemetry.store_bytes_spilled > 0,
+                    "write-through store must hit disk");
+        }
+    }
+}
+
+#[test]
+fn edf_queue_dispatches_earliest_deadline_first() {
+    // one worker = deterministic dispatch order: deadlines 30 < 60 <
+    // best-effort, regardless of queue position
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 4,
+        max_windows: 20,
+        ..Default::default()
+    };
+    let jobs = vec![
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(71), // best-effort, queued first
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(72)
+            .deadline(60.0),
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(73)
+            .deadline(30.0),
+    ];
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 1,
+                      ..FleetConfig::default() },
+    );
+    let report = fleet.run(&jobs).unwrap();
+    assert_eq!(report.first_dispatch, vec![2, 1, 0],
+               "EDF must dispatch deadline 30, then 60, then \
+                best-effort");
+    // dispatch order is scheduling only — every job still completes
+    assert_eq!(report.telemetry.completed, 3);
+    // 4 steps in one always-admitted window at minute 10 < deadlines
+    assert_eq!(report.telemetry.deadline_misses, 0);
+}
+
+#[test]
+fn blown_deadlines_are_reported_not_fatal() {
+    // overnight policy + daytime queue time: the first admitted
+    // window is hours away, so a 30-minute deadline must be missed —
+    // and identically in the oracle and the fleet
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::overnight(),
+        steps_per_window: 4,
+        trace_step_minutes: 30.0,
+        max_windows: 500,
+        trace_seed: 3,
+        ..Default::default()
+    };
+    let jobs = vec![
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(81)
+            .deadline(30.0), // hopeless under the overnight policy
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(4)
+            .seed(82), // best-effort never "misses"
+    ];
+    let mut oracle = Coordinator::new(&rt, cfg.clone());
+    let oracle_outcomes = oracle.run_queue(&jobs).unwrap();
+    assert!(oracle_outcomes[0].deadline_missed,
+            "30 simulated minutes cannot cover an overnight wait");
+    assert!(!oracle_outcomes[1].deadline_missed);
+    assert_eq!(oracle_outcomes[0].status, JobStatus::Completed,
+               "a miss is telemetry, not failure");
+
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 2,
+                      ..FleetConfig::default() },
+    );
+    let report = fleet.run(&jobs).unwrap();
+    assert_eq!(
+        fingerprint(&report.outcomes, &report.events,
+                    &report.metrics.to_csv()),
+        fingerprint(&oracle_outcomes, &oracle.events,
+                    &oracle.metrics.to_csv())
+    );
+    assert_eq!(report.telemetry.deadline_misses, 1);
 }
 
 #[test]
@@ -236,7 +400,8 @@ fn fleet_stalled_jobs_are_counted_not_dropped() {
         .seed(7)];
     let fleet = FleetScheduler::new(
         &rt,
-        FleetConfig { coord: cfg, workers: 2 },
+        FleetConfig { coord: cfg, workers: 2,
+                      ..FleetConfig::default() },
     );
     let report = fleet.run(&jobs).unwrap();
     assert_eq!(report.outcomes[0].status, JobStatus::Stalled);

@@ -184,10 +184,10 @@ fn decoder_lm_session_runs() {
 #[test]
 fn checkpoint_resume_is_exact() {
     let rt = runtime();
-    let dir = std::env::temp_dir().join("pocketllm_it_ckpt");
-    let _ = std::fs::remove_dir_all(&dir);
+    let path = std::env::temp_dir().join("pocketllm_it_ckpt.plsi");
+    let _ = std::fs::remove_file(&path);
 
-    // run 4 steps, checkpoint, run 2 more
+    // run 4 steps, checkpoint (single-file session image), run 2 more
     let mut a = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
         .seed(11)
@@ -195,16 +195,16 @@ fn checkpoint_resume_is_exact() {
         .unwrap();
     a.run_steps(4).unwrap();
     let a_params = a.params().unwrap();
-    Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, a.step, 11,
-                     0.0, &a_params, None)
-        .unwrap();
+    Checkpoint::save(&path, a.snapshot_image(0.0).unwrap()).unwrap();
+    assert!(path.is_file(), "canonical checkpoints are ONE file");
     let params_at_4 = a_params.to_bytes().unwrap();
     let a6 = a.run_steps(2).unwrap().last_loss;
 
     // restore the checkpoint into a fresh session and run the same 2
     // steps — Session::restore fast-forwards the optimizer clock via
     // the deterministic (master_seed, step) schedule
-    let ck = Checkpoint::open(&dir).unwrap();
+    let ck = Checkpoint::open(&path).unwrap();
+    assert_eq!(ck.master_seed, 11);
     let mut b = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
         .seed(11)
@@ -216,7 +216,7 @@ fn checkpoint_resume_is_exact() {
     assert_eq!(a6, b6, "resumed tail must be bit-identical");
 
     // and the checkpointed params themselves round-trip bit-exactly
-    let ck2 = Checkpoint::open(&dir).unwrap();
+    let ck2 = Checkpoint::open(&path).unwrap();
     let pb = ck2
         .load_params(rt.manifest.config("pocket-tiny").unwrap())
         .unwrap();
@@ -230,8 +230,8 @@ fn resume_reproduces_seed_and_loss_sequence_with_huge_master_seed() {
     // checkpoint JSON (string-serialized u64) AND the resumed session
     // must replay the identical seed/loss sequence
     let rt = runtime();
-    let dir = std::env::temp_dir().join("pocketllm_it_bigseed");
-    let _ = std::fs::remove_dir_all(&dir);
+    let path = std::env::temp_dir().join("pocketllm_it_bigseed.plsi");
+    let _ = std::fs::remove_file(&path);
     let big_seed = u64::MAX - 1;
 
     // uninterrupted reference run: 6 steps of losses
@@ -255,14 +255,14 @@ fn resume_reproduces_seed_and_loss_sequence_with_huge_master_seed() {
     for _ in 0..3 {
         got.push(b.step().unwrap().loss);
     }
-    let b_params = b.params().unwrap();
-    Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, b.step,
-                     big_seed, *got.last().unwrap(), &b_params, None)
-        .unwrap();
+    let img = b.snapshot_image(*got.last().unwrap()).unwrap();
+    assert_eq!(img.master_seed, big_seed);
+    Checkpoint::save(&path, img).unwrap();
     drop(b);
 
-    let ck = Checkpoint::open(&dir).unwrap();
-    assert_eq!(ck.master_seed, big_seed, "seed must survive the JSON");
+    let ck = Checkpoint::open(&path).unwrap();
+    assert_eq!(ck.master_seed, big_seed,
+               "seed must survive the image bytes");
     assert_eq!(ck.step, 3);
     let mut c = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
@@ -463,8 +463,9 @@ fn in_place_path_matches_run_path_across_checkpoint_restore() {
     // donation path must reproduce it bit-exactly even when split by a
     // checkpoint save + restore into a fresh session
     let rt = runtime();
-    let dir = std::env::temp_dir().join("pocketllm_it_inplace_ck");
-    let _ = std::fs::remove_dir_all(&dir);
+    let path =
+        std::env::temp_dir().join("pocketllm_it_inplace_ck.plsi");
+    let _ = std::fs::remove_file(&path);
 
     let mut r = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
@@ -487,13 +488,12 @@ fn in_place_path_matches_run_path_across_checkpoint_restore() {
     for _ in 0..3 {
         got.push(a.step().unwrap().loss);
     }
-    let a_params = a.params().unwrap();
-    Checkpoint::save(&dir, "pocket-tiny", OptimizerKind::MeZo, a.step,
-                     31, *got.last().unwrap(), &a_params, None)
+    Checkpoint::save(&path,
+                     a.snapshot_image(*got.last().unwrap()).unwrap())
         .unwrap();
     drop(a);
 
-    let ck = Checkpoint::open(&dir).unwrap();
+    let ck = Checkpoint::open(&path).unwrap();
     let mut b = SessionBuilder::new(&rt, "pocket-tiny")
         .optimizer(OptimizerKind::MeZo)
         .seed(31)
@@ -531,6 +531,127 @@ fn parallel_k_query_session_is_deterministic() {
     let a = run();
     let b = run();
     assert_eq!(a, b, "k-query trajectories must be reproducible");
+}
+
+// ---------------------------------------------------------------------
+// hibernate / rehydrate (durable session images)
+// ---------------------------------------------------------------------
+
+#[test]
+fn hibernate_rehydrate_resumes_bit_identically_at_every_precision() {
+    // reference: 6 uninterrupted steps.  Test: 3 steps -> hibernate
+    // (session image through a real SessionStore, LRU + disk) ->
+    // rehydrate -> 3 more steps.  Losses and final parameter bytes
+    // must match bit-for-bit — at f32, f16, AND int8 (the image
+    // stores the resident storage verbatim, so int8 codes never
+    // re-round).
+    use pocketllm::runtime::Precision;
+    use pocketllm::store::SessionStore;
+    let rt = runtime();
+    let store_dir =
+        std::env::temp_dir().join("pocketllm_it_hibernate");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = SessionStore::with_mem_capacity(&store_dir, 0).unwrap();
+
+    for (key, precision) in [("f32", Precision::F32),
+                             ("f16", Precision::F16),
+                             ("int8", Precision::Int8)]
+    {
+        let build = || {
+            SessionBuilder::new(&rt, "pocket-tiny")
+                .optimizer(OptimizerKind::MeZo)
+                .seed(47)
+                .precision(precision)
+                .build()
+                .unwrap()
+        };
+        let mut reference = build();
+        let mut ref_losses = Vec::new();
+        for _ in 0..6 {
+            ref_losses.push(reference.step().unwrap().loss);
+        }
+        let ref_params =
+            reference.params().unwrap().to_bytes().unwrap();
+
+        let mut live = build();
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(live.step().unwrap().loss);
+        }
+        let resident_before = live.resident_param_bytes();
+        let (image, remnant) = live.hibernate().unwrap();
+        assert_eq!(image.precision, precision);
+        assert_eq!(image.step, 3);
+        assert_eq!(image.param_bytes(), resident_before,
+                   "image payload = resident storage, no f32 blowup");
+        store.put(key, &image).unwrap();
+        // ... the job is now O(100)-bytes-of-counters on the host ...
+        let image_back = store.take(key).unwrap();
+        let mut resumed = remnant.rehydrate(image_back).unwrap();
+        assert_eq!(resumed.step, 3);
+        assert_eq!(resumed.resident_param_bytes(), resident_before,
+                   "rehydrated residency must keep its precision");
+        for _ in 0..3 {
+            got.push(resumed.step().unwrap().loss);
+        }
+        assert_eq!(got, ref_losses,
+                   "{precision}: hibernated run diverged");
+        assert_eq!(resumed.params().unwrap().to_bytes().unwrap(),
+                   ref_params,
+                   "{precision}: final parameter bytes diverged");
+    }
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+#[test]
+fn adam_session_hibernates_with_moments_mezo_without() {
+    let rt = runtime();
+    // Adam: moments must survive the image round trip bit-exactly
+    let mut adam = SessionBuilder::new(&rt, "pocket-tiny-fast")
+        .optimizer(OptimizerKind::Adam)
+        .seed(53)
+        .build()
+        .unwrap();
+    let mut ref_adam = SessionBuilder::new(&rt, "pocket-tiny-fast")
+        .optimizer(OptimizerKind::Adam)
+        .seed(53)
+        .build()
+        .unwrap();
+    let mut ref_losses = Vec::new();
+    for _ in 0..4 {
+        ref_losses.push(ref_adam.step().unwrap().loss);
+    }
+    let mut got = Vec::new();
+    for _ in 0..2 {
+        got.push(adam.step().unwrap().loss);
+    }
+    let (image, remnant) = adam.hibernate().unwrap();
+    assert!(!image.adam_m.is_empty(),
+            "adam image must carry its moments");
+    assert!(image.moment_bytes() > 0);
+    let mut resumed = remnant.rehydrate(image).unwrap();
+    for _ in 0..2 {
+        got.push(resumed.step().unwrap().loss);
+    }
+    assert_eq!(got, ref_losses, "adam hibernate diverged");
+
+    // MeZO: the image is params + O(100) B of metadata — the paper's
+    // Table-1 asymmetry made durable (no moment payload, ~9 B/tensor
+    // directory + fixed header)
+    let mezo = SessionBuilder::new(&rt, "pocket-tiny")
+        .optimizer(OptimizerKind::MeZo)
+        .seed(53)
+        .build()
+        .unwrap();
+    let n_tensors = mezo.cfg.params.len() as u64;
+    let (image, _remnant) = mezo.hibernate().unwrap();
+    assert!(image.adam_m.is_empty() && image.adam_v.is_empty());
+    assert_eq!(image.moment_bytes(), 0);
+    let encoded = image.encode().len() as u64;
+    assert_eq!(encoded, image.param_bytes() + image.metadata_bytes());
+    assert!(image.metadata_bytes() <= 100 + 9 * n_tensors,
+            "MeZO image metadata is {} B for {} tensors",
+            image.metadata_bytes(), n_tensors);
 }
 
 // ---------------------------------------------------------------------

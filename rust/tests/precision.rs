@@ -150,8 +150,8 @@ fn f16_checkpoint_restore_is_bit_exact() {
     // checkpoint written by an fp16 session restores losslessly and
     // replays the identical tail
     let rt = runtime();
-    let dir = std::env::temp_dir().join("pocketllm_f16_ckpt");
-    let _ = std::fs::remove_dir_all(&dir);
+    let dir = std::env::temp_dir().join("pocketllm_f16_ckpt.plsi");
+    let _ = std::fs::remove_file(&dir);
 
     let build = || {
         SessionBuilder::new(&rt, "pocket-tiny")
@@ -172,18 +172,22 @@ fn f16_checkpoint_restore_is_bit_exact() {
     for _ in 0..3 {
         got.push(b.step().unwrap().loss);
     }
-    let params = b.params().unwrap();
-    pocketllm::tuner::checkpoint::Checkpoint::save(
-        &dir, "pocket-tiny", OptimizerKind::MeZo, b.step, 91,
-        *got.last().unwrap(), &params, None,
-    )
-    .unwrap();
+    let img = b.snapshot_image(*got.last().unwrap()).unwrap();
+    let expected_resident = b.resident_param_bytes();
+    pocketllm::tuner::checkpoint::Checkpoint::save(&dir, img).unwrap();
     drop(b);
 
     let ck =
         pocketllm::tuner::checkpoint::Checkpoint::open(&dir).unwrap();
+    // the image records the precision AND stores f16 bytes on disk
+    assert_eq!(ck.precision, Precision::F16);
+    assert_eq!(ck.image().unwrap().param_bytes(), expected_resident,
+               "on-disk param payload must equal the f16 residency");
     let mut c = build();
     c.restore(&ck).unwrap();
+    assert_eq!(c.resident_param_bytes(), expected_resident,
+               "restored session must keep f16 residency (the \
+                silently-widens-to-f32 satellite bug)");
     for _ in 0..3 {
         got.push(c.step().unwrap().loss);
     }
