@@ -12,6 +12,11 @@
 //!    grows linearly with the queue) and with a `resident_budget`
 //!    of 8 sessions; the telemetry's resident parameter high-water
 //!    must collapse from O(jobs) to O(budget + workers).
+//! 3. **Backends** — the same budgeted durable fleet on the dir-per-
+//!    key engine vs the single-file paged engine: wall clock for the
+//!    whole spill/rehydrate-heavy run, files left on disk, bytes on
+//!    disk, and bytes after `compact` (paged only — dir stores have
+//!    nothing to compact).
 //!
 //! Knobs: `STORE_JOBS` (fleet size, default 1000), `STORE_ITERS`
 //! (hibernate/rehydrate reps per precision, default 25).
@@ -22,7 +27,8 @@ use pocketllm::data::task::TaskKind;
 use pocketllm::optim::OptimizerKind;
 use pocketllm::runtime::{Manifest, Precision, Runtime};
 use pocketllm::scheduler::Policy;
-use pocketllm::store::SessionStore;
+use pocketllm::store::{EngineKind, PagedEngine, SessionStore,
+                       PAGED_FILE_NAME};
 use pocketllm::telemetry::bench::{dump_json, env_u64, render,
                                   Measurement};
 use pocketllm::tuner::session::SessionBuilder;
@@ -116,7 +122,7 @@ fn main() -> anyhow::Result<()> {
                 coord: coord.clone(),
                 workers,
                 resident_budget_bytes: budget_bytes,
-                store_dir: None,
+                ..FleetConfig::default()
             },
         );
         let report = fleet.run(&jobs)?;
@@ -126,6 +132,65 @@ fn main() -> anyhow::Result<()> {
     };
     let hw_unbounded = run_with(None)?;
     let hw_budget = run_with(Some(budget))?;
+
+    // ---- 3. backend comparison: dir vs paged, durable spill ----
+    // the identical budgeted fleet, but durable (explicit store dir:
+    // manifest + terminal images on top of the hibernation traffic) —
+    // what `fleet --store-dir` actually costs on each engine
+    for engine in [EngineKind::Dir, EngineKind::Paged] {
+        let dir = std::env::temp_dir().join(format!(
+            "pocketllm_bench_store_{}", engine.label()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig {
+                coord: coord.clone(),
+                workers,
+                resident_budget_bytes: Some(budget),
+                store_dir: Some(dir.clone()),
+                store_engine: engine,
+                ..FleetConfig::default()
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let report = fleet.run(&jobs)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        assert_eq!(report.telemetry.completed, n_jobs,
+                   "durable {} fleet must complete", engine.label());
+        let store = SessionStore::open_auto(&dir, 0)?;
+        let files = store.file_count();
+        let bytes = store.disk_bytes();
+        let compacted_bytes = match engine {
+            EngineKind::Paged => {
+                drop(store);
+                let eng =
+                    PagedEngine::open(dir.join(PAGED_FILE_NAME))?;
+                let (moved, reclaimed) = eng.compact()?;
+                println!(
+                    "paged compaction: moved {moved} blobs, \
+                     reclaimed {reclaimed} B"
+                );
+                std::fs::metadata(dir.join(PAGED_FILE_NAME))?.len()
+            }
+            EngineKind::Dir => bytes,
+        };
+        println!(
+            "{} engine: {n_jobs}-job durable fleet in {:.2}s, \
+             {files} file(s), {bytes} B on disk, {compacted_bytes} B \
+             after compaction",
+            engine.label(), wall_s
+        );
+        let label = engine.label();
+        extra.push((format!("fleet_wall_s_{label}"), wall_s));
+        extra.push((format!("files_{label}"), files as f64));
+        extra.push((format!("disk_bytes_{label}"), bytes as f64));
+        extra.push((format!("compacted_bytes_{label}"),
+                    compacted_bytes as f64));
+        extra.push((format!("spilled_bytes_{label}"),
+                    report.telemetry.store_bytes_spilled as f64));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     // budget governs the QUEUE; workers hold up to W dispatched
     // sessions on top, plus up to W evicted victims mid-spill (one
     // extra session of slack absorbs rehydrate/build overlap)

@@ -24,6 +24,25 @@
 //! precision).  `benches/store_hibernate.rs` measures the flat
 //! resident high-water this buys a 1000-job queue.
 //!
+//! ## Crash-safe recovery
+//!
+//! With an explicit `store_dir` the run is **durable**: a CRC-guarded
+//! fleet manifest (coordinator envelope + job specs) is committed
+//! before the first window, every hibernation image carries a
+//! [`RecoveryRecord`] of the job's scheduler state, and finished jobs
+//! commit a terminal image.  [`FleetScheduler::recover`] reopens the
+//! store (auto-detecting the engine), reads the manifest, and
+//! rebuilds the EDF queue: terminal images short-circuit to their
+//! recorded outcome, live images resume via [`JobRun::recover`], and
+//! jobs with no surviving image restart from scratch — all three
+//! paths land on the **same outcomes as the uninterrupted run**,
+//! because every job is a deterministic function of the manifest
+//! (pinned against the sequential oracle in `rust/tests/recovery.rs`
+//! for every precision and worker count).  `kill_at_window` hard-
+//! aborts the process after the fleet's k-th window (the CI crash
+//! drill); `halt_at_window` is its in-process cousin for tests —
+//! workers stop mid-run and everything in RAM is dropped.
+//!
 //! ## Determinism contract
 //!
 //! Fleet results are **bit-identical for any worker count and any
@@ -40,22 +59,31 @@
 //!   never observable results;
 //! * hibernation moves a job's state between RAM and disk verbatim.
 //!
+//! A *recovered* fleet keeps the outcome half of the contract (the
+//! terminal [`JobOutcome`]s are bit-identical); the pre-crash event
+//! and metric streams died with the crashed process and are not
+//! replayed.
+//!
 //! What the worker count *does* change is wall-clock — measured by
 //! `benches/fleet_throughput.rs` (`BENCH_fleet.json`) — and which
 //! jobs happen to hibernate (store counters are telemetry, not part
 //! of the deterministic result).
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::{CoordinatorConfig, Event, JobOutcome, JobRun, JobSpec,
             JobStatus};
-use crate::runtime::Runtime;
-use crate::store::SessionStore;
+use crate::data::task::TaskKind;
+use crate::optim::OptimizerKind;
+use crate::runtime::{Precision, Runtime};
+use crate::scheduler::Policy;
+use crate::store::image::{Reader, RecoveryRecord, RecoveryStatus};
+use crate::store::{crc32, EngineKind, SessionImage, SessionStore};
 use crate::telemetry::MetricLog;
 
 /// Fleet configuration: the per-job coordinator envelope plus the
@@ -79,8 +107,26 @@ pub struct FleetConfig {
     pub resident_budget_bytes: Option<u64>,
     /// Where hibernated session images live.  `None` = a fresh
     /// per-run directory under the system temp dir, removed after
-    /// the run.
+    /// the run.  `Some(dir)` additionally makes the run **durable**:
+    /// the fleet manifest and terminal images are committed there,
+    /// and [`FleetScheduler::recover`] can resume a crashed run.
     pub store_dir: Option<PathBuf>,
+    /// Which store backend a fresh store uses: one file per image
+    /// ([`EngineKind::Dir`]) or the crash-safe single-file paged
+    /// store ([`EngineKind::Paged`]).  Recovery auto-detects the
+    /// engine from the directory, so this only matters at creation.
+    pub store_engine: EngineKind,
+    /// Hard-abort the process (`std::process::abort`) after the
+    /// fleet's k-th completed window — the crash drill behind the CI
+    /// kill-and-recover job.  The abort happens after that window's
+    /// store commits, so recovery resumes from exactly window k.
+    pub kill_at_window: Option<u64>,
+    /// In-process crash simulation for tests: after the fleet's k-th
+    /// window the workers stop and `run` errors out, dropping every
+    /// queued `JobRun` (all RAM state) while leaving the store as a
+    /// crash would.  Prefer this over `kill_at_window` anywhere a
+    /// real abort is unacceptable.
+    pub halt_at_window: Option<u64>,
 }
 
 impl Default for FleetConfig {
@@ -90,6 +136,9 @@ impl Default for FleetConfig {
             workers: 2,
             resident_budget_bytes: None,
             store_dir: None,
+            store_engine: EngineKind::Dir,
+            kill_at_window: None,
+            halt_at_window: None,
         }
     }
 }
@@ -139,6 +188,9 @@ pub struct FleetTelemetry {
     pub resident_high_water_bytes: u64,
     /// Total image bytes written to the hibernation store.
     pub store_bytes_spilled: u64,
+    /// Jobs resumed from a live image by [`FleetScheduler::recover`]
+    /// (0 for ordinary runs).
+    pub recovered_jobs: usize,
 }
 
 impl FleetTelemetry {
@@ -169,6 +221,7 @@ impl FleetTelemetry {
             rehydrations: 0,
             resident_high_water_bytes: 0,
             store_bytes_spilled: 0,
+            recovered_jobs: 0,
         };
         for o in outcomes {
             match o.status {
@@ -187,6 +240,7 @@ impl FleetTelemetry {
                 Event::Denied { reason, .. } => {
                     *t.denied_by_reason.entry(*reason).or_insert(0) += 1;
                 }
+                Event::Recovered { .. } => t.recovered_jobs += 1,
                 _ => {}
             }
         }
@@ -214,17 +268,23 @@ pub struct FleetReport {
     pub first_dispatch: Vec<usize>,
 }
 
-/// A unit of queued fleet work: a job not yet admitted, or a live run
-/// between two windows (possibly hibernated into the store).
+/// A unit of queued fleet work: a job not yet admitted, a live run
+/// between two windows (possibly hibernated into the store), or a
+/// crash-recovered job whose state still lives entirely in the store.
 enum Task {
     Fresh(usize, JobSpec),
     Running(Box<JobRun>),
+    /// A job a recovering fleet found a live image for.  The image
+    /// stays on disk until a worker dispatches the job
+    /// ([`JobRun::recover`] reads it back), so recovery startup cost
+    /// is O(manifest), not O(total parameter bytes).
+    Stored(usize, JobSpec),
 }
 
 impl Task {
     fn resident_param_bytes(&self) -> u64 {
         match self {
-            Task::Fresh(..) => 0,
+            Task::Fresh(..) | Task::Stored(..) => 0,
             Task::Running(r) => r.resident_param_bytes(),
         }
     }
@@ -232,11 +292,12 @@ impl Task {
 
 /// EDF dispatch key: earliest deadline first (best-effort jobs carry
 /// `f64::INFINITY`), then enqueue order (FIFO within a class, which
-/// also keeps keys unique — `seq` never repeats).
+/// also keeps keys unique — `seq` never repeats).  Public so the
+/// property tests can pin the ordering law directly.
 #[derive(Clone, Copy, Debug)]
-struct QueueKey {
-    deadline: f64,
-    seq: u64,
+pub struct QueueKey {
+    pub deadline: f64,
+    pub seq: u64,
 }
 
 impl PartialEq for QueueKey {
@@ -280,6 +341,214 @@ impl FleetState {
         self.resident_live += delta_up;
         self.high_water = self.high_water.max(self.resident_live);
     }
+
+    fn fresh(queue: BTreeMap<QueueKey, Task>, n: usize) -> FleetState {
+        FleetState {
+            queue,
+            next_seq: n as u64,
+            resident_queued: 0,
+            resident_live: 0,
+            high_water: 0,
+            hibernations: 0,
+            rehydrations: 0,
+            first_dispatch: Vec::with_capacity(n),
+        }
+    }
+}
+
+type Finished = (JobOutcome, Vec<Event>, MetricLog);
+
+/// Borrow bundle a worker thread drives against.
+struct DriveCtx<'a> {
+    state: &'a Mutex<FleetState>,
+    finished: &'a Mutex<Vec<Option<Finished>>>,
+    failure: &'a Mutex<Option<anyhow::Error>>,
+    store: Option<&'a SessionStore>,
+    budget: Option<u64>,
+    /// Write terminal images when jobs finish (explicit `store_dir`).
+    durable: bool,
+    /// Fleet-wide completed-window counter (the kill/halt clock).
+    windows_done: &'a AtomicU64,
+    halted: &'a AtomicBool,
+}
+
+/// The key the fleet manifest lives under in a durable store.
+const MANIFEST_KEY: &str = "fleet-manifest";
+const MANIFEST_MAGIC: &[u8; 4] = b"PLFM";
+const MANIFEST_VERSION: u32 = 1;
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Serialize the coordinator envelope + job specs — everything a
+/// recovering process needs to rebuild the run deterministically.
+/// Same framing discipline as the session image: magic, version,
+/// little-endian fields, trailing CRC32.
+fn encode_manifest(coord: &CoordinatorConfig, jobs: &[JobSpec])
+    -> Vec<u8>
+{
+    let mut out = Vec::new();
+    out.extend_from_slice(MANIFEST_MAGIC);
+    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    put_str(&mut out, &coord.device_preset);
+    let p = &coord.policy;
+    out.push(p.require_charging as u8);
+    out.extend_from_slice(&p.min_battery_pct.to_bits().to_le_bytes());
+    out.push(p.require_screen_off as u8);
+    out.extend_from_slice(&p.max_temp_c.to_bits().to_le_bytes());
+    out.extend_from_slice(&p.min_free_bytes.to_le_bytes());
+    out.extend_from_slice(&coord.steps_per_window.to_le_bytes());
+    out.extend_from_slice(
+        &coord.trace_step_minutes.to_bits().to_le_bytes(),
+    );
+    out.extend_from_slice(&(coord.max_windows as u64).to_le_bytes());
+    out.extend_from_slice(&coord.trace_seed.to_le_bytes());
+    out.extend_from_slice(&(jobs.len() as u32).to_le_bytes());
+    for j in jobs {
+        put_str(&mut out, &j.config);
+        put_str(&mut out, j.task.label());
+        out.push(match j.optimizer {
+            OptimizerKind::MeZo => 0,
+            OptimizerKind::Adam => 1,
+        });
+        out.push(j.precision.code());
+        out.extend_from_slice(&(j.batch as u64).to_le_bytes());
+        out.extend_from_slice(&j.steps.to_le_bytes());
+        out.extend_from_slice(&j.seed.to_le_bytes());
+        out.extend_from_slice(
+            &j.deadline_minutes
+                .unwrap_or(f64::NAN)
+                .to_bits()
+                .to_le_bytes(),
+        );
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn decode_manifest(bytes: &[u8])
+    -> Result<(CoordinatorConfig, Vec<JobSpec>)>
+{
+    ensure!(bytes.len() >= 12,
+            "fleet manifest truncated ({} bytes)", bytes.len());
+    ensure!(&bytes[0..4] == MANIFEST_MAGIC,
+            "not a fleet manifest (bad magic)");
+    let body = &bytes[..bytes.len() - 4];
+    let stored = u32::from_le_bytes([
+        bytes[bytes.len() - 4],
+        bytes[bytes.len() - 3],
+        bytes[bytes.len() - 2],
+        bytes[bytes.len() - 1],
+    ]);
+    let actual = crc32(body);
+    ensure!(stored == actual,
+            "fleet manifest corrupt: CRC {stored:#010x} on disk, \
+             {actual:#010x} computed");
+    let mut r = Reader { buf: body, pos: 4 };
+    let version = r.u32()?;
+    ensure!(version == MANIFEST_VERSION,
+            "fleet manifest version {version} (this build reads \
+             {MANIFEST_VERSION})");
+    let device_preset = r.string()?;
+    let policy = Policy {
+        require_charging: r.u8()? != 0,
+        min_battery_pct: f64::from_bits(r.u64()?),
+        require_screen_off: r.u8()? != 0,
+        max_temp_c: f64::from_bits(r.u64()?),
+        min_free_bytes: r.u64()?,
+    };
+    let coord = CoordinatorConfig {
+        device_preset,
+        policy,
+        steps_per_window: r.u64()?,
+        trace_step_minutes: f64::from_bits(r.u64()?),
+        max_windows: r.u64()? as usize,
+        trace_seed: r.u64()?,
+    };
+    let n_jobs = r.u32()? as usize;
+    ensure!(n_jobs <= 1 << 24, "implausible job count {n_jobs}");
+    let mut jobs = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        let config = r.string()?;
+        let task_label = r.string()?;
+        let task = TaskKind::parse(&task_label).with_context(|| {
+            format!("unknown task '{task_label}' for job {i} in fleet \
+                     manifest")
+        })?;
+        let optimizer = match r.u8()? {
+            0 => OptimizerKind::MeZo,
+            1 => OptimizerKind::Adam,
+            c => bail!("unknown optimizer code {c} for job {i}"),
+        };
+        let precision = Precision::from_code(r.u8()?)
+            .with_context(|| format!(
+                "unknown precision code for job {i}"
+            ))?;
+        let batch = r.u64()? as usize;
+        let steps = r.u64()?;
+        let seed = r.u64()?;
+        let deadline = f64::from_bits(r.u64()?);
+        jobs.push(JobSpec {
+            config,
+            task,
+            optimizer,
+            batch,
+            steps,
+            seed,
+            precision,
+            deadline_minutes: if deadline.is_nan() {
+                None
+            } else {
+                Some(deadline)
+            },
+        });
+    }
+    ensure!(r.pos == body.len(),
+            "fleet manifest has {} trailing bytes",
+            body.len() - r.pos);
+    Ok((coord, jobs))
+}
+
+/// The outcome a terminal image records, reconstructed without
+/// re-running anything.  Field-for-field this mirrors
+/// `JobRun::outcome_with` (and the admission-failure literal in
+/// `JobRun::new`), evaluated over the counters the record carries —
+/// the recovery bit-identity tests diff exactly this against the
+/// oracle.
+fn outcome_from_terminal(
+    coord: &CoordinatorConfig,
+    image: &SessionImage,
+    rec: &RecoveryRecord,
+) -> JobOutcome {
+    let status = match rec.status {
+        RecoveryStatus::Completed => JobStatus::Completed,
+        RecoveryStatus::Stalled => JobStatus::Stalled,
+        RecoveryStatus::Failed => JobStatus::Failed,
+        RecoveryStatus::Live => {
+            unreachable!("caller dispatches live images to \
+                          JobRun::recover")
+        }
+    };
+    let deadline_missed = if rec.deadline_minutes.is_nan() {
+        false
+    } else {
+        status != JobStatus::Completed
+            || rec.window_idx as f64 * coord.trace_step_minutes
+                > rec.deadline_minutes
+    };
+    JobOutcome {
+        status,
+        optimizer: image.optimizer,
+        steps_done: image.step,
+        final_loss: rec.job_last_loss,
+        windows_used: rec.windows_used as usize,
+        windows_denied: rec.windows_denied as usize,
+        sim_step_seconds: rec.sim_step_seconds,
+        deadline_missed,
+    }
 }
 
 /// Distinguishes concurrent fleets in one process (store directories
@@ -298,65 +567,172 @@ impl<'rt> FleetScheduler<'rt> {
         FleetScheduler { rt, cfg }
     }
 
+    /// Open the hibernation store (when the config needs one): the
+    /// configured directory, or a fresh scoped temp dir.  Returns
+    /// `(store, scoped)` where `scoped` means "remove after the run".
+    fn open_store(&self) -> Result<(Option<SessionStore>, bool)> {
+        let durable = self.cfg.store_dir.is_some();
+        if self.cfg.resident_budget_bytes.is_none() && !durable {
+            return Ok((None, false));
+        }
+        let (dir, scoped) = match &self.cfg.store_dir {
+            Some(d) => (d.clone(), false),
+            None => {
+                let run = FLEET_RUN_ID.fetch_add(1, Ordering::Relaxed);
+                let d = std::env::temp_dir().join(format!(
+                    "pocketllm_fleet_store_{}_{run}",
+                    std::process::id()
+                ));
+                (d, true)
+            }
+        };
+        // write-through (0-byte memory cache), so hibernated
+        // parameters occupy disk, not RAM
+        let store =
+            SessionStore::open_with(self.cfg.store_engine, &dir, 0)
+                .context("opening fleet session store")?;
+        Ok((Some(store), scoped))
+    }
+
     /// Run every job to a terminal state.  Errors from any worker abort
     /// the fleet (first error wins; remaining queued work is dropped).
     pub fn run(&self, jobs: &[JobSpec]) -> Result<FleetReport> {
         let n = jobs.len();
-        let budget = self.cfg.resident_budget_bytes;
-        // the hibernation store: write-through (0-byte memory cache),
-        // so hibernated parameters occupy disk, not RAM
-        let (store, scoped_dir) = if budget.is_some() {
-            let dir = match &self.cfg.store_dir {
-                Some(d) => (d.clone(), false),
-                None => {
-                    let run =
-                        FLEET_RUN_ID.fetch_add(1, Ordering::Relaxed);
-                    let d = std::env::temp_dir().join(format!(
-                        "pocketllm_fleet_store_{}_{run}",
-                        std::process::id()
-                    ));
-                    (d, true)
-                }
-            };
-            (
-                Some(
-                    SessionStore::with_mem_capacity(&dir.0, 0)
-                        .context("opening fleet session store")?,
-                ),
-                dir.1,
-            )
-        } else {
-            (None, false)
-        };
-
-        let state = Mutex::new(FleetState {
-            queue: jobs
-                .iter()
-                .cloned()
-                .enumerate()
-                .map(|(i, j)| {
-                    let key = QueueKey {
-                        deadline: j
-                            .deadline_minutes
-                            .unwrap_or(f64::INFINITY),
-                        seq: i as u64,
-                    };
-                    (key, Task::Fresh(i, j))
-                })
-                .collect(),
-            next_seq: n as u64,
-            resident_queued: 0,
-            resident_live: 0,
-            high_water: 0,
-            hibernations: 0,
-            rehydrations: 0,
-            first_dispatch: Vec::with_capacity(n),
-        });
-        type Finished = (JobOutcome, Vec<Event>, MetricLog);
+        let durable = self.cfg.store_dir.is_some();
+        let (store, scoped_dir) = self.open_store()?;
+        if durable {
+            // the manifest commits BEFORE any window runs: a crash at
+            // any later byte finds a recoverable store
+            let store = store.as_ref().expect("durable run has a store");
+            store
+                .put_raw(MANIFEST_KEY, &encode_manifest(&self.cfg.coord,
+                                                        jobs))
+                .context("writing fleet manifest")?;
+        }
+        let queue: BTreeMap<QueueKey, Task> = jobs
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, j)| {
+                let key = QueueKey {
+                    deadline: j
+                        .deadline_minutes
+                        .unwrap_or(f64::INFINITY),
+                    seq: i as u64,
+                };
+                (key, Task::Fresh(i, j))
+            })
+            .collect();
+        let state = Mutex::new(FleetState::fresh(queue, n));
         let finished: Mutex<Vec<Option<Finished>>> =
             Mutex::new((0..n).map(|_| None).collect());
-        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let result =
+            self.drive(n, store.as_ref(), durable, &state, &finished);
+        if scoped_dir {
+            if let Some(st) = &store {
+                st.cleanup();
+            }
+        }
+        result
+    }
 
+    /// Resume a crashed durable run from its store directory: reopen
+    /// the store (engine auto-detected), decode the manifest, and
+    /// drive every job to a terminal state — terminal images become
+    /// outcomes directly, live images resume mid-run, missing images
+    /// restart from scratch.  Outcomes are bit-identical to the
+    /// uninterrupted run.  The coordinator envelope comes from the
+    /// MANIFEST (determinism demands the original seeds and policy);
+    /// only pool-shape knobs (`workers`, kill/halt) are taken from
+    /// `self.cfg`.
+    pub fn recover(&self, store_dir: impl AsRef<Path>)
+        -> Result<FleetReport>
+    {
+        let dir = store_dir.as_ref();
+        let store = SessionStore::open_auto(dir, 0).with_context(|| {
+            format!("opening fleet store at {}", dir.display())
+        })?;
+        let manifest = store.get_raw(MANIFEST_KEY).context(
+            "no fleet manifest in the store — was this directory \
+             written by a durable fleet run (one with --store-dir)?",
+        )?;
+        let (coord, jobs) = decode_manifest(&manifest)
+            .context("decoding fleet manifest")?;
+        let n = jobs.len();
+        let sched = FleetScheduler {
+            rt: self.rt,
+            cfg: FleetConfig { coord, ..self.cfg.clone() },
+        };
+
+        let mut queue: BTreeMap<QueueKey, Task> = BTreeMap::new();
+        let mut finished: Vec<Option<Finished>> =
+            (0..n).map(|_| None).collect();
+        for (i, spec) in jobs.iter().enumerate() {
+            let key = format!("job{i}");
+            let edf = QueueKey {
+                deadline: spec
+                    .deadline_minutes
+                    .unwrap_or(f64::INFINITY),
+                seq: i as u64,
+            };
+            if !store.contains(&key) {
+                // never hibernated (or its first image never
+                // committed): replay from the top — deterministic,
+                // so the outcome is unchanged
+                queue.insert(edf, Task::Fresh(i, spec.clone()));
+                continue;
+            }
+            let image = store.get(&key).with_context(|| {
+                format!("reading surviving image for job {i}")
+            })?;
+            let rec = image.recovery.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "image for job {i} carries no recovery record"
+                )
+            })?;
+            ensure!(rec.job_idx as usize == i,
+                    "image under key {key} says it is job {}",
+                    rec.job_idx);
+            if rec.status == RecoveryStatus::Live {
+                queue.insert(edf, Task::Stored(i, spec.clone()));
+            } else {
+                finished[i] = Some((
+                    outcome_from_terminal(&sched.cfg.coord, &image,
+                                          &rec),
+                    Vec::new(),
+                    MetricLog::new(),
+                ));
+            }
+        }
+        let state = Mutex::new(FleetState::fresh(queue, n));
+        let finished = Mutex::new(finished);
+        sched.drive(n, Some(&store), true, &state, &finished)
+    }
+
+    /// Spawn the worker pool over a prepared queue and fold the
+    /// results — the shared back half of [`run`](FleetScheduler::run)
+    /// and [`recover`](FleetScheduler::recover).
+    fn drive(
+        &self,
+        n: usize,
+        store: Option<&SessionStore>,
+        durable: bool,
+        state: &Mutex<FleetState>,
+        finished: &Mutex<Vec<Option<Finished>>>,
+    ) -> Result<FleetReport> {
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let windows_done = AtomicU64::new(0);
+        let halted = AtomicBool::new(false);
+        let ctx = DriveCtx {
+            state,
+            finished,
+            failure: &failure,
+            store,
+            budget: self.cfg.resident_budget_bytes,
+            durable,
+            windows_done: &windows_done,
+            halted: &halted,
+        };
         let workers = self.cfg.workers.max(1).min(n.max(1));
         // shared compute budget: W workers each drive sessions whose
         // kernels would otherwise size their own thread pools to the
@@ -370,29 +746,27 @@ impl<'rt> FleetScheduler<'rt> {
         let _budget_guard = math::register_pool_workers(workers);
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| {
-                    self.worker_loop(&state, &finished, &failure,
-                                     store.as_ref(), budget)
-                });
+                s.spawn(|| self.worker_loop(&ctx));
             }
         });
 
         if let Some(e) = failure.into_inner().unwrap() {
-            if scoped_dir {
-                if let Some(st) = &store {
-                    st.cleanup();
-                }
-            }
             return Err(e);
+        }
+        if halted.load(Ordering::SeqCst) {
+            bail!(
+                "fleet halted after window {} (simulated crash) — \
+                 resume with `fleet --recover`",
+                windows_done.load(Ordering::SeqCst)
+            );
         }
 
         // deterministic aggregation: fold per-job streams in job order
         let mut outcomes = Vec::with_capacity(n);
         let mut events = Vec::new();
         let mut metrics = MetricLog::new();
-        for (i, slot) in
-            finished.into_inner().unwrap().into_iter().enumerate()
-        {
+        let slots = std::mem::take(&mut *finished.lock().unwrap());
+        for (i, slot) in slots.into_iter().enumerate() {
             let (outcome, ev, m) = slot.unwrap_or_else(|| {
                 panic!("job {i} never reached a terminal state")
             });
@@ -406,45 +780,40 @@ impl<'rt> FleetScheduler<'rt> {
         telemetry.tokenizer_cache_hits = hits1.saturating_sub(hits0);
         telemetry.tokenizer_cache_builds =
             builds1.saturating_sub(builds0);
-        let st = state.into_inner().unwrap();
-        telemetry.hibernations = st.hibernations;
-        telemetry.rehydrations = st.rehydrations;
-        telemetry.resident_high_water_bytes = st.high_water;
-        if let Some(store) = &store {
-            telemetry.store_bytes_spilled = store.stats().bytes_spilled;
-            if scoped_dir {
-                store.cleanup();
-            }
+        {
+            let st = state.lock().unwrap();
+            telemetry.hibernations = st.hibernations;
+            telemetry.rehydrations = st.rehydrations;
+            telemetry.resident_high_water_bytes = st.high_water;
         }
+        if let Some(store) = store {
+            telemetry.store_bytes_spilled = store.stats().bytes_spilled;
+        }
+        let first_dispatch =
+            std::mem::take(&mut state.lock().unwrap().first_dispatch);
         Ok(FleetReport {
             outcomes,
             events,
             metrics,
             telemetry,
-            first_dispatch: st.first_dispatch,
+            first_dispatch,
         })
     }
 
-    /// One worker: pop the EDF-earliest task, rehydrate it if needed,
-    /// drive one window, requeue, enforce the resident budget.
-    fn worker_loop(
-        &self,
-        state: &Mutex<FleetState>,
-        finished: &Mutex<Vec<Option<(JobOutcome, Vec<Event>,
-                                     MetricLog)>>>,
-        failure: &Mutex<Option<anyhow::Error>>,
-        store: Option<&SessionStore>,
-        budget: Option<u64>,
-    ) {
+    /// One worker: pop the EDF-earliest task, rehydrate/recover it if
+    /// needed, drive one window, requeue, enforce the resident budget.
+    fn worker_loop(&self, ctx: &DriveCtx<'_>) {
         let fail = |e: anyhow::Error| {
-            failure.lock().unwrap().get_or_insert(e);
+            ctx.failure.lock().unwrap().get_or_insert(e);
         };
         loop {
-            if failure.lock().unwrap().is_some() {
+            if ctx.failure.lock().unwrap().is_some()
+                || ctx.halted.load(Ordering::SeqCst)
+            {
                 return;
             }
             let task = {
-                let mut st = state.lock().unwrap();
+                let mut st = ctx.state.lock().unwrap();
                 match st.queue.pop_first() {
                     Some((_k, task)) => {
                         st.resident_queued = st
@@ -452,8 +821,12 @@ impl<'rt> FleetScheduler<'rt> {
                             .saturating_sub(
                                 task.resident_param_bytes(),
                             );
-                        if let Task::Fresh(idx, _) = &task {
-                            st.first_dispatch.push(*idx);
+                        match &task {
+                            Task::Fresh(idx, _)
+                            | Task::Stored(idx, _) => {
+                                st.first_dispatch.push(*idx);
+                            }
+                            Task::Running(_) => {}
                         }
                         Some(task)
                     }
@@ -470,7 +843,7 @@ impl<'rt> FleetScheduler<'rt> {
                         Ok(r) => {
                             let r = Box::new(r);
                             let sz = r.resident_param_bytes();
-                            state.lock().unwrap().note_live(sz);
+                            ctx.state.lock().unwrap().note_live(sz);
                             r
                         }
                         Err(e) => {
@@ -479,9 +852,46 @@ impl<'rt> FleetScheduler<'rt> {
                         }
                     }
                 }
+                Task::Stored(idx, spec) => {
+                    // the live image stays on disk until now; rebuild
+                    // the whole JobRun from it
+                    let Some(store) = ctx.store else {
+                        fail(anyhow::anyhow!(
+                            "stored job without a session store"
+                        ));
+                        return;
+                    };
+                    let image =
+                        match store.get(&format!("job{idx}")) {
+                            Ok(i) => i,
+                            Err(e) => {
+                                fail(e.context(format!(
+                                    "reading image for recovered \
+                                     job {idx}"
+                                )));
+                                return;
+                            }
+                        };
+                    match JobRun::recover(self.rt, &self.cfg.coord,
+                                          &spec, image)
+                    {
+                        Ok(r) => {
+                            let r = Box::new(r);
+                            let sz = r.resident_param_bytes();
+                            ctx.state.lock().unwrap().note_live(sz);
+                            r
+                        }
+                        Err(e) => {
+                            fail(e.context(format!(
+                                "recovering job {idx}"
+                            )));
+                            return;
+                        }
+                    }
+                }
             };
             if run.is_hibernated() {
-                let Some(store) = store else {
+                let Some(store) = ctx.store else {
                     fail(anyhow::anyhow!(
                         "hibernated job without a session store"
                     ));
@@ -494,7 +904,7 @@ impl<'rt> FleetScheduler<'rt> {
                     return;
                 }
                 let sz = run.resident_param_bytes();
-                let mut st = state.lock().unwrap();
+                let mut st = ctx.state.lock().unwrap();
                 st.rehydrations += 1;
                 st.note_live(sz);
             }
@@ -510,7 +920,7 @@ impl<'rt> FleetScheduler<'rt> {
                     let mut victims: Vec<(QueueKey, Box<JobRun>)> =
                         Vec::new();
                     {
-                        let mut st = state.lock().unwrap();
+                        let mut st = ctx.state.lock().unwrap();
                         let key = QueueKey {
                             deadline,
                             seq: st.next_seq,
@@ -518,7 +928,7 @@ impl<'rt> FleetScheduler<'rt> {
                         st.next_seq += 1;
                         st.queue.insert(key, Task::Running(run));
                         st.resident_queued += sz;
-                        if let Some(budget) = budget {
+                        if let Some(budget) = ctx.budget {
                             while st.resident_queued > budget {
                                 // evict the resident job that will
                                 // run LAST (largest EDF key)
@@ -562,7 +972,7 @@ impl<'rt> FleetScheduler<'rt> {
                     // EDF keys
                     for (vk, mut vr) in victims {
                         let vsz = vr.resident_param_bytes();
-                        let Some(store) = store else {
+                        let Some(store) = ctx.store else {
                             fail(anyhow::anyhow!(
                                 "budget eviction without a store"
                             ));
@@ -570,7 +980,8 @@ impl<'rt> FleetScheduler<'rt> {
                         };
                         match vr.hibernate_to(store) {
                             Ok(_) => {
-                                let mut st = state.lock().unwrap();
+                                let mut st =
+                                    ctx.state.lock().unwrap();
                                 st.hibernations += 1;
                                 st.resident_live = st
                                     .resident_live
@@ -586,13 +997,59 @@ impl<'rt> FleetScheduler<'rt> {
                             }
                         }
                     }
+                    // the crash drill: the fleet's window clock ticks
+                    // AFTER this window's store writes committed, so
+                    // "kill at window k" recovers to exactly k
+                    // windows of progress
+                    let w = ctx
+                        .windows_done
+                        .fetch_add(1, Ordering::SeqCst)
+                        + 1;
+                    if let Some(k) = self.cfg.halt_at_window {
+                        if w >= k {
+                            ctx.halted.store(true, Ordering::SeqCst);
+                            return;
+                        }
+                    }
+                    if let Some(k) = self.cfg.kill_at_window {
+                        if w >= k {
+                            // no unwinding, no Drop, no flush — the
+                            // store must already be consistent on
+                            // disk, which is the whole point
+                            std::process::abort();
+                        }
+                    }
                 }
                 Ok(false) => {
                     let sz = run.resident_param_bytes();
                     let idx = run.idx;
+                    if ctx.durable {
+                        let Some(store) = ctx.store else {
+                            fail(anyhow::anyhow!(
+                                "durable fleet without a store"
+                            ));
+                            return;
+                        };
+                        let image = match run.terminal_image() {
+                            Ok(i) => i,
+                            Err(e) => {
+                                fail(e);
+                                return;
+                            }
+                        };
+                        if let Err(e) =
+                            store.put(&run.store_key(), &image)
+                        {
+                            fail(e.context(format!(
+                                "writing terminal image for job \
+                                 {idx}"
+                            )));
+                            return;
+                        }
+                    }
                     let result = run.finish();
-                    finished.lock().unwrap()[idx] = Some(result);
-                    let mut st = state.lock().unwrap();
+                    ctx.finished.lock().unwrap()[idx] = Some(result);
+                    let mut st = ctx.state.lock().unwrap();
                     st.resident_live =
                         st.resident_live.saturating_sub(sz);
                 }
@@ -645,5 +1102,111 @@ mod tests {
         .collect();
         assert_eq!(order, vec![2, 1, 3, 0],
                    "deadline 10 first, 30s FIFO, best-effort last");
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_exactly() {
+        use crate::data::task::TaskKind;
+        let coord = CoordinatorConfig {
+            device_preset: "oppo-reno6".into(),
+            policy: Policy::overnight(),
+            steps_per_window: 3,
+            trace_step_minutes: 7.5,
+            max_windows: 123,
+            trace_seed: 99,
+        };
+        let jobs = vec![
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(11)
+                .seed(5)
+                .deadline(640.0),
+            JobSpec::new("pocket-roberta", TaskKind::Sst2,
+                         OptimizerKind::Adam)
+                .batch(8)
+                .precision(Precision::F16),
+        ];
+        let bytes = encode_manifest(&coord, &jobs);
+        let (c2, j2) = decode_manifest(&bytes).unwrap();
+        assert_eq!(c2.device_preset, coord.device_preset);
+        assert_eq!(c2.steps_per_window, 3);
+        assert_eq!(c2.trace_step_minutes, 7.5);
+        assert_eq!(c2.max_windows, 123);
+        assert_eq!(c2.trace_seed, 99);
+        assert_eq!(c2.policy.require_charging,
+                   coord.policy.require_charging);
+        assert_eq!(c2.policy.min_free_bytes,
+                   coord.policy.min_free_bytes);
+        assert_eq!(j2.len(), 2);
+        assert_eq!(j2[0].config, "pocket-tiny");
+        assert_eq!(j2[0].deadline_minutes, Some(640.0));
+        assert_eq!(j2[0].steps, 11);
+        assert_eq!(j2[1].optimizer, OptimizerKind::Adam);
+        assert_eq!(j2[1].precision, Precision::F16);
+        assert_eq!(j2[1].batch, 8);
+        assert_eq!(j2[1].deadline_minutes, None);
+
+        // a flipped byte anywhere is a loud CRC error
+        let mut bad = bytes.clone();
+        bad[10] ^= 0x40;
+        let err = decode_manifest(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+    }
+
+    #[test]
+    fn terminal_outcome_reconstruction_matches_outcome_with() {
+        // the completed case: finished before its deadline
+        let coord = CoordinatorConfig::default();
+        let image = SessionImage {
+            config: "pocket-tiny".into(),
+            optimizer: OptimizerKind::MeZo,
+            precision: Precision::F32,
+            task: crate::data::task::TaskKind::Sst2,
+            step: 20,
+            master_seed: 1,
+            data_seed: 2,
+            batcher_pos: 0,
+            last_loss: 0.5,
+            batch: 4,
+            params: Vec::new(),
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+            recovery: None,
+        };
+        let rec = RecoveryRecord {
+            job_idx: 0,
+            status: RecoveryStatus::Completed,
+            steps_target: 20,
+            deadline_minutes: 10_000.0,
+            window_idx: 80,
+            windows_used: 5,
+            windows_denied: 75,
+            sim_step_seconds: 123.25,
+            job_last_loss: 0.5,
+            thermal_sustained_s: 0.0,
+        };
+        let o = outcome_from_terminal(&coord, &image, &rec);
+        assert_eq!(o.status, JobStatus::Completed);
+        assert_eq!(o.steps_done, 20);
+        assert_eq!(o.windows_used, 5);
+        assert_eq!(o.windows_denied, 75);
+        assert!(!o.deadline_missed,
+                "80 windows x 10 min = 800 min < 10000 min deadline");
+
+        // stalled with a deadline is always a miss
+        let stalled = RecoveryRecord {
+            status: RecoveryStatus::Stalled,
+            ..rec
+        };
+        assert!(outcome_from_terminal(&coord, &image, &stalled)
+                    .deadline_missed);
+        // best-effort (NaN deadline) never misses
+        let best_effort = RecoveryRecord {
+            status: RecoveryStatus::Stalled,
+            deadline_minutes: f64::NAN,
+            ..rec
+        };
+        assert!(!outcome_from_terminal(&coord, &image, &best_effort)
+                    .deadline_missed);
     }
 }

@@ -33,13 +33,14 @@ pub mod jobs;
 pub use fleet::{FleetConfig, FleetReport, FleetScheduler, FleetTelemetry};
 pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::device::{Device, OomError};
 use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::scheduler::{DayTrace, Policy};
-use crate::store::SessionStore;
+use crate::store::image::{RecoveryRecord, RecoveryStatus};
+use crate::store::{SessionImage, SessionStore};
 use crate::telemetry::MetricLog;
 use crate::tuner::session::{HibernatedSession, Session,
                             SessionBuilder};
@@ -80,6 +81,12 @@ pub enum Event {
     OomFallback { job: usize, from: &'static str, to: &'static str },
     Completed { job: usize, final_loss: f64 },
     Failed { job: usize, error: String },
+    /// A crash-recovered job resumed from its durable image at the
+    /// given simulated window index (the fleet `--recover` path).
+    /// Pre-crash events died with the crashed process — only the
+    /// counters in the image's [`RecoveryRecord`] survive — so a
+    /// recovered job's event stream starts here.
+    Recovered { job: usize, window: usize },
 }
 
 /// Typed OOM detection: is there an [`OomError`] anywhere in the error
@@ -215,6 +222,116 @@ impl JobRun {
         })
     }
 
+    /// Rebuild a mid-run job from its durable [`SessionImage`] — the
+    /// crash-recovery constructor.  The image must carry a
+    /// [`RecoveryRecord`] with status [`RecoveryStatus::Live`]
+    /// (terminal images short-circuit to an outcome in the fleet's
+    /// recover path without ever touching a session).
+    ///
+    /// Everything a resumed job needs is deterministic given the spec
+    /// and the record:
+    ///
+    /// * the day trace is regenerated from the coordinator seed and
+    ///   fast-forwarded `window_idx` ticks;
+    /// * the session scaffold (compiled programs, artifacts, device
+    ///   envelope) is rebuilt with the **image's** optimizer — the
+    ///   post-OOM-fallback choice, so recovery never re-runs the Adam
+    ///   admission that already fell back — then the scaffold's
+    ///   pristine state is swapped for the image's via the same
+    ///   hibernate/rehydrate path the fleet exercises every window;
+    /// * the device thermal clock (the only mutable device state that
+    ///   affects outcomes) is restored from `thermal_sustained_s`.
+    ///
+    /// The continuation is bit-identical to the uninterrupted run —
+    /// pinned against the sequential oracle in
+    /// `rust/tests/recovery.rs` for every precision.
+    pub fn recover(
+        rt: &Runtime,
+        cfg: &CoordinatorConfig,
+        spec: &JobSpec,
+        image: SessionImage,
+    ) -> Result<JobRun> {
+        let rec = image.recovery.ok_or_else(|| {
+            anyhow::anyhow!(
+                "session image carries no recovery record — it was \
+                 not written by a durable fleet run"
+            )
+        })?;
+        ensure!(rec.status == RecoveryStatus::Live,
+                "recover() on a terminal image (status {:?})",
+                rec.status);
+        ensure!(rec.steps_target == spec.steps,
+                "image was written for a {}-step job, spec says {}",
+                rec.steps_target, spec.steps);
+        let idx = rec.job_idx as usize;
+
+        let mut trace = DayTrace::new(
+            cfg.trace_seed,
+            cfg.trace_step_minutes,
+            crate::device::spec::preset(&cfg.device_preset)
+                .map(|s| s.ram_bytes)
+                .unwrap_or(12_000_000_000),
+        )
+        .starting_at(9.0);
+        for _ in 0..rec.window_idx {
+            trace.next();
+        }
+
+        let device = Device::preset(&cfg.device_preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown device preset"))?;
+        let scaffold = SessionBuilder::new(rt, &spec.config)
+            .optimizer(image.optimizer)
+            .batch_size(spec.batch)
+            .task(spec.task)
+            .seed(spec.seed)
+            .precision(spec.precision)
+            .device(device)
+            .build()
+            .with_context(|| format!(
+                "rebuilding the session scaffold for recovered job \
+                 {idx}"
+            ))?;
+        // swap the scaffold's pristine state for the durable one: the
+        // throwaway image from this hibernate is dropped, the remnant
+        // (programs, artifacts, device ledger) is reused verbatim
+        let optimizer = image.optimizer;
+        let steps_done = image.step;
+        let (_pristine, remnant) = scaffold
+            .hibernate()
+            .context("disassembling the rebuilt session scaffold")?;
+        let mut session = remnant
+            .rehydrate(image)
+            .with_context(|| format!(
+                "installing the durable image into recovered job {idx}"
+            ))?;
+        if let Some(dev) = session.device.as_mut() {
+            dev.compute.cool_down();
+            dev.compute.advance(rec.thermal_sustained_s);
+        }
+
+        Ok(JobRun {
+            idx,
+            spec: spec.clone(),
+            cfg: cfg.clone(),
+            trace,
+            session: Some(session),
+            hibernated: None,
+            optimizer,
+            steps_done,
+            last_loss: rec.job_last_loss,
+            windows: rec.windows_used as usize,
+            denied: rec.windows_denied as usize,
+            window_idx: rec.window_idx as usize,
+            sim_step_seconds: rec.sim_step_seconds,
+            done: None,
+            events: vec![Event::Recovered {
+                job: idx,
+                window: rec.window_idx as usize,
+            }],
+            metrics: MetricLog::new(),
+        })
+    }
+
     /// Whether the job has reached a terminal state.  (The in-crate
     /// drivers use [`advance`](JobRun::advance)'s return value instead;
     /// this and [`outcome`](JobRun::outcome) exist for external callers
@@ -261,6 +378,9 @@ impl JobRun {
         if self.done.is_some() || self.hibernated.is_some() {
             return Ok(false);
         }
+        // thermal must be read while the session (and its device)
+        // still lives in self — hibernate() is about to consume it
+        let thermal = self.thermal_sustained_s();
         let Some(session) = self.session.take() else {
             return Ok(false);
         };
@@ -268,7 +388,7 @@ impl JobRun {
         // reachable via programming error) must leave the run in a
         // DEFINED terminal state — never a session-less zombie whose
         // next advance() would panic
-        let (image, remnant) = match session.hibernate() {
+        let (mut image, remnant) = match session.hibernate() {
             Ok(parts) => parts,
             Err(e) => {
                 self.events.push(Event::Failed {
@@ -280,6 +400,11 @@ impl JobRun {
                 return Err(e);
             }
         };
+        // stamp the scheduler-side state: a crash after this put can
+        // rebuild the whole JobRun bit-exactly from the image alone
+        // (see JobRun::recover)
+        image.recovery =
+            Some(self.recovery_record(RecoveryStatus::Live, thermal));
         // commit the remnant BEFORE the store write: if the put
         // fails, the store's failure path retains the image bytes in
         // its memory cache, so this run stays rehydratable
@@ -288,16 +413,100 @@ impl JobRun {
         Ok(true)
     }
 
-    /// Undo [`hibernate_to`](JobRun::hibernate_to): take the image
+    /// Undo [`hibernate_to`](JobRun::hibernate_to): read the image
     /// back out of the store and reassemble the live session.  No-op
     /// when not hibernated.
+    ///
+    /// The read is deliberately NON-consuming ([`SessionStore::get`],
+    /// not `take`): the durable copy stays in the store, so a crash
+    /// between this rehydrate and the job's next hibernation still
+    /// finds a valid image.  Recovery then replays from the older
+    /// window — deterministically, so the terminal outcome is
+    /// identical; the durable copy is only superseded by the next
+    /// `put` (same key) or the terminal image.
     pub fn rehydrate_from(&mut self, store: &SessionStore) -> Result<()> {
         let Some(remnant) = self.hibernated.take() else {
             return Ok(());
         };
-        let image = store.take(&self.store_key())?;
+        let image = store.get(&self.store_key())?;
         self.session = Some(remnant.rehydrate(image)?);
         Ok(())
+    }
+
+    /// Device sustained-thermal seconds (0 when no live session /
+    /// device) — the one piece of mutable device state that recovery
+    /// must restore.
+    fn thermal_sustained_s(&self) -> f64 {
+        self.session
+            .as_ref()
+            .and_then(|s| s.device.as_ref())
+            .map(|d| d.compute.sustained_s())
+            .unwrap_or(0.0)
+    }
+
+    fn recovery_record(
+        &self,
+        status: RecoveryStatus,
+        thermal_sustained_s: f64,
+    ) -> RecoveryRecord {
+        RecoveryRecord {
+            job_idx: self.idx as u32,
+            status,
+            steps_target: self.spec.steps,
+            deadline_minutes: self
+                .spec
+                .deadline_minutes
+                .unwrap_or(f64::NAN),
+            window_idx: self.window_idx as u64,
+            windows_used: self.windows as u64,
+            windows_denied: self.denied as u64,
+            sim_step_seconds: self.sim_step_seconds,
+            job_last_loss: self.last_loss,
+            thermal_sustained_s,
+        }
+    }
+
+    /// The durable record of a finished job: a session image whose
+    /// [`RecoveryRecord`] carries the terminal status.  A recovering
+    /// fleet reads the outcome straight from the record — the job is
+    /// never re-run.  When the session is gone (failed at admission,
+    /// or lost to a hibernate error) the image is a parameter-less
+    /// stub: still a valid `SessionImage`, just with nothing left to
+    /// resume.
+    pub fn terminal_image(&self) -> Result<SessionImage> {
+        let outcome = self.done.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "terminal_image() before the job reached a terminal \
+                 state"
+            )
+        })?;
+        let status = match outcome.status {
+            JobStatus::Completed => RecoveryStatus::Completed,
+            JobStatus::Stalled => RecoveryStatus::Stalled,
+            JobStatus::Failed => RecoveryStatus::Failed,
+        };
+        let thermal = self.thermal_sustained_s();
+        let mut image = match &self.session {
+            Some(s) => s.snapshot_image(self.last_loss)?,
+            None => SessionImage {
+                config: self.spec.config.clone(),
+                optimizer: self.optimizer,
+                precision: self.spec.precision,
+                task: self.spec.task,
+                step: self.steps_done,
+                master_seed: 0,
+                data_seed: self.spec.seed,
+                batcher_pos: 0,
+                last_loss: self.last_loss,
+                batch: self.spec.batch as u32,
+                params: Vec::new(),
+                adam_m: Vec::new(),
+                adam_v: Vec::new(),
+                recovery: None,
+            },
+        };
+        image.recovery = Some(self.recovery_record(status, thermal));
+        Ok(image)
     }
 
     /// The terminal outcome, once [`is_done`](JobRun::is_done).

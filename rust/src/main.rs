@@ -26,13 +26,14 @@
 use anyhow::{bail, Context, Result};
 
 use pocketllm::coordinator::{Coordinator, CoordinatorConfig, FleetConfig,
-                             FleetScheduler, JobSpec};
+                             FleetReport, FleetScheduler, JobSpec};
 use pocketllm::data::task::TaskKind;
 use pocketllm::device::Device;
 use pocketllm::optim::{OptimizerKind, Schedule};
 use pocketllm::report;
 use pocketllm::runtime::{Manifest, Precision, Runtime};
 use pocketllm::scheduler::Policy;
+use pocketllm::store::{EngineKind, PagedEngine, PAGED_FILE_NAME};
 use pocketllm::tuner::checkpoint::Checkpoint;
 use pocketllm::tuner::session::SessionBuilder;
 use pocketllm::util::args::Args;
@@ -42,7 +43,8 @@ const VALUE_FLAGS: &[&str] = &[
     "device", "artifacts", "csv", "checkpoint", "schedule", "windows",
     "report-steps", "trace-seed", "steps-per-window", "queries",
     "batch-window", "jobs", "workers", "policy", "precision",
-    "resident-budget", "deadline", "store-dir",
+    "resident-budget", "deadline", "store-dir", "store-engine",
+    "kill-at-window",
 ];
 
 fn usage() -> &'static str {
@@ -89,6 +91,8 @@ FLEET
                   [--policy overnight|always] [--windows N]
                   [--steps-per-window N] [--trace-seed N]
                   [--resident-budget B] [--deadline M] [--store-dir D]
+                  [--store-engine dir|paged] [--recover]
+                  [--kill-at-window K]
   Runs N independent personalization jobs (seeds 42, 43, ...) over a
   W-worker pool sharing one runtime.  Outcomes are bit-identical for
   any W and any budget (the determinism contract; see README).
@@ -101,13 +105,38 @@ FLEET
                         minutes, so later-queued jobs are tighter and
                         dispatch first (earliest deadline first)
   --store-dir D         hibernation store location (default: a
-                        per-run temp directory)
+                        per-run temp directory).  Giving an explicit
+                        directory also makes the run DURABLE: the job
+                        manifest, every hibernated image, and every
+                        finished job's terminal image are committed
+                        there, so a crashed run can be resumed
+  --store-engine E      store backend: dir (one file per image) or
+                        paged (one CRC-protected paged file; compact
+                        with `store compact`) (default: dir)
+  --recover             resume a crashed durable run from --store-dir
+                        instead of starting fresh: finished jobs keep
+                        their stored outcomes, interrupted jobs replay
+                        from their last committed window, and the
+                        recovered outcomes are bit-identical to an
+                        uninterrupted run
+  --kill-at-window K    abort the whole process (as a crash would)
+                        right after the fleet completes its K-th
+                        window — for exercising --recover
 
 STORE
   pocketllm store inspect PATH
   Print a session image's header, tensor directory, and size
   breakdown (params vs optimizer state vs metadata) after verifying
   its CRC; also summarizes legacy checkpoint directories.
+
+  pocketllm store fsck PATH
+  Verify a paged store file (PATH may also be the directory holding
+  one): root slots, ledger chain, page allocation, and every blob
+  CRC.  Exits nonzero unless the report ends `status: clean`.
+
+  pocketllm store compact PATH
+  Rewrite a paged store file in place, dropping pages orphaned by
+  superseded images, and report the bytes reclaimed.
 "
 }
 
@@ -492,6 +521,43 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         )?),
         None => None,
     };
+    let store_engine =
+        EngineKind::parse(args.get_or("store-engine", "dir"))
+            .context("bad --store-engine (dir|paged)")?;
+    let kill_at_window = match args.flag("kill-at-window") {
+        Some(s) => Some(
+            s.parse::<u64>().context("bad --kill-at-window (windows)")?,
+        ),
+        None => None,
+    };
+    let store_dir = args
+        .flag("store-dir")
+        .map(std::path::PathBuf::from);
+    let fleet_cfg = FleetConfig {
+        coord,
+        workers,
+        resident_budget_bytes: resident_budget,
+        store_dir: store_dir.clone(),
+        store_engine,
+        kill_at_window,
+        ..FleetConfig::default()
+    };
+
+    if args.has("recover") {
+        // resume a crashed durable run: the manifest in the store
+        // supplies the job list and coordinator config; only the pool
+        // knobs (--workers, --resident-budget) come from this
+        // invocation
+        let dir = store_dir.context(
+            "--recover needs --store-dir (the durable store to resume)",
+        )?;
+        println!("fleet: recovering from {}", dir.display());
+        let fleet = FleetScheduler::new(&rt, fleet_cfg);
+        let t0 = std::time::Instant::now();
+        let report = fleet.recover(&dir)?;
+        print_fleet_report(&report, t0.elapsed().as_secs_f64(), workers);
+        return Ok(());
+    }
     let jobs: Vec<JobSpec> = (0..n_jobs)
         .map(|i| {
             let mut j = JobSpec::new(model, task, optimizer)
@@ -523,21 +589,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             pocketllm::util::bytes::fmt_human(b)
         );
     }
-    let fleet = FleetScheduler::new(
-        &rt,
-        FleetConfig {
-            coord,
-            workers,
-            resident_budget_bytes: resident_budget,
-            store_dir: args
-                .flag("store-dir")
-                .map(std::path::PathBuf::from),
-        },
-    );
+    let fleet = FleetScheduler::new(&rt, fleet_cfg);
     let t0 = std::time::Instant::now();
     let report = fleet.run(&jobs)?;
-    let wall = t0.elapsed().as_secs_f64();
+    print_fleet_report(&report, t0.elapsed().as_secs_f64(), workers);
+    Ok(())
+}
 
+/// Shared between `fleet` and `fleet --recover` so CI can diff the
+/// deterministic lines of a recovered run against an uninterrupted
+/// one byte-for-byte.
+fn print_fleet_report(report: &FleetReport, wall: f64, workers: usize) {
     for (i, o) in report.outcomes.iter().enumerate() {
         println!(
             "job {i:>3}: {:<9?} {:<4} steps {:>6}  loss {:.6}  \
@@ -575,6 +637,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         t.sim_step_seconds
     );
     println!("fleet deadline misses: {}", t.deadline_misses);
+    println!("fleet recovered jobs: {}", t.recovered_jobs);
     println!(
         "fleet tokenizer cache: {} builds, {} hits",
         t.tokenizer_cache_builds, t.tokenizer_cache_hits
@@ -589,21 +652,60 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         pocketllm::util::bytes::fmt_human(t.store_bytes_spilled)
     );
     println!("host wall: {wall:.2}s with {workers} workers");
-    Ok(())
+}
+
+/// `store fsck PATH` / `store compact PATH` accept either the paged
+/// file itself or the store directory that contains it.
+fn paged_file_path(path: &str) -> std::path::PathBuf {
+    let p = std::path::PathBuf::from(path);
+    if p.is_dir() {
+        p.join(PAGED_FILE_NAME)
+    } else {
+        p
+    }
 }
 
 fn cmd_store(args: &Args) -> Result<()> {
-    match args.positional.first().map(|s| s.as_str()) {
+    let verb = args.positional.first().map(|s| s.as_str());
+    let path = args.positional.get(1);
+    match verb {
         Some("inspect") => {}
+        Some("fsck") => {
+            let file = paged_file_path(path.context(
+                "usage: pocketllm store fsck PATH",
+            )?);
+            let report = PagedEngine::fsck(&file)
+                .with_context(|| format!("fsck {}", file.display()))?;
+            println!("{report}");
+            if !report.is_clean() {
+                bail!("fsck: {} is corrupt", file.display());
+            }
+            return Ok(());
+        }
+        Some("compact") => {
+            let file = paged_file_path(path.context(
+                "usage: pocketllm store compact PATH",
+            )?);
+            let engine = PagedEngine::open(&file).with_context(|| {
+                format!("opening {}", file.display())
+            })?;
+            let before = std::fs::metadata(&file)?.len();
+            let (moved, reclaimed) = engine.compact()?;
+            let after = std::fs::metadata(&file)?.len();
+            println!(
+                "compacted {}: moved {moved} blob(s), reclaimed \
+                 {reclaimed} B ({before} -> {after} B on disk)",
+                file.display()
+            );
+            return Ok(());
+        }
         other => bail!(
-            "usage: pocketllm store inspect PATH (got {:?})",
+            "usage: pocketllm store <inspect|fsck|compact> PATH \
+             (got {:?})",
             other
         ),
     }
-    let path = args
-        .positional
-        .get(1)
-        .context("usage: pocketllm store inspect PATH")?;
+    let path = path.context("usage: pocketllm store inspect PATH")?;
     let ck = Checkpoint::open(path)?;
     let human = pocketllm::util::bytes::fmt_human;
     println!("checkpoint: {path}");
@@ -760,5 +862,33 @@ mod tests {
         assert_eq!(s.positional,
                    vec!["inspect".to_string(),
                         "/tmp/x.plsi".to_string()]);
+    }
+
+    #[test]
+    fn value_flags_cover_recovery_knobs() {
+        // same regression class: --store-engine / --kill-at-window
+        // must consume their value; --recover stays boolean
+        let a = Args::parse(
+            &argv(&["fleet", "--store-engine", "paged",
+                    "--kill-at-window", "3", "--recover",
+                    "--store-dir", "/tmp/s"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.get_or("store-engine", "dir"), "paged");
+        assert!(EngineKind::parse(a.get_or("store-engine", "dir"))
+            .is_ok());
+        assert_eq!(a.flag("kill-at-window"), Some("3"));
+        assert!(a.has("recover"));
+        assert!(a.positional.is_empty(),
+                "values must not leak into positionals");
+        // fsck/compact are positional verbs like inspect
+        let s = Args::parse(&argv(&["store", "fsck", "/tmp/s"]),
+                            VALUE_FLAGS)
+            .unwrap();
+        assert_eq!(s.positional,
+                   vec!["fsck".to_string(), "/tmp/s".to_string()]);
+        assert_eq!(paged_file_path("/nonexistent/x.plpg"),
+                   std::path::PathBuf::from("/nonexistent/x.plpg"));
     }
 }

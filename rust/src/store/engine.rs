@@ -1,0 +1,312 @@
+//! The storage engine behind [`SessionStore`]: a small key→bytes
+//! contract with two backends.
+//!
+//! * [`DirEngine`] — the historical layout: one `<key>.plsi` file per
+//!   key under a directory.  Writes go through a temp file + rename,
+//!   so a kill mid-write leaves either the old file or the new one,
+//!   never a torn hybrid.
+//! * [`PagedEngine`](super::paged::PagedEngine) — a single paged
+//!   store file with shadow-page commits (see [`super::paged`]).
+//!
+//! [`SessionStore`] layers its LRU memory cache and image-level
+//! validation on top; engines traffic in opaque bytes only.  Every
+//! engine keeps its key set in memory, so `contains`/`len`/
+//! `iter_keys` never touch the filesystem.
+//!
+//! [`SessionStore`]: super::SessionStore
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// File name of the paged store inside a store directory (the
+/// directory stays the unit of configuration for both engines).
+pub const PAGED_FILE_NAME: &str = "sessions.plpg";
+
+/// Which storage engine backs a store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// One file per key under the store directory.
+    Dir,
+    /// One paged, CRC-ledgered, shadow-committed store file.
+    Paged,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "dir" => Ok(EngineKind::Dir),
+            "paged" => Ok(EngineKind::Paged),
+            other => bail!("unknown store engine '{other}' (dir|paged)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Dir => "dir",
+            EngineKind::Paged => "paged",
+        }
+    }
+}
+
+/// Lifetime counters of one engine (monotonic).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub removes: u64,
+    /// Payload bytes durably written (excludes engine metadata).
+    pub bytes_written: u64,
+}
+
+/// The key→bytes contract [`SessionStore`](super::SessionStore) is
+/// built on.  `put` must be atomic-replace and durable (fsync'd):
+/// after it returns, a kill at any point leaves `key` readable with
+/// either the old or the new bytes.
+pub trait StoreEngine: Send + Sync {
+    fn kind(&self) -> EngineKind;
+
+    /// Durably store `bytes` under `key`, replacing atomically.
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+
+    /// Read a copy of `key`'s bytes without consuming the entry.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    /// Remove `key`; `Ok(true)` if it existed.
+    fn remove(&self, key: &str) -> Result<bool>;
+
+    fn contains(&self, key: &str) -> bool;
+
+    /// Number of stored keys.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All stored keys, sorted.
+    fn iter_keys(&self) -> Vec<String>;
+
+    /// Read and consume: the entry is removed only after the bytes
+    /// are safely in hand, so a failed read stays retryable.
+    fn take(&self, key: &str) -> Result<Vec<u8>> {
+        let bytes = self.get(key)?;
+        self.remove(key)?;
+        Ok(bytes)
+    }
+
+    fn stats(&self) -> EngineStats;
+
+    /// Bytes the engine currently occupies on disk.
+    fn disk_bytes(&self) -> u64;
+
+    /// Filesystem objects the engine uses (files, not directories) —
+    /// the inode-pressure axis `BENCH_store.json` compares.
+    fn file_count(&self) -> u64;
+}
+
+struct DirInner {
+    keys: BTreeSet<String>,
+    stats: EngineStats,
+}
+
+/// One `<key>.plsi` file per key, temp-file + rename writes.
+pub struct DirEngine {
+    dir: PathBuf,
+    inner: Mutex<DirInner>,
+}
+
+impl DirEngine {
+    /// Open (creating the directory), discovering any keys a previous
+    /// process left behind — what `FleetScheduler::recover` scans.
+    pub fn open(dir: impl AsRef<Path>) -> Result<DirEngine> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating store directory {}", dir.display())
+        })?;
+        let mut keys = BTreeSet::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(key) = name.strip_suffix(".plsi") {
+                keys.insert(key.to_string());
+            }
+        }
+        Ok(DirEngine {
+            dir,
+            inner: Mutex::new(DirInner {
+                keys,
+                stats: EngineStats::default(),
+            }),
+        })
+    }
+
+    /// Where `key`'s bytes live on disk.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.plsi"))
+    }
+}
+
+impl StoreEngine for DirEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Dir
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.path_for(key);
+        let tmp = self.dir.join(format!(".{key}.plsi.tmp"));
+        let write = || -> std::io::Result<()> {
+            {
+                use std::io::Write;
+                let mut f = std::fs::File::create(&tmp)?;
+                f.write_all(bytes)?;
+                f.sync_all()?;
+            }
+            std::fs::rename(&tmp, &path)
+        };
+        if let Err(e) = write() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::Error::new(e).context(format!(
+                "writing store entry {}",
+                path.display()
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.keys.insert(key.to_string());
+        inner.stats.puts += 1;
+        inner.stats.bytes_written += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if !inner.keys.contains(key) {
+                bail!("no store entry under {key:?}");
+            }
+        }
+        let path = self.path_for(key);
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("reading store entry {}", path.display())
+        })?;
+        self.inner.lock().unwrap().stats.gets += 1;
+        Ok(bytes)
+    }
+
+    fn remove(&self, key: &str) -> Result<bool> {
+        let existed = {
+            let mut inner = self.inner.lock().unwrap();
+            let existed = inner.keys.remove(key);
+            if existed {
+                inner.stats.removes += 1;
+            }
+            existed
+        };
+        if existed {
+            let _ = std::fs::remove_file(self.path_for(key));
+        }
+        Ok(existed)
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().keys.contains(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().keys.len()
+    }
+
+    fn iter_keys(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys.iter().cloned().collect()
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    fn disk_bytes(&self) -> u64 {
+        let keys = self.iter_keys();
+        keys.iter()
+            .filter_map(|k| {
+                std::fs::metadata(self.path_for(k)).ok().map(|m| m.len())
+            })
+            .sum()
+    }
+
+    fn file_count(&self) -> u64 {
+        self.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pocketllm_engine_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn dir_engine_roundtrip_and_counters() {
+        let e = DirEngine::open(tmp("rt")).unwrap();
+        assert!(e.is_empty());
+        e.put("a", b"hello").unwrap();
+        e.put("b", b"world!").unwrap();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.iter_keys(), vec!["a", "b"]);
+        assert_eq!(e.get("a").unwrap(), b"hello");
+        assert!(e.contains("a"), "get must not consume");
+        assert_eq!(e.take("a").unwrap(), b"hello");
+        assert!(!e.contains("a"));
+        assert!(e.get("a").is_err());
+        let s = e.stats();
+        assert_eq!((s.puts, s.gets, s.removes), (2, 2, 1));
+        assert_eq!(s.bytes_written, 11);
+        assert_eq!(e.file_count(), 1);
+        assert_eq!(e.disk_bytes(), 6);
+    }
+
+    #[test]
+    fn dir_engine_put_replaces_atomically_by_rename() {
+        let dir = tmp("replace");
+        let e = DirEngine::open(&dir).unwrap();
+        e.put("k", b"old").unwrap();
+        e.put("k", b"new-bytes").unwrap();
+        assert_eq!(e.get("k").unwrap(), b"new-bytes");
+        assert_eq!(e.len(), 1);
+        // no temp litter after successful writes
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|d| d.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(names, vec!["k.plsi"]);
+    }
+
+    #[test]
+    fn dir_engine_discovers_surviving_keys_on_open() {
+        let dir = tmp("discover");
+        {
+            let e = DirEngine::open(&dir).unwrap();
+            e.put("job0", b"x").unwrap();
+            e.put("job1", b"y").unwrap();
+        }
+        // a fresh open (new process, after a crash) sees both keys
+        let e = DirEngine::open(&dir).unwrap();
+        assert_eq!(e.iter_keys(), vec!["job0", "job1"]);
+        assert_eq!(e.get("job1").unwrap(), b"y");
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("dir").unwrap(), EngineKind::Dir);
+        assert_eq!(EngineKind::parse("paged").unwrap(),
+                   EngineKind::Paged);
+        assert!(EngineKind::parse("lsm").is_err());
+        assert_eq!(EngineKind::Paged.label(), "paged");
+    }
+}

@@ -1,13 +1,14 @@
 //! The durable session image: one file, one session.
 //!
-//! ## Format (version 1, little-endian throughout)
+//! ## Format (version 2, little-endian throughout)
 //!
 //! ```text
 //!   magic        4 B   b"PLSI"
-//!   version      u32   1
+//!   version      u32   2 (v1 files — no recovery record — still load)
 //!   optimizer    u8    0 = mezo, 1 = adam
 //!   precision    u8    Precision::code (0 f32, 1 f16, 2 int8)
 //!   flags        u8    bit0 = Adam m/v moment payload present
+//!                      bit1 = fleet recovery record present (v2)
 //!   reserved     u8    0
 //!   config       u32 len + UTF-8 bytes (manifest config name)
 //!   task         u32 len + UTF-8 bytes (TaskKind label)
@@ -23,6 +24,14 @@
 //!                tensors are stored AT THEIR RESIDENT PRECISION
 //!                (2 B/elem f16, 1 B/elem + 4 B scale int8); then,
 //!                iff flags bit0, the Adam m and v records (f32)
+//!   recovery     iff flags bit1, 69 B: job_idx u32, status u8
+//!                (0 live, 1 completed, 2 stalled, 3 failed), then 8
+//!                u64-width fields — steps_target, deadline_minutes
+//!                (f64 bits, NaN = none), window_idx, windows_used,
+//!                windows_denied, sim_step_seconds (f64 bits),
+//!                job_last_loss (f64 bits), thermal_sustained_s (f64
+//!                bits) — everything `FleetScheduler::recover` needs
+//!                to rebuild the job's scheduler state bit-exactly
 //!   crc32        u32   CRC-32/IEEE over every preceding byte
 //! ```
 //!
@@ -45,9 +54,111 @@ use crate::runtime::precision::Precision;
 use super::crc32;
 
 pub const MAGIC: &[u8; 4] = b"PLSI";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+/// Oldest version this build still reads (v1 = no recovery record).
+pub const MIN_VERSION: u32 = 1;
 
 const FLAG_ADAM: u8 = 1;
+const FLAG_RECOVERY: u8 = 2;
+/// Encoded size of a [`RecoveryRecord`].
+const RECOVERY_BYTES: u64 = 4 + 1 + 8 * 8;
+
+/// How the job stood when its image was written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryStatus {
+    /// Mid-run: hibernated between windows, work remaining.
+    Live,
+    Completed,
+    Stalled,
+    Failed,
+}
+
+impl RecoveryStatus {
+    fn code(self) -> u8 {
+        match self {
+            RecoveryStatus::Live => 0,
+            RecoveryStatus::Completed => 1,
+            RecoveryStatus::Stalled => 2,
+            RecoveryStatus::Failed => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<RecoveryStatus> {
+        match c {
+            0 => Some(RecoveryStatus::Live),
+            1 => Some(RecoveryStatus::Completed),
+            2 => Some(RecoveryStatus::Stalled),
+            3 => Some(RecoveryStatus::Failed),
+            _ => None,
+        }
+    }
+}
+
+/// The fleet-scheduler state a session image carries beyond the
+/// session itself: which job it is, how far its window clock ran, and
+/// the device thermal debt — everything `FleetScheduler::recover`
+/// needs to rebuild the job's `JobRun` bit-exactly.  `Session` state
+/// (parameters, seeds, batcher position) lives in the image proper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryRecord {
+    pub job_idx: u32,
+    pub status: RecoveryStatus,
+    /// Total steps the job was asked to run (`JobSpec::steps`).
+    pub steps_target: u64,
+    /// `JobSpec::deadline_minutes`; NaN encodes "no deadline".
+    pub deadline_minutes: f64,
+    /// Trace windows consumed (admitted or denied).
+    pub window_idx: u64,
+    /// Windows in which the job actually stepped.
+    pub windows_used: u64,
+    /// Windows denied by policy.
+    pub windows_denied: u64,
+    /// Accumulated simulated step-seconds (exact f64 partial sum —
+    /// resuming from it keeps later additions bit-identical).
+    pub sim_step_seconds: f64,
+    /// The job-level last loss (NaN before the first step).
+    pub job_last_loss: f64,
+    /// The device's sustained-thermal clock at hibernation, in
+    /// seconds — the ONLY mutable device state that affects outcomes.
+    pub thermal_sustained_s: f64,
+}
+
+impl RecoveryRecord {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.job_idx.to_le_bytes());
+        out.push(self.status.code());
+        for v in [
+            self.steps_target,
+            self.deadline_minutes.to_bits(),
+            self.window_idx,
+            self.windows_used,
+            self.windows_denied,
+            self.sim_step_seconds.to_bits(),
+            self.job_last_loss.to_bits(),
+            self.thermal_sustained_s.to_bits(),
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode_from(r: &mut Reader<'_>) -> Result<RecoveryRecord> {
+        let job_idx = r.u32()?;
+        let status = RecoveryStatus::from_code(r.u8()?)
+            .context("unknown recovery status code")?;
+        Ok(RecoveryRecord {
+            job_idx,
+            status,
+            steps_target: r.u64()?,
+            deadline_minutes: f64::from_bits(r.u64()?),
+            window_idx: r.u64()?,
+            windows_used: r.u64()?,
+            windows_denied: r.u64()?,
+            sim_step_seconds: f64::from_bits(r.u64()?),
+            job_last_loss: f64::from_bits(r.u64()?),
+            thermal_sustained_s: f64::from_bits(r.u64()?),
+        })
+    }
+}
 
 /// A decoded session image — everything durable about one session.
 /// The non-durable rest (compiled programs, shared data artifacts,
@@ -78,6 +189,9 @@ pub struct SessionImage {
     pub adam_m: Vec<Vec<f32>>,
     /// Adam second moments (f32); empty for derivative-free images.
     pub adam_v: Vec<Vec<f32>>,
+    /// Fleet-scheduler recovery state (v2 images written by the
+    /// fleet; `None` for plain checkpoints and v1 files).
+    pub recovery: Option<RecoveryRecord>,
 }
 
 fn optimizer_code(o: OptimizerKind) -> u8 {
@@ -156,6 +270,7 @@ impl SessionImage {
             + 40
             + 8
             + 9 * self.params.len() as u64
+            + if self.recovery.is_some() { RECOVERY_BYTES } else { 0 }
             + 4
     }
 
@@ -169,7 +284,14 @@ impl SessionImage {
         out.push(optimizer_code(self.optimizer));
         out.push(self.precision.code());
         let has_adam = !self.adam_m.is_empty();
-        out.push(if has_adam { FLAG_ADAM } else { 0 });
+        let mut flags = 0u8;
+        if has_adam {
+            flags |= FLAG_ADAM;
+        }
+        if self.recovery.is_some() {
+            flags |= FLAG_RECOVERY;
+        }
+        out.push(flags);
         out.push(0); // reserved
         for s in [self.config.as_str(), self.task.label()] {
             out.extend_from_slice(&(s.len() as u32).to_le_bytes());
@@ -202,6 +324,9 @@ impl SessionImage {
                 }
             }
         }
+        if let Some(rec) = &self.recovery {
+            rec.encode_into(&mut out);
+        }
         let crc = crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
@@ -218,9 +343,9 @@ impl SessionImage {
         let version = u32::from_le_bytes([
             bytes[4], bytes[5], bytes[6], bytes[7],
         ]);
-        ensure!(version == VERSION,
-                "session image version {version} (this build reads {})",
-                VERSION);
+        ensure!((MIN_VERSION..=VERSION).contains(&version),
+                "session image version {version} (this build reads \
+                 {MIN_VERSION}..={VERSION})");
         let body = &bytes[..bytes.len() - 4];
         let stored = u32::from_le_bytes([
             bytes[bytes.len() - 4],
@@ -240,13 +365,19 @@ impl SessionImage {
             .context("unknown precision code")?;
         let flags = r.u8()?;
         let _reserved = r.u8()?;
-        // the moment payload and the optimizer must agree: an Adam
-        // image without moments (or a MeZO image with them) is a
-        // writer bug, not something to round-trip quietly
-        ensure!((flags & FLAG_ADAM != 0)
-                    == (optimizer == OptimizerKind::Adam),
+        // the moment payload and the optimizer must agree: a MeZO
+        // image with a moment payload is a writer bug, not something
+        // to round-trip quietly.  (The other direction — an Adam
+        // image without moments — is checked after the directory is
+        // read: it is legal only for the zero-tensor terminal stubs
+        // the fleet recovery path writes.)
+        ensure!(flags & FLAG_ADAM == 0
+                    || optimizer == OptimizerKind::Adam,
                 "image optimizer {} disagrees with its moment payload",
                 optimizer.label());
+        ensure!(version >= 2 || flags & FLAG_RECOVERY == 0,
+                "v1 session image claims a recovery record (flag from \
+                 a later version)");
         let config = r.string()?;
         let task_label = r.string()?;
         let task = TaskKind::parse(&task_label).with_context(|| {
@@ -261,6 +392,10 @@ impl SessionImage {
         let n_tensors = r.u32()? as usize;
         ensure!(n_tensors <= 1 << 20,
                 "implausible tensor count {n_tensors}");
+        ensure!(flags & FLAG_ADAM != 0
+                    || optimizer != OptimizerKind::Adam
+                    || n_tensors == 0,
+                "adam session image carries no moment payload");
         let mut dir = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
             let dt = Precision::from_code(r.u8()?)
@@ -311,6 +446,12 @@ impl SessionImage {
         } else {
             (Vec::new(), Vec::new())
         };
+        let recovery = if flags & FLAG_RECOVERY != 0 {
+            Some(RecoveryRecord::decode_from(&mut r)
+                .context("reading recovery record")?)
+        } else {
+            None
+        };
         ensure!(r.pos == body.len(),
                 "session image has {} trailing bytes",
                 body.len() - r.pos);
@@ -328,18 +469,20 @@ impl SessionImage {
             params,
             adam_m,
             adam_v,
+            recovery,
         })
     }
 }
 
-/// Bounds-checked little-endian cursor.
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Bounds-checked little-endian cursor (shared with the fleet
+/// manifest decoder in [`crate::coordinator::fleet`]).
+pub(crate) struct Reader<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
         if n > self.buf.len() - self.pos {
             bail!("session image truncated at byte {}", self.buf.len());
         }
@@ -348,23 +491,23 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.bytes(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.bytes(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.bytes(8)?;
         Ok(u64::from_le_bytes([
             b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
         ]))
     }
 
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
         ensure!(len <= 4096, "implausible string length {len}");
         let b = self.bytes(len)?;
@@ -410,6 +553,7 @@ mod tests {
             params,
             adam_m,
             adam_v,
+            recovery: None,
         }
     }
 
@@ -560,8 +704,79 @@ mod tests {
     #[test]
     fn unknown_version_is_rejected_not_misparsed() {
         let mut bytes = sample(Precision::F32, false).encode();
-        bytes[4] = 2; // version 2
+        bytes[4] = 3; // version 3: from the future
         let err = SessionImage::decode(&bytes).unwrap_err();
         assert!(format!("{err:#}").contains("version"));
+        let mut bytes = sample(Precision::F32, false).encode();
+        bytes[4] = 0; // version 0: never existed
+        let err = SessionImage::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
+    }
+
+    #[test]
+    fn v1_images_without_recovery_still_load() {
+        // a v1 file is byte-identical to a v2 file with no recovery
+        // record, except for the version word — emulate one and prove
+        // the forward-compat path
+        let img = sample(Precision::F16, true);
+        let mut bytes = img.encode();
+        bytes[4] = 1;
+        let body_len = bytes.len() - 4;
+        let crc = crate::store::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let back = SessionImage::decode(&bytes).unwrap();
+        assert!(back.recovery.is_none());
+        assert_eq!(back.step, img.step);
+        assert_eq!(back.adam_m, img.adam_m);
+        // but a v1 file CLAIMING a recovery record is corrupt
+        let mut bad = bytes.clone();
+        bad[10] |= 2; // FLAG_RECOVERY
+        let crc = crate::store::crc32(&bad[..body_len]);
+        bad[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = SessionImage::decode(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("recovery"), "{err:#}");
+    }
+
+    #[test]
+    fn recovery_record_roundtrips_bit_exactly() {
+        let mut img = sample(Precision::Int8, false);
+        img.recovery = Some(RecoveryRecord {
+            job_idx: 7,
+            status: RecoveryStatus::Live,
+            steps_target: 4096,
+            deadline_minutes: 90.5,
+            window_idx: 13,
+            windows_used: 9,
+            windows_denied: 4,
+            sim_step_seconds: 123.456789,
+            job_last_loss: 0.03125,
+            thermal_sustained_s: 55.25,
+        });
+        let bytes = img.encode();
+        assert_eq!(bytes.len() as u64,
+                   img.param_bytes() + img.metadata_bytes(),
+                   "metadata accounting must include the record");
+        let back = SessionImage::decode(&bytes).unwrap();
+        let rec = back.recovery.expect("record must survive");
+        assert_eq!(rec, img.recovery.unwrap());
+        // NaN deadline = "no deadline" must roundtrip too (NaN != NaN,
+        // so compare bits)
+        let mut img = sample(Precision::F32, false);
+        img.recovery = Some(RecoveryRecord {
+            job_idx: 0,
+            status: RecoveryStatus::Completed,
+            steps_target: 1,
+            deadline_minutes: f64::NAN,
+            window_idx: 0,
+            windows_used: 0,
+            windows_denied: 0,
+            sim_step_seconds: 0.0,
+            job_last_loss: f64::NAN,
+            thermal_sustained_s: 0.0,
+        });
+        let back = SessionImage::decode(&img.encode()).unwrap();
+        let rec = back.recovery.unwrap();
+        assert!(rec.deadline_minutes.is_nan());
+        assert_eq!(rec.status, RecoveryStatus::Completed);
     }
 }

@@ -27,10 +27,16 @@
 //! tensors (~3x for f32 parameters, more for quantized ones).
 //! `pocketllm store inspect` prints the breakdown.
 
+pub mod engine;
 pub mod image;
+pub mod paged;
 pub mod session_store;
 
+pub use engine::{
+    DirEngine, EngineKind, EngineStats, StoreEngine, PAGED_FILE_NAME,
+};
 pub use image::SessionImage;
+pub use paged::{FsckReport, PagedEngine};
 pub use session_store::{SessionStore, StoreStats};
 
 /// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — the checksum the

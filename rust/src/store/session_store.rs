@@ -1,28 +1,41 @@
-//! The hibernation store: bounded memory in front of durable disk.
+//! The hibernation store: bounded memory in front of a durable
+//! [`StoreEngine`].
 //!
 //! A [`SessionStore`] holds encoded [`SessionImage`]s by key.  The
 //! most recently stored images stay in a memory cache bounded by
 //! `mem_capacity` bytes; when the cache overflows, the
-//! least-recently-used images spill to one file each under the store
-//! directory (`<key>.plsi`).  `take` retrieves (and removes) an image
-//! from wherever it lives — the bytes are identical either way, so
-//! cache hits change latency only, never results.
+//! least-recently-used images spill to the engine — one `<key>.plsi`
+//! file each under the dir engine, one shadow-committed page segment
+//! each under the paged engine.  `take` retrieves (and removes) an
+//! image from wherever it lives — the bytes are identical either way,
+//! so cache hits change latency only, never results.
 //!
 //! A capacity of 0 makes the store write-through: every image lands
-//! on disk immediately and the store holds no parameter bytes in RAM
-//! at all — the configuration the fleet scheduler uses, so a
-//! 1000-job queue's memory profile is genuinely flat.
+//! on the engine immediately and the store holds no parameter bytes
+//! in RAM at all — the configuration the fleet scheduler uses, so a
+//! 1000-job queue's memory profile is genuinely flat, and every
+//! hibernated job is durable the moment `put` returns (what
+//! `FleetScheduler::recover` relies on).
 //!
-//! Thread-safe: one internal lock, I/O performed inside `put`/`take`
-//! by the calling worker.
+//! Failure contract: a failed spill re-caches every unwritten victim
+//! (an I/O error never loses an image), and a failed `take` decode
+//! leaves the stored bytes in place — corrupt spilled images stay on
+//! disk for `store fsck` to report.
+//!
+//! Thread-safe: one internal lock, I/O performed outside it (dir
+//! engine) or under the engine's own lock (paged).
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::engine::{
+    DirEngine, EngineKind, EngineStats, StoreEngine, PAGED_FILE_NAME,
+};
 use super::image::SessionImage;
+use super::paged::PagedEngine;
 
 /// Lifetime counters of one store (monotonic).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -31,13 +44,15 @@ pub struct StoreStats {
     pub puts: u64,
     /// Images retrieved via `take`.
     pub takes: u64,
-    /// Takes served from the memory cache.
+    /// Images read (non-consuming) via `get`.
+    pub gets: u64,
+    /// Retrievals served from the memory cache.
     pub mem_hits: u64,
-    /// Takes served from disk.
+    /// Retrievals served from the engine.
     pub disk_hits: u64,
-    /// LRU evictions written to disk.
+    /// LRU evictions written to the engine.
     pub spills: u64,
-    /// Total image bytes written to disk.
+    /// Total image bytes written to the engine.
     pub bytes_spilled: u64,
 }
 
@@ -48,42 +63,115 @@ struct Inner {
     /// Keys in recency order: front = least recently used.
     lru: VecDeque<String>,
     mem_bytes: u64,
-    /// Keys whose image currently lives on disk.
-    on_disk: HashSet<String>,
     stats: StoreStats,
 }
 
-/// A capacity-bounded, LRU, disk-backed store of session images.
+/// A capacity-bounded, LRU, engine-backed store of session images.
 pub struct SessionStore {
+    engine: Arc<dyn StoreEngine>,
     dir: PathBuf,
     mem_capacity: u64,
     inner: Mutex<Inner>,
 }
 
 impl SessionStore {
-    /// Open (creating the directory) with a 16 MiB memory cache.
+    /// Open (creating the directory) with a 16 MiB memory cache on
+    /// the dir engine.
     pub fn new(dir: impl AsRef<Path>) -> Result<SessionStore> {
         SessionStore::with_mem_capacity(dir, 16 * 1024 * 1024)
     }
 
-    /// Open with an explicit memory-cache bound (0 = write-through,
-    /// nothing retained in RAM).
+    /// Open on the dir engine with an explicit memory-cache bound
+    /// (0 = write-through, nothing retained in RAM).
     pub fn with_mem_capacity(
         dir: impl AsRef<Path>,
         mem_capacity: u64,
     ) -> Result<SessionStore> {
+        SessionStore::open_with(EngineKind::Dir, dir, mem_capacity)
+    }
+
+    /// Open on an explicit engine kind.
+    pub fn open_with(
+        kind: EngineKind,
+        dir: impl AsRef<Path>,
+        mem_capacity: u64,
+    ) -> Result<SessionStore> {
         let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir).with_context(|| {
-            format!("creating session store at {}", dir.display())
-        })?;
-        Ok(SessionStore {
+        let engine: Arc<dyn StoreEngine> = match kind {
+            EngineKind::Dir => Arc::new(DirEngine::open(&dir)?),
+            EngineKind::Paged => {
+                std::fs::create_dir_all(&dir).with_context(|| {
+                    format!(
+                        "creating session store at {}",
+                        dir.display()
+                    )
+                })?;
+                Arc::new(PagedEngine::open(
+                    dir.join(PAGED_FILE_NAME),
+                )?)
+            }
+        };
+        Ok(SessionStore::with_engine(engine, dir, mem_capacity))
+    }
+
+    /// Open whichever engine already lives under `dir`: paged if its
+    /// store file exists, the dir layout otherwise — what
+    /// `fleet --recover` and `store inspect` use, so neither needs to
+    /// be told the engine.
+    pub fn open_auto(
+        dir: impl AsRef<Path>,
+        mem_capacity: u64,
+    ) -> Result<SessionStore> {
+        let kind = if dir.as_ref().join(PAGED_FILE_NAME).is_file() {
+            EngineKind::Paged
+        } else {
+            EngineKind::Dir
+        };
+        SessionStore::open_with(kind, dir, mem_capacity)
+    }
+
+    /// Build on an already-open engine (tests inject failing engines
+    /// here; `dir` is what `cleanup` removes and `root` reports).
+    pub fn with_engine(
+        engine: Arc<dyn StoreEngine>,
+        dir: PathBuf,
+        mem_capacity: u64,
+    ) -> SessionStore {
+        SessionStore {
+            engine,
             dir,
             mem_capacity,
             inner: Mutex::new(Inner::default()),
-        })
+        }
     }
 
-    /// Where `key`'s image lives when spilled.
+    /// The store's directory.
+    pub fn root(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Which engine backs the store.
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine.kind()
+    }
+
+    /// The backing engine's lifetime counters.
+    pub fn engine_stats(&self) -> EngineStats {
+        self.engine.stats()
+    }
+
+    /// Bytes the backing engine currently occupies on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        self.engine.disk_bytes()
+    }
+
+    /// Filesystem objects the backing engine uses.
+    pub fn file_count(&self) -> u64 {
+        self.engine.file_count()
+    }
+
+    /// Where `key`'s image lives when spilled under the DIR engine
+    /// (the paged engine keeps every key inside one store file).
     pub fn path_for(&self, key: &str) -> PathBuf {
         self.dir.join(format!("{key}.plsi"))
     }
@@ -102,15 +190,42 @@ impl SessionStore {
 
     /// Store an image under `key` (replacing any previous image with
     /// that key).  Returns the encoded size in bytes.  May spill LRU
-    /// entries — possibly this one — to disk to respect the memory
-    /// bound.
+    /// entries — possibly this one — to the engine to respect the
+    /// memory bound.
     pub fn put(&self, key: &str, image: &SessionImage) -> Result<u64> {
         Self::check_key(key)?;
         image.validate()?;
         let bytes = image.encode();
         let len = bytes.len() as u64;
+        self.put_encoded(key, bytes)?;
+        Ok(len)
+    }
+
+    /// Store pre-encoded bytes without image validation — the fleet
+    /// manifest's path.  Always written through to the engine (the
+    /// caller wants durability, not caching).
+    pub fn put_raw(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        Self::check_key(key)?;
+        self.engine.put(key, bytes)
+    }
+
+    /// Read raw bytes previously stored with [`put_raw`] (or an
+    /// image's encoded bytes, if it has spilled).
+    ///
+    /// [`put_raw`]: SessionStore::put_raw
+    pub fn get_raw(&self, key: &str) -> Result<Vec<u8>> {
+        Self::check_key(key)?;
+        if let Some(bytes) =
+            self.inner.lock().unwrap().mem.get(key).cloned()
+        {
+            return Ok(bytes);
+        }
+        self.engine.get(key)
+    }
+
+    fn put_encoded(&self, key: &str, bytes: Vec<u8>) -> Result<()> {
+        let len = bytes.len() as u64;
         let mut spill: Vec<(String, Vec<u8>)> = Vec::new();
-        let stale_disk;
         {
             let mut inner = self.inner.lock().unwrap();
             inner.stats.puts += 1;
@@ -118,7 +233,6 @@ impl SessionStore {
                 inner.mem_bytes -= old.len() as u64;
                 inner.lru.retain(|k| k != key);
             }
-            stale_disk = inner.on_disk.remove(key);
             inner.mem_bytes += len;
             inner.mem.insert(key.to_string(), bytes);
             inner.lru.push_back(key.to_string());
@@ -134,24 +248,19 @@ impl SessionStore {
                 spill.push((victim, data));
             }
         }
-        if stale_disk {
-            // the key's previous image had spilled; it is replaced now
-            let _ = std::fs::remove_file(self.path_for(key));
-        }
-        // disk writes happen outside the lock; a victim is marked
-        // on_disk only once its file actually exists, and a FAILED
-        // write puts the bytes of EVERY not-yet-spilled victim back
-        // into the memory cache (accepting transient over-capacity)
-        // so an I/O error never loses an image.  Callers own their
-        // keys (one job, one key), so a concurrent take() of a
-        // mid-spill key is theoretical.
+        // engine writes happen outside the cache lock; a FAILED write
+        // puts the bytes of EVERY not-yet-spilled victim back into
+        // the memory cache (accepting transient over-capacity) so an
+        // I/O error never loses an image.  Callers own their keys
+        // (one job, one key), so a concurrent take() of a mid-spill
+        // key is theoretical.
+        let spilled_self = spill.iter().any(|(v, _)| v == key);
         let mut spill_iter = spill.into_iter();
         while let Some((victim, data)) = spill_iter.next() {
-            match std::fs::write(self.path_for(&victim), &data) {
+            match self.engine.put(&victim, &data) {
                 Ok(()) => {
                     let vlen = data.len() as u64;
                     let mut inner = self.inner.lock().unwrap();
-                    inner.on_disk.insert(victim);
                     inner.stats.spills += 1;
                     inner.stats.bytes_spilled += vlen;
                 }
@@ -169,18 +278,27 @@ impl SessionStore {
                         inner.mem.insert(v.clone(), d);
                         inner.lru.push_front(v);
                     }
-                    return Err(anyhow::Error::new(e).context(format!(
+                    return Err(e.context(format!(
                         "spilling session image {failed}"
                     )));
                 }
             }
         }
-        Ok(len)
+        // the new image stayed resident, but an OLDER spilled copy of
+        // this key may survive in the engine; drop it only now that
+        // every spill has landed — never before the replacement is
+        // durable or cached
+        if !spilled_self && self.engine.contains(key) {
+            let _ = self.engine.remove(key);
+        }
+        Ok(())
     }
 
-    /// Retrieve and remove `key`'s image (memory first, disk second).
-    /// A failed disk read leaves the entry in place (retryable); the
-    /// entry is consumed only once its bytes are safely in hand.
+    /// Retrieve and remove `key`'s image (memory first, engine
+    /// second).  The entry is consumed only once its bytes decode:
+    /// a failed engine read OR a corrupt image leaves the stored
+    /// bytes exactly where they were — retryable, and visible to
+    /// `store fsck`.
     pub fn take(&self, key: &str) -> Result<SessionImage> {
         Self::check_key(key)?;
         let from_mem = {
@@ -188,49 +306,136 @@ impl SessionStore {
             if let Some(bytes) = inner.mem.remove(key) {
                 inner.mem_bytes -= bytes.len() as u64;
                 inner.lru.retain(|k| k != key);
-                inner.stats.takes += 1;
-                inner.stats.mem_hits += 1;
                 Some(bytes)
-            } else if inner.on_disk.contains(key) {
-                None // read the file outside the lock
             } else {
-                bail!("no session image stored under {key:?}")
+                None
             }
         };
-        let bytes = match from_mem {
-            Some(b) => b,
+        if let Some(bytes) = from_mem {
+            let decoded = SessionImage::decode(&bytes).with_context(
+                || format!("decoding session image {key:?}"),
+            );
+            let mut inner = self.inner.lock().unwrap();
+            return match decoded {
+                Ok(image) => {
+                    inner.stats.takes += 1;
+                    inner.stats.mem_hits += 1;
+                    Ok(image)
+                }
+                Err(e) => {
+                    // put the bytes back: a failed take must not
+                    // destroy the only copy
+                    inner.mem_bytes += bytes.len() as u64;
+                    inner.mem.insert(key.to_string(), bytes);
+                    inner.lru.push_back(key.to_string());
+                    Err(e)
+                }
+            };
+        }
+        if !self.engine.contains(key) {
+            bail!("no session image stored under {key:?}");
+        }
+        let bytes = self
+            .engine
+            .get(key)
+            .with_context(|| format!("reading spilled image {key:?}"))?;
+        let image = SessionImage::decode(&bytes).with_context(|| {
+            format!("decoding session image {key:?}")
+        })?;
+        // decode succeeded — only NOW is the stored copy consumed
+        let _ = self.engine.remove(key);
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.takes += 1;
+        inner.stats.disk_hits += 1;
+        Ok(image)
+    }
+
+    /// Read `key`'s image without removing it — recovery's path, so
+    /// a crash between read and resume can always be retried.
+    pub fn get(&self, key: &str) -> Result<SessionImage> {
+        Self::check_key(key)?;
+        let from_mem = {
+            let mut inner = self.inner.lock().unwrap();
+            let bytes = inner.mem.get(key).cloned();
+            if bytes.is_some() {
+                // refresh recency
+                inner.lru.retain(|k| k != key);
+                inner.lru.push_back(key.to_string());
+            }
+            bytes
+        };
+        let (bytes, from_mem) = match from_mem {
+            Some(b) => (b, true),
             None => {
-                let path = self.path_for(key);
-                let b = std::fs::read(&path).with_context(|| {
-                    format!("reading spilled image {}", path.display())
+                if !self.engine.contains(key) {
+                    bail!("no session image stored under {key:?}");
+                }
+                let b = self.engine.get(key).with_context(|| {
+                    format!("reading spilled image {key:?}")
                 })?;
-                let mut inner = self.inner.lock().unwrap();
-                inner.on_disk.remove(key);
-                inner.stats.takes += 1;
-                inner.stats.disk_hits += 1;
-                drop(inner);
-                let _ = std::fs::remove_file(&path);
-                b
+                (b, false)
             }
         };
-        SessionImage::decode(&bytes)
-            .with_context(|| format!("decoding session image {key:?}"))
+        let image = SessionImage::decode(&bytes).with_context(|| {
+            format!("decoding session image {key:?}")
+        })?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.gets += 1;
+        if from_mem {
+            inner.stats.mem_hits += 1;
+        } else {
+            inner.stats.disk_hits += 1;
+        }
+        Ok(image)
+    }
+
+    /// Remove `key` wherever it lives; `Ok(true)` if it existed.
+    pub fn remove(&self, key: &str) -> Result<bool> {
+        Self::check_key(key)?;
+        let in_mem = {
+            let mut inner = self.inner.lock().unwrap();
+            match inner.mem.remove(key) {
+                Some(bytes) => {
+                    inner.mem_bytes -= bytes.len() as u64;
+                    inner.lru.retain(|k| k != key);
+                    true
+                }
+                None => false,
+            }
+        };
+        let on_engine = self.engine.remove(key)?;
+        Ok(in_mem || on_engine)
     }
 
     /// Whether `key` currently has a stored image.
     pub fn contains(&self, key: &str) -> bool {
-        let inner = self.inner.lock().unwrap();
-        inner.mem.contains_key(key) || inner.on_disk.contains(key)
+        self.inner.lock().unwrap().mem.contains_key(key)
+            || self.engine.contains(key)
     }
 
-    /// Number of stored images (memory + disk).
+    /// Number of stored keys (memory + engine, deduplicated).
     pub fn len(&self) -> usize {
         let inner = self.inner.lock().unwrap();
-        inner.mem.len() + inner.on_disk.len()
+        let extra = self
+            .engine
+            .iter_keys()
+            .iter()
+            .filter(|k| !inner.mem.contains_key(k.as_str()))
+            .count();
+        inner.mem.len() + extra
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// All stored keys, sorted (memory + engine, deduplicated).
+    pub fn iter_keys(&self) -> Vec<String> {
+        let mut keys: std::collections::BTreeSet<String> =
+            self.engine.iter_keys().into_iter().collect();
+        let inner = self.inner.lock().unwrap();
+        keys.extend(inner.mem.keys().cloned());
+        keys.into_iter().collect()
     }
 
     /// Bytes currently held in the memory cache (always <= capacity
@@ -274,6 +479,7 @@ mod tests {
                 .unwrap()],
             adam_m: Vec::new(),
             adam_v: Vec::new(),
+            recovery: None,
         }
     }
 
@@ -353,7 +559,31 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_spilled_file_fails_loudly() {
+    fn replacing_a_spilled_key_drops_the_stale_engine_copy() {
+        // cap fits exactly one image: the first put of "a" spills
+        // when "b" arrives; re-putting "a" (resident) must leave the
+        // store with ONE copy of "a" — the new one — and no stale
+        // engine entry resurrectable after the cache empties
+        let one = image(0.0).encode().len() as u64;
+        let store =
+            SessionStore::with_mem_capacity(tmp("stale"), one)
+                .unwrap();
+        store.put("a", &image(1.0)).unwrap();
+        store.put("b", &image(2.0)).unwrap(); // spills "a"
+        assert!(store.path_for("a").exists());
+        store.put("a", &image(9.0)).unwrap(); // spills "b"
+        assert_eq!(store.len(), 2);
+        assert!(!store.path_for("a").exists(),
+                "stale spilled copy of a replaced key must go");
+        let a = store.take("a").unwrap();
+        assert_eq!(a.params[0].f32_vec().unwrap(), vec![9.0; 8]);
+        let b = store.take("b").unwrap();
+        assert_eq!(b.params[0].f32_vec().unwrap(), vec![2.0; 8]);
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn corrupt_spilled_file_fails_loudly_and_stays_on_disk() {
         let store =
             SessionStore::with_mem_capacity(tmp("corrupt"), 0).unwrap();
         store.put("x", &image(3.0)).unwrap();
@@ -366,6 +596,31 @@ mod tests {
         let err = store.take("x").unwrap_err();
         assert!(format!("{err:#}").contains("CRC"),
                 "corruption must surface as a CRC error: {err:#}");
+        // the satellite bugfix: a corrupt image is NOT silently
+        // destroyed — it stays on disk for `store fsck`, and the
+        // take stays retryable
+        assert!(path.exists(),
+                "corrupt spilled image must survive a failed take");
+        assert!(store.contains("x"));
+        assert!(store.take("x").is_err(), "still corrupt on retry");
+        assert!(path.exists());
+    }
+
+    #[test]
+    fn get_is_non_consuming_on_both_tiers() {
+        let store =
+            SessionStore::with_mem_capacity(tmp("get"), 0).unwrap();
+        store.put("j", &image(4.0)).unwrap();
+        let a = store.get("j").unwrap();
+        let b = store.get("j").unwrap();
+        assert_eq!(a.params[0].f32_vec().unwrap(),
+                   b.params[0].f32_vec().unwrap());
+        assert!(store.contains("j"), "get must not consume");
+        let s = store.stats();
+        assert_eq!((s.gets, s.takes), (2, 0));
+        // and the entry is still takeable afterwards
+        store.take("j").unwrap();
+        assert!(store.is_empty());
     }
 
     #[test]
@@ -375,5 +630,142 @@ mod tests {
         assert!(store.put("", &image(0.0)).is_err());
         assert!(store.take("no/slash").is_err());
         store.put("ok_key-1", &image(0.0)).unwrap();
+    }
+
+    #[test]
+    fn paged_engine_roundtrip_and_auto_detection() {
+        let dir = tmp("paged");
+        {
+            let store = SessionStore::open_with(
+                EngineKind::Paged,
+                &dir,
+                0,
+            )
+            .unwrap();
+            assert_eq!(store.engine_kind(), EngineKind::Paged);
+            store.put("job0", &image(5.0)).unwrap();
+            store.put("job1", &image(6.0)).unwrap();
+            assert_eq!(store.file_count(), 1,
+                       "paged store is one file, any key count");
+            assert_eq!(store.iter_keys(), vec!["job0", "job1"]);
+        }
+        // a fresh process: open_auto sniffs the paged store file
+        let store = SessionStore::open_auto(&dir, 0).unwrap();
+        assert_eq!(store.engine_kind(), EngineKind::Paged);
+        assert_eq!(store.len(), 2);
+        let back = store.take("job1").unwrap();
+        assert_eq!(back.params[0].f32_vec().unwrap(), vec![6.0; 8]);
+        let j0 = store.get("job0").unwrap();
+        assert_eq!(j0.params[0].f32_vec().unwrap(), vec![5.0; 8]);
+        assert!(store.contains("job0"));
+    }
+
+    #[test]
+    fn open_auto_defaults_to_dir_engine() {
+        let store = SessionStore::open_auto(tmp("auto_dir"), 0)
+            .unwrap();
+        assert_eq!(store.engine_kind(), EngineKind::Dir);
+    }
+
+    #[test]
+    fn raw_blobs_roundtrip_without_image_validation() {
+        let store =
+            SessionStore::with_mem_capacity(tmp("raw"), 0).unwrap();
+        store.put_raw("fleet-manifest", b"not an image").unwrap();
+        assert_eq!(store.get_raw("fleet-manifest").unwrap(),
+                   b"not an image");
+        assert!(store.contains("fleet-manifest"));
+        assert!(store.take("fleet-manifest").is_err(),
+                "raw bytes must not decode as an image");
+        assert!(store.contains("fleet-manifest"),
+                "failed decode must leave the blob in place");
+        assert!(store.remove("fleet-manifest").unwrap());
+        assert!(!store.contains("fleet-manifest"));
+    }
+
+    /// An engine whose writes fail on command — exercises the
+    /// spill-failure re-cache path without needing filesystem
+    /// permission tricks (this suite runs as root in CI, where
+    /// read-only directories don't block anything).
+    struct FailingEngine {
+        inner: DirEngine,
+        fail_puts: std::sync::atomic::AtomicBool,
+    }
+
+    impl StoreEngine for FailingEngine {
+        fn kind(&self) -> EngineKind {
+            self.inner.kind()
+        }
+        fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+            if self.fail_puts.load(
+                std::sync::atomic::Ordering::SeqCst,
+            ) {
+                bail!("injected I/O failure writing {key:?}");
+            }
+            self.inner.put(key, bytes)
+        }
+        fn get(&self, key: &str) -> Result<Vec<u8>> {
+            self.inner.get(key)
+        }
+        fn remove(&self, key: &str) -> Result<bool> {
+            self.inner.remove(key)
+        }
+        fn contains(&self, key: &str) -> bool {
+            self.inner.contains(key)
+        }
+        fn len(&self) -> usize {
+            self.inner.len()
+        }
+        fn iter_keys(&self) -> Vec<String> {
+            self.inner.iter_keys()
+        }
+        fn stats(&self) -> EngineStats {
+            self.inner.stats()
+        }
+        fn disk_bytes(&self) -> u64 {
+            self.inner.disk_bytes()
+        }
+        fn file_count(&self) -> u64 {
+            self.inner.file_count()
+        }
+    }
+
+    #[test]
+    fn failed_spill_recaches_every_victim() {
+        let dir = tmp("failspill");
+        let engine = Arc::new(FailingEngine {
+            inner: DirEngine::open(&dir).unwrap(),
+            fail_puts: std::sync::atomic::AtomicBool::new(true),
+        });
+        let one = image(0.0).encode().len() as u64;
+        let store = SessionStore::with_engine(
+            engine.clone(),
+            dir,
+            2 * one,
+        );
+        store.put("job0", &image(0.0)).unwrap();
+        store.put("job1", &image(1.0)).unwrap();
+        // the third put forces a spill of job0, which fails: the put
+        // must error, but EVERY image — including the victim — must
+        // still be retrievable from memory
+        let err = store.put("job2", &image(2.0)).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+        assert!(store.mem_bytes() > 2 * one,
+                "re-cache accepts transient over-capacity");
+        assert_eq!(store.stats().spills, 0);
+        for (k, want) in [("job0", 0.0f32), ("job1", 1.0), ("job2", 2.0)]
+        {
+            let img = store.take(k).unwrap();
+            assert_eq!(img.params[0].f32_vec().unwrap(), vec![want; 8],
+                       "{k} must survive the failed spill");
+        }
+        // once the engine heals, spills work again
+        engine
+            .fail_puts
+            .store(false, std::sync::atomic::Ordering::SeqCst);
+        store.put("job3", &image(3.0)).unwrap();
+        store.put("job4", &image(4.0)).unwrap();
+        store.put("job5", &image(5.0)).unwrap();
+        assert_eq!(store.stats().spills, 1);
     }
 }

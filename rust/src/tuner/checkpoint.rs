@@ -31,7 +31,7 @@ use crate::optim::OptimizerKind;
 use crate::runtime::manifest::ConfigInfo;
 use crate::runtime::state::ModelState;
 use crate::runtime::Precision;
-use crate::store::SessionImage;
+use crate::store::{SessionImage, SessionStore};
 use crate::util::json::{self, Json};
 
 /// Read a u64 stored either as a decimal string (current format) or a
@@ -92,6 +92,61 @@ impl Checkpoint {
         })?;
         Ok(Checkpoint {
             path,
+            config: image.config.clone(),
+            optimizer: image.optimizer,
+            precision: image.precision,
+            step: image.step,
+            master_seed: image.master_seed,
+            last_loss: image.last_loss,
+            form: Form::Image(image),
+        })
+    }
+
+    /// Write the canonical image into a [`SessionStore`] under `key`
+    /// instead of a bare file — same validation as
+    /// [`save`](Checkpoint::save), any engine (dir-per-key or paged).
+    /// The returned checkpoint's `path` is the store's dir-engine
+    /// path for the key; with the paged engine the blob lives inside
+    /// the store's single file, so prefer
+    /// [`open_in`](Checkpoint::open_in) over the path.
+    pub fn save_in(
+        store: &SessionStore,
+        key: &str,
+        image: SessionImage,
+    ) -> Result<Checkpoint> {
+        image.validate()?;
+        store.put(key, &image).with_context(|| {
+            format!(
+                "writing checkpoint '{key}' into {}",
+                store.root().display()
+            )
+        })?;
+        Ok(Checkpoint {
+            path: store.path_for(key),
+            config: image.config.clone(),
+            optimizer: image.optimizer,
+            precision: image.precision,
+            step: image.step,
+            master_seed: image.master_seed,
+            last_loss: image.last_loss,
+            form: Form::Image(image),
+        })
+    }
+
+    /// Open a checkpoint stored under `key` in a [`SessionStore`]
+    /// (the non-consuming read: the stored copy survives).
+    pub fn open_in(
+        store: &SessionStore,
+        key: &str,
+    ) -> Result<Checkpoint> {
+        let image = store.get(key).with_context(|| {
+            format!(
+                "reading checkpoint '{key}' from {}",
+                store.root().display()
+            )
+        })?;
+        Ok(Checkpoint {
+            path: store.path_for(key),
             config: image.config.clone(),
             optimizer: image.optimizer,
             precision: image.precision,
@@ -305,6 +360,7 @@ mod tests {
             params,
             adam_m,
             adam_v,
+            recovery: None,
         }
     }
 
@@ -511,6 +567,41 @@ mod tests {
         lopsided.adam_v.clear();
         assert!(Checkpoint::save(tmp("bad_lopsided.plsi"), lopsided)
             .is_err());
+    }
+
+    #[test]
+    fn checkpoints_roundtrip_through_both_store_engines() {
+        use crate::store::EngineKind;
+        let cfg = tiny_cfg();
+        let data = [1., 2., 3., 4., 5., 6.];
+        for kind in [EngineKind::Dir, EngineKind::Paged] {
+            let dir = tmp(&format!("store_{}", kind.label()));
+            let store =
+                SessionStore::open_with(kind, &dir, 0).unwrap();
+            let ck = Checkpoint::save_in(
+                &store,
+                "ck",
+                image_for(OptimizerKind::MeZo, Precision::F16, &data,
+                          9, 77),
+            )
+            .unwrap();
+            assert_eq!(ck.step, 9);
+            let back = Checkpoint::open_in(&store, "ck").unwrap();
+            assert_eq!(back.master_seed, 77);
+            assert_eq!(back.precision, Precision::F16);
+            let p = back.load_params(&cfg).unwrap();
+            assert_eq!(p.tensors[0].f32_vec().unwrap(), data.to_vec());
+            // the read is non-consuming
+            assert!(Checkpoint::open_in(&store, "ck").is_ok());
+            // writer-side validation applies here too
+            let mut bad = image_for(OptimizerKind::Adam,
+                                    Precision::F32, &data, 1, 0);
+            bad.adam_m.clear();
+            bad.adam_v.clear();
+            assert!(Checkpoint::save_in(&store, "bad", bad).is_err());
+            assert!(Checkpoint::open_in(&store, "missing").is_err());
+            store.cleanup();
+        }
     }
 
     #[test]

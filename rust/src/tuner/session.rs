@@ -728,6 +728,7 @@ impl Session {
             params,
             adam_m,
             adam_v,
+            recovery: None,
         })
     }
 
@@ -778,6 +779,7 @@ impl Session {
             params,
             adam_m,
             adam_v,
+            recovery: None,
         };
         let remnant = HibernatedSession {
             cfg: self.cfg.clone(),

@@ -8,6 +8,7 @@ pub const MIB: u64 = 1024 * KIB;
 pub const GIB: u64 = 1024 * MIB;
 pub const GB: u64 = 1_000_000_000;
 pub const MB: u64 = 1_000_000;
+pub const KB: u64 = 1_000;
 
 /// Format as the paper's tables do: decimal GB with one decimal.
 pub fn fmt_gb(bytes: u64) -> String {
@@ -32,20 +33,33 @@ pub fn f32_bytes(shape: &[usize]) -> u64 {
     4 * shape.iter().product::<usize>() as u64
 }
 
-/// Parse a human byte count: plain digits, or a `k`/`m`/`g` suffix
-/// (binary multiples, case-insensitive) — `"64k"` = 65536.
+/// Parse a human byte count, case-insensitively: plain digits, the
+/// short binary suffixes `k`/`m`/`g` (`"64k"` = 65536), the explicit
+/// binary forms `kib`/`mib`/`gib`, or the decimal forms
+/// `kb`/`mb`/`gb` (`"12kb"` = 12000 — SI, matching the paper's
+/// decimal-GB tables).
 pub fn parse_bytes(s: &str) -> Option<u64> {
     let t = s.trim().to_ascii_lowercase();
-    let (digits, mult) = if let Some(d) = t.strip_suffix('k') {
-        (d, KIB)
-    } else if let Some(d) = t.strip_suffix('m') {
-        (d, MIB)
-    } else if let Some(d) = t.strip_suffix('g') {
-        (d, GIB)
-    } else {
-        (t.as_str(), 1)
-    };
-    digits.trim().parse::<u64>().ok()?.checked_mul(mult)
+    // longest suffix first, so "kib" is never misread as bare "k"
+    // followed by trailing garbage
+    const SUFFIXES: &[(&str, u64)] = &[
+        ("kib", KIB),
+        ("mib", MIB),
+        ("gib", GIB),
+        ("kb", KB),
+        ("mb", MB),
+        ("gb", GB),
+        ("k", KIB),
+        ("m", MIB),
+        ("g", GIB),
+    ];
+    for (suffix, mult) in SUFFIXES {
+        if let Some(digits) = t.strip_suffix(suffix) {
+            return digits.trim().parse::<u64>().ok()?
+                .checked_mul(*mult);
+        }
+    }
+    t.parse::<u64>().ok()
 }
 
 #[cfg(test)]
@@ -74,7 +88,27 @@ mod tests {
         assert_eq!(parse_bytes(" 1g "), Some(1024 * 1024 * 1024));
         assert_eq!(parse_bytes("0"), Some(0));
         assert_eq!(parse_bytes("x"), None);
-        assert_eq!(parse_bytes("12kb"), None);
         assert_eq!(parse_bytes(""), None);
+    }
+
+    #[test]
+    fn parses_explicit_binary_and_decimal_suffixes() {
+        // the old parser rejected "12kb" outright; both unit families
+        // now work, with decimal kb/mb/gb matching the paper's SI
+        // tables and kib/mib/gib staying binary
+        assert_eq!(parse_bytes("12kb"), Some(12_000));
+        assert_eq!(parse_bytes("12KB"), Some(12_000));
+        assert_eq!(parse_bytes("3mb"), Some(3_000_000));
+        assert_eq!(parse_bytes("2GB"), Some(2_000_000_000));
+        assert_eq!(parse_bytes("12kib"), Some(12 * 1024));
+        assert_eq!(parse_bytes("3MiB"), Some(3 * 1024 * 1024));
+        assert_eq!(parse_bytes(" 1GiB "), Some(1024 * 1024 * 1024));
+        // suffix must trail a number; lone or doubled units stay errors
+        assert_eq!(parse_bytes("kb"), None);
+        assert_eq!(parse_bytes("12kbb"), None);
+        assert_eq!(parse_bytes("12 kb"), Some(12_000));
+        // overflow is an error, not a wrap
+        assert_eq!(parse_bytes("99999999999999999999g"), None);
+        assert_eq!(parse_bytes(&format!("{}g", u64::MAX)), None);
     }
 }

@@ -277,7 +277,7 @@ fn budget_forced_hibernation_matches_unbounded_oracle() {
                     workers,
                     // budget 0: every requeued job must hibernate
                     resident_budget_bytes: Some(0),
-                    store_dir: None,
+                    ..FleetConfig::default()
                 },
             );
             let report = fleet.run(&jobs).unwrap();

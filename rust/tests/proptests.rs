@@ -345,3 +345,61 @@ fn prop_shuffle_is_permutation() {
         assert_eq!(sorted, (0..n).collect::<Vec<_>>());
     });
 }
+
+// ---------------------------------------------------------------------
+// fleet EDF queue: deadline order with FIFO tie-breaking
+// ---------------------------------------------------------------------
+
+use pocketllm::coordinator::fleet::QueueKey;
+
+#[test]
+fn prop_edf_queue_pops_by_deadline_then_fifo() {
+    use std::cmp::Ordering;
+    for_cases(200, |rng| {
+        // few distinct deadlines over many keys = heavy tie pressure;
+        // a quarter of the jobs are best-effort (INFINITY)
+        let n = 1 + rng.below(64) as u64;
+        let mut q: std::collections::BTreeMap<QueueKey, u64> =
+            std::collections::BTreeMap::new();
+        for seq in 0..n {
+            let deadline = if rng.chance(0.25) {
+                f64::INFINITY
+            } else {
+                (1 + rng.below(4)) as f64 * 15.0
+            };
+            q.insert(QueueKey { deadline, seq }, seq);
+        }
+        assert_eq!(q.len(), n as usize,
+                   "seq must keep every key unique");
+        let popped: Vec<QueueKey> =
+            std::iter::from_fn(|| q.pop_first().map(|(k, _)| k))
+                .collect();
+        for w in popped.windows(2) {
+            match w[0].deadline.total_cmp(&w[1].deadline) {
+                Ordering::Less => {}
+                Ordering::Equal => assert!(
+                    w[0].seq < w[1].seq,
+                    "equal deadlines must dispatch FIFO: {:?} then \
+                     {:?}",
+                    w[0], w[1]
+                ),
+                Ordering::Greater => panic!(
+                    "later deadline dispatched first: {:?} then {:?}",
+                    w[0], w[1]
+                ),
+            }
+        }
+        // best-effort jobs form a contiguous FIFO tail
+        if let Some(first_inf) = popped
+            .iter()
+            .position(|k| k.deadline.is_infinite())
+        {
+            assert!(
+                popped[first_inf..]
+                    .iter()
+                    .all(|k| k.deadline.is_infinite()),
+                "a real deadline sorted after best-effort"
+            );
+        }
+    });
+}

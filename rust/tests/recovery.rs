@@ -1,0 +1,228 @@
+//! Crash-safe fleet recovery: a durable run killed mid-flight and
+//! resumed with `FleetScheduler::recover` must land on OUTCOMES
+//! bit-identical to the uninterrupted sequential oracle — for every
+//! worker count, every parameter precision, and both store engines.
+//!
+//! Only the outcome half of the determinism contract survives a
+//! crash: the pre-crash event and metric streams died with the
+//! process and are not replayed, so these tests fingerprint
+//! `FleetReport::outcomes` alone (Debug-formatted f64 is
+//! shortest-roundtrip, so equal strings mean bit-equal floats).
+
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig,
+                             FleetConfig, FleetScheduler, JobOutcome,
+                             JobSpec};
+use pocketllm::data::task::TaskKind;
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::scheduler::Policy;
+use pocketllm::store::{EngineKind, PagedEngine, PAGED_FILE_NAME};
+
+fn runtime() -> Runtime {
+    let m = Manifest::load_or_builtin("artifacts/manifest.json")
+        .expect("manifest");
+    Runtime::new(m).expect("native runtime")
+}
+
+fn outcome_fingerprint(outcomes: &[JobOutcome]) -> String {
+    format!("{outcomes:?}")
+}
+
+fn coord_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 100,
+        ..Default::default()
+    }
+}
+
+/// A mixed workload: MeZO and Adam (so optimizer moments ride through
+/// recovery images), deadlines and best-effort (so the rebuilt EDF
+/// queue is exercised), multi-window jobs (so the crash interrupts
+/// real progress).
+fn jobs_for(precision: Precision) -> Vec<JobSpec> {
+    vec![
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(6)
+            .seed(41)
+            .precision(precision)
+            .deadline(600.0),
+        JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                     OptimizerKind::Adam)
+            .steps(4)
+            .seed(42)
+            .precision(precision),
+        JobSpec::new("pocket-tiny", TaskKind::Rte, OptimizerKind::MeZo)
+            .steps(6)
+            .seed(43)
+            .precision(precision)
+            .deadline(30.0),
+    ]
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("pocketllm_recovery_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn killed_fleet_recovers_bit_identically_to_the_oracle() {
+    // THE acceptance pin of the recovery subsystem.  budget 0 forces
+    // a hibernation image after every committed window, so the store
+    // holds a live image for each in-flight job at the crash;
+    // halt_at_window(3) is the in-process stand-in for kill-at-window
+    // (same store state, no process abort — the CLI smoke drill
+    // exercises the real abort).
+    let rt = runtime();
+    let cfg = coord_cfg();
+    for (pi, precision) in
+        [Precision::F32, Precision::F16, Precision::Int8]
+            .into_iter()
+            .enumerate()
+    {
+        let jobs = jobs_for(precision);
+        let mut oracle = Coordinator::new(&rt, cfg.clone());
+        let want =
+            outcome_fingerprint(&oracle.run_queue(&jobs).unwrap());
+
+        for (wi, workers) in [1usize, 2, 4].into_iter().enumerate() {
+            // alternate backends across the matrix so both engines
+            // see every worker count somewhere
+            let engine = if (pi + wi) % 2 == 0 {
+                EngineKind::Dir
+            } else {
+                EngineKind::Paged
+            };
+            let dir = tmp(&format!("{precision}_{workers}"));
+            let crashing = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    coord: cfg.clone(),
+                    workers,
+                    resident_budget_bytes: Some(0),
+                    store_dir: Some(dir.clone()),
+                    store_engine: engine,
+                    halt_at_window: Some(3),
+                    ..FleetConfig::default()
+                },
+            );
+            let err = crashing.run(&jobs).expect_err(
+                "halt_at_window must abort the run with an error",
+            );
+            assert!(format!("{err:#}").contains("halted"), "{err:#}");
+
+            if engine == EngineKind::Paged {
+                // the crashed store must already be consistent — and
+                // stay consistent under a simulated torn write (bytes
+                // past the committed root are a warning, not
+                // corruption)
+                let file = dir.join(PAGED_FILE_NAME);
+                let report = PagedEngine::fsck(&file).unwrap();
+                assert!(report.is_clean(),
+                        "crashed paged store must fsck clean:\n\
+                         {report}");
+                use std::io::Write;
+                let mut f = std::fs::OpenOptions::new()
+                    .append(true)
+                    .open(&file)
+                    .unwrap();
+                f.write_all(&[0xAB; 37]).unwrap();
+                drop(f);
+                let report = PagedEngine::fsck(&file).unwrap();
+                assert!(report.is_clean(),
+                        "torn tail must be a warning, not an error:\n\
+                         {report}");
+                assert!(!report.warnings.is_empty(),
+                        "the torn tail should be reported");
+            }
+
+            let recovering = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    workers,
+                    resident_budget_bytes: Some(0),
+                    ..FleetConfig::default()
+                },
+            );
+            let report = recovering.recover(&dir).unwrap();
+            assert_eq!(
+                outcome_fingerprint(&report.outcomes), want,
+                "{precision}, {workers} workers, {} engine: recovered \
+                 outcomes diverged from the uninterrupted oracle",
+                engine.label()
+            );
+            assert_eq!(report.telemetry.jobs, jobs.len());
+            if workers == 1 {
+                // the window that ticked the halt clock hibernated
+                // its job (budget 0) before the tick, and a single
+                // worker can never dispatch it again afterwards — so
+                // at least one job must resume from a live image
+                assert!(report.telemetry.recovered_jobs >= 1,
+                        "single-worker crash at window 3 must leave \
+                         a live image behind");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn completed_run_recovers_from_terminal_images_without_rerunning() {
+    // after a durable run completes, every job has a terminal image:
+    // recover() must reconstruct the same outcomes from the store
+    // alone — no window re-runs, no recovered (live) jobs, no
+    // dispatches
+    let rt = runtime();
+    let cfg = coord_cfg();
+    let jobs = jobs_for(Precision::F32);
+    let dir = tmp("terminal");
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig {
+            coord: cfg.clone(),
+            workers: 2,
+            store_dir: Some(dir.clone()),
+            store_engine: EngineKind::Paged,
+            ..FleetConfig::default()
+        },
+    );
+    let first = fleet.run(&jobs).unwrap();
+    assert!(first.telemetry.windows_used > 0);
+    let want = outcome_fingerprint(&first.outcomes);
+
+    let report = fleet.recover(&dir).unwrap();
+    assert_eq!(outcome_fingerprint(&report.outcomes), want);
+    assert_eq!(report.telemetry.recovered_jobs, 0,
+               "terminal images short-circuit, they do not resume");
+    assert!(report.first_dispatch.is_empty(),
+            "nothing should have been dispatched");
+    assert!(report.events.is_empty(),
+            "pre-crash events are not replayed");
+
+    // compaction preserves every byte that matters: fsck stays clean
+    // and a post-compaction recovery still reconstructs the run
+    let file = dir.join(PAGED_FILE_NAME);
+    PagedEngine::open(&file).unwrap().compact().unwrap();
+    let fsck = PagedEngine::fsck(&file).unwrap();
+    assert!(fsck.is_clean(), "compacted store must fsck clean:\n{fsck}");
+    let again = fleet.recover(&dir).unwrap();
+    assert_eq!(outcome_fingerprint(&again.outcomes), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recover_needs_a_manifest() {
+    let rt = runtime();
+    let dir = tmp("no_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let fleet =
+        FleetScheduler::new(&rt, FleetConfig::default());
+    let err = fleet.recover(&dir).expect_err(
+        "an empty directory is not a durable fleet store",
+    );
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
