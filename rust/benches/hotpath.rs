@@ -145,6 +145,72 @@ fn main() -> anyhow::Result<()> {
         }));
     }
 
+    // --- blocked kernels: GFLOP/s and minimum bytes moved per call,
+    //     raced against the naive oracles they are pinned bit-identical
+    //     to (the bench-smoke canary asserts the race is won) ---
+    let (mm_flops, mm_bytes, at_bytes, bt_bytes, cs_bytes);
+    {
+        use pocketllm::runtime::native::math;
+        use pocketllm::util::rng::Rng;
+        // one transformer block's worth of tokens: bs8 x seq64 rows
+        // through a d_model=256 projection (the pocket-roberta shape)
+        let (m, k, n) = (512usize, 256usize, 256usize);
+        mm_flops = (2 * m * k * n) as f64;
+        mm_bytes = (4 * (m * k + k * n + m * n)) as f64;
+        at_bytes = mm_bytes;
+        bt_bytes = mm_bytes;
+        let mut rng = Rng::new(9);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+        let bm: Vec<f32> =
+            (0..m * n).map(|_| rng.next_f32() - 0.5).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let kit = iters.clamp(3, 10);
+        let mut out = vec![0f32; m * n];
+        ms.push(bench("kernel matmul blocked (512x256x256)", 1, kit, || {
+            out.fill(0.0);
+            math::matmul_into(&a, &b, m, k, n, &mut out);
+            std::hint::black_box(&mut out);
+        }));
+        ms.push(bench("kernel matmul naive (512x256x256)", 1, kit, || {
+            out.fill(0.0);
+            math::reference::matmul_into(&a, &b, m, k, n, &mut out);
+            std::hint::black_box(&mut out);
+        }));
+        ms.push(bench("kernel matmul_bias blocked (512x256x256)", 1, kit,
+                      || {
+            math::matmul_bias_into(&a, &b, &bias, m, k, n, &mut out);
+            std::hint::black_box(&mut out);
+        }));
+        let mut out_at = vec![0f32; k * n];
+        ms.push(bench("kernel matmul_at blocked (512x256x256)", 1, kit,
+                      || {
+            out_at.fill(0.0);
+            math::matmul_at_into(&a, &bm, m, k, n, &mut out_at);
+            std::hint::black_box(&mut out_at);
+        }));
+        let mut out_bt = vec![0f32; m * k];
+        ms.push(bench("kernel matmul_bt blocked (512x256x256)", 1, kit,
+                      || {
+            math::matmul_bt_into(&bm, &b, m, n, k, &mut out_bt);
+            std::hint::black_box(&mut out_bt);
+        }));
+        // bias-gradient shape: bs8 x seq64 rows of d_ff=1024
+        let (rows, cn) = (512usize, 1024usize);
+        cs_bytes = (4 * (rows * cn + cn)) as f64;
+        let ca: Vec<f32> =
+            (0..rows * cn).map(|_| rng.next_f32() - 0.5).collect();
+        let mut out_cs = vec![0f32; cn];
+        ms.push(bench("kernel col_sums blocked (512x1024)", 1,
+                      iters.clamp(5, 20), || {
+            out_cs.fill(0.0);
+            math::col_sums_into(&ca, cn, &mut out_cs);
+            std::hint::black_box(&mut out_cs);
+        }));
+    }
+
     // --- L2 perf ablation: fused vs naive MeZO step program ---
     // (same math; the fused variant folds restore+update into one
     //  parameter sweep — EXPERIMENTS.md §Perf L2)
@@ -206,6 +272,14 @@ fn main() -> anyhow::Result<()> {
         "q4 parallel speedup vs sequential: {:.2}x",
         find("mezo_step_q4 sequential") / find("mezo_step_q4 parallel")
     );
+    let kernel_speedup =
+        find("kernel matmul naive") / find("kernel matmul blocked");
+    println!(
+        "blocked matmul vs naive oracle: {kernel_speedup:.2}x \
+         ({:.2} vs {:.2} GFLOP/s) — advisory; canary floor is 1.1x",
+        mm_flops / find("kernel matmul blocked") / 1e9,
+        mm_flops / find("kernel matmul naive") / 1e9,
+    );
 
     let out = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".into());
@@ -228,8 +302,38 @@ fn main() -> anyhow::Result<()> {
             ("q4_parallel_speedup",
              find("mezo_step_q4 sequential")
                  / find("mezo_step_q4 parallel")),
+            ("kernel_matmul_gflops",
+             mm_flops / find("kernel matmul blocked") / 1e9),
+            ("kernel_matmul_naive_gflops",
+             mm_flops / find("kernel matmul naive") / 1e9),
+            ("kernel_matmul_speedup_vs_naive", kernel_speedup),
+            ("kernel_matmul_bytes_moved_mb", mm_bytes / 1e6),
+            ("kernel_matmul_bias_gflops",
+             mm_flops / find("kernel matmul_bias blocked") / 1e9),
+            ("kernel_matmul_bias_bytes_moved_mb", mm_bytes / 1e6),
+            ("kernel_matmul_at_gflops",
+             mm_flops / find("kernel matmul_at blocked") / 1e9),
+            ("kernel_matmul_at_bytes_moved_mb", at_bytes / 1e6),
+            ("kernel_matmul_bt_gflops",
+             mm_flops / find("kernel matmul_bt blocked") / 1e9),
+            ("kernel_matmul_bt_bytes_moved_mb", bt_bytes / 1e6),
+            ("kernel_col_sums_gbps",
+             cs_bytes / find("kernel col_sums blocked") / 1e9),
+            ("kernel_col_sums_bytes_moved_mb", cs_bytes / 1e6),
         ],
     )?;
     println!("wrote {out}");
+
+    // bench-smoke canary (runs under `make bench` in CI): the blocked
+    // matmul must beat the naive oracle on the fixed shape.  The floor
+    // is deliberately generous — real speedups are several-fold; the
+    // measured ratio above is the advisory figure.
+    assert!(
+        kernel_speedup >= 1.1,
+        "bench-smoke canary: blocked matmul ({:.3} ms) no faster than \
+         the naive oracle ({:.3} ms) — blocking regressed",
+        find("kernel matmul blocked") * 1e3,
+        find("kernel matmul naive") * 1e3,
+    );
     Ok(())
 }

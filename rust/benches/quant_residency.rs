@@ -1,20 +1,23 @@
 //! Bench: precision sweep — resident parameter bytes and step
-//! wall-clock for f32 / f16 / int8 storage at the largest builtin
-//! config (pocket-roberta).
+//! wall-clock for f32 / f16 / int8 / per-channel int8 storage at the
+//! largest builtin config (pocket-roberta).
 //!
 //! The paper's feasibility claims are quantized deployments; this
 //! bench pins what the runtime *actually* keeps resident per
 //! precision (measured from the session's `ExecState`, not the
 //! analytic model) and what the dequantize/requantize residency loop
-//! costs per step.  Writes `BENCH_quant.json` (override with
-//! `BENCH_JSON=path`); CI runs it as a smoke step and archives the
-//! JSON next to the other bench artifacts.
+//! costs per step.  It also races per-tensor against per-channel int8
+//! on the model's own weights: round-trip RMSE for both layouts, so
+//! the accuracy the extra scale row buys is a recorded number.  Writes
+//! `BENCH_quant.json` (override with `BENCH_JSON=path`); CI runs it as
+//! a smoke step and archives the JSON next to the other bench
+//! artifacts.
 //!
 //! Knobs: `QUANT_ITERS` (timed iterations per precision, default 8),
 //! `QUANT_STEPS` (steps per iteration, default 2).
 
 use pocketllm::optim::OptimizerKind;
-use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::runtime::{Literal, Manifest, Precision, Runtime};
 use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
 use pocketllm::tuner::session::SessionBuilder;
 
@@ -61,6 +64,46 @@ fn main() -> anyhow::Result<()> {
                "f16 residency must be exactly half of f32");
     assert!(resident[2] < resident[1],
             "int8 residency must undercut f16");
+    assert!(resident[3] >= resident[2] && resident[3] < resident[1],
+            "per-channel int8 costs its scale rows but stays under f16");
+
+    // --- per-tensor vs per-channel int8 on the model's own weights:
+    //     round-trip RMSE of each layout against the f32 source ---
+    let cfg = rt.manifest.config(config)?;
+    let raw = rt.manifest.load_init_params(config)?;
+    let mut sq_err = [0f64; 2];
+    let mut n_elems = 0f64;
+    let mut buf = Vec::new();
+    for (spec, w) in cfg.params.iter().zip(&raw) {
+        for (slot, prec) in [Precision::Int8, Precision::Int8Pc]
+            .into_iter()
+            .enumerate()
+        {
+            let lit = Literal::quantize_from_f32(w, &spec.shape, prec)?;
+            buf.clear();
+            buf.resize(w.len(), 0f32);
+            lit.dequantize_into(&mut buf)?;
+            sq_err[slot] += w
+                .iter()
+                .zip(&buf)
+                .map(|(&x, &y)| f64::from(x - y).powi(2))
+                .sum::<f64>();
+        }
+        n_elems += w.len() as f64;
+    }
+    let rmse_int8 = (sq_err[0] / n_elems).sqrt();
+    let rmse_int8pc = (sq_err[1] / n_elems).sqrt();
+    println!(
+        "int8 round-trip rmse: per-tensor {rmse_int8:.3e}, per-channel \
+         {rmse_int8pc:.3e} ({:.2}x tighter)",
+        rmse_int8 / rmse_int8pc
+    );
+    // per-row scales are never coarser than the tensor scale, so the
+    // aggregate error cannot get worse (equality iff every row shares
+    // the tensor absmax)
+    assert!(rmse_int8pc <= rmse_int8 + 1e-9,
+            "per-channel rmse {rmse_int8pc} worse than per-tensor \
+             {rmse_int8}");
 
     let out = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_quant.json".into());
@@ -73,15 +116,24 @@ fn main() -> anyhow::Result<()> {
             ("resident_bytes_f32", resident[0] as f64),
             ("resident_bytes_f16", resident[1] as f64),
             ("resident_bytes_int8", resident[2] as f64),
+            ("resident_bytes_int8pc", resident[3] as f64),
             ("resident_ratio_f16", resident[1] as f64 / resident[0] as f64),
             ("resident_ratio_int8",
              resident[2] as f64 / resident[0] as f64),
+            ("resident_ratio_int8pc",
+             resident[3] as f64 / resident[0] as f64),
             ("step_ms_f32", step_ms(0)),
             ("step_ms_f16", step_ms(1)),
             ("step_ms_int8", step_ms(2)),
+            ("step_ms_int8pc", step_ms(3)),
             ("loss_f32", losses[0]),
             ("loss_f16", losses[1]),
             ("loss_int8", losses[2]),
+            ("loss_int8pc", losses[3]),
+            ("roundtrip_rmse_int8", rmse_int8),
+            ("roundtrip_rmse_int8pc", rmse_int8pc),
+            ("roundtrip_rmse_improvement",
+             rmse_int8 / rmse_int8pc),
         ],
     )?;
     println!("wrote {out}");

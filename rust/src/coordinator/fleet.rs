@@ -282,10 +282,10 @@ enum Task {
 }
 
 impl Task {
-    fn resident_param_bytes(&self) -> u64 {
+    fn resident_bytes(&self) -> u64 {
         match self {
             Task::Fresh(..) | Task::Stored(..) => 0,
-            Task::Running(r) => r.resident_param_bytes(),
+            Task::Running(r) => r.resident_bytes(),
         }
     }
 }
@@ -326,9 +326,10 @@ impl Ord for QueueKey {
 struct FleetState {
     queue: BTreeMap<QueueKey, Task>,
     next_seq: u64,
-    /// Resident parameter bytes of QUEUED tasks (the budgeted set).
+    /// Resident session bytes (parameter storage + pooled SPSA worker
+    /// shadows) of QUEUED tasks (the budgeted set).
     resident_queued: u64,
-    /// Resident parameter bytes of queued + dispatched tasks.
+    /// Resident session bytes of queued + dispatched tasks.
     resident_live: u64,
     high_water: u64,
     hibernations: u64,
@@ -375,7 +376,10 @@ struct DriveCtx<'a> {
 /// The key the fleet manifest lives under in a durable store.
 const MANIFEST_KEY: &str = "fleet-manifest";
 const MANIFEST_MAGIC: &[u8; 4] = b"PLFM";
-const MANIFEST_VERSION: u32 = 1;
+/// v2 appends the per-job SPSA query count; v1 manifests (no queries
+/// field) still decode, defaulting every job to 1 query.
+const MANIFEST_VERSION: u32 = 2;
+const MANIFEST_MIN_VERSION: u32 = 1;
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(&(s.len() as u32).to_le_bytes());
@@ -417,6 +421,7 @@ fn encode_manifest(coord: &CoordinatorConfig, jobs: &[JobSpec])
         out.extend_from_slice(&(j.batch as u64).to_le_bytes());
         out.extend_from_slice(&j.steps.to_le_bytes());
         out.extend_from_slice(&j.seed.to_le_bytes());
+        out.extend_from_slice(&(j.queries as u32).to_le_bytes());
         out.extend_from_slice(
             &j.deadline_minutes
                 .unwrap_or(f64::NAN)
@@ -449,9 +454,10 @@ fn decode_manifest(bytes: &[u8])
              {actual:#010x} computed");
     let mut r = Reader { buf: body, pos: 4 };
     let version = r.u32()?;
-    ensure!(version == MANIFEST_VERSION,
+    ensure!((MANIFEST_MIN_VERSION..=MANIFEST_VERSION)
+                .contains(&version),
             "fleet manifest version {version} (this build reads \
-             {MANIFEST_VERSION})");
+             {MANIFEST_MIN_VERSION}..={MANIFEST_VERSION})");
     let device_preset = r.string()?;
     let policy = Policy {
         require_charging: r.u8()? != 0,
@@ -490,6 +496,9 @@ fn decode_manifest(bytes: &[u8])
         let batch = r.u64()? as usize;
         let steps = r.u64()?;
         let seed = r.u64()?;
+        let queries = if version >= 2 { r.u32()? as usize } else { 1 };
+        ensure!(queries >= 1,
+                "job {i} has a zero query count in fleet manifest");
         let deadline = f64::from_bits(r.u64()?);
         jobs.push(JobSpec {
             config,
@@ -499,6 +508,7 @@ fn decode_manifest(bytes: &[u8])
             steps,
             seed,
             precision,
+            queries,
             deadline_minutes: if deadline.is_nan() {
                 None
             } else {
@@ -818,9 +828,7 @@ impl<'rt> FleetScheduler<'rt> {
                     Some((_k, task)) => {
                         st.resident_queued = st
                             .resident_queued
-                            .saturating_sub(
-                                task.resident_param_bytes(),
-                            );
+                            .saturating_sub(task.resident_bytes());
                         match &task {
                             Task::Fresh(idx, _)
                             | Task::Stored(idx, _) => {
@@ -842,7 +850,7 @@ impl<'rt> FleetScheduler<'rt> {
                     {
                         Ok(r) => {
                             let r = Box::new(r);
-                            let sz = r.resident_param_bytes();
+                            let sz = r.resident_bytes();
                             ctx.state.lock().unwrap().note_live(sz);
                             r
                         }
@@ -877,7 +885,7 @@ impl<'rt> FleetScheduler<'rt> {
                     {
                         Ok(r) => {
                             let r = Box::new(r);
-                            let sz = r.resident_param_bytes();
+                            let sz = r.resident_bytes();
                             ctx.state.lock().unwrap().note_live(sz);
                             r
                         }
@@ -903,17 +911,18 @@ impl<'rt> FleetScheduler<'rt> {
                     )));
                     return;
                 }
-                let sz = run.resident_param_bytes();
+                let sz = run.resident_bytes();
                 let mut st = ctx.state.lock().unwrap();
                 st.rehydrations += 1;
                 st.note_live(sz);
             }
+            let before = run.resident_bytes();
             match run.advance() {
                 Ok(true) => {
                     // one window done; requeue under the job's EDF
                     // key (fresh seq keeps FIFO within the class),
                     // then hibernate whatever no longer fits
-                    let sz = run.resident_param_bytes();
+                    let sz = run.resident_bytes();
                     let deadline = run
                         .deadline_minutes()
                         .unwrap_or(f64::INFINITY);
@@ -921,6 +930,18 @@ impl<'rt> FleetScheduler<'rt> {
                         Vec::new();
                     {
                         let mut st = ctx.state.lock().unwrap();
+                        // charge standing-state growth from this
+                        // window ONCE, as a pre/post-advance delta —
+                        // e.g. the SPSA shadow pool allocating its
+                        // worker shadows on the job's first q-step —
+                        // never per step
+                        if sz >= before {
+                            st.note_live(sz - before);
+                        } else {
+                            st.resident_live = st
+                                .resident_live
+                                .saturating_sub(before - sz);
+                        }
                         let key = QueueKey {
                             deadline,
                             seq: st.next_seq,
@@ -939,7 +960,7 @@ impl<'rt> FleetScheduler<'rt> {
                                     .find_map(|(k, t)| match t {
                                         Task::Running(r)
                                             if !r.is_hibernated()
-                                                && r.resident_param_bytes()
+                                                && r.resident_bytes()
                                                     > 0 =>
                                         {
                                             Some(*k)
@@ -960,7 +981,7 @@ impl<'rt> FleetScheduler<'rt> {
                                 st.resident_queued = st
                                     .resident_queued
                                     .saturating_sub(
-                                        vr.resident_param_bytes(),
+                                        vr.resident_bytes(),
                                     );
                                 victims.push((vk, vr));
                             }
@@ -971,7 +992,7 @@ impl<'rt> FleetScheduler<'rt> {
                     // shrunken remnants back in under their original
                     // EDF keys
                     for (vk, mut vr) in victims {
-                        let vsz = vr.resident_param_bytes();
+                        let vsz = vr.resident_bytes();
                         let Some(store) = ctx.store else {
                             fail(anyhow::anyhow!(
                                 "budget eviction without a store"
@@ -1021,7 +1042,7 @@ impl<'rt> FleetScheduler<'rt> {
                     }
                 }
                 Ok(false) => {
-                    let sz = run.resident_param_bytes();
+                    let sz = run.resident_bytes();
                     let idx = run.idx;
                     if ctx.durable {
                         let Some(store) = ctx.store else {
@@ -1050,6 +1071,16 @@ impl<'rt> FleetScheduler<'rt> {
                     let result = run.finish();
                     ctx.finished.lock().unwrap()[idx] = Some(result);
                     let mut st = ctx.state.lock().unwrap();
+                    // reconcile the final window's delta (so the
+                    // high-water sees growth even on the last
+                    // window), then release the whole session
+                    if sz >= before {
+                        st.note_live(sz - before);
+                    } else {
+                        st.resident_live = st
+                            .resident_live
+                            .saturating_sub(before - sz);
+                    }
                     st.resident_live =
                         st.resident_live.saturating_sub(sz);
                 }
@@ -1120,6 +1151,7 @@ mod tests {
                          OptimizerKind::MeZo)
                 .steps(11)
                 .seed(5)
+                .queries(4)
                 .deadline(640.0),
             JobSpec::new("pocket-roberta", TaskKind::Sst2,
                          OptimizerKind::Adam)
@@ -1141,7 +1173,9 @@ mod tests {
         assert_eq!(j2[0].config, "pocket-tiny");
         assert_eq!(j2[0].deadline_minutes, Some(640.0));
         assert_eq!(j2[0].steps, 11);
+        assert_eq!(j2[0].queries, 4);
         assert_eq!(j2[1].optimizer, OptimizerKind::Adam);
+        assert_eq!(j2[1].queries, 1);
         assert_eq!(j2[1].precision, Precision::F16);
         assert_eq!(j2[1].batch, 8);
         assert_eq!(j2[1].deadline_minutes, None);
@@ -1151,6 +1185,60 @@ mod tests {
         bad[10] ^= 0x40;
         let err = decode_manifest(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+    }
+
+    #[test]
+    fn v1_manifest_still_decodes_with_single_query_jobs() {
+        use crate::data::task::TaskKind;
+        // hand-build a version-1 manifest (no per-job query count) —
+        // the format every pre-v2 store on disk holds
+        let coord = CoordinatorConfig {
+            device_preset: "oppo-reno6".into(),
+            policy: Policy::overnight(),
+            steps_per_window: 3,
+            trace_step_minutes: 7.5,
+            max_windows: 40,
+            trace_seed: 99,
+        };
+        let mut out = Vec::new();
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        put_str(&mut out, &coord.device_preset);
+        let p = &coord.policy;
+        out.push(p.require_charging as u8);
+        out.extend_from_slice(
+            &p.min_battery_pct.to_bits().to_le_bytes(),
+        );
+        out.push(p.require_screen_off as u8);
+        out.extend_from_slice(&p.max_temp_c.to_bits().to_le_bytes());
+        out.extend_from_slice(&p.min_free_bytes.to_le_bytes());
+        out.extend_from_slice(&coord.steps_per_window.to_le_bytes());
+        out.extend_from_slice(
+            &coord.trace_step_minutes.to_bits().to_le_bytes(),
+        );
+        out.extend_from_slice(
+            &(coord.max_windows as u64).to_le_bytes(),
+        );
+        out.extend_from_slice(&coord.trace_seed.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes()); // one job
+        put_str(&mut out, "pocket-tiny");
+        put_str(&mut out, TaskKind::Sst2.label());
+        out.push(0); // MeZo
+        out.push(Precision::F32.code());
+        out.extend_from_slice(&4u64.to_le_bytes()); // batch
+        out.extend_from_slice(&7u64.to_le_bytes()); // steps
+        out.extend_from_slice(&5u64.to_le_bytes()); // seed
+        out.extend_from_slice(&f64::NAN.to_bits().to_le_bytes());
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        let (c2, jobs) = decode_manifest(&out).unwrap();
+        assert_eq!(c2.trace_seed, 99);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].steps, 7);
+        assert_eq!(jobs[0].seed, 5);
+        assert_eq!(jobs[0].queries, 1,
+                   "v1 jobs default to one query");
+        assert_eq!(jobs[0].deadline_minutes, None);
     }
 
     #[test]

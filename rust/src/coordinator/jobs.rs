@@ -17,6 +17,12 @@ pub struct JobSpec {
     /// f32; fp16/int8 halve/quarter both the host-resident bytes and
     /// the simulated ledger's parameter charge).
     pub precision: Precision,
+    /// k-query SPSA (paper §6.3): average k independent two-point
+    /// gradient estimates per step.  Needs a `mezo_step_q{k}` artifact
+    /// for the config; the default 1 uses the standard fused program.
+    /// Multi-query sessions keep pooled worker shadows resident
+    /// between steps, which the fleet's residency telemetry meters.
+    pub queries: usize,
     /// Completion deadline in **simulated minutes** from queue time
     /// (`None` = best-effort).  The fleet's EDF queue dispatches
     /// earlier deadlines first; `None` sorts after every deadline.
@@ -37,6 +43,7 @@ impl JobSpec {
             steps: 20,
             seed: 42,
             precision: Precision::F32,
+            queries: 1,
             deadline_minutes: None,
         }
     }
@@ -58,6 +65,13 @@ impl JobSpec {
 
     pub fn precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// k-query SPSA per step (default 1).
+    pub fn queries(mut self, k: usize) -> Self {
+        assert!(k >= 1);
+        self.queries = k;
         self
     }
 

@@ -164,6 +164,7 @@ impl JobRun {
                 .task(spec.task)
                 .seed(spec.seed)
                 .precision(spec.precision)
+                .queries(spec.queries)
                 .device(device)
                 .build();
             match built {
@@ -285,6 +286,7 @@ impl JobRun {
             .task(spec.task)
             .seed(spec.seed)
             .precision(spec.precision)
+            .queries(spec.queries)
             .device(device)
             .build()
             .with_context(|| format!(
@@ -351,13 +353,15 @@ impl JobRun {
         format!("job{}", self.idx)
     }
 
-    /// Host bytes of resident parameter storage this run currently
-    /// pins (0 when hibernated, terminal, or failed at admission) —
-    /// what the fleet's `resident_budget_bytes` meters.
-    pub fn resident_param_bytes(&self) -> u64 {
+    /// Host bytes of resident session state this run currently pins —
+    /// parameter storage plus pooled SPSA worker shadows, charged once
+    /// at their standing size (0 when hibernated, terminal, or failed
+    /// at admission) — what the fleet's `resident_budget_bytes`
+    /// meters.
+    pub fn resident_bytes(&self) -> u64 {
         self.session
             .as_ref()
-            .map(|s| s.resident_param_bytes())
+            .map(|s| s.resident_bytes())
             .unwrap_or(0)
     }
 

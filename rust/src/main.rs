@@ -67,7 +67,8 @@ COMMON FLAGS
                      step (needs a mezo_step_q{K} artifact; default 1)
   --batch-window N   resident batch-cache window; older batches are
                      regenerated deterministically (default 512)
-  --precision P      parameter storage: f32 | f16 | int8 (default f32).
+  --precision P      parameter storage: f32 | f16 | int8 | int8pc
+                     (int8pc = per-channel scales; default f32).
                      Params stay at P between steps (compute is f32);
                      the simulated ledger charges the same byte-width.
                      For fleet runs, applies to every job
@@ -89,7 +90,7 @@ DAEMON
 FLEET
   pocketllm fleet [--jobs N] [--workers W] [--steps N] [--model NAME]
                   [--policy overnight|always] [--windows N]
-                  [--steps-per-window N] [--trace-seed N]
+                  [--steps-per-window N] [--trace-seed N] [--queries K]
                   [--resident-budget B] [--deadline M] [--store-dir D]
                   [--store-engine dir|paged] [--recover]
                   [--kill-at-window K]
@@ -195,7 +196,7 @@ fn run(argv: &[String]) -> Result<()> {
 
 fn parse_precision(args: &Args) -> Result<Precision> {
     Precision::parse(args.get_or("precision", "f32"))
-        .context("bad --precision (f32|f16|int8)")
+        .context("bad --precision (f32|f16|int8|int8pc)")
 }
 
 fn parse_schedule(args: &Args) -> Result<Option<Schedule>> {
@@ -505,6 +506,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let base_seed = args.get_u64("seed", 42)?;
     let batch = args.get_usize("batch", 0)?;
     let precision = parse_precision(args)?;
+    let queries = args.get_usize("queries", 1)?;
+    if queries == 0 {
+        bail!("--queries must be >= 1");
+    }
     // --deadline M: job i gets M*(jobs-i) simulated minutes, so
     // later-queued jobs have TIGHTER deadlines and the EDF queue
     // dispatches them first — outcomes stay identical (the contract),
@@ -564,7 +569,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 .batch(batch)
                 .steps(steps)
                 .seed(base_seed + i as u64)
-                .precision(precision);
+                .precision(precision)
+                .queries(queries);
             if let Some(m) = deadline_base {
                 j = j.deadline(m * (n_jobs - i) as f64);
             }

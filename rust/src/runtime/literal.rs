@@ -29,6 +29,10 @@ pub enum LiteralData {
     U32(Vec<u32>),
     F16(Vec<u16>),
     I8 { data: Vec<i8>, scale: f32 },
+    /// Per-channel int8: `scales.len()` rows of `data.len() /
+    /// scales.len()` codes each.  The row grouping travels with the
+    /// data (not the shape), so flat durable forms reshape safely.
+    I8C { data: Vec<i8>, scales: Vec<f32> },
 }
 
 /// A host tensor: row-major data plus shape.
@@ -78,6 +82,27 @@ impl Literal {
         Ok(Literal { shape, data: LiteralData::I8 { data, scale } })
     }
 
+    /// Per-channel int8 tensor: `scales.len()` must divide
+    /// `data.len()` evenly (0 scales only for an empty tensor).
+    pub fn from_i8_rows(
+        data: Vec<i8>,
+        scales: Vec<f32>,
+        shape: Vec<usize>,
+    ) -> Result<Literal> {
+        Self::check(data.len(), &shape)?;
+        if scales.is_empty() {
+            ensure!(data.is_empty(),
+                    "per-channel int8 with 0 scales but {} codes",
+                    data.len());
+        } else {
+            ensure!(data.len() % scales.len() == 0,
+                    "per-channel int8: {} codes not divisible into {} \
+                     rows",
+                    data.len(), scales.len());
+        }
+        Ok(Literal { shape, data: LiteralData::I8C { data, scales } })
+    }
+
     /// Quantize f32 data into a literal stored at `precision`
     /// (`Precision::F32` stores it as-is).  Rounding semantics are the
     /// documented ones in [`precision`]: RNE for f16, absmax/127 with
@@ -100,6 +125,20 @@ impl Literal {
                 let scale = precision::i8_quantize_into(data, &mut q);
                 LiteralData::I8 { data: q, scale }
             }
+            Precision::Int8Pc => {
+                // one scale per output row for rank >= 2 tensors;
+                // rank <= 1 degenerates to the per-tensor layout
+                let rows = match shape {
+                    [r, _, ..] => *r,
+                    _ if data.is_empty() => 0,
+                    _ => 1,
+                };
+                let mut q = vec![0i8; data.len()];
+                let mut scales = vec![0f32; rows];
+                precision::i8_quantize_rows_into(data, &mut q,
+                                                 &mut scales);
+                LiteralData::I8C { data: q, scales }
+            }
         };
         Ok(Literal { shape: shape.to_vec(), data: stored })
     }
@@ -114,6 +153,25 @@ impl Literal {
         bytes: &[u8],
     ) -> Result<Literal> {
         let n: usize = shape.iter().product();
+        if precision == Precision::Int8Pc {
+            // self-describing: [u32 n_scales][scales f32][codes i8]
+            ensure!(bytes.len() >= 4,
+                    "int8pc storage too short: {} bytes", bytes.len());
+            let ns = u32::from_le_bytes([
+                bytes[0], bytes[1], bytes[2], bytes[3],
+            ]) as usize;
+            ensure!(bytes.len() == 4 + 4 * ns + n,
+                    "int8pc storage of shape {:?} with {} scales is \
+                     {} bytes, got {}",
+                    shape, ns, 4 + 4 * ns + n, bytes.len());
+            let scales: Vec<f32> = bytes[4..4 + 4 * ns]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let data: Vec<i8> =
+                bytes[4 + 4 * ns..].iter().map(|&b| b as i8).collect();
+            return Literal::from_i8_rows(data, scales, shape);
+        }
         ensure!(bytes.len() as u64 == precision.storage_bytes(n),
                 "{} storage of shape {:?} is {} bytes, got {}",
                 precision, shape, precision.storage_bytes(n),
@@ -141,6 +199,7 @@ impl Literal {
                     bytes[4..].iter().map(|&b| b as i8).collect();
                 Literal::from_i8(data, scale, shape)
             }
+            Precision::Int8Pc => unreachable!("handled above"),
         }
     }
 
@@ -166,6 +225,9 @@ impl Literal {
             LiteralData::I8 { data, scale } => {
                 *scale = precision::i8_quantize_into(src, data);
             }
+            LiteralData::I8C { data, scales } => {
+                precision::i8_quantize_rows_into(src, data, scales);
+            }
             other => bail!(
                 "requantize_from_f32 on non-parameter dtype {:?}",
                 match other {
@@ -190,6 +252,9 @@ impl Literal {
             LiteralData::I8 { data, scale } => {
                 precision::i8_dequantize_into(data, *scale, out)
             }
+            LiteralData::I8C { data, scales } => {
+                precision::i8_dequantize_rows_into(data, scales, out)
+            }
             _ => bail!("dequantize on non-parameter dtype {:?}",
                        self.dtype()),
         }
@@ -211,6 +276,14 @@ impl Literal {
                 let s = *scale;
                 Ok(Box::new(data.iter().map(move |&q| q as f32 * s)))
             }
+            LiteralData::I8C { data, scales } => {
+                let cols =
+                    (data.len() / scales.len().max(1)).max(1);
+                let scales = scales.as_slice();
+                Ok(Box::new(data.iter().enumerate().map(
+                    move |(i, &q)| q as f32 * scales[i / cols],
+                )))
+            }
             _ => bail!("as_f32_iter on non-parameter dtype {:?}",
                        self.dtype()),
         }
@@ -223,12 +296,14 @@ impl Literal {
             LiteralData::F32(_) => Some(Precision::F32),
             LiteralData::F16(_) => Some(Precision::F16),
             LiteralData::I8 { .. } => Some(Precision::Int8),
+            LiteralData::I8C { .. } => Some(Precision::Int8Pc),
             _ => None,
         }
     }
 
     /// Actual host bytes this literal's element storage occupies
-    /// (int8 includes its 4-byte scale).
+    /// (int8 includes its 4-byte scale; per-channel int8 its scale
+    /// row).
     pub fn resident_bytes(&self) -> u64 {
         match &self.data {
             LiteralData::F32(v) => 4 * v.len() as u64,
@@ -236,6 +311,26 @@ impl Literal {
             LiteralData::U32(v) => 4 * v.len() as u64,
             LiteralData::F16(v) => 2 * v.len() as u64,
             LiteralData::I8 { data, .. } => data.len() as u64 + 4,
+            LiteralData::I8C { data, scales } => {
+                data.len() as u64 + 4 * scales.len() as u64
+            }
+        }
+    }
+
+    /// Exact length of [`to_le_bytes`](Literal::to_le_bytes) without
+    /// materializing it.  Equals `precision.storage_bytes(len)` for
+    /// the fixed layouts; per-channel int8 adds its scale row
+    /// (`4 + 4 * n_scales + codes`).
+    pub fn storage_len(&self) -> u64 {
+        match &self.data {
+            LiteralData::F32(v) => 4 * v.len() as u64,
+            LiteralData::I32(v) => 4 * v.len() as u64,
+            LiteralData::U32(v) => 4 * v.len() as u64,
+            LiteralData::F16(v) => 2 * v.len() as u64,
+            LiteralData::I8 { data, .. } => data.len() as u64 + 4,
+            LiteralData::I8C { data, scales } => {
+                4 + 4 * scales.len() as u64 + data.len() as u64
+            }
         }
     }
 
@@ -249,7 +344,9 @@ impl Literal {
             LiteralData::I32(_) => Dtype::I32,
             LiteralData::U32(_) => Dtype::U32,
             LiteralData::F16(_) => Dtype::F16,
-            LiteralData::I8 { .. } => Dtype::I8,
+            LiteralData::I8 { .. } | LiteralData::I8C { .. } => {
+                Dtype::I8
+            }
         }
     }
 
@@ -261,6 +358,7 @@ impl Literal {
             LiteralData::U32(v) => v.len(),
             LiteralData::F16(v) => v.len(),
             LiteralData::I8 { data, .. } => data.len(),
+            LiteralData::I8C { data, .. } => data.len(),
         }
     }
 
@@ -352,6 +450,16 @@ impl Literal {
             }
             LiteralData::I8 { data, scale } => {
                 out.extend_from_slice(&scale.to_le_bytes());
+                for x in data {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            LiteralData::I8C { data, scales } => {
+                let ns = scales.len() as u32;
+                out.extend_from_slice(&ns.to_le_bytes());
+                for s in scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
                 for x in data {
                     out.extend_from_slice(&x.to_le_bytes());
                 }
@@ -453,6 +561,65 @@ mod tests {
         assert_eq!(f32l.resident_bytes(), 16);
         assert_eq!(f16l.resident_bytes(), 8);
         assert_eq!(i8l.resident_bytes(), 4 + 4); // codes + scale
+        let i8pc =
+            Literal::quantize_from_f32(&data, &[2, 2], Precision::Int8Pc)
+                .unwrap();
+        assert_eq!(i8pc.resident_bytes(), 4 + 2 * 4); // codes + 2 scales
+        assert_eq!(i8pc.storage_len(), 4 + 2 * 4 + 4); // + n_scales u32
+    }
+
+    #[test]
+    fn per_channel_literal_rows_follow_shape_then_travel_with_data() {
+        // rows with very different magnitudes: per-channel keeps the
+        // small row's resolution
+        let data = [0.01f32, -0.02, 0.015, 100.0, -50.0, 75.0];
+        let l =
+            Literal::quantize_from_f32(&data, &[2, 3], Precision::Int8Pc)
+                .unwrap();
+        assert_eq!(l.dtype(), Dtype::I8);
+        assert_eq!(l.storage_precision(), Some(Precision::Int8Pc));
+        let back: Vec<f32> = l.as_f32_iter().unwrap().collect();
+        let mut buf = [0f32; 6];
+        l.dequantize_into(&mut buf).unwrap();
+        assert_eq!(back, buf.to_vec());
+        // small-row error far below what per-tensor absmax would give
+        for (x, y) in data[..3].iter().zip(&back[..3]) {
+            assert!((x - y).abs() <= 0.02 / 127.0 * 0.5 + 1e-7,
+                    "{x} vs {y}");
+        }
+        // reshaping (the flat durable form) must not change values
+        let flat = l.clone().reshaped(vec![6]).unwrap();
+        let back2: Vec<f32> = flat.as_f32_iter().unwrap().collect();
+        assert_eq!(back, back2);
+        // wire roundtrip: self-describing payload, shape-independent
+        let bytes = l.to_le_bytes();
+        assert_eq!(bytes.len() as u64, l.storage_len());
+        let rt = Literal::from_storage_bytes(Precision::Int8Pc,
+                                             vec![2, 3], &bytes)
+            .unwrap();
+        assert_eq!(rt, l);
+        // truncated payloads rejected
+        assert!(Literal::from_storage_bytes(Precision::Int8Pc,
+                                            vec![2, 3], &bytes[..3])
+            .is_err());
+        assert!(Literal::from_storage_bytes(Precision::Int8Pc,
+                                            vec![2, 3],
+                                            &bytes[..bytes.len() - 1])
+            .is_err());
+        // requantize reuses the existing row grouping
+        let mut l2 = l.clone();
+        l2.requantize_from_f32(&back).unwrap();
+        assert_eq!(l2, l, "int8pc boundary crossings must not drift");
+        // rank-1 degenerates to one scale == per-tensor arithmetic
+        let r1 = Literal::quantize_from_f32(&data, &[6],
+                                            Precision::Int8Pc)
+            .unwrap();
+        let pt = Literal::quantize_from_f32(&data, &[6],
+                                            Precision::Int8)
+            .unwrap();
+        let a: Vec<f32> = r1.as_f32_iter().unwrap().collect();
+        let b: Vec<f32> = pt.as_f32_iter().unwrap().collect();
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -498,7 +665,7 @@ mod tests {
             let l = Literal::quantize_from_f32(&data, &[2, 3], p)
                 .unwrap();
             let bytes = l.to_le_bytes();
-            assert_eq!(bytes.len() as u64, p.storage_bytes(6), "{p}");
+            assert_eq!(bytes.len() as u64, l.storage_len(), "{p}");
             let back =
                 Literal::from_storage_bytes(p, vec![2, 3], &bytes)
                     .unwrap();

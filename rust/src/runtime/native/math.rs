@@ -1,11 +1,25 @@
 //! Dense f32 kernels for the native interpreter.
 //!
-//! Plain safe Rust, written so LLVM autovectorizes the inner loops:
-//! matmuls use the i-k-j order (unit-stride writes, no horizontal
-//! reductions) and dot products keep 8 independent accumulators.  Large
-//! matmuls split output rows across a `std::thread::scope` — results
-//! stay bit-deterministic because each output element is always reduced
-//! in the same sequential order regardless of the thread count.
+//! Plain safe Rust, written so LLVM autovectorizes the inner loops.
+//! The serial cores are cache-blocked: `matmul` tiles N and K around a
+//! packed B panel ([`KC`]×[`NC`], stack-resident, reused across every
+//! row of the block) with a 4-deep K strip so each output row segment
+//! is loaded and stored once per four rank-1 updates instead of once
+//! per update; `matmul_at` strips its reduction rows the same way;
+//! `matmul_bt` walks 8×8 output tiles so both operands' rows stay in
+//! L1 across the tile.  Innermost loops are unit-stride over slices of
+//! compiler-visible length.  Large kernels additionally split output
+//! rows across a `std::thread::scope`.
+//!
+//! **f32 bit-identity contract**: every output element is reduced in
+//! the exact per-element order of the naive kernels in [`reference`] —
+//! K strictly ascending with one rounding per update (`matmul`,
+//! `matmul_at`, `col_sums`: the blocking/strip-mining resequences
+//! *which element* is updated next, never the adds within one
+//! element), and `matmul_bt` computes each element with the same
+//! 8-accumulator [`dot`].  Results are therefore bit-identical across
+//! block sizes, thread counts, and the unblocked references — pinned
+//! by the proptests in `rust/tests/proptests.rs`.
 //!
 //! Every kernel comes in two forms: an allocating wrapper (`matmul`,
 //! `matmul_bias`, ...) and an `_into` variant that writes a
@@ -81,16 +95,88 @@ pub fn n_threads() -> usize {
 /// Flop threshold below which threading costs more than it saves.
 const PAR_FLOPS: usize = 1 << 21;
 
-/// Serial i-k-j matmul over a row range: out[r, :] += a[r, :] @ b.
+/// K-tile depth of the packed B panel (rows of B per pack).
+const KC: usize = 64;
+/// N-tile width of the packed B panel (columns of B per pack).
+/// KC*NC f32 = 16 KiB — the panel lives on the stack and stays
+/// L1-resident while every row of the block streams through it.
+const NC: usize = 64;
+
+/// One register tile of the blocked matmul:
+/// `orow[j] += sum_kk arow[kk] * panel[kk*nb + j]`, K rows applied in
+/// ascending order with the adds sequenced per element (the f32
+/// bit-identity contract).  The 4-deep strip lets each `orow[j]` be
+/// loaded and stored once per four updates.
+#[inline]
+fn mm_tile(arow: &[f32], panel: &[f32], nb: usize, orow: &mut [f32]) {
+    let kb = arow.len();
+    debug_assert!(panel.len() >= kb * nb);
+    debug_assert_eq!(orow.len(), nb);
+    let mut kk = 0;
+    while kk + 4 <= kb {
+        let (a0, a1, a2, a3) =
+            (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+        let p0 = &panel[kk * nb..][..nb];
+        let p1 = &panel[(kk + 1) * nb..][..nb];
+        let p2 = &panel[(kk + 2) * nb..][..nb];
+        let p3 = &panel[(kk + 3) * nb..][..nb];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut v = *o;
+            v += a0 * p0[j];
+            v += a1 * p1[j];
+            v += a2 * p2[j];
+            v += a3 * p3[j];
+            *o = v;
+        }
+        kk += 4;
+    }
+    while kk < kb {
+        let av = arow[kk];
+        let prow = &panel[kk * nb..][..nb];
+        for (o, &pv) in orow.iter_mut().zip(prow) {
+            *o += av * pv;
+        }
+        kk += 1;
+    }
+}
+
+/// Serial cache-blocked matmul over a row range:
+/// out[r, :] += a[r, :] @ b.  Tiles N and K; B tiles narrower than a
+/// full stripe are packed into a stack panel (contiguous, L1-resident,
+/// reused across every row of the block).  Bit-identical to
+/// [`reference::matmul_into`] for any block size.
 fn mm_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    if n == 0 || out.is_empty() {
+        return;
+    }
     let rows = out.len() / n;
-    for i in 0..rows {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    if n <= NC {
+        // a full-width stripe of B is already contiguous: the slice
+        // b[kc*n ..] IS the panel, so skip the pack
+        for kc in (0..k).step_by(KC) {
+            let kb = KC.min(k - kc);
+            let bsub = &b[kc * n..(kc + kb) * n];
+            for i in 0..rows {
+                mm_tile(&a[i * k + kc..i * k + kc + kb], bsub, n,
+                        &mut out[i * n..(i + 1) * n]);
+            }
+        }
+        return;
+    }
+    let mut panel = [0f32; KC * NC];
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for kc in (0..k).step_by(KC) {
+            let kb = KC.min(k - kc);
+            for kk in 0..kb {
+                let src = (kc + kk) * n + jc;
+                panel[kk * nb..(kk + 1) * nb]
+                    .copy_from_slice(&b[src..src + nb]);
+            }
+            let p = &panel[..kb * nb];
+            for i in 0..rows {
+                mm_tile(&a[i * k + kc..i * k + kc + kb], p, nb,
+                        &mut out[i * n + jc..i * n + jc + nb]);
             }
         }
     }
@@ -114,7 +200,7 @@ pub fn matmul_into(
         mm_rows(a, b, k, n, out);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
+    let rows_per = m.div_ceil(threads);
     std::thread::scope(|sc| {
         for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
             let lo = ci * rows_per;
@@ -146,6 +232,9 @@ pub fn matmul_bias_into(
 ) {
     debug_assert_eq!(out.len(), m * n);
     debug_assert_eq!(bias.len(), n);
+    if n == 0 {
+        return;
+    }
     for row in out.chunks_mut(n) {
         row.copy_from_slice(bias);
     }
@@ -154,7 +243,7 @@ pub fn matmul_bias_into(
         mm_rows(a, b, k, n, out);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
+    let rows_per = m.div_ceil(threads);
     std::thread::scope(|sc| {
         for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
             let lo = ci * rows_per;
@@ -178,9 +267,18 @@ pub fn matmul_bias(
     out
 }
 
-/// Serial a^T@b over an output-row (i.e. k-index) range starting at
-/// `k_lo`.  Accumulation over `mm` runs in increasing order for every
-/// output element, independent of how the k range is split.
+/// Output-row tile height for the blocked a^T@b kernel: B streams
+/// through once per TI_AT output rows (instead of once per row) while
+/// the TI_AT×n output block stays L1-resident.
+const TI_AT: usize = 8;
+
+/// Serial cache-blocked a^T@b over an output-row (i.e. k-index) range
+/// starting at `k_lo`.  Accumulation over `mm` runs in increasing
+/// order for every output element — the full `0..m` sweep happens
+/// inside each output-row tile, and the 4-deep strip sequences its
+/// adds per element — so results are bit-identical for any tile
+/// height and any split of the k range
+/// ([`reference::matmul_at_into`] is the oracle).
 fn mm_at_cols(
     a: &[f32],
     b: &[f32],
@@ -190,14 +288,49 @@ fn mm_at_cols(
     k_lo: usize,
     out: &mut [f32],
 ) {
-    for mm in 0..m {
-        let arow = &a[mm * k..(mm + 1) * k];
-        let brow = &b[mm * n..(mm + 1) * n];
-        for (ki, orow) in out.chunks_exact_mut(n).enumerate() {
-            let av = arow[k_lo + ki];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    if n == 0 || out.is_empty() {
+        return;
+    }
+    let krange = out.len() / n;
+    for kic in (0..krange).step_by(TI_AT) {
+        let kib = TI_AT.min(krange - kic);
+        let oblock = &mut out[kic * n..(kic + kib) * n];
+        let mut mm = 0;
+        while mm + 4 <= m {
+            let b0 = &b[mm * n..][..n];
+            let b1 = &b[(mm + 1) * n..][..n];
+            let b2 = &b[(mm + 2) * n..][..n];
+            let b3 = &b[(mm + 3) * n..][..n];
+            for (kio, orow) in
+                oblock.chunks_exact_mut(n).enumerate()
+            {
+                let col = k_lo + kic + kio;
+                let a0 = a[mm * k + col];
+                let a1 = a[(mm + 1) * k + col];
+                let a2 = a[(mm + 2) * k + col];
+                let a3 = a[(mm + 3) * k + col];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let mut v = *o;
+                    v += a0 * b0[j];
+                    v += a1 * b1[j];
+                    v += a2 * b2[j];
+                    v += a3 * b3[j];
+                    *o = v;
+                }
             }
+            mm += 4;
+        }
+        while mm < m {
+            let brow = &b[mm * n..][..n];
+            for (kio, orow) in oblock.chunks_exact_mut(n).enumerate()
+            {
+                let col = k_lo + kic + kio;
+                let av = a[mm * k + col];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            mm += 1;
         }
     }
 }
@@ -223,7 +356,7 @@ pub fn matmul_at_into(
         mm_at_cols(a, b, m, k, n, 0, out);
         return;
     }
-    let rows_per = (k + threads - 1) / threads;
+    let rows_per = k.div_ceil(threads);
     std::thread::scope(|sc| {
         for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
             let k_lo = ci * rows_per;
@@ -265,14 +398,31 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// Serial row range of `a @ b^T` (overwrites).
+/// Output tile edge for the blocked `a @ b^T` kernel: within one
+/// TB×TB tile, TB rows of `a` and TB rows of `b` (≤ 2·TB·n bytes)
+/// stay cache-hot and are reused TB times each.
+const TB: usize = 8;
+
+/// Serial row range of `a @ b^T` (overwrites).  Walks TB×TB output
+/// tiles for locality; every element is still the same 8-accumulator
+/// [`dot`] of the same two rows, so tiling cannot change results
+/// ([`reference::matmul_bt_into`] is the oracle).
 fn mm_bt_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    if k == 0 || out.is_empty() {
+        return;
+    }
     let rows = out.len() / k;
-    for i in 0..rows {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (kk, o) in orow.iter_mut().enumerate() {
-            *o = dot(arow, &b[kk * n..(kk + 1) * n]);
+    for i0 in (0..rows).step_by(TB) {
+        let ib = TB.min(rows - i0);
+        for j0 in (0..k).step_by(TB) {
+            let jb = TB.min(k - j0);
+            for i in i0..i0 + ib {
+                let arow = &a[i * n..(i + 1) * n];
+                let orow = &mut out[i * k..(i + 1) * k];
+                for j in j0..j0 + jb {
+                    orow[j] = dot(arow, &b[j * n..(j + 1) * n]);
+                }
+            }
         }
     }
 }
@@ -294,7 +444,7 @@ pub fn matmul_bt_into(
         mm_bt_rows(a, b, n, k, out);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
+    let rows_per = m.div_ceil(threads);
     std::thread::scope(|sc| {
         for (ci, ochunk) in out.chunks_mut(rows_per * k).enumerate() {
             let lo = ci * rows_per;
@@ -314,10 +464,32 @@ pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize)
 }
 
 /// `out[j] += sum_rows a[., j]` — column sums of an [rows, n] matrix,
-/// accumulated row-by-row in order (the bias-gradient kernel).
+/// accumulated row-by-row in order (the bias-gradient kernel).  Rows
+/// are strip-mined four at a time with the adds sequenced per column,
+/// so each `out[j]` is loaded/stored once per four rows while the
+/// per-element reduction order stays exactly row-ascending
+/// ([`reference::col_sums_into`] is the oracle).
 pub fn col_sums_into(a: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), n);
-    for row in a.chunks_exact(n) {
+    if n == 0 {
+        return;
+    }
+    let mut strips = a.chunks_exact(4 * n);
+    for strip in &mut strips {
+        let r0 = &strip[..n];
+        let r1 = &strip[n..2 * n];
+        let r2 = &strip[2 * n..3 * n];
+        let r3 = &strip[3 * n..4 * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut v = *o;
+            v += r0[j];
+            v += r1[j];
+            v += r2[j];
+            v += r3[j];
+            *o = v;
+        }
+    }
+    for row in strips.remainder().chunks_exact(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;
         }
@@ -340,6 +512,114 @@ pub fn dgelu(x: f32) -> f32 {
         + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * 0.044715 * x * x)
 }
 
+/// Naive, unblocked oracles for the blocked kernels above.
+///
+/// Each computes every output element with the exact per-element f32
+/// reduction order the blocked kernels preserve (K strictly
+/// ascending, one rounding per update; `matmul_bt` via the same
+/// 8-accumulator [`dot`]), so tests pin *bit-identity* against them —
+/// not approximate closeness.  They are kept `pub` as the oracle for
+/// `rust/tests/proptests.rs` and the bench-smoke canary in
+/// `benches/hotpath.rs`; never call them from a hot path.
+pub mod reference {
+    use super::dot;
+
+    /// `out += a [m,k] @ b [k,n]`, element-at-a-time.
+    pub fn matmul_into(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = out[i * n + j];
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+    }
+
+    /// `out = a @ b + bias` (overwrites).
+    pub fn matmul_bias_into(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), m * n);
+        if n == 0 {
+            return;
+        }
+        for row in out.chunks_mut(n) {
+            row.copy_from_slice(bias);
+        }
+        matmul_into(a, b, m, k, n, out);
+    }
+
+    /// `out += a^T [k,m] @ b [m,n]` (a stored as [m,k]),
+    /// element-at-a-time with `mm` ascending.
+    pub fn matmul_at_into(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), k * n);
+        for ki in 0..k {
+            for j in 0..n {
+                let mut acc = out[ki * n + j];
+                for mm in 0..m {
+                    acc += a[mm * k + ki] * b[mm * n + j];
+                }
+                out[ki * n + j] = acc;
+            }
+        }
+    }
+
+    /// `out = a [m,n] @ b [k,n]^T` (overwrites), one [`dot`] per
+    /// element.
+    pub fn matmul_bt_into(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), m * k);
+        for i in 0..m {
+            for j in 0..k {
+                out[i * k + j] =
+                    dot(&a[i * n..(i + 1) * n], &b[j * n..(j + 1) * n]);
+            }
+        }
+    }
+
+    /// `out[j] += sum_rows a[., j]`, row-ascending.
+    pub fn col_sums_into(a: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), n);
+        if n == 0 {
+            return;
+        }
+        for row in a.chunks_exact(n) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,15 +628,7 @@ mod tests {
         -> Vec<f32>
     {
         let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0f32;
-                for kk in 0..k {
-                    acc += a[i * k + kk] * b[kk * n + j];
-                }
-                out[i * n + j] = acc;
-            }
-        }
+        reference::matmul_into(a, b, m, k, n, &mut out);
         out
     }
 
@@ -368,13 +640,70 @@ mod tests {
 
     #[test]
     fn matmul_matches_naive() {
+        // bit-identical, not approximately equal: the blocked kernel
+        // preserves the reference's per-element reduction order
         let (m, k, n) = (7, 5, 9);
         let a = randv(m * k, 1);
         let b = randv(k * n, 2);
-        let got = matmul(&a, &b, m, k, n);
-        let want = naive(&a, &b, m, k, n);
-        for (g, w) in got.iter().zip(&want) {
-            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        assert_eq!(matmul(&a, &b, m, k, n), naive(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn blocked_kernels_bit_match_references_on_ragged_shapes() {
+        // shapes straddling the KC/NC/TB/TI_AT block edges, plus
+        // degenerate 1×N / M×1 / empty dims — every kernel must be
+        // bit-identical to its naive oracle (the contract the
+        // proptests in rust/tests/proptests.rs hammer at volume)
+        let shapes: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (1, 130, 1),
+            (65, 1, 67),
+            (64, 64, 64),
+            (65, 63, 129),
+            (3, 200, 70),
+            (0, 5, 4),
+            (5, 0, 4),
+            (5, 4, 0),
+        ];
+        for &(m, k, n) in shapes {
+            let a = randv(m * k, 31);
+            let b = randv(k * n, 32);
+            let bias = randv(n, 33);
+            let mut got = randv(m * n, 34);
+            let mut want = got.clone();
+            matmul_into(&a, &b, m, k, n, &mut got);
+            reference::matmul_into(&a, &b, m, k, n, &mut want);
+            assert_eq!(got, want, "matmul {m}x{k}x{n}");
+
+            let mut got = vec![7f32; m * n];
+            let mut want = vec![8f32; m * n];
+            matmul_bias_into(&a, &b, &bias, m, k, n, &mut got);
+            reference::matmul_bias_into(&a, &b, &bias, m, k, n,
+                                        &mut want);
+            assert_eq!(got, want, "matmul_bias {m}x{k}x{n}");
+
+            // a^T @ b: a [m,k], b [m,n] -> [k,n]
+            let b2 = randv(m * n, 35);
+            let mut got = randv(k * n, 36);
+            let mut want = got.clone();
+            matmul_at_into(&a, &b2, m, k, n, &mut got);
+            reference::matmul_at_into(&a, &b2, m, k, n, &mut want);
+            assert_eq!(got, want, "matmul_at {m}x{k}x{n}");
+
+            // a @ c^T: a [m,k], c [n,k] -> [m,n]
+            let c = randv(n * k, 37);
+            let mut got = vec![9f32; m * n];
+            let mut want = vec![10f32; m * n];
+            matmul_bt_into(&a, &c, m, k, n, &mut got);
+            reference::matmul_bt_into(&a, &c, m, k, n, &mut want);
+            assert_eq!(got, want, "matmul_bt {m}x{k}x{n}");
+
+            // column sums of a [m,k]
+            let mut got = randv(k, 38);
+            let mut want = got.clone();
+            col_sums_into(&a, k, &mut got);
+            reference::col_sums_into(&a, k, &mut want);
+            assert_eq!(got, want, "col_sums {m}x{k}");
         }
     }
 

@@ -19,8 +19,9 @@
 //!
 //! `mezo_step_q{k}` (k-query SPSA) runs its k independent two-point
 //! queries on a `std::thread::scope` worker pool: every query is
-//! evaluated at the exact base parameters from cloned-once per-worker
-//! shadows, and the projected gradients are reduced in fixed query
+//! evaluated at the exact base parameters from per-worker shadows
+//! drawn out of a caller-owned [`SpsaPool`] (allocated once, reused
+//! every step), and the projected gradients are reduced in fixed query
 //! order — so the result is bit-identical for ANY worker count (pinned
 //! against [`mezo_step_multi_reference`] in the tests).
 //!
@@ -110,6 +111,72 @@ struct NativeProgram {
     spec: ProgramSpec,
 }
 
+/// Pooled per-worker working sets for the k-query SPSA path.
+///
+/// Each slot owns one parameter shadow plus a scratch arena.  A shadow
+/// only ever feeds [`two_point_at`], whose `perturb_from` sweeps
+/// overwrite every element before any read — so a pooled slot needs
+/// correct tensor *lengths*, never fresh contents, and reusing it
+/// across steps cannot change results.  Pooling turns the per-step
+/// cost of `mezo_step_q{k}` from one parameter-set clone (plus arena
+/// warm-up) per worker into zero steady-state allocation.
+///
+/// Residency contract: shadows are full-size f32 parameter copies, so
+/// a quantized [`ExecState`] calls [`release`](SpsaPool::release)
+/// whenever it frees its transient f32 working set — pooled shadows
+/// never outlive the step for reduced-precision sessions, while f32
+/// sessions keep them warm indefinitely.
+#[derive(Debug, Default)]
+pub struct SpsaPool {
+    slots: Vec<SpsaSlot>,
+}
+
+#[derive(Debug, Default)]
+struct SpsaSlot {
+    shadow: Vec<Vec<f32>>,
+    scratch: model::Scratch,
+}
+
+impl SpsaPool {
+    pub fn new() -> SpsaPool {
+        SpsaPool::default()
+    }
+
+    /// Host bytes currently pinned by pooled parameter shadows (the
+    /// figure session residency telemetry charges once, at high water,
+    /// rather than per step).
+    pub fn resident_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .flat_map(|slot| slot.shadow.iter())
+            .map(|t| 4 * t.len() as u64)
+            .sum()
+    }
+
+    /// Drop every pooled shadow and arena.
+    pub fn release(&mut self) {
+        self.slots.clear();
+    }
+
+    /// Make the first `n` slots hold shadows with `base`'s tensor
+    /// lengths (contents unspecified — every element is overwritten
+    /// before it is read).  Existing allocations of the right size are
+    /// kept as-is, so a steady-state call is length checks only.
+    fn reserve(&mut self, n: usize, base: &[Vec<f32>]) {
+        if self.slots.len() < n {
+            self.slots.resize_with(n, SpsaSlot::default);
+        }
+        for slot in &mut self.slots[..n] {
+            slot.shadow.resize_with(base.len(), Vec::new);
+            for (dst, src) in slot.shadow.iter_mut().zip(base) {
+                if dst.len() != src.len() {
+                    dst.resize(src.len(), 0.0);
+                }
+            }
+        }
+    }
+}
+
 /// `w += scale * z(seed)` over every tensor, sharing one flat stream.
 pub fn perturb_all(
     cfg: &ConfigInfo,
@@ -180,12 +247,13 @@ fn two_point_at(
 }
 
 /// Evaluate the k two-point query pairs at `base`, fanned out over at
-/// most `workers` scoped threads.  Each worker owns one cloned-once
-/// parameter shadow and a scratch arena (the caller's resident `sc`
-/// when single-worker; private per-thread arenas otherwise — pooling
-/// those across steps is a ROADMAP follow-up).  Query q's pair lands
-/// at `pairs[q]` regardless of scheduling, which is what makes the
-/// reduction order (and therefore the step) deterministic.
+/// most `workers` scoped threads.  Each worker borrows one slot of the
+/// caller's [`SpsaPool`] — a parameter shadow plus a scratch arena —
+/// so a steady-state step re-clones nothing (single-worker runs use
+/// the caller's resident `sc` and only the pool's first shadow).
+/// Query q's pair lands at `pairs[q]` regardless of scheduling, which
+/// is what makes the reduction order (and therefore the step)
+/// deterministic.
 #[allow(clippy::too_many_arguments)]
 fn spsa_pairs(
     cfg: &ConfigInfo,
@@ -198,32 +266,34 @@ fn spsa_pairs(
     q_seeds: &[u32],
     eps: f32,
     workers: usize,
+    pool: &mut SpsaPool,
     sc: &mut model::Scratch,
 ) -> Vec<(f32, f32)> {
     let k = q_seeds.len();
     let mut pairs = vec![(0f32, 0f32); k];
-    let workers = workers.max(1).min(k.max(1));
+    let workers = workers.clamp(1, k.max(1));
     if workers <= 1 {
-        // single-worker path runs on the caller's resident arena, so
-        // steady-state q-step allocation stays at the one shadow clone
-        let mut shadow: Vec<Vec<f32>> = base.to_vec();
+        pool.reserve(1, base);
+        let shadow = &mut pool.slots[0].shadow;
         for (q, pair) in pairs.iter_mut().enumerate() {
-            *pair = two_point_at(cfg, base, &mut shadow, ids, mask,
+            *pair = two_point_at(cfg, base, shadow, ids, mask,
                                  labels, bsz, s, q_seeds[q], eps, sc);
         }
         return pairs;
     }
-    let chunk = (k + workers - 1) / workers;
+    let chunk = k.div_ceil(workers);
+    pool.reserve(k.div_ceil(chunk), base);
     std::thread::scope(|scope| {
-        for (ci, out) in pairs.chunks_mut(chunk).enumerate() {
+        for ((ci, out), slot) in
+            pairs.chunks_mut(chunk).enumerate().zip(&mut pool.slots)
+        {
             let lo = ci * chunk;
             scope.spawn(move || {
-                let mut shadow: Vec<Vec<f32>> = base.to_vec();
-                let mut sc = model::Scratch::new();
                 for (j, pair) in out.iter_mut().enumerate() {
-                    *pair = two_point_at(cfg, base, &mut shadow, ids,
-                                         mask, labels, bsz, s,
-                                         q_seeds[lo + j], eps, &mut sc);
+                    *pair = two_point_at(cfg, base, &mut slot.shadow,
+                                         ids, mask, labels, bsz, s,
+                                         q_seeds[lo + j], eps,
+                                         &mut slot.scratch);
                 }
             });
         }
@@ -248,12 +318,13 @@ fn mezo_multi_with_workers(
     eps: f32,
     k: usize,
     workers: usize,
+    pool: &mut SpsaPool,
     sc: &mut model::Scratch,
 ) -> f32 {
     let q_seeds: Vec<u32> =
         (0..k).map(|q| rng::hash_u32(seed, q as u32 + 1)).collect();
     let pairs = spsa_pairs(cfg, &*w, ids, mask, labels, bsz, s,
-                           &q_seeds, eps, workers, sc);
+                           &q_seeds, eps, workers, pool, sc);
     let mut gs = Vec::with_capacity(k);
     let mut losses = 0f32;
     for &(lplus, lminus) in &pairs {
@@ -287,13 +358,15 @@ pub fn mezo_step_multi_reference(
 ) -> Result<f32> {
     ensure!(k >= 1, "k-query step needs k >= 1");
     Ok(mezo_multi_with_workers(cfg, w, ids, mask, labels, bsz, s, seed,
-                               lr, eps, k, 1,
+                               lr, eps, k, 1, &mut SpsaPool::new(),
                                &mut model::Scratch::new()))
 }
 
 /// One fused MeZO-SGD step on `w` in place; returns the reported loss
 /// (mean of the two perturbed evaluations).  Mirrors
-/// `steps.mezo_step` / `mezo_step_naive` / `mezo_step_multi`.
+/// `steps.mezo_step` / `mezo_step_naive` / `mezo_step_multi`.  `pool`
+/// carries the k-query worker shadows across steps (only touched by
+/// `MezoMulti`; pass a fresh pool for one-shot calls).
 #[allow(clippy::too_many_arguments)]
 pub fn mezo_step(
     cfg: &ConfigInfo,
@@ -307,6 +380,7 @@ pub fn mezo_step(
     lr: f32,
     eps: f32,
     kind: ProgramKind,
+    pool: &mut SpsaPool,
     sc: &mut model::Scratch,
 ) -> Result<f32> {
     match kind {
@@ -334,7 +408,7 @@ pub fn mezo_step(
             // update sweeps in fixed order
             Ok(mezo_multi_with_workers(cfg, w, ids, mask, labels, bsz,
                                        s, seed, lr, eps, k,
-                                       math::n_threads(), sc))
+                                       math::n_threads(), pool, sc))
         }
         other => bail!("mezo_step called with {other:?}"),
     }
@@ -435,6 +509,7 @@ impl Executable for NativeProgram {
                 let eps = inputs[n + 5].f32_scalar()?;
                 let loss = mezo_step(cfg, &mut w, ids, mask, labels, b, s,
                                      seed, lr, eps, self.kind,
+                                     &mut SpsaPool::new(),
                                      &mut model::Scratch::new())?;
                 let mut outs = param_literals(cfg, w)?;
                 outs.push(Literal::from_f32(vec![loss], vec![])?);
@@ -551,9 +626,9 @@ impl NativeProgram {
                 let seed = inputs[3].u32_scalar()?;
                 let lr = inputs[4].f32_scalar()?;
                 let eps = inputs[5].f32_scalar()?;
-                let (w, _m, _v, scratch) = state.native_parts();
+                let (w, _m, _v, scratch, pool) = state.native_parts();
                 mezo_step(cfg, w, ids, mask, labels, b, s, seed, lr,
-                          eps, self.kind, scratch)
+                          eps, self.kind, pool, scratch)
             }
             ProgramKind::Adam => {
                 ensure!(inputs.len() == 5,
@@ -568,7 +643,7 @@ impl NativeProgram {
                 let labels = inputs[2].i32_slice()?;
                 let t = inputs[3].f32_scalar()?;
                 let lr = inputs[4].f32_scalar()?;
-                let (w, m, v, scratch) = state.native_parts();
+                let (w, m, v, scratch, _pool) = state.native_parts();
                 adam_step(cfg, w, m, v, ids, mask, labels, b, s, t, lr,
                           scratch)
             }
@@ -580,7 +655,7 @@ impl NativeProgram {
                 let ids = inputs[0].i32_slice()?;
                 let mask = inputs[1].f32_slice()?;
                 let labels = inputs[2].i32_slice()?;
-                let (w, _m, _v, scratch) = state.native_parts();
+                let (w, _m, _v, scratch, _pool) = state.native_parts();
                 Ok(model::loss(cfg, w, ids, mask, labels, b, s, scratch))
             }
             ProgramKind::Eval => bail!(
@@ -630,11 +705,13 @@ mod tests {
         let mut fused = init.clone();
         let lf = mezo_step(&cfg, &mut fused, &ids, &mask, &labels, 2, 6,
                            99, 1e-2, 1e-3, ProgramKind::Mezo,
+                           &mut SpsaPool::new(),
                            &mut model::Scratch::new())
             .unwrap();
         let mut naive = init.clone();
         let ln = mezo_step(&cfg, &mut naive, &ids, &mask, &labels, 2, 6,
                            99, 1e-2, 1e-3, ProgramKind::MezoNaive,
+                           &mut SpsaPool::new(),
                            &mut model::Scratch::new())
             .unwrap();
         assert_eq!(lf, ln, "identical loss estimate");
@@ -657,10 +734,11 @@ mod tests {
         let run = || {
             let mut w = params::init_params(&cfg);
             let mut sc = model::Scratch::new();
+            let mut pool = SpsaPool::new();
             for step in 0..3u32 {
                 mezo_step(&cfg, &mut w, &ids, &mask, &labels, 2, 6,
                           1000 + step, 1e-3, 1e-3, ProgramKind::Mezo,
-                          &mut sc)
+                          &mut pool, &mut sc)
                     .unwrap();
             }
             w
@@ -685,6 +763,7 @@ mod tests {
             let lp = mezo_step(&cfg, &mut par, &ids, &mask, &labels, 2,
                                6, 321, 1e-2, 1e-3,
                                ProgramKind::MezoMulti(k),
+                               &mut SpsaPool::new(),
                                &mut model::Scratch::new())
                 .unwrap();
             let mut seq = init.clone();
@@ -709,10 +788,48 @@ mod tests {
         let labels = vec![0i32, 1];
         let l = mezo_step(&cfg, &mut w, &ids, &mask, &labels, 2, 6, 9,
                           1e-2, 1e-3, ProgramKind::MezoMulti(3),
+                          &mut SpsaPool::new(),
                           &mut model::Scratch::new())
             .unwrap();
         assert!(l.is_finite());
         assert_ne!(w, init, "the averaged update must move the params");
+    }
+
+    #[test]
+    fn pooled_shadows_reused_across_steps_change_nothing() {
+        // the shadow pool is a pure allocation cache: a multi-step
+        // q-run sharing ONE pool must be bit-identical to re-creating
+        // the pool every step, and the pool must actually retain its
+        // worker shadows between steps (that retention is the perf win)
+        let cfg = params::make_config("t", "encoder", 13, 8, 1, 2, 16, 6,
+                                      3, false);
+        let init = params::init_params(&cfg);
+        let ids = vec![1i32, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask =
+            vec![1f32, 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let mut pooled = init.clone();
+        let mut pool = SpsaPool::new();
+        let mut sc = model::Scratch::new();
+        for step in 0..3u32 {
+            mezo_step(&cfg, &mut pooled, &ids, &mask, &labels, 2, 6,
+                      500 + step, 1e-2, 1e-3, ProgramKind::MezoMulti(4),
+                      &mut pool, &mut sc)
+                .unwrap();
+        }
+        let n_params: u64 =
+            cfg.params.iter().map(|s| 4 * s.elements() as u64).sum();
+        assert!(pool.resident_bytes() >= n_params,
+                "pool retains at least one full shadow between steps");
+        let mut fresh = init.clone();
+        for step in 0..3u32 {
+            mezo_step(&cfg, &mut fresh, &ids, &mask, &labels, 2, 6,
+                      500 + step, 1e-2, 1e-3, ProgramKind::MezoMulti(4),
+                      &mut SpsaPool::new(), &mut model::Scratch::new())
+                .unwrap();
+        }
+        assert_eq!(pooled, fresh,
+                   "pool reuse must be invisible to the trajectory");
     }
 
     #[test]

@@ -215,6 +215,12 @@ fn layernorm(sc: &mut Scratch, x: &[f32], g: &[f32], b: &[f32], d: usize)
 }
 
 /// dx, dgamma, dbeta for [`layernorm`].
+///
+/// The first sweep stages `dxhat = dy * g` into the `dx` buffer while
+/// accumulating the two row means and dgamma/dbeta, so the second
+/// sweep reads it back instead of recomputing the product.  The m1/m2
+/// accumulators stay single sequential chains — reassociating them
+/// would change f32 bits.
 fn layernorm_bwd(
     sc: &mut Scratch,
     dy: &[f32],
@@ -230,10 +236,12 @@ fn layernorm_bwd(
     for r in 0..rows {
         let dyr = &dy[r * d..(r + 1) * d];
         let xhr = &xhat[r * d..(r + 1) * d];
+        let dxr = &mut dx[r * d..(r + 1) * d];
         let mut m1 = 0f32; // mean(dxhat)
         let mut m2 = 0f32; // mean(dxhat * xhat)
         for j in 0..d {
             let dxh = dyr[j] * g[j];
+            dxr[j] = dxh;
             m1 += dxh;
             m2 += dxh * xhr[j];
             dg[j] += dyr[j] * xhr[j];
@@ -242,10 +250,8 @@ fn layernorm_bwd(
         m1 /= d as f32;
         m2 /= d as f32;
         let rs = rstd[r];
-        let dxr = &mut dx[r * d..(r + 1) * d];
         for j in 0..d {
-            let dxh = dyr[j] * g[j];
-            dxr[j] = rs * (dxh - m1 - xhr[j] * m2);
+            dxr[j] = rs * (dxr[j] - m1 - xhr[j] * m2);
         }
     }
     (dx, dg, db)
@@ -486,14 +492,20 @@ fn encode(
     (y, cache)
 }
 
-/// Masked mean-pool denominators per batch row.
-fn pool_denoms(mask: &[f32], bsz: usize, s: usize) -> Vec<f32> {
-    (0..bsz)
-        .map(|b| {
-            let sum: f32 = mask[b * s..(b + 1) * s].iter().sum();
-            sum.max(1.0)
-        })
-        .collect()
+/// Masked mean-pool denominators per batch row, staged in a scratch
+/// buffer (`give` it back) so steady-state steps stay allocation-free.
+fn pool_denoms(
+    sc: &mut Scratch,
+    mask: &[f32],
+    bsz: usize,
+    s: usize,
+) -> Vec<f32> {
+    let mut denoms = sc.take_raw(bsz);
+    for (b, dn) in denoms.iter_mut().enumerate() {
+        let sum: f32 = mask[b * s..(b + 1) * s].iter().sum();
+        *dn = sum.max(1.0);
+    }
+    denoms
 }
 
 /// Task logits: encoder [B, n_classes]; decoder [B, S, vocab] (tied
@@ -531,7 +543,7 @@ fn logits_from_y(
         matmul_bt_into(y, &p[EMBED_TOK], bsz * s, d, cfg.vocab, &mut lg);
         return lg;
     }
-    let denoms = pool_denoms(mask, bsz, s);
+    let denoms = pool_denoms(sc, mask, bsz, s);
     let mut pooled = sc.take(bsz * d);
     for b in 0..bsz {
         let pr = &mut pooled[b * d..(b + 1) * d];
@@ -553,30 +565,35 @@ fn logits_from_y(
     matmul_bias_into(&pooled, &p[hw], &p[hw + 1], bsz, d, cfg.n_classes,
                      &mut lg);
     sc.give(pooled);
+    sc.give(denoms);
     lg
 }
 
 /// The (row, label, weight) view of the loss: encoder classifies each
 /// batch row; decoder predicts token t+1 from position t with padding
-/// masked out.
-fn loss_rows(
+/// masked out.  A callback instead of a materialized `Vec` so the
+/// per-step loss passes allocate nothing; visit order is the row
+/// order the old `Vec` had, which keeps every downstream f32
+/// accumulation bit-identical.
+fn for_each_loss_row(
     cfg: &ConfigInfo,
     mask: &[f32],
     labels: &[i32],
     bsz: usize,
     s: usize,
-) -> Vec<(usize, i32, f32)> {
+    mut f: impl FnMut(usize, i32, f32),
+) {
     if cfg.is_decoder() {
-        let mut rows = Vec::with_capacity(bsz * (s - 1));
         for b in 0..bsz {
             for i in 0..s - 1 {
                 let r = b * s + i;
-                rows.push((r, labels[r + 1], mask[r + 1] * mask[r]));
+                f(r, labels[r + 1], mask[r + 1] * mask[r]);
             }
         }
-        rows
     } else {
-        (0..bsz).map(|b| (b, labels[b], 1.0)).collect()
+        for b in 0..bsz {
+            f(b, labels[b], 1.0);
+        }
     }
 }
 
@@ -603,15 +620,14 @@ pub fn loss(
 ) -> f32 {
     let lg = logits(cfg, p, ids, mask, bsz, s, sc);
     let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
-    let rows = loss_rows(cfg, mask, labels, bsz, s);
     let mut acc = 0f32;
     let mut msum = 0f32;
-    for (r, label, w) in rows {
+    for_each_loss_row(cfg, mask, labels, bsz, s, |r, label, w| {
         if w > 0.0 {
             acc += w * nll_of_row(&lg[r * ncols..(r + 1) * ncols], label);
         }
         msum += w;
-    }
+    });
     sc.give(lg);
     acc / msum.max(1.0)
 }
@@ -642,33 +658,47 @@ pub fn loss_and_grad(
     let lg = logits_from_y(cfg, p, &y, mask, bsz, s, sc);
 
     let ncols = if cfg.is_decoder() { cfg.vocab } else { cfg.n_classes };
-    let rows = loss_rows(cfg, mask, labels, bsz, s);
-    let msum: f32 = rows.iter().map(|r| r.2).sum::<f32>().max(1.0);
+    let mut msum = 0f32;
+    for_each_loss_row(cfg, mask, labels, bsz, s, |_, _, w| msum += w);
+    let msum = msum.max(1.0);
 
-    // loss + dlogits in one sweep
+    // Fused softmax-xent: one sweep computes the loss AND dlogits,
+    // staging the exps directly in the dlogits row instead of a
+    // per-row temporary.  The max fold, the sequential exp sum, and
+    // the `e / z * coeff` scaling are arithmetic-for-arithmetic the
+    // old two-pass form, so f32 results stay bit-identical.
     let mut acc = 0f32;
     let mut dlogits = sc.take(lg.len());
-    for &(r, label, w) in &rows {
-        let row = &lg[r * ncols..(r + 1) * ncols];
-        if w > 0.0 {
-            acc += w * nll_of_row(row, label);
-        }
+    for_each_loss_row(cfg, mask, labels, bsz, s, |r, label, w| {
         let coeff = w / msum;
-        if coeff == 0.0 {
-            continue;
+        if w <= 0.0 && coeff == 0.0 {
+            return; // row contributes nothing; dlogits row stays 0
         }
+        let row = &lg[r * ncols..(r + 1) * ncols];
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let drow = &mut dlogits[r * ncols..(r + 1) * ncols];
         let mut z = 0f32;
-        let sm: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
-        for &e in &sm {
+        for (dv, &v) in drow.iter_mut().zip(row) {
+            let e = (v - mx).exp();
+            *dv = e;
             z += e;
         }
-        let drow = &mut dlogits[r * ncols..(r + 1) * ncols];
-        for (dv, e) in drow.iter_mut().zip(sm) {
-            *dv = e / z * coeff;
+        if w > 0.0 {
+            acc += w * (z.ln() + mx - row[label.max(0) as usize % ncols]);
+        }
+        if coeff == 0.0 {
+            // A positive weight can still underflow to coeff == 0;
+            // the staged exps must not leak into the gradient.
+            for dv in drow.iter_mut() {
+                *dv = 0.0;
+            }
+            return;
+        }
+        for dv in drow.iter_mut() {
+            *dv = *dv / z * coeff;
         }
         drow[label.max(0) as usize % ncols] -= coeff;
-    }
+    });
     let loss = acc / msum;
     sc.give(lg);
 
@@ -687,7 +717,7 @@ pub fn loss_and_grad(
         matmul_at_into(&dlogits, &y, bs, cfg.vocab, d,
                        &mut grads[EMBED_TOK]);
     } else {
-        let denoms = pool_denoms(mask, bsz, s);
+        let denoms = pool_denoms(sc, mask, bsz, s);
         let mut pooled = sc.take(bsz * d);
         for b in 0..bsz {
             let pr = &mut pooled[b * d..(b + 1) * d];
@@ -728,6 +758,7 @@ pub fn loss_and_grad(
         }
         sc.give(pooled);
         sc.give(dpooled);
+        sc.give(denoms);
     }
     sc.give(dlogits);
     sc.give(y);

@@ -50,17 +50,30 @@ pub enum Precision {
     /// tiny per-step updates typically round away.  fp16 is the
     /// precision the paper's fine-tuning feasibility claims use.
     Int8,
+    /// Per-channel int8: one absmax scale per output row (`shape[0]`
+    /// for rank >= 2 tensors, per-tensor otherwise), so a tensor with
+    /// mixed-magnitude rows doesn't burn its quantization budget on
+    /// the largest row.  Same rounding arithmetic as [`Int8`]
+    /// (Precision::Int8) per row; the BENCH_quant sweep compares the
+    /// two.  Storage is self-describing (`[n_scales][scales][codes]`)
+    /// because session images store tensors flat.
+    Int8Pc,
 }
 
 impl Precision {
-    pub const ALL: [Precision; 3] =
-        [Precision::F32, Precision::F16, Precision::Int8];
+    pub const ALL: [Precision; 4] = [
+        Precision::F32,
+        Precision::F16,
+        Precision::Int8,
+        Precision::Int8Pc,
+    ];
 
     pub fn parse(s: &str) -> Option<Precision> {
         match s {
             "f32" | "fp32" => Some(Precision::F32),
             "f16" | "fp16" | "half" => Some(Precision::F16),
             "int8" | "i8" => Some(Precision::Int8),
+            "int8pc" | "i8pc" => Some(Precision::Int8Pc),
             _ => None,
         }
     }
@@ -70,6 +83,7 @@ impl Precision {
             Precision::F32 => "f32",
             Precision::F16 => "f16",
             Precision::Int8 => "int8",
+            Precision::Int8Pc => "int8pc",
         }
     }
 
@@ -81,7 +95,7 @@ impl Precision {
         match self {
             Precision::F32 => 4,
             Precision::F16 => 2,
-            Precision::Int8 => 1,
+            Precision::Int8 | Precision::Int8Pc => 1,
         }
     }
 
@@ -90,7 +104,7 @@ impl Precision {
         match self {
             Precision::F32 => Dtype::F32,
             Precision::F16 => Dtype::F16,
-            Precision::Int8 => Dtype::I8,
+            Precision::Int8 | Precision::Int8Pc => Dtype::I8,
         }
     }
 
@@ -102,6 +116,7 @@ impl Precision {
             Precision::F32 => 0,
             Precision::F16 => 1,
             Precision::Int8 => 2,
+            Precision::Int8Pc => 3,
         }
     }
 
@@ -111,6 +126,7 @@ impl Precision {
             0 => Some(Precision::F32),
             1 => Some(Precision::F16),
             2 => Some(Precision::Int8),
+            3 => Some(Precision::Int8Pc),
             _ => None,
         }
     }
@@ -118,12 +134,17 @@ impl Precision {
     /// Bytes one tensor of `elems` elements occupies in storage form —
     /// both resident (`Literal::resident_bytes`) and on disk
     /// (`Literal::to_le_bytes`): 4/2/1 B per element, plus int8's
-    /// 4-byte per-tensor scale.
+    /// 4-byte per-tensor scale.  `Int8Pc` storage depends on the
+    /// tensor's row count, not just `elems`; this returns the 1-row
+    /// size (`[n_scales][scale][codes]`) — use
+    /// [`Literal::storage_len`](super::Literal::storage_len) wherever
+    /// the exact byte count matters.
     pub fn storage_bytes(&self, elems: usize) -> u64 {
         match self {
             Precision::F32 => 4 * elems as u64,
             Precision::F16 => 2 * elems as u64,
             Precision::Int8 => elems as u64 + 4,
+            Precision::Int8Pc => elems as u64 + 8,
         }
     }
 }
@@ -209,19 +230,95 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
-/// Encode a slice (round-to-nearest-even per element).
+/// Branch-free encode body: both the normal-range rounding and the
+/// subnormal rounding are computed unconditionally (with shift counts
+/// clamped into a defined range) and the result is picked with
+/// selects, so the bulk encoder below is a flat, unit-stride loop the
+/// compiler can if-convert and vectorize.  Bit-for-bit equal to
+/// [`f32_to_f16_bits`] for every f32 pattern (tests cross-check an
+/// exhaustive f16 sweep plus a structured exponent × mantissa sweep).
+#[inline]
+fn f16_bits_branchless(bits: u32) -> u16 {
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = (bits >> 23) & 0xFF;
+    let man = bits & 0x007F_FFFF;
+    let e = exp as i32 - 112; // rebased f16 exponent (-127 + 15)
+
+    // normal path (meaningful for 0 < e < 31; a mantissa-rounding
+    // carry bumps the exponent and may round up to inf)
+    let nbase = man >> 13;
+    let nrem = man & 0x1FFF;
+    let nup = (nrem > 0x1000 || (nrem == 0x1000 && nbase & 1 == 1))
+        as u32;
+    let normal = (((e as u32) & 0x1F) << 10 | nbase) + nup;
+
+    // subnormal path (meaningful for e <= 0).  shift >= 25 always
+    // rounds to zero, so clamping at 26 both keeps the shift defined
+    // for every exponent and reproduces the scalar encoder's
+    // "magnitude <= 2^-25 underflows" rule exactly.
+    let man24 = man | 0x0080_0000;
+    let shift = (14 - e).clamp(1, 26) as u32;
+    let half = 1u32 << (shift - 1);
+    let srem = man24 & ((1u32 << shift) - 1);
+    let sbase = man24 >> shift;
+    let sup = (srem > half || (srem == half && sbase & 1 == 1)) as u32;
+    let sub = sbase + sup;
+
+    let mag = if e >= 0x1F {
+        0x7C00u16 // overflow -> inf
+    } else if e > 0 {
+        normal as u16
+    } else {
+        sub as u16
+    };
+    let mag = if exp == 0xFF {
+        if man == 0 { 0x7C00 } else { 0x7E00 } // inf / canonical qNaN
+    } else {
+        mag
+    };
+    sign | mag
+}
+
+/// Branch-free decode body (the classic "magic float" half-to-float):
+/// shift exponent+mantissa into f32 position, rebias, then fix the
+/// two exponent edge cases with selects — inf/NaN get the rest of the
+/// rebias, zero/subnormal renormalize through one exact f32 subtract.
+/// Bit-for-bit equal to [`f16_bits_to_f32`] for all 65536 patterns
+/// (exhaustively tested), NaN payloads included.
+#[inline]
+fn f16_to_f32_branchless(h: u16) -> f32 {
+    const SHIFTED_EXP: u32 = 0x7C00 << 13;
+    const MAGIC: f32 = f32::from_bits(113 << 23); // 2^-14
+    let sign = ((h & 0x8000) as u32) << 16;
+    let mut o = ((h & 0x7FFF) as u32) << 13;
+    let exp = o & SHIFTED_EXP;
+    o = o.wrapping_add((127 - 15) << 23);
+    o = o.wrapping_add(if exp == SHIFTED_EXP {
+        (128 - 16) << 23 // inf/NaN: rebias the rest of the way to 255
+    } else {
+        0
+    });
+    let sub = (f32::from_bits(o.wrapping_add(1 << 23)) - MAGIC).to_bits();
+    o = if exp == 0 { sub } else { o };
+    f32::from_bits(o | sign)
+}
+
+/// Encode a slice (round-to-nearest-even per element).  Unit-stride
+/// loop over the branch-free kernel; results are bit-identical to
+/// mapping [`f32_to_f16_bits`].
 pub fn f16_encode_into(src: &[f32], dst: &mut [u16]) {
     debug_assert_eq!(src.len(), dst.len());
     for (d, &x) in dst.iter_mut().zip(src) {
-        *d = f32_to_f16_bits(x);
+        *d = f16_bits_branchless(x.to_bits());
     }
 }
 
-/// Decode a slice (exact).
+/// Decode a slice (exact).  Unit-stride loop over the branch-free
+/// kernel; results are bit-identical to mapping [`f16_bits_to_f32`].
 pub fn f16_decode_into(src: &[u16], dst: &mut [f32]) {
     debug_assert_eq!(src.len(), dst.len());
     for (d, &h) in dst.iter_mut().zip(src) {
-        *d = f16_bits_to_f32(h);
+        *d = f16_to_f32_branchless(h);
     }
 }
 
@@ -229,15 +326,36 @@ pub fn f16_decode_into(src: &[u16], dst: &mut [f32]) {
 // f32 <-> int8 (symmetric per-tensor absmax)
 // ---------------------------------------------------------------------
 
+/// Finite absmax of a slice, computed with 8 independent max lanes so
+/// the reduction vectorizes.  Reassociating a max over non-negative
+/// values is exact (unlike a float sum), and mapping non-finite
+/// elements to 0.0 — the fold's identity — reproduces the original
+/// `filter(is_finite)` semantics bit-for-bit.
+fn finite_absmax(src: &[f32]) -> f32 {
+    let mut lanes = [0f32; 8];
+    let mut chunks = src.chunks_exact(8);
+    for c in chunks.by_ref() {
+        for (m, &x) in lanes.iter_mut().zip(c) {
+            let a = if x.is_finite() { x.abs() } else { 0.0 };
+            *m = m.max(a);
+        }
+    }
+    let mut mx = lanes.iter().fold(0f32, |a, &b| a.max(b));
+    for &x in chunks.remainder() {
+        let a = if x.is_finite() { x.abs() } else { 0.0 };
+        mx = mx.max(a);
+    }
+    mx
+}
+
 /// Quantize into a caller-provided buffer; returns the per-tensor
 /// scale (`absmax / 127` over finite elements; 0 for an all-zero or
-/// all-non-finite tensor).
+/// all-non-finite tensor).  The rounding arithmetic is exactly the
+/// historical `(x / scale).round().clamp(..)` — only the absmax
+/// reduction is lane-parallel (legal: max is order-independent).
 pub fn i8_quantize_into(src: &[f32], dst: &mut [i8]) -> f32 {
     debug_assert_eq!(src.len(), dst.len());
-    let absmax = src
-        .iter()
-        .filter(|x| x.is_finite())
-        .fold(0f32, |a, &x| a.max(x.abs()));
+    let absmax = finite_absmax(src);
     if absmax == 0.0 {
         dst.fill(0);
         return 0.0;
@@ -258,6 +376,50 @@ pub fn i8_dequantize_into(src: &[i8], scale: f32, dst: &mut [f32]) {
     }
 }
 
+/// Per-channel (per-output-row) symmetric absmax quantization: one
+/// scale per row of a `[rows, cols]` tensor, where `rows ==
+/// scales.len()` and `cols == src.len() / rows`.  Each row uses the
+/// same arithmetic as [`i8_quantize_into`], so a 1-row call is
+/// bit-identical to the per-tensor path.
+pub fn i8_quantize_rows_into(
+    src: &[f32],
+    dst: &mut [i8],
+    scales: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), dst.len());
+    let rows = scales.len();
+    if rows == 0 {
+        debug_assert!(src.is_empty());
+        return;
+    }
+    let cols = src.len() / rows;
+    debug_assert_eq!(cols * rows, src.len());
+    for (r, sc) in scales.iter_mut().enumerate() {
+        *sc = i8_quantize_into(&src[r * cols..(r + 1) * cols],
+                               &mut dst[r * cols..(r + 1) * cols]);
+    }
+}
+
+/// Per-channel dequantize: `out[r][j] = data[r][j] * scales[r]`.
+pub fn i8_dequantize_rows_into(
+    src: &[i8],
+    scales: &[f32],
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), dst.len());
+    let rows = scales.len();
+    if rows == 0 {
+        debug_assert!(src.is_empty());
+        return;
+    }
+    let cols = src.len() / rows;
+    debug_assert_eq!(cols * rows, src.len());
+    for (r, &sc) in scales.iter().enumerate() {
+        i8_dequantize_into(&src[r * cols..(r + 1) * cols], sc,
+                           &mut dst[r * cols..(r + 1) * cols]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +430,8 @@ mod tests {
         assert_eq!(Precision::parse("fp16"), Some(Precision::F16));
         assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
         assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("int8pc"), Some(Precision::Int8Pc));
+        assert_eq!(Precision::parse("i8pc"), Some(Precision::Int8Pc));
         assert_eq!(Precision::parse("f32"), Some(Precision::F32));
         assert_eq!(Precision::parse("bf16"), None);
         for p in Precision::ALL {
@@ -289,10 +453,11 @@ mod tests {
         assert_eq!(Precision::F32.code(), 0);
         assert_eq!(Precision::F16.code(), 1);
         assert_eq!(Precision::Int8.code(), 2);
+        assert_eq!(Precision::Int8Pc.code(), 3);
         for p in Precision::ALL {
             assert_eq!(Precision::from_code(p.code()), Some(p));
         }
-        assert_eq!(Precision::from_code(3), None);
+        assert_eq!(Precision::from_code(4), None);
     }
 
     #[test]
@@ -301,6 +466,9 @@ mod tests {
         assert_eq!(Precision::F16.storage_bytes(10), 20);
         assert_eq!(Precision::Int8.storage_bytes(10), 14);
         assert_eq!(Precision::Int8.storage_bytes(0), 4);
+        // int8pc: the 1-row layout (n_scales + scale + codes); exact
+        // multi-row sizes come from Literal::storage_len
+        assert_eq!(Precision::Int8Pc.storage_bytes(10), 18);
     }
 
     #[test]
@@ -380,6 +548,122 @@ mod tests {
                             re-encode");
             }
         }
+    }
+
+    #[test]
+    fn branchless_f16_decode_matches_scalar_exhaustively() {
+        // every one of the 65536 f16 patterns, NaN payloads included
+        for h in 0..=u16::MAX {
+            let mut out = [0f32; 1];
+            f16_decode_into(&[h], &mut out);
+            assert_eq!(out[0].to_bits(), f16_bits_to_f32(h).to_bits(),
+                       "decode {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn branchless_f16_encode_matches_scalar() {
+        // structured sweep: every f32 exponent x mantissa edge
+        // patterns x both signs, hitting all rounding branches (tie
+        // up/down, carry into exponent, subnormal grid, underflow,
+        // overflow, inf, NaN payloads)
+        let mans = [
+            0u32, 1, 0xFFF, 0x1000, 0x1001, 0x1FFF, 0x2000, 0x2FFF,
+            0x3000, 0x3001, 0x7F_FFFF, 0x40_0000, 0x12_3456,
+        ];
+        for exp in 0..=0xFFu32 {
+            for &man in &mans {
+                for sign in [0u32, 0x8000_0000] {
+                    let bits = sign | exp << 23 | man;
+                    let want = f32_to_f16_bits(f32::from_bits(bits));
+                    let mut out = [0u16; 1];
+                    f16_encode_into(&[f32::from_bits(bits)], &mut out);
+                    assert_eq!(out[0], want, "encode bits {bits:#010x}");
+                }
+            }
+        }
+        // randomized cross-check over the full f32 space
+        let mut state = 0x1234_5678_9ABC_DEF0u64;
+        for _ in 0..2_000_000u32 {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let bits = (state >> 32) as u32;
+            let x = f32::from_bits(bits);
+            let mut out = [0u16; 1];
+            f16_encode_into(&[x], &mut out);
+            assert_eq!(out[0], f32_to_f16_bits(x),
+                       "encode bits {bits:#010x}");
+        }
+    }
+
+    #[test]
+    fn finite_absmax_matches_filter_fold() {
+        let mut state = 0xDEAD_BEEFu64;
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let mut v = Vec::with_capacity(len);
+            for i in 0..len {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                let r = ((state >> 40) as f32) / (1u64 << 24) as f32;
+                v.push(match i % 11 {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => f32::NEG_INFINITY,
+                    _ => (r - 0.5) * 8.0,
+                });
+            }
+            let want = v
+                .iter()
+                .filter(|x| x.is_finite())
+                .fold(0f32, |a, &x| a.max(x.abs()));
+            assert_eq!(finite_absmax(&v).to_bits(), want.to_bits(),
+                       "len {len}");
+        }
+    }
+
+    #[test]
+    fn per_row_quantize_matches_per_tensor_on_each_row() {
+        // 3 rows x 5 cols with very different row magnitudes
+        let src = [
+            0.5f32, -1.0, 0.25, 0.9, -0.1, // absmax 1.0
+            100.0, -50.0, 25.0, 0.0, 75.0, // absmax 100
+            0.0, 0.0, 0.0, 0.0, 0.0,       // all-zero row
+        ];
+        let mut q = [0i8; 15];
+        let mut scales = [0f32; 3];
+        i8_quantize_rows_into(&src, &mut q, &mut scales);
+        for r in 0..3 {
+            let mut qr = [0i8; 5];
+            let s = i8_quantize_into(&src[r * 5..(r + 1) * 5], &mut qr);
+            assert_eq!(s.to_bits(), scales[r].to_bits(), "row {r}");
+            assert_eq!(&q[r * 5..(r + 1) * 5], &qr, "row {r}");
+        }
+        assert_eq!(scales[2], 0.0);
+        let mut deq = [0f32; 15];
+        i8_dequantize_rows_into(&q, &scales, &mut deq);
+        for r in 0..3 {
+            let mut dr = [0f32; 5];
+            i8_dequantize_into(&q[r * 5..(r + 1) * 5], scales[r],
+                               &mut dr);
+            assert_eq!(&deq[r * 5..(r + 1) * 5], &dr, "row {r}");
+        }
+        // per-channel beats per-tensor on the mixed-magnitude tensor
+        let mut qt = [0i8; 15];
+        let st = i8_quantize_into(&src, &mut qt);
+        let mut deqt = [0f32; 15];
+        i8_dequantize_into(&qt, st, &mut deqt);
+        let rmse = |a: &[f32], b: &[f32]| {
+            let s: f32 = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            (s / a.len() as f32).sqrt()
+        };
+        assert!(rmse(&src, &deq) < rmse(&src, &deqt),
+                "per-channel should reduce quantization error here");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use anyhow::{bail, ensure, Result};
 use super::literal::{f32_tensor, Literal};
 use super::manifest::ConfigInfo;
 use super::native::model::Scratch;
+use super::native::SpsaPool;
 use super::precision::Precision;
 
 /// The live parameter set of one model instance.
@@ -165,6 +166,11 @@ pub struct ExecState {
     pub v: Vec<Vec<f32>>,
     /// Reusable activation arena for the native backend.
     pub scratch: Scratch,
+    /// Pooled k-query SPSA worker shadows (empty until the first
+    /// `mezo_step_q{k}` step; released with the working set for
+    /// quantized precisions).  Like `scratch`, pure capacity — never
+    /// semantic state.
+    pub spsa: SpsaPool,
 }
 
 impl ExecState {
@@ -214,6 +220,7 @@ impl ExecState {
             m: Vec::new(),
             v: Vec::new(),
             scratch: Scratch::new(),
+            spsa: SpsaPool::new(),
         })
     }
 
@@ -266,6 +273,11 @@ impl ExecState {
             q.requantize_from_f32(&buf)
                 .expect("working set matches residency shapes");
         }
+        // pooled SPSA shadows are full-size f32 parameter copies;
+        // letting them outlive the transient working set would erase
+        // quantized residency, so they are freed with it (the F32
+        // path never reaches here and keeps its pool warm)
+        self.spsa.release();
     }
 
     /// Drop the working buffers WITHOUT re-quantizing — for read-only
@@ -276,6 +288,7 @@ impl ExecState {
             return;
         }
         self.w.clear();
+        self.spsa.release();
     }
 
     /// Actual host bytes of the *resident* parameter storage (what a
@@ -287,6 +300,17 @@ impl ExecState {
         } else {
             self.qw.iter().map(|q| q.resident_bytes()).sum()
         }
+    }
+
+    /// Everything this state keeps allocated between steps: the
+    /// resident parameter storage PLUS the pooled k-query SPSA worker
+    /// shadows.  The pool is charged here — once, at its current
+    /// (high-water) size — so fleet residency telemetry counts pooled
+    /// shadows as standing state instead of re-attributing a per-step
+    /// clone; for quantized precisions the pool is released with the
+    /// working set and contributes zero here.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_param_bytes() + self.spsa.resident_bytes()
     }
 
     /// Number of parameter tensor slots (independent of whether the
@@ -395,6 +419,7 @@ impl ExecState {
             m,
             v,
             scratch: Scratch::new(),
+            spsa: SpsaPool::new(),
         })
     }
 
@@ -467,6 +492,7 @@ impl ExecState {
             m: Vec::new(),
             v: Vec::new(),
             scratch: Scratch::new(),
+            spsa: SpsaPool::new(),
         }
     }
 
@@ -499,9 +525,9 @@ impl ExecState {
     }
 
     /// Split-borrow every mutable part at once — the shape the native
-    /// backend's `run_in_place` needs (tensors and scratch arena are
-    /// used simultaneously).  Quantized states must be
-    /// [`materialize`](ExecState::materialize)d first.
+    /// backend's `run_in_place` needs (tensors, scratch arena, and the
+    /// SPSA shadow pool are used simultaneously).  Quantized states
+    /// must be [`materialize`](ExecState::materialize)d first.
     pub fn native_parts(
         &mut self,
     ) -> (
@@ -509,8 +535,10 @@ impl ExecState {
         &mut Vec<Vec<f32>>,
         &mut Vec<Vec<f32>>,
         &mut Scratch,
+        &mut SpsaPool,
     ) {
-        (&mut self.w, &mut self.m, &mut self.v, &mut self.scratch)
+        (&mut self.w, &mut self.m, &mut self.v, &mut self.scratch,
+         &mut self.spsa)
     }
 
     /// Total donated tensors a step program sees: params, plus m and v

@@ -214,10 +214,7 @@ impl SessionImage {
     /// the storage form is the same): the "no f32 materialization"
     /// guarantee in number form.
     pub fn param_bytes(&self) -> u64 {
-        self.params
-            .iter()
-            .map(|l| self.precision.storage_bytes(l.element_count()))
-            .sum()
+        self.params.iter().map(|l| l.storage_len()).sum()
     }
 
     /// Bytes the Adam moment payload occupies (always f32; 0 for
@@ -414,13 +411,29 @@ impl SessionImage {
         }
         let mut params = Vec::with_capacity(n_tensors);
         for &elems in &dir {
-            let len = precision.storage_bytes(elems) as usize;
-            let payload = r.bytes(len)?;
-            params.push(Literal::from_storage_bytes(
-                precision,
-                vec![elems],
-                payload,
-            )?);
+            let lit = if precision == Precision::Int8Pc {
+                // per-channel payloads are self-describing
+                // ([u32 n_scales][scales][codes]): read the scale
+                // count to size the read, then hand the reassembled
+                // payload to the literal parser
+                let ns = r.u32()? as usize;
+                ensure!(4 * ns as u64 <= body.len() as u64,
+                        "implausible scale count {ns} in a {}-byte \
+                         image",
+                        body.len());
+                let rest = r.bytes(4 * ns + elems)?;
+                let mut buf = Vec::with_capacity(4 + rest.len());
+                buf.extend_from_slice(&(ns as u32).to_le_bytes());
+                buf.extend_from_slice(rest);
+                Literal::from_storage_bytes(precision, vec![elems],
+                                            &buf)?
+            } else {
+                let len = precision.storage_bytes(elems) as usize;
+                let payload = r.bytes(len)?;
+                Literal::from_storage_bytes(precision, vec![elems],
+                                            payload)?
+            };
+            params.push(lit);
         }
         fn read_moments(
             r: &mut Reader<'_>,

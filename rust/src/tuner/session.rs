@@ -372,6 +372,17 @@ impl Session {
         self.state.resident_param_bytes()
     }
 
+    /// Everything the session keeps allocated between steps: resident
+    /// parameter storage plus the pooled k-query SPSA worker shadows
+    /// (standing state after the first multi-query step on an f32
+    /// session; always released with the working set for quantized
+    /// precisions).  This is the figure fleet residency telemetry
+    /// meters — the pool is charged once at its high-water size, not
+    /// re-attributed per step.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.resident_bytes()
+    }
+
     fn make_batcher(&self) -> Batcher<'_> {
         Batcher::new(
             &self.art.bpe,

@@ -533,6 +533,43 @@ fn parallel_k_query_session_is_deterministic() {
     assert_eq!(a, b, "k-query trajectories must be reproducible");
 }
 
+#[test]
+fn pooled_spsa_shadows_are_standing_state_charged_once() {
+    use pocketllm::runtime::Precision;
+    let rt = runtime();
+    // f32: after the first q-step the session keeps the pooled worker
+    // shadows resident, and their size is steady across later steps
+    // (standing state metered once — not per-step growth)
+    let mut s = SessionBuilder::new(&rt, "pocket-roberta")
+        .optimizer(OptimizerKind::MeZo)
+        .queries(4)
+        .seed(23)
+        .build()
+        .unwrap();
+    assert_eq!(s.resident_bytes(), s.resident_param_bytes(),
+               "no shadows pooled before the first step");
+    s.step().unwrap();
+    let pool = s.resident_bytes() - s.resident_param_bytes();
+    assert!(pool >= s.resident_param_bytes(),
+            "a q-session pools at least one full f32 shadow");
+    s.step().unwrap();
+    assert_eq!(s.resident_bytes() - s.resident_param_bytes(), pool,
+               "pool size is steady state, not per-step accumulation");
+
+    // quantized residency: the pool is released with the transient
+    // f32 working set, so between steps only quantized bytes remain
+    let mut q = SessionBuilder::new(&rt, "pocket-roberta")
+        .optimizer(OptimizerKind::MeZo)
+        .queries(4)
+        .precision(Precision::Int8)
+        .seed(23)
+        .build()
+        .unwrap();
+    q.step().unwrap();
+    assert_eq!(q.resident_bytes(), q.resident_param_bytes(),
+               "quantized sessions release pooled shadows at writeback");
+}
+
 // ---------------------------------------------------------------------
 // hibernate / rehydrate (durable session images)
 // ---------------------------------------------------------------------

@@ -24,7 +24,8 @@
 use pocketllm::runtime::manifest::ConfigInfo;
 use pocketllm::runtime::native::params::make_config;
 use pocketllm::runtime::native::rng::{gaussian, hash_u32, uniform01};
-use pocketllm::runtime::native::{adam_step, mezo_step, model, ProgramKind};
+use pocketllm::runtime::native::{adam_step, mezo_step, model, ProgramKind,
+                                 SpsaPool};
 
 // ---------------------------------------------------------------- rng
 
@@ -167,7 +168,7 @@ fn encoder_mezo_step_matches_jax() {
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
                          1e-2, 1e-3, ProgramKind::Mezo,
-                 &mut model::Scratch::new())
+                 &mut SpsaPool::new(), &mut model::Scratch::new())
         .unwrap();
     close(loss, 1.060_764_6, 2e-4, "mezo loss");
     // embed.tok head of the update stream
@@ -191,7 +192,7 @@ fn decoder_mezo_step_matches_jax() {
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
                          1e-3, ProgramKind::Mezo,
-                 &mut model::Scratch::new())
+                 &mut SpsaPool::new(), &mut model::Scratch::new())
         .unwrap();
     close(loss, 2.568_747_5, 3e-4, "mezo loss");
     let want_p0: [f32; 4] =
@@ -213,7 +214,7 @@ fn multi_query_mezo_matches_jax() {
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &LABELS_CLS, 2, 6, 77,
                          1e-2, 1e-3, ProgramKind::MezoMulti(2),
-                 &mut model::Scratch::new())
+                 &mut SpsaPool::new(), &mut model::Scratch::new())
         .unwrap();
     close(loss, 1.060_764_9, 2e-4, "q2 loss");
     let want_p0: [f32; 4] =
@@ -226,7 +227,7 @@ fn multi_query_mezo_matches_jax() {
     let mut w = golden_params(&cfg);
     let loss = mezo_step(&cfg, &mut w, &IDS, &MASK, &IDS, 2, 6, 77, 1e-2,
                          1e-3, ProgramKind::MezoMulti(2),
-                 &mut model::Scratch::new())
+                 &mut SpsaPool::new(), &mut model::Scratch::new())
         .unwrap();
     close(loss, 2.568_747, 3e-4, "q2 dec loss");
     let want_p0: [f32; 4] =

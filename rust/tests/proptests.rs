@@ -351,6 +351,152 @@ fn prop_shuffle_is_permutation() {
 // ---------------------------------------------------------------------
 
 use pocketllm::coordinator::fleet::QueueKey;
+use pocketllm::runtime::native::math;
+
+// ---------------------------------------------------------------------
+// blocked kernels: bit-identical to the naive references over ragged
+// shapes (non-multiples of the KC/NC/TB block sizes, degenerate 1xN /
+// Mx1 / empty extents) and under varied pool-worker registrations
+// ---------------------------------------------------------------------
+
+/// Random values spanning magnitudes so reassociation WOULD show up as
+/// a bit difference if a kernel reordered its per-element reduction.
+fn random_tensor(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            let v = (rng.next_f32() * 2.0 - 1.0)
+                * [1.0, 1e-3, 1e3][rng.below(3)];
+            if rng.chance(0.02) { 0.0 } else { v }
+        })
+        .collect()
+}
+
+/// Ragged extent: mostly off-block sizes, with the degenerate 0 and 1
+/// extents drawn often enough to pin the edge paths.
+fn ragged(rng: &mut Rng, hi: usize) -> usize {
+    match rng.below(10) {
+        0 => 0,
+        1 => 1,
+        // straddle the 64-wide KC/NC panel boundary
+        2 => 63 + rng.below(3),
+        _ => 1 + rng.below(hi),
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_bit_identical_to_reference() {
+    for_cases(150, |rng| {
+        let (m, k, n) = (ragged(rng, 20), ragged(rng, 70), ragged(rng, 70));
+        let a = random_tensor(rng, m * k);
+        let b = random_tensor(rng, k * n);
+        let mut blocked = random_tensor(rng, m * n); // += semantics
+        let mut naive = blocked.clone();
+        math::matmul_into(&a, &b, m, k, n, &mut blocked);
+        math::reference::matmul_into(&a, &b, m, k, n, &mut naive);
+        assert_eq!(blocked, naive, "m={m} k={k} n={n}");
+    });
+}
+
+#[test]
+fn prop_blocked_matmul_bias_bit_identical_to_reference() {
+    for_cases(150, |rng| {
+        let (m, k, n) = (ragged(rng, 20), ragged(rng, 70), ragged(rng, 70));
+        let a = random_tensor(rng, m * k);
+        let b = random_tensor(rng, k * n);
+        let bias = random_tensor(rng, n);
+        // overwrite semantics: stale contents must not leak through
+        let mut blocked = vec![f32::NAN; m * n];
+        let mut naive = vec![f32::NAN; m * n];
+        math::matmul_bias_into(&a, &b, &bias, m, k, n, &mut blocked);
+        math::reference::matmul_bias_into(&a, &b, &bias, m, k, n,
+                                          &mut naive);
+        assert!(blocked.iter().zip(&naive)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "m={m} k={k} n={n}");
+    });
+}
+
+#[test]
+fn prop_blocked_matmul_at_bit_identical_to_reference() {
+    for_cases(150, |rng| {
+        let (m, k, n) = (ragged(rng, 40), ragged(rng, 40), ragged(rng, 70));
+        let a = random_tensor(rng, m * k);
+        let b = random_tensor(rng, m * n);
+        let mut blocked = random_tensor(rng, k * n); // += semantics
+        let mut naive = blocked.clone();
+        math::matmul_at_into(&a, &b, m, k, n, &mut blocked);
+        math::reference::matmul_at_into(&a, &b, m, k, n, &mut naive);
+        assert_eq!(blocked, naive, "m={m} k={k} n={n}");
+    });
+}
+
+#[test]
+fn prop_blocked_matmul_bt_bit_identical_to_reference() {
+    for_cases(150, |rng| {
+        let (m, n, k) = (ragged(rng, 20), ragged(rng, 70), ragged(rng, 20));
+        let a = random_tensor(rng, m * n);
+        let b = random_tensor(rng, k * n);
+        let mut blocked = vec![f32::NAN; m * k]; // overwrite semantics
+        let mut naive = vec![f32::NAN; m * k];
+        math::matmul_bt_into(&a, &b, m, n, k, &mut blocked);
+        math::reference::matmul_bt_into(&a, &b, m, n, k, &mut naive);
+        assert!(blocked.iter().zip(&naive)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "m={m} n={n} k={k}");
+    });
+}
+
+#[test]
+fn prop_blocked_col_sums_bit_identical_to_reference() {
+    for_cases(200, |rng| {
+        let (rows, n) = (ragged(rng, 30), ragged(rng, 70));
+        let a = random_tensor(rng, rows * n);
+        let mut blocked = random_tensor(rng, n); // += semantics
+        let mut naive = blocked.clone();
+        math::col_sums_into(&a, n, &mut blocked);
+        math::reference::col_sums_into(&a, n, &mut naive);
+        assert_eq!(blocked, naive, "rows={rows} n={n}");
+    });
+}
+
+#[test]
+fn prop_worker_count_never_changes_kernel_bits() {
+    // Above PAR_FLOPS the kernels split across n_threads() row chunks;
+    // registering pool workers shrinks that budget.  Neither the
+    // threaded split nor the worker registration may change a single
+    // output bit versus the serial references.
+    let mut rng = Rng::new(HARNESS_SALT ^ 0xC0_FFEE);
+    let (m, k, n) = (96, 130, 190); // ragged, > 2^21 flops
+    let a = random_tensor(&mut rng, m * k);
+    let b = random_tensor(&mut rng, k * n);
+    let bias = random_tensor(&mut rng, n);
+    let mut want = vec![0f32; m * n];
+    math::reference::matmul_into(&a, &b, m, k, n, &mut want);
+    let mut want_bias = vec![0f32; m * n];
+    math::reference::matmul_bias_into(&a, &b, &bias, m, k, n,
+                                      &mut want_bias);
+    let bm = random_tensor(&mut rng, m * n); // [m,n] operand for a^T @ bm
+    let mut want_at = vec![0f32; k * n];
+    math::reference::matmul_at_into(&a, &bm, m, k, n, &mut want_at);
+    let mut want_bt = vec![0f32; m * k];
+    math::reference::matmul_bt_into(&bm, &b, m, n, k, &mut want_bt);
+    for workers in [0, 1, 2, 7] {
+        let _guard = (workers > 0)
+            .then(|| math::register_pool_workers(workers));
+        let mut got = vec![0f32; m * n];
+        math::matmul_into(&a, &b, m, k, n, &mut got);
+        assert_eq!(got, want, "matmul under {workers} workers");
+        let mut got = vec![0f32; m * n];
+        math::matmul_bias_into(&a, &b, &bias, m, k, n, &mut got);
+        assert_eq!(got, want_bias, "matmul_bias under {workers} workers");
+        let mut got = vec![0f32; k * n];
+        math::matmul_at_into(&a, &bm, m, k, n, &mut got);
+        assert_eq!(got, want_at, "matmul_at under {workers} workers");
+        let mut got = vec![0f32; m * k];
+        math::matmul_bt_into(&bm, &b, m, n, k, &mut got);
+        assert_eq!(got, want_bt, "matmul_bt under {workers} workers");
+    }
+}
 
 #[test]
 fn prop_edf_queue_pops_by_deadline_then_fifo() {
