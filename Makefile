@@ -6,13 +6,22 @@
 # (the native backend will happily use the resulting manifest +
 # init_params.bin too, for cross-backend parity runs).
 
-.PHONY: build test artifacts bench bench-all clean
+.PHONY: build test lint artifacts bench bench-all clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# The one-command static gate CI's blocking `lint` job mirrors:
+# style (rustfmt), compiler-adjacent lints (clippy, tree-wide, deny
+# warnings), and the repo's own determinism/memory contracts
+# (pallas-lint; see README "Static analysis & invariants").
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+	cargo run --release --bin pallas-lint -- --stats
 
 # Lower every (config, program, batch) to HLO text + manifest.json.
 # Requires python + jax (see python/compile/aot.py).

@@ -1,0 +1,103 @@
+//! `pallas-lint` — static enforcement of the determinism & memory
+//! contracts (see `src/lint/mod.rs` for the rule set).
+//!
+//! Usage:
+//!     pallas-lint [--json] [--stats] [PATH...]
+//!
+//! PATH defaults to `rust/src` (or `src` when run from inside
+//! `rust/`).  Exit codes: 0 clean, 1 violations found, 2 usage or
+//! I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pocketllm::lint;
+
+const USAGE: &str = "\
+pallas-lint: static determinism/memory-contract checks
+
+usage: pallas-lint [--json] [--stats] [PATH...]
+
+  --json    machine-readable report on stdout (CI artifact)
+  --stats   per-rule violation/allow counts
+  PATH      files or directories to scan (default: rust/src)
+
+rules:
+  D001  no HashMap/HashSet in determinism-critical trees
+  D002  no wall-clock reads outside the telemetry allowlist
+  D003  every `unsafe` needs a // SAFETY: comment
+  D004  no unwrap/expect/panic in library code
+  D005  no raw thread::spawn in src/
+  P000  lint:allow pragmas must carry a justification
+
+suppress with `// lint:allow(RULE): why` (line scope) or
+`// lint:allow-file(RULE): why` (file scope).
+";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut stats = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--stats" => stats = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("pallas-lint: unknown flag `{other}`");
+                eprint!("{USAGE}");
+                return ExitCode::from(2);
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        // default to the crate source tree from either the repo root
+        // or the crate directory
+        let rust_src = PathBuf::from("rust/src");
+        let src = PathBuf::from("src");
+        if rust_src.is_dir() {
+            paths.push(rust_src);
+        } else if src.is_dir() {
+            paths.push(src);
+        } else {
+            eprintln!(
+                "pallas-lint: no rust/src or src here; pass a PATH"
+            );
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut report = lint::Report::default();
+    for p in &paths {
+        match lint::lint_tree(p) {
+            Ok(r) => report.merge(r),
+            Err(e) => {
+                eprintln!("pallas-lint: {e:#}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if json {
+        println!("{}", report.to_json().dump());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if stats {
+        // stats go to stderr under --json so stdout stays parseable
+        if json {
+            eprint!("{}", report.render_stats());
+        } else {
+            print!("{}", report.render_stats());
+        }
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

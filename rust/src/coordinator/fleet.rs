@@ -74,7 +74,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::{CoordinatorConfig, Event, JobOutcome, JobRun, JobSpec,
             JobStatus};
@@ -613,7 +613,9 @@ impl<'rt> FleetScheduler<'rt> {
         if durable {
             // the manifest commits BEFORE any window runs: a crash at
             // any later byte finds a recoverable store
-            let store = store.as_ref().expect("durable run has a store");
+            let Some(store) = store.as_ref() else {
+                bail!("durable fleet run opened no session store");
+            };
             store
                 .put_raw(MANIFEST_KEY, &encode_manifest(&self.cfg.coord,
                                                         jobs))
@@ -760,7 +762,11 @@ impl<'rt> FleetScheduler<'rt> {
             }
         });
 
-        if let Some(e) = failure.into_inner().unwrap() {
+        // a worker that panicked poisons `failure`; recover the slot
+        // rather than double-panicking in the coordinator
+        let first_failure =
+            failure.into_inner().unwrap_or_else(|p| p.into_inner());
+        if let Some(e) = first_failure {
             return Err(e);
         }
         if halted.load(Ordering::SeqCst) {
@@ -777,9 +783,9 @@ impl<'rt> FleetScheduler<'rt> {
         let mut metrics = MetricLog::new();
         let slots = std::mem::take(&mut *finished.lock().unwrap());
         for (i, slot) in slots.into_iter().enumerate() {
-            let (outcome, ev, m) = slot.unwrap_or_else(|| {
-                panic!("job {i} never reached a terminal state")
-            });
+            let (outcome, ev, m) = slot.ok_or_else(|| {
+                anyhow!("job {i} never reached a terminal state")
+            })?;
             outcomes.push(outcome);
             events.extend(ev);
             metrics.merge(m);

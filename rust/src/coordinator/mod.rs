@@ -33,7 +33,7 @@ pub mod jobs;
 pub use fleet::{FleetConfig, FleetReport, FleetScheduler, FleetTelemetry};
 pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::device::{Device, OomError};
 use crate::optim::OptimizerKind;
@@ -563,9 +563,14 @@ impl JobRun {
         let w = self.window_idx;
         self.window_idx += 1;
 
-        let state = self.trace.next().expect("trace is infinite");
-        let session =
-            self.session.as_mut().expect("non-terminal run has a session");
+        let state = self
+            .trace
+            .next()
+            .ok_or_else(|| anyhow!("device trace ended prematurely"))?;
+        let session = self
+            .session
+            .as_mut()
+            .ok_or_else(|| anyhow!("non-terminal run lost its session"))?;
         match self.cfg.policy.admits(&state) {
             Err(reason) => {
                 self.denied += 1;
@@ -618,6 +623,8 @@ impl JobRun {
         let outcome = self
             .done
             .take()
+            // lint:allow(D004): the fleet drives every job to a
+            // terminal state before finish(); an infallible contract
             .expect("finish() called before the job reached a terminal \
                      state");
         (outcome, self.events, self.metrics)

@@ -15,7 +15,8 @@
 //! Determinism: ties in pair frequency break lexicographically, so the
 //! same corpus always yields the same vocabulary on every platform.
 
-use std::collections::HashMap;
+// lint:allow(D001): merge_rank below is lookup-only (never iterated)
+use std::collections::{BTreeMap, HashMap};
 
 /// Special token ids (fixed, before the 256 byte tokens).
 pub const PAD: i32 = 0;
@@ -33,6 +34,8 @@ const WORD_MARK: u8 = 0x01;
 pub struct Bpe {
     /// Merge rules in priority order: (left id, right id) -> merged id.
     merges: Vec<(i32, i32)>,
+    // lint:allow(D001): lookup-only in encode_word; iteration never
+    // observes hash order
     merge_rank: HashMap<(i32, i32), usize>,
     /// id -> byte string it spells.
     pieces: Vec<Vec<u8>>,
@@ -50,7 +53,7 @@ impl Bpe {
             "vocab must cover specials + bytes"
         );
         // word frequency table, each word as a byte-token sequence
-        let mut word_freq: HashMap<Vec<i32>, u64> = HashMap::new();
+        let mut word_freq: BTreeMap<Vec<i32>, u64> = BTreeMap::new();
         for line in corpus {
             for w in line.split_whitespace() {
                 let mut toks = Vec::with_capacity(w.len() + 1);
@@ -73,13 +76,13 @@ impl Bpe {
 
         let mut merges = Vec::new();
         let n_merges = vocab_size - N_SPECIAL - 256;
-        let mut words: Vec<(Vec<i32>, u64)> = word_freq.into_iter().collect();
-        // deterministic iteration order
-        words.sort();
+        // BTreeMap iteration is already key-sorted — deterministic
+        let mut words: Vec<(Vec<i32>, u64)> =
+            word_freq.into_iter().collect();
 
         for _ in 0..n_merges {
             // count adjacent pairs
-            let mut pair_freq: HashMap<(i32, i32), u64> = HashMap::new();
+            let mut pair_freq: BTreeMap<(i32, i32), u64> = BTreeMap::new();
             for (w, f) in &words {
                 for win in w.windows(2) {
                     *pair_freq.entry((win[0], win[1])).or_insert(0) += f;

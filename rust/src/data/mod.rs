@@ -17,6 +17,8 @@ pub mod bpe;
 pub mod corpus;
 pub mod task;
 
+// lint:allow(D001): the artifact-cache map below is lookup-only —
+// eviction order lives in the VecDeque, never in map iteration
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -57,6 +59,7 @@ type ArtifactCell = Arc<OnceLock<Arc<SessionArtifacts>>>;
 /// Cell map + FIFO insertion order (for eviction), under one lock.
 #[derive(Default)]
 struct ArtifactCache {
+    // lint:allow(D001): lookup-only; FIFO eviction walks `order`
     map: HashMap<ArtifactKey, ArtifactCell>,
     order: VecDeque<ArtifactKey>,
 }

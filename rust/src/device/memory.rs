@@ -203,6 +203,7 @@ impl MemoryLedger {
             });
         }
         for (c, b) in fp.rows() {
+            // lint:allow(D004): the budget check above covers the sum
             self.alloc(c, b).expect("pre-checked");
         }
         Ok(())

@@ -56,6 +56,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod device;
+pub mod lint;
 pub mod optim;
 pub mod report;
 pub mod runtime;

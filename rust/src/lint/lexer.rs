@@ -1,0 +1,419 @@
+//! A small token-level Rust lexer for `pallas-lint`.
+//!
+//! This is NOT a parser: it produces a flat token stream that is just
+//! structured enough for contract linting — identifiers, single-char
+//! punctuation, and comments (kept, with their text, for pragma and
+//! `SAFETY:` scanning), with every literal form that could *hide* rule
+//! text reduced to an opaque token: plain/byte/C strings (escapes,
+//! multi-line), raw strings with any `#` fence depth, char literals
+//! (including `'"'` and escapes), lifetimes, and nested block
+//! comments.  A `HashMap` spelled inside a string or a `panic!` inside
+//! a comment therefore never reaches the rule engine.
+
+/// What a token is; rule matching only ever inspects `Ident`,
+/// `Punct` and `Comment`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `unsafe`, `thread`, ...).
+    Ident,
+    /// One significant punctuation character (`.`, `:`, `(`, `!`, ...).
+    Punct(char),
+    /// Line or block comment; `text` holds the body.
+    Comment,
+    /// String / char / lifetime literal, content deliberately opaque.
+    Literal,
+    /// Numeric literal, content opaque.
+    Num,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Ident text or comment body; empty for other kinds.
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// Skip a plain (escaped) string body; `j` points just past the
+/// opening quote.  Returns the index just past the closing quote.
+fn skip_plain_string(chars: &[char], mut j: usize, line: &mut usize) -> usize {
+    let n = chars.len();
+    while j < n {
+        match chars[j] {
+            '\\' => {
+                // escape: consume the backslash and the next char
+                // (covers \" \\ \n \u{..} prefixes; a line-continuation
+                // backslash-newline still counts its line)
+                if j + 1 < n && chars[j + 1] == '\n' {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Skip a raw string body; `j` points just past the opening quote and
+/// `hashes` is the fence depth (`r"` = 0, `r#"` = 1, ...).  No escape
+/// processing — that is the point of raw strings.
+fn skip_raw_string(
+    chars: &[char],
+    mut j: usize,
+    hashes: usize,
+    line: &mut usize,
+) -> usize {
+    let n = chars.len();
+    while j < n {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            let mut k = 0;
+            while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return j + 1 + hashes;
+            }
+        }
+        j += 1;
+    }
+    n
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src` into a flat token stream.  Total: every input lexes to
+/// SOMETHING (unterminated literals run to end-of-file) — a linter
+/// must never panic on weird-but-compiling source.
+pub fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---- comments ----
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Comment,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // block comment, with nesting
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/'
+                {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    j += 2;
+                } else {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    text.push(chars[j]);
+                    j += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Comment,
+                text,
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // ---- identifiers (and string-literal prefixes) ----
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            let word: String = chars[i..j].iter().collect();
+            let is_plain_prefix = matches!(word.as_str(), "b" | "c");
+            let is_raw_prefix =
+                matches!(word.as_str(), "r" | "br" | "cr");
+            if j < n && chars[j] == '"' && (is_plain_prefix || is_raw_prefix)
+            {
+                // b"..." / c"..." / r"..." / br"..." / cr"..."
+                let start_line = line;
+                i = if is_raw_prefix {
+                    skip_raw_string(&chars, j + 1, 0, &mut line)
+                } else {
+                    skip_plain_string(&chars, j + 1, &mut line)
+                };
+                toks.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::new(),
+                    line: start_line,
+                });
+                continue;
+            }
+            if j < n && chars[j] == '#' && is_raw_prefix {
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    // r#"..."# (any fence depth, any prefix)
+                    let start_line = line;
+                    i = skip_raw_string(&chars, k + 1, k - j, &mut line);
+                    toks.push(Token {
+                        kind: TokKind::Literal,
+                        text: String::new(),
+                        line: start_line,
+                    });
+                    continue;
+                }
+                if word == "r" && k == j + 1 && k < n
+                    && is_ident_start(chars[k])
+                {
+                    // raw identifier r#ident: emit the ident itself
+                    let mut m = k + 1;
+                    while m < n && is_ident_continue(chars[m]) {
+                        m += 1;
+                    }
+                    toks.push(Token {
+                        kind: TokKind::Ident,
+                        text: chars[k..m].iter().collect(),
+                        line,
+                    });
+                    i = m;
+                    continue;
+                }
+            }
+            toks.push(Token { kind: TokKind::Ident, text: word, line });
+            i = j;
+            continue;
+        }
+        // ---- plain strings ----
+        if c == '"' {
+            let start_line = line;
+            i = skip_plain_string(&chars, i + 1, &mut line);
+            toks.push(Token {
+                kind: TokKind::Literal,
+                text: String::new(),
+                line: start_line,
+            });
+            continue;
+        }
+        // ---- char literals vs lifetimes ----
+        if c == '\'' {
+            // 'a is a lifetime, 'a' is a char; the disambiguator is
+            // whether an ident char is followed by a closing quote
+            if i + 1 < n
+                && is_ident_start(chars[i + 1])
+                && !(i + 2 < n && chars[i + 2] == '\'')
+            {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::new(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let start_line = line;
+            let mut j = i + 1;
+            if j < n && chars[j] == '\\' {
+                j += 2; // escape: \' \\ \u{...} all start this way
+            } else if j < n {
+                j += 1; // the char itself — possibly '"'
+            }
+            while j < n && chars[j] != '\'' {
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Literal,
+                text: String::new(),
+                line: start_line,
+            });
+            i = j + 1;
+            continue;
+        }
+        // ---- numbers ----
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Num,
+                text: String::new(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // ---- everything else: one punctuation char ----
+        toks.push(Token {
+            kind: TokKind::Punct(c),
+            text: String::new(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_are_opaque() {
+        // rule text inside a string must never surface as idents
+        let src = r##"let s = "x.unwrap() HashMap panic!"; s.len()"##;
+        assert_eq!(idents(src), ["let", "s", "s", "len"]);
+    }
+
+    #[test]
+    fn raw_strings_any_fence_depth() {
+        let src = "let s = r#\"contains .unwrap() and \"quotes\"\"#; \
+                   after()";
+        assert_eq!(idents(src), ["let", "s", "after"]);
+        let src2 = "let s = r##\"one \"# inside\"##; after()";
+        assert_eq!(idents(src2), ["let", "s", "after"]);
+        let src3 = "let s = r\"no hash unwrap()\"; after()";
+        assert_eq!(idents(src3), ["let", "s", "after"]);
+    }
+
+    #[test]
+    fn byte_and_c_strings() {
+        let src = "let s = b\"panic!\"; let t = br#\"unwrap()\"#; end()";
+        assert_eq!(idents(src), ["let", "s", "let", "t", "end"]);
+    }
+
+    #[test]
+    fn char_literals_including_quote() {
+        // '"' is the classic lexer trap: the quote must not open a
+        // string that swallows the rest of the file
+        let src = "if c == '\"' { hidden.unwrap() }";
+        let ids = idents(src);
+        assert!(ids.contains(&"hidden".to_string()));
+        assert!(ids.contains(&"unwrap".to_string()));
+        // escaped quote char
+        let src2 = "if c == '\\'' { x() }";
+        assert_eq!(idents(src2), ["if", "c", "x"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let ids = idents(src);
+        assert_eq!(ids, ["fn", "f", "x", "str", "str", "x"]);
+        // 'static in bounds
+        let ids2 = idents("fn g<T: 'static>() {}");
+        assert_eq!(ids2, ["fn", "g", "T"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner unwrap() */ still comment */ code()";
+        let toks = lex(src);
+        assert_eq!(toks[0].kind, TokKind::Comment);
+        assert!(toks[0].text.contains("inner unwrap()"));
+        let ids: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Ident).collect();
+        assert_eq!(ids.len(), 1);
+        assert_eq!(ids[0].text, "code");
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_literals() {
+        let src = "let a = \"line\none\";\nlet b = 1;\n// note\nfn f() {}";
+        let toks = lex(src);
+        let f = toks.iter().find(|t| t.is_ident("fn")).unwrap();
+        assert_eq!(f.line, 5);
+        let note = toks
+            .iter()
+            .find(|t| t.kind == TokKind::Comment)
+            .unwrap();
+        assert_eq!(note.line, 4);
+        assert_eq!(note.text.trim(), "note");
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        assert_eq!(idents("let r#type = 1; use r#fn;"),
+                   ["let", "type", "use", "fn"]);
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_panic() {
+        let _ = lex("let s = \"never closed");
+        let _ = lex("let s = r#\"never closed");
+        let _ = lex("/* never closed");
+        let _ = lex("let c = '");
+    }
+}

@@ -1,0 +1,815 @@
+//! `pallas-lint` — static enforcement of this repo's determinism &
+//! memory contracts.
+//!
+//! Everything the runtime promises — seed-replayable MeZO
+//! perturbations, bit-identical fleet recovery after a crash, kernels
+//! pinned against `math::reference` oracles — rests on invariants that
+//! tests can only check *after* a violation exists.  This pass rejects
+//! the violation at the source level instead:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | D001 | no `HashMap`/`HashSet` in determinism-critical trees (`src/runtime/`, `src/coordinator/`, `src/store/`, `src/scheduler/`, `src/data/`) — their iteration order varies per process, which breaks bit-identity |
+//! | D002 | no wall-clock (`Instant::now` / `SystemTime::now`) outside the telemetry allowlist (`util/timer.rs`, `telemetry/bench.rs`, `main.rs`) — simulated-device code must never leak host time |
+//! | D003 | every `unsafe` requires a `// SAFETY:` comment within the five preceding lines |
+//! | D004 | no `.unwrap()` / `.expect(` / `panic!` in library code (`.lock().unwrap()` exempt: propagating a poisoned lock IS the intended panic path) |
+//! | D005 | no raw `thread::spawn` in `src/` — parallelism routes through scoped pools under the registered worker budget |
+//!
+//! Suppression: `// lint:allow(D004): why` on (or directly above) the
+//! offending line, or `// lint:allow-file(D001): why` anywhere for
+//! file scope.  A pragma **must** carry a justification after the
+//! closing paren, or it is itself a violation (P000).  `#[cfg(test)]`
+//! items are skipped entirely — the contracts govern shipping code.
+//!
+//! The lexer ([`lexer`]) is token-level and correctly blinds the rule
+//! engine to strings, raw strings, char literals (`'"'`), lifetimes
+//! and nested block comments, so contract text inside a literal never
+//! fires and real violations cannot hide inside one either.
+
+pub mod lexer;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use lexer::{lex, TokKind, Token};
+
+/// Rule IDs in report order.
+pub const RULE_IDS: &[&str] =
+    &["D001", "D002", "D003", "D004", "D005", "P000"];
+
+/// One-line summary per rule (for `--stats` and docs).
+pub fn rule_summary(rule: &str) -> &'static str {
+    match rule {
+        "D001" => "hash-order iteration in determinism-critical tree",
+        "D002" => "wall-clock read outside the telemetry allowlist",
+        "D003" => "`unsafe` without a SAFETY comment",
+        "D004" => "unwrap/expect/panic in library code",
+        "D005" => "raw thread::spawn outside the pool budget",
+        "P000" => "lint:allow pragma without a justification",
+        _ => "unknown rule",
+    }
+}
+
+/// Trees where D001 applies: anything whose iteration order feeds the
+/// bit-identity contracts (step replay, fleet recovery, store layout,
+/// scheduling, tokenizer training).
+const D001_TREES: &[&str] = &[
+    "src/runtime/",
+    "src/coordinator/",
+    "src/store/",
+    "src/scheduler/",
+    "src/data/",
+];
+
+/// Files allowed to read the host clock: the stopwatch itself, the
+/// bench harness, and the CLI's host-wall reporting.
+const D002_ALLOW: &[&str] =
+    &["src/util/timer.rs", "src/telemetry/bench.rs", "src/main.rs"];
+
+/// A confirmed contract violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Normalized path (always `src/`-rooted, forward slashes).
+    pub path: String,
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+/// One `lint:allow` pragma (surviving-suppression accounting).
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub path: String,
+    pub line: usize,
+    pub rule: String,
+    pub file_scope: bool,
+}
+
+/// The outcome of linting one file or a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub allows: Vec<AllowEntry>,
+    /// Findings that matched a rule but were suppressed by a pragma.
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.files_scanned += other.files_scanned;
+        self.findings.extend(other.findings);
+        self.allows.extend(other.allows);
+        self.suppressed += other.suppressed;
+    }
+
+    fn count<'a>(
+        rules: impl Iterator<Item = &'a str>,
+    ) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        for rule in rules {
+            *out.entry(rule.to_string()).or_insert(0u64) += 1;
+        }
+        out
+    }
+
+    /// Violations per rule id (only rules with hits).
+    pub fn violations_by_rule(&self) -> BTreeMap<String, u64> {
+        Self::count(self.findings.iter().map(|f| f.rule.as_str()))
+    }
+
+    /// Pragmas per rule id (only rules with pragmas).
+    pub fn allows_by_rule(&self) -> BTreeMap<String, u64> {
+        Self::count(self.allows.iter().map(|a| a.rule.as_str()))
+    }
+
+    /// Human-readable findings, one line each, path-then-line sorted
+    /// already by construction (the tree walk is sorted).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: {} {}\n",
+                f.path, f.line, f.rule, f.msg
+            ));
+        }
+        out.push_str(&format!(
+            "pallas-lint: {} file(s) scanned, {} violation(s), \
+             {} allow(s), {} suppressed\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.allows.len(),
+            self.suppressed
+        ));
+        out
+    }
+
+    /// The `--stats` table: violations and allows by rule, so
+    /// suppression-count creep is visible in CI logs over time.
+    pub fn render_stats(&self) -> String {
+        let v = self.violations_by_rule();
+        let a = self.allows_by_rule();
+        let mut out = String::from(
+            "rule   violations  allows  summary\n",
+        );
+        for id in RULE_IDS {
+            out.push_str(&format!(
+                "{:<6} {:>10}  {:>6}  {}\n",
+                id,
+                v.get(*id).copied().unwrap_or(0),
+                a.get(*id).copied().unwrap_or(0),
+                rule_summary(id)
+            ));
+        }
+        out.push_str(&format!(
+            "files scanned: {}\n",
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("path", Json::str(&f.path)),
+                    ("line", Json::num(f.line as f64)),
+                    ("rule", Json::str(&f.rule)),
+                    ("msg", Json::str(&f.msg)),
+                ])
+            })
+            .collect();
+        let allows = self
+            .allows
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("path", Json::str(&a.path)),
+                    ("line", Json::num(a.line as f64)),
+                    ("rule", Json::str(&a.rule)),
+                    ("file_scope", Json::Bool(a.file_scope)),
+                ])
+            })
+            .collect();
+        let by_rule = |m: BTreeMap<String, u64>| {
+            Json::Obj(
+                m.into_iter()
+                    .map(|(k, v)| (k, Json::num(v as f64)))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("violations", Json::Arr(findings)),
+            ("allows", Json::Arr(allows)),
+            ("suppressed", Json::num(self.suppressed as f64)),
+            (
+                "violations_by_rule",
+                by_rule(self.violations_by_rule()),
+            ),
+            ("allows_by_rule", by_rule(self.allows_by_rule())),
+        ])
+    }
+}
+
+/// A parsed suppression pragma.
+struct Pragma {
+    line: usize,
+    rules: Vec<String>,
+    file_scope: bool,
+    justified: bool,
+}
+
+/// Extract the suppression pragma leading one comment, if any.  A
+/// pragma must open its comment (after the `//`/`/*` markers), so
+/// prose that merely *mentions* the pragma syntax stays inert.
+fn parse_pragmas(text: &str, line: usize) -> Option<Pragma> {
+    let body =
+        text.trim_start_matches(['/', '!', '*', ' ', '\t']);
+    let mut rest = body.strip_prefix("lint:allow")?;
+    let file_scope = rest.starts_with("-file");
+    if file_scope {
+        rest = &rest["-file".len()..];
+    }
+    let open = rest.find('(')?;
+    if !rest[..open].trim().is_empty() {
+        return None; // "lint:allowed ..." or similar
+    }
+    let close = rest[open..].find(')')?;
+    let rules: Vec<String> = rest[open + 1..open + close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let tail = rest[open + close + 1..].trim_start();
+    let justified = tail
+        .strip_prefix(':')
+        .map(|t| !t.trim().is_empty())
+        .unwrap_or(false);
+    Some(Pragma { line, rules, file_scope, justified })
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (inclusive).
+fn test_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let code: Vec<&Token> =
+        toks.iter().filter(|t| t.kind != TokKind::Comment).collect();
+    let mut ranges = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i + 6 < n {
+        let is_cfg_test = code[i].is_punct('#')
+            && code[i + 1].is_punct('[')
+            && code[i + 2].is_ident("cfg")
+            && code[i + 3].is_punct('(')
+            && code[i + 4].is_ident("test")
+            && code[i + 5].is_punct(')')
+            && code[i + 6].is_punct(']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        let mut j = i + 7;
+        // skip any further attributes on the same item
+        while j + 1 < n
+            && code[j].is_punct('#')
+            && code[j + 1].is_punct('[')
+        {
+            let mut depth = 0usize;
+            while j < n {
+                if code[j].is_punct('[') {
+                    depth += 1;
+                } else if code[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // the item itself: ends at `;` (decl) or at its matched braces
+        let mut paren = 0isize;
+        let mut end_line = start_line;
+        while j < n {
+            let t = code[j];
+            if t.is_punct('(') {
+                paren += 1;
+            } else if t.is_punct(')') {
+                paren -= 1;
+            } else if t.is_punct(';') && paren == 0 {
+                end_line = t.line;
+                j += 1;
+                break;
+            } else if t.is_punct('{') {
+                let mut depth = 0usize;
+                while j < n {
+                    if code[j].is_punct('{') {
+                        depth += 1;
+                    } else if code[j].is_punct('}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            end_line = code[j].line;
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                break;
+            }
+            end_line = t.line;
+            j += 1;
+        }
+        ranges.push((start_line, end_line));
+        i = j.max(i + 1);
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], line: usize) -> bool {
+    ranges.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Which rules apply to a (normalized) path at all.
+fn rule_applies(rule: &str, path: &str) -> bool {
+    let in_src = path.starts_with("src/") || path == "src";
+    match rule {
+        "D001" => D001_TREES.iter().any(|p| path.starts_with(p)),
+        "D002" => in_src && !D002_ALLOW.contains(&path),
+        "D003" | "D005" => in_src,
+        "D004" => {
+            in_src
+                && path != "src/main.rs"
+                && !path.starts_with("src/bin/")
+        }
+        _ => false,
+    }
+}
+
+/// Scan one file's source.  `rel_path` must be normalized (`src/...`,
+/// forward slashes) — it drives per-rule scoping.
+pub fn lint_source(rel_path: &str, src: &str) -> Report {
+    let toks = lex(src);
+    let tests = test_ranges(&toks);
+    let code: Vec<&Token> =
+        toks.iter().filter(|t| t.kind != TokKind::Comment).collect();
+    let comments: Vec<&Token> =
+        toks.iter().filter(|t| t.kind == TokKind::Comment).collect();
+
+    let mut report = Report { files_scanned: 1, ..Report::default() };
+
+    // ---- pragmas ----
+    let mut file_allows: BTreeSet<String> = BTreeSet::new();
+    // rule -> lines at which inline suppression applies
+    let mut inline: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+    for c in &comments {
+        for p in parse_pragmas(&c.text, c.line) {
+            if !p.justified && !in_ranges(&tests, p.line) {
+                report.findings.push(Finding {
+                    path: rel_path.to_string(),
+                    line: p.line,
+                    rule: "P000".into(),
+                    msg: "suppression without a justification — \
+                          write `lint:allow(RULE): why`"
+                        .into(),
+                });
+                continue;
+            }
+            for rule in &p.rules {
+                report.allows.push(AllowEntry {
+                    path: rel_path.to_string(),
+                    line: p.line,
+                    rule: rule.clone(),
+                    file_scope: p.file_scope,
+                });
+                if p.file_scope {
+                    file_allows.insert(rule.clone());
+                } else {
+                    let lines =
+                        inline.entry(rule.clone()).or_default();
+                    lines.insert(p.line);
+                    // a pragma on its own line covers the next line
+                    // that holds code
+                    if let Some(next) = code
+                        .iter()
+                        .map(|t| t.line)
+                        .find(|&l| l > p.line)
+                    {
+                        lines.insert(next);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- candidate findings ----
+    let mut candidates: Vec<Finding> = Vec::new();
+    let mut push = |line: usize, rule: &str, msg: String| {
+        candidates.push(Finding {
+            path: rel_path.to_string(),
+            line,
+            rule: rule.to_string(),
+            msg,
+        });
+    };
+    let n = code.len();
+    for i in 0..n {
+        let t = code[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let at = |k: usize| code.get(i + k);
+        let punct_at = |k: usize, c: char| {
+            at(k).map(|t| t.is_punct(c)).unwrap_or(false)
+        };
+        let ident_at = |k: usize, s: &str| {
+            at(k).map(|t| t.is_ident(s)).unwrap_or(false)
+        };
+        match t.text.as_str() {
+            // D001 — any hash-ordered collection in a critical tree
+            "HashMap" | "HashSet"
+                if rule_applies("D001", rel_path) =>
+            {
+                push(
+                    t.line,
+                    "D001",
+                    format!(
+                        "`{}` in a determinism-critical tree — hash \
+                         iteration order varies per process; use \
+                         BTreeMap/BTreeSet or sort before iterating, \
+                         or justify a lookup-only map with \
+                         lint:allow(D001)",
+                        t.text
+                    ),
+                );
+            }
+            // D002 — Instant::now / SystemTime::now
+            "Instant" | "SystemTime"
+                if rule_applies("D002", rel_path)
+                    && punct_at(1, ':')
+                    && punct_at(2, ':')
+                    && ident_at(3, "now") =>
+            {
+                push(
+                    t.line,
+                    "D002",
+                    format!(
+                        "`{}::now()` outside the telemetry \
+                         allowlist — simulated-device code derives \
+                         time from the device clock, never the host",
+                        t.text
+                    ),
+                );
+            }
+            // D003 — unsafe without a SAFETY comment close above
+            "unsafe" if rule_applies("D003", rel_path) => {
+                let line = t.line;
+                let documented = comments.iter().any(|c| {
+                    c.text.contains("SAFETY:")
+                        && c.line <= line
+                        && c.line + 5 >= line
+                });
+                if !documented {
+                    push(
+                        line,
+                        "D003",
+                        "`unsafe` without a `// SAFETY:` comment in \
+                         the five preceding lines"
+                            .into(),
+                    );
+                }
+            }
+            // D004 — .unwrap() / .expect( / panic!
+            "unwrap"
+                if rule_applies("D004", rel_path)
+                    && i >= 1
+                    && code[i - 1].is_punct('.')
+                    && punct_at(1, '(')
+                    && punct_at(2, ')') =>
+            {
+                // builtin exemption: .lock().unwrap() — propagating
+                // a poisoned mutex IS the intended panic
+                let lock = i >= 4
+                    && code[i - 2].is_punct(')')
+                    && code[i - 3].is_punct('(')
+                    && code[i - 4].is_ident("lock");
+                if !lock {
+                    push(
+                        t.line,
+                        "D004",
+                        "`.unwrap()` in library code — return a \
+                         typed error through anyhow, or justify an \
+                         invariant with lint:allow(D004)"
+                            .into(),
+                    );
+                }
+            }
+            "expect"
+                if rule_applies("D004", rel_path)
+                    && i >= 1
+                    && code[i - 1].is_punct('.')
+                    && punct_at(1, '(') =>
+            {
+                push(
+                    t.line,
+                    "D004",
+                    "`.expect(..)` in library code — return a typed \
+                     error through anyhow, or justify an invariant \
+                     with lint:allow(D004)"
+                        .into(),
+                );
+            }
+            "panic"
+                if rule_applies("D004", rel_path)
+                    && punct_at(1, '!') =>
+            {
+                push(
+                    t.line,
+                    "D004",
+                    "`panic!` in library code — return a typed error \
+                     through anyhow, or justify an invariant with \
+                     lint:allow(D004)"
+                        .into(),
+                );
+            }
+            // D005 — raw thread::spawn (scoped `s.spawn` is fine:
+            // scopes join before returning and run under the
+            // registered pool budget)
+            "thread"
+                if rule_applies("D005", rel_path)
+                    && punct_at(1, ':')
+                    && punct_at(2, ':')
+                    && ident_at(3, "spawn") =>
+            {
+                push(
+                    t.line,
+                    "D005",
+                    "raw `thread::spawn` — all parallelism routes \
+                     through scoped pools under the registered \
+                     worker budget (math::register_pool_workers)"
+                        .into(),
+                );
+            }
+            _ => {}
+        }
+    }
+
+    // ---- filter: test code, then pragmas ----
+    for f in candidates {
+        if in_ranges(&tests, f.line) {
+            continue;
+        }
+        if file_allows.contains(&f.rule) {
+            report.suppressed += 1;
+            continue;
+        }
+        if inline
+            .get(&f.rule)
+            .map(|lines| lines.contains(&f.line))
+            .unwrap_or(false)
+        {
+            report.suppressed += 1;
+            continue;
+        }
+        report.findings.push(f);
+    }
+    report
+}
+
+/// Normalize an on-disk path to the `src/`-rooted form the rule
+/// scoping uses: everything up to the last `/src/` component is
+/// dropped (`rust/src/data/bpe.rs` -> `src/data/bpe.rs`).
+fn normalize(path: &Path) -> String {
+    let s = path.to_string_lossy().replace('\\', "/");
+    if let Some(pos) = s.rfind("/src/") {
+        return s[pos + 1..].to_string();
+    }
+    if s.starts_with("src/") {
+        return s;
+    }
+    s
+}
+
+/// Directories never scanned: build output, vendored shims (their
+/// contracts are upstream's), and the lint test fixtures (which
+/// violate every rule on purpose).
+fn skip_dir(name: &str) -> bool {
+    matches!(name, "target" | "vendor" | "lint_fixtures" | ".git")
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if !skip_dir(&name) {
+                walk(&path, files)?;
+            }
+        } else if name.ends_with(".rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself, if a file).
+/// The walk is name-sorted, so reports are deterministic.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    if root.is_file() {
+        files.push(root.to_path_buf());
+    } else {
+        walk(root, &mut files)?;
+    }
+    let mut report = Report::default();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        report.merge(lint_source(&normalize(f), &src));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(r: &Report) -> Vec<&str> {
+        r.findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn d001_fires_only_in_critical_trees() {
+        let src = "use std::collections::HashMap;\n";
+        let r = lint_source("src/runtime/x.rs", src);
+        assert_eq!(rules_of(&r), ["D001"]);
+        assert_eq!(r.findings[0].line, 1);
+        // telemetry is not a critical tree
+        let r2 = lint_source("src/telemetry/x.rs", src);
+        assert!(r2.clean(), "{:?}", r2.findings);
+    }
+
+    #[test]
+    fn d002_allowlist_and_call_shape() {
+        let call = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_of(&lint_source("src/device/x.rs", call)),
+                   ["D002"]);
+        assert!(lint_source("src/util/timer.rs", call).clean());
+        assert!(lint_source("src/main.rs", call).clean());
+        // a bare type mention is not a clock read
+        let ty = "fn f(t: Instant) {}\n";
+        assert!(lint_source("src/device/x.rs", ty).clean());
+    }
+
+    #[test]
+    fn d003_safety_comment_window() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", bad)), ["D003"]);
+        let good = "// SAFETY: g has no preconditions\n\
+                    fn f() { unsafe { g() } }\n";
+        assert!(lint_source("src/x.rs", good).clean());
+        let far = "// SAFETY: too far away\n\n\n\n\n\n\n\
+                   fn f() { unsafe { g() } }\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", far)), ["D003"]);
+    }
+
+    #[test]
+    fn d004_variants_and_lock_exemption() {
+        let src = "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"b\"); \
+                   m.lock().unwrap(); }\n";
+        let r = lint_source("src/optim/x.rs", src);
+        assert_eq!(rules_of(&r), ["D004", "D004", "D004"],
+                   "lock().unwrap() must be exempt: {:?}", r.findings);
+        // main.rs and bin/ are not library code
+        assert!(lint_source("src/main.rs", src).clean());
+        assert!(lint_source("src/bin/tool.rs", src).clean());
+        // unwrap_or / unwrap_or_else are fine
+        assert!(lint_source("src/optim/x.rs",
+                            "fn f() { x.unwrap_or(0); }\n")
+            .clean());
+    }
+
+    #[test]
+    fn d005_thread_spawn() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_of(&lint_source("src/x.rs", src)), ["D005"]);
+        // scoped spawns are the sanctioned pattern
+        let scoped =
+            "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_source("src/x.rs", scoped).clean());
+    }
+
+    #[test]
+    fn pragmas_suppress_same_and_next_line() {
+        let trailing = "use std::collections::HashMap; \
+                        // lint:allow(D001): lookup-only\n";
+        let r = lint_source("src/data/x.rs", trailing);
+        assert!(r.clean());
+        assert_eq!(r.suppressed, 1);
+        assert_eq!(r.allows.len(), 1);
+        let above = "// lint:allow(D001): lookup-only\n\
+                     use std::collections::HashMap;\n";
+        let r = lint_source("src/data/x.rs", above);
+        assert!(r.clean());
+        assert_eq!(r.suppressed, 1);
+        // the wrong rule id does not suppress
+        let wrong = "// lint:allow(D004): nope\n\
+                     use std::collections::HashMap;\n";
+        assert_eq!(rules_of(&lint_source("src/data/x.rs", wrong)),
+                   ["D001"]);
+    }
+
+    #[test]
+    fn file_scope_pragma_and_multi_rule() {
+        let src = "// lint:allow-file(D004): table builders bind \
+                   builtin names\n\
+                   fn f() { a.unwrap(); b.unwrap(); }\n";
+        let r = lint_source("src/report/x.rs", src);
+        assert!(r.clean());
+        assert_eq!(r.suppressed, 2);
+        let multi = "fn f() { x.unwrap(); } \
+                     // lint:allow(D004, D001): both\n";
+        let r = lint_source("src/data/x.rs", multi);
+        assert!(r.clean());
+        assert_eq!(r.allows.len(), 2);
+    }
+
+    #[test]
+    fn unjustified_pragma_is_a_violation() {
+        let src = "use std::collections::HashMap; \
+                   // lint:allow(D001)\n";
+        let r = lint_source("src/data/x.rs", src);
+        let rules = rules_of(&r);
+        assert!(rules.contains(&"P000"), "{rules:?}");
+        assert!(rules.contains(&"D001"),
+                "an unjustified pragma must not suppress");
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "fn lib() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use std::collections::HashMap;\n\
+                       #[test]\n\
+                       fn t() { x.unwrap(); panic!(\"boom\"); }\n\
+                   }\n";
+        let r = lint_source("src/runtime/x.rs", src);
+        assert!(r.clean(), "{:?}", r.findings);
+        // ...but code BEFORE the test module is still scanned
+        let src2 = format!("fn lib() {{ x.unwrap(); }}\n{src}");
+        assert_eq!(rules_of(&lint_source("src/runtime/x.rs", &src2)),
+                   ["D004"]);
+    }
+
+    #[test]
+    fn literals_never_fire() {
+        let src = "fn f() -> &'static str { \
+                   \"HashMap panic! .unwrap()\" }\n\
+                   // in a comment: thread::spawn Instant::now\n";
+        assert!(lint_source("src/runtime/x.rs", src).clean());
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = lint_source("src/runtime/x.rs",
+                            "use std::collections::HashMap;\n");
+        let human = r.render_human();
+        assert!(human.contains("src/runtime/x.rs:1: D001"));
+        assert!(human.contains("1 violation(s)"));
+        let stats = r.render_stats();
+        assert!(stats.contains("D001"));
+        let json = r.to_json().dump();
+        assert!(json.contains("\"violations_by_rule\""));
+        assert!(json.contains("\"D001\":1"));
+    }
+
+    #[test]
+    fn normalize_paths() {
+        use std::path::PathBuf;
+        assert_eq!(normalize(&PathBuf::from("rust/src/data/bpe.rs")),
+                   "src/data/bpe.rs");
+        assert_eq!(normalize(&PathBuf::from("/a/b/rust/src/main.rs")),
+                   "src/main.rs");
+        assert_eq!(normalize(&PathBuf::from("src/lib.rs")), "src/lib.rs");
+    }
+}

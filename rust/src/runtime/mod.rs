@@ -32,7 +32,7 @@ pub use manifest::{ConfigInfo, Dtype, Manifest, ParamSpecInfo, ProgramSpec,
 pub use precision::Precision;
 pub use state::{ExecState, ModelState};
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
@@ -140,7 +140,9 @@ impl Program {
 pub struct Runtime {
     backend: Box<dyn Backend>,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<(String, String, usize), std::sync::Arc<Program>>>,
+    // BTreeMap, not HashMap: `compiled_count` and any future cache
+    // walk must observe a process-independent order (D001)
+    cache: Mutex<BTreeMap<(String, String, usize), std::sync::Arc<Program>>>,
 }
 
 impl Runtime {
@@ -155,7 +157,7 @@ impl Runtime {
         manifest: Manifest,
         backend: Box<dyn Backend>,
     ) -> Result<Runtime> {
-        Ok(Runtime { backend, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime { backend, manifest, cache: Mutex::new(BTreeMap::new()) })
     }
 
     /// Create a runtime over the PJRT/XLA backend (needs real AOT

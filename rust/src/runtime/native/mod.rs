@@ -582,7 +582,7 @@ impl Executable for NativeProgram {
         inputs: &[&Literal],
     ) -> Result<f32> {
         let cfg = &self.cfg;
-        state.materialize();
+        state.materialize()?;
         ensure!(
             state.w.len() == cfg.params.len(),
             "ExecState holds {} param tensors, config {} has {}",
@@ -597,7 +597,7 @@ impl Executable for NativeProgram {
             // working set must not overwrite good residency)
             state.discard_materialized();
         } else {
-            state.writeback();
+            state.writeback()?;
         }
         result
     }

@@ -654,6 +654,7 @@ pub fn loss_and_grad(
     let scale = 1.0 / (dh as f32).sqrt();
 
     let (y, cache) = encode(cfg, p, ids, mask, bsz, s, true, sc);
+    // lint:allow(D004): encode(keep=true) always returns Some
     let cache = cache.expect("keep=true retains the cache");
     let lg = logits_from_y(cfg, p, &y, mask, bsz, s, sc);
 

@@ -69,6 +69,10 @@ struct PjrtProgram {
 }
 
 fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: `v` is a live, initialized slice; `T: Copy` guarantees
+    // plain-old data with no drop glue, every byte of which is valid
+    // to read as u8, and size_of_val gives exactly its byte length.
+    // The borrow ties the returned lifetime to `v`.
     unsafe {
         std::slice::from_raw_parts(
             v.as_ptr() as *const u8,

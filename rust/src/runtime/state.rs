@@ -10,7 +10,7 @@
 //!   arena.  `Literal`s are materialized from it only at checkpoint /
 //!   eval boundaries.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::literal::{f32_tensor, Literal};
 use super::manifest::ConfigInfo;
@@ -247,37 +247,43 @@ impl ExecState {
     /// next to the step's O(params × tokens) compute (the F32 path
     /// keeps its zero-allocation steady state).  No-op for
     /// `Precision::F32` or when already materialized.
-    pub fn materialize(&mut self) {
+    pub fn materialize(&mut self) -> Result<()> {
         if self.qw.is_empty() || self.materialized() {
-            return;
+            return Ok(());
         }
         let mut w = Vec::with_capacity(self.qw.len());
-        for q in &self.qw {
+        for (i, q) in self.qw.iter().enumerate() {
             let mut buf = vec![0f32; q.element_count()];
-            q.dequantize_into(&mut buf)
-                .expect("qw holds parameter-storage literals");
+            q.dequantize_into(&mut buf).with_context(|| {
+                format!("materializing quantized tensor {i}")
+            })?;
             w.push(buf);
         }
         self.w = w;
+        Ok(())
     }
 
     /// Re-quantize the working set into the resident tensors (in
     /// place — the storage is overwritten, never reallocated) and
     /// free the f32 working buffers.  No-op for `Precision::F32` or
     /// when not materialized.
-    pub fn writeback(&mut self) {
+    pub fn writeback(&mut self) -> Result<()> {
         if !self.materialized() {
-            return;
+            return Ok(());
         }
-        for (q, buf) in self.qw.iter_mut().zip(self.w.drain(..)) {
-            q.requantize_from_f32(&buf)
-                .expect("working set matches residency shapes");
+        for (i, (q, buf)) in
+            self.qw.iter_mut().zip(self.w.drain(..)).enumerate()
+        {
+            q.requantize_from_f32(&buf).with_context(|| {
+                format!("writing back quantized tensor {i}")
+            })?;
         }
         // pooled SPSA shadows are full-size f32 parameter copies;
         // letting them outlive the transient working set would erase
         // quantized residency, so they are freed with it (the F32
         // path never reaches here and keeps its pool warm)
         self.spsa.release();
+        Ok(())
     }
 
     /// Drop the working buffers WITHOUT re-quantizing — for read-only
@@ -612,6 +618,7 @@ impl ExecState {
             for (spec, slot) in
                 self.cfg.params.iter().zip(self.w.iter_mut())
             {
+                // lint:allow(D004): count ensured above the loop
                 let data = it.next().expect("length checked").into_f32()?;
                 ensure!(data.len() == spec.elements(),
                         "absorb: tensor {} has {} values, expected {}",
@@ -624,6 +631,7 @@ impl ExecState {
             for (spec, q) in
                 self.cfg.params.iter().zip(self.qw.iter_mut())
             {
+                // lint:allow(D004): count ensured above the loop
                 let data = it.next().expect("length checked").into_f32()?;
                 ensure!(data.len() == spec.elements(),
                         "absorb: tensor {} has {} values, expected {}",
@@ -634,6 +642,7 @@ impl ExecState {
         for set in [&mut self.m, &mut self.v] {
             for (spec, slot) in self.cfg.params.iter().zip(set.iter_mut())
             {
+                // lint:allow(D004): count ensured above the loop
                 let data = it.next().expect("length checked").into_f32()?;
                 ensure!(data.len() == spec.elements(),
                         "absorb: tensor {} has {} values, expected {}",
@@ -830,18 +839,18 @@ mod tests {
         assert_eq!(st.donated_literals().unwrap()[1].f32_vec().unwrap(),
                    raw[1]);
         // materialize -> mutate -> writeback persists
-        st.materialize();
+        st.materialize().unwrap();
         assert_eq!(st.w.len(), 2);
         assert_eq!(st.w[0], raw[0]);
         st.w[0][0] = 0.375;
-        st.writeback();
+        st.writeback().unwrap();
         assert!(st.w.is_empty());
         assert_eq!(
             st.params_model().unwrap().tensors[0].f32_vec().unwrap()[0],
             0.375
         );
         // discard returns buffers without writing back
-        st.materialize();
+        st.materialize().unwrap();
         st.w[0][0] = 99.0;
         st.discard_materialized();
         assert_eq!(

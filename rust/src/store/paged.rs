@@ -137,6 +137,7 @@ fn encode_slot(c: &Committed) -> Vec<u8> {
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&c.epoch.to_le_bytes());
     out.extend_from_slice(&c.n_pages.to_le_bytes());
+    // lint:allow(D004): Committed is only constructed with a ledger
     let l = c.ledger.expect("committed state always has a ledger");
     out.extend_from_slice(&l.start.to_le_bytes());
     out.extend_from_slice(&l.pages.to_le_bytes());
@@ -152,16 +153,18 @@ fn decode_slot(buf: &[u8]) -> Option<(u64, u64, Segment)> {
         return None;
     }
     let body = &buf[..SLOT_BODY];
-    let stored = u32::from_le_bytes(
-        buf[SLOT_BODY..SLOT_BODY + 4].try_into().unwrap(),
-    );
+    // lint:allow(D004): length checked on entry; 4-byte slice is exact
+    let tail: [u8; 4] = buf[SLOT_BODY..SLOT_BODY + 4].try_into().unwrap();
+    let stored = u32::from_le_bytes(tail);
     if crc32(body) != stored {
         return None;
     }
     let u32_at = |o: usize| {
+        // lint:allow(D004): fixed-width slice of the length-checked buf
         u32::from_le_bytes(buf[o..o + 4].try_into().unwrap())
     };
     let u64_at = |o: usize| {
+        // lint:allow(D004): fixed-width slice of the length-checked buf
         u64::from_le_bytes(buf[o..o + 8].try_into().unwrap())
     };
     if u32_at(8) != VERSION {
@@ -211,9 +214,11 @@ fn decode_ledger(
         Ok(at)
     };
     let rd_u32 = |at: usize| {
+        // lint:allow(D004): `need` bounds-checked the slice already
         u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
     };
     let rd_u64 = |at: usize| {
+        // lint:allow(D004): `need` bounds-checked the slice already
         u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
     };
     let n_entries = rd_u32(need(4)?) as usize;

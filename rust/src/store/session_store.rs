@@ -25,7 +25,7 @@
 //! Thread-safe: one internal lock, I/O performed outside it (dir
 //! engine) or under the engine's own lock (paged).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -58,8 +58,10 @@ pub struct StoreStats {
 
 #[derive(Default)]
 struct Inner {
-    /// Encoded images resident in memory.
-    mem: HashMap<String, Vec<u8>>,
+    /// Encoded images resident in memory.  BTreeMap, not HashMap:
+    /// `iter_keys` feeds fleet recovery, so key order must be
+    /// process-independent (D001 / bit-identity contract).
+    mem: BTreeMap<String, Vec<u8>>,
     /// Keys in recency order: front = least recently used.
     lru: VecDeque<String>,
     mem_bytes: u64,
@@ -240,10 +242,8 @@ impl SessionStore {
                 let Some(victim) = inner.lru.pop_front() else {
                     break;
                 };
-                let data = inner
-                    .mem
-                    .remove(&victim)
-                    .expect("lru key always resident");
+                // lint:allow(D004): lru and mem insert under one lock
+                let data = inner.mem.remove(&victim).expect("resident");
                 inner.mem_bytes -= data.len() as u64;
                 spill.push((victim, data));
             }
@@ -630,6 +630,36 @@ mod tests {
         assert!(store.put("", &image(0.0)).is_err());
         assert!(store.take("no/slash").is_err());
         store.put("ok_key-1", &image(0.0)).unwrap();
+    }
+
+    #[test]
+    fn iter_keys_order_is_insertion_invariant() {
+        // the recovery scan replays jobs in iter_keys order, so the
+        // order must depend only on the key SET — never on insertion
+        // order, hash seeds, or the memory/engine split (D001)
+        let keys = ["job7", "job0", "job3", "job11", "job1"];
+        let mut sorted: Vec<String> =
+            keys.iter().map(|k| k.to_string()).collect();
+        sorted.sort();
+
+        // fully resident
+        let a = SessionStore::with_mem_capacity(tmp("order_a"),
+                                                1 << 20)
+            .unwrap();
+        for k in keys {
+            a.put(k, &image(1.0)).unwrap();
+        }
+        assert_eq!(a.iter_keys(), sorted);
+
+        // reversed insertion, zero capacity: every key lives in the
+        // engine instead of the memory map
+        let b = SessionStore::with_mem_capacity(tmp("order_b"), 0)
+            .unwrap();
+        for k in keys.iter().rev() {
+            b.put(k, &image(1.0)).unwrap();
+        }
+        assert_eq!(b.iter_keys(), sorted);
+        assert_eq!(a.iter_keys(), b.iter_keys());
     }
 
     #[test]

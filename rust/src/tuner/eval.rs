@@ -9,12 +9,14 @@ pub fn softmax(logits: &[f32]) -> Vec<f32> {
     exps.iter().map(|&e| e / z.max(f32::MIN_POSITIVE)).collect()
 }
 
-/// Index of the max logit.
+/// Index of the max logit.  `total_cmp` keeps this total even for
+/// NaN logits (a NaN ranks above +inf and would win, visibly, rather
+/// than panicking mid-eval).
 pub fn argmax(logits: &[f32]) -> usize {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

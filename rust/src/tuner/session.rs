@@ -426,6 +426,9 @@ impl Session {
     /// Execute one optimization step on a prepared batch.
     pub fn step_on(&mut self, b: &Batch) -> Result<StepResult> {
         let [ids, mask, labels] = self.batch_literals(b)?;
+        // lint:allow(D002): telemetry-only host wall-clock — it feeds
+        // host_time_s reporting; the device's simulated clock (below)
+        // is what every deterministic output derives from
         let started = Instant::now();
         let prog = self.step_prog.clone();
         let compat = self.compat_exec;
@@ -638,12 +641,7 @@ impl Session {
             let ncls = self.cfg.n_classes;
             for (row, &want) in batch.labels.iter().enumerate() {
                 let row_logits = &logits[row * ncls..(row + 1) * ncls];
-                let got = row_logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                let got = crate::tuner::eval::argmax(row_logits);
                 correct += (got as i32 == want) as usize;
                 total += 1;
             }

@@ -352,6 +352,7 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
+                    // lint:allow(D004): rest is non-empty (Some arm)
                     let c = rest.chars().next().unwrap();
                     s.push(c);
                     self.i += c.len_utf8();

@@ -1,0 +1,139 @@
+//! `pallas-lint` end-to-end: every rule fires on its seeded fixture,
+//! every pragma suppresses, the lexer survives its trap file — and
+//! the repo's own `src/` tree is lint-clean, which makes the
+//! determinism/memory contracts part of tier-1 CI.
+
+use std::path::Path;
+use std::process::Command;
+
+use pocketllm::lint::{lint_source, lint_tree, RULE_IDS};
+use pocketllm::util::json;
+
+fn rules_of(findings: &[pocketllm::lint::Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+const D001: &str =
+    include_str!("lint_fixtures/src/runtime/d001_hashmap.rs");
+const D002: &str =
+    include_str!("lint_fixtures/src/device/d002_wallclock.rs");
+const D003: &str =
+    include_str!("lint_fixtures/src/runtime/d003_unsafe.rs");
+const D004: &str =
+    include_str!("lint_fixtures/src/optim/d004_unwrap.rs");
+const D005: &str =
+    include_str!("lint_fixtures/src/coordinator/d005_spawn.rs");
+const P000: &str =
+    include_str!("lint_fixtures/src/store/p000_unjustified.rs");
+const ALLOWED: &str =
+    include_str!("lint_fixtures/src/data/allowed.rs");
+const TRAPS: &str =
+    include_str!("lint_fixtures/src/runtime/lexer_traps.rs");
+
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let r = lint_source("src/runtime/d001_hashmap.rs", D001);
+    assert_eq!(rules_of(&r.findings), ["D001", "D001"], "{:?}", r.findings);
+
+    let r = lint_source("src/device/d002_wallclock.rs", D002);
+    assert_eq!(rules_of(&r.findings), ["D002"], "{:?}", r.findings);
+
+    let r = lint_source("src/runtime/d003_unsafe.rs", D003);
+    assert_eq!(rules_of(&r.findings), ["D003"], "{:?}", r.findings);
+
+    let r = lint_source("src/optim/d004_unwrap.rs", D004);
+    assert_eq!(rules_of(&r.findings), ["D004", "D004", "D004"],
+               "lock().unwrap(), unwrap_or and test code must not \
+                fire: {:?}", r.findings);
+
+    let r = lint_source("src/coordinator/d005_spawn.rs", D005);
+    assert_eq!(rules_of(&r.findings), ["D005"], "{:?}", r.findings);
+
+    let r = lint_source("src/store/p000_unjustified.rs", P000);
+    let mut rules = rules_of(&r.findings);
+    rules.sort_unstable();
+    assert_eq!(rules, ["D001", "P000"],
+               "an unjustified pragma is a finding AND fails to \
+                suppress: {:?}", r.findings);
+}
+
+#[test]
+fn justified_pragmas_suppress_everything() {
+    let r = lint_source("src/data/allowed.rs", ALLOWED);
+    assert!(r.clean(), "expected clean, got {:?}", r.findings);
+    assert_eq!(r.allows.len(), 5);
+    assert_eq!(r.suppressed, 6,
+               "file-scope D001 covers both HashMap mentions");
+}
+
+#[test]
+fn lexer_traps_produce_no_findings() {
+    let r = lint_source("src/runtime/lexer_traps.rs", TRAPS);
+    assert!(r.clean(), "false positive: {:?}", r.findings);
+    // and the '"' char literal did not swallow the rest of the file
+    let toks = pocketllm::lint::lexer::lex(TRAPS);
+    assert!(toks.iter().any(|t| t.is_ident("lifetime_soup")),
+            "char-literal quote swallowed the token stream");
+}
+
+fn manifest_path(rel: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn fixture_tree_violates_every_rule() {
+    let report = lint_tree(&manifest_path("tests/lint_fixtures/src"))
+        .expect("fixture tree scans");
+    let by_rule = report.violations_by_rule();
+    for id in RULE_IDS {
+        assert!(by_rule.get(*id).copied().unwrap_or(0) > 0,
+                "no fixture violation for {id}: {by_rule:?}");
+    }
+}
+
+#[test]
+fn repo_src_tree_is_lint_clean() {
+    let report =
+        lint_tree(&manifest_path("src")).expect("src tree scans");
+    assert!(report.files_scanned > 40,
+            "suspiciously few files scanned: {}",
+            report.files_scanned);
+    assert!(report.clean(),
+            "the shipped tree violates its own contracts:\n{}",
+            report.render_human());
+}
+
+#[test]
+fn cli_flags_violations_and_passes_clean_tree() {
+    let bin = env!("CARGO_BIN_EXE_pallas-lint");
+    let fixtures = manifest_path("tests/lint_fixtures/src");
+
+    // seeded violations: exit 1, JSON report names every rule
+    let out = Command::new(bin)
+        .arg("--json")
+        .arg(&fixtures)
+        .output()
+        .expect("pallas-lint runs");
+    assert_eq!(out.status.code(), Some(1),
+               "violations must exit nonzero");
+    let doc = json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("--json output parses");
+    let by_rule = doc.get("violations_by_rule");
+    for id in RULE_IDS {
+        assert!(by_rule.get(*id).as_u64().unwrap_or(0) > 0,
+                "{id} missing from JSON report");
+    }
+
+    // the repo tree: exit 0, --stats renders the per-rule table
+    let out = Command::new(bin)
+        .arg("--stats")
+        .arg(manifest_path("src"))
+        .output()
+        .expect("pallas-lint runs");
+    assert_eq!(out.status.code(), Some(0),
+               "repo tree must be clean:\n{}",
+               String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("files scanned:"), "{text}");
+    assert!(text.contains("D001"), "{text}");
+}

@@ -1,0 +1,17 @@
+//! D005 fixture: a raw `thread::spawn` (finding) next to the scoped
+//! form every subsystem is supposed to use (clean).  Expected: one
+//! D005 finding.
+
+pub fn raw() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}
+
+pub fn scoped(work: &[u32]) -> u32 {
+    let mut total = 0;
+    std::thread::scope(|s| {
+        let h = s.spawn(|| work.iter().sum::<u32>());
+        total = h.join().unwrap_or(0);
+    });
+    total
+}

@@ -1,0 +1,40 @@
+//! Suppression fixture: every rule violated, every violation
+//! carrying a justified pragma.  Expected: ZERO findings, five
+//! allows (one file-scope, four inline), six suppressed (the
+//! file-scope D001 covers both HashMap mentions).
+// lint:allow-file(D001): lookup-only tables; nothing iterates them
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct Table {
+    slots: HashMap<String, u64>,
+}
+
+pub fn read(t: &Table, k: &str) -> u64 {
+    // lint:allow(D004): fixture invariant — key is always present
+    let v = t.slots.get(k).unwrap();
+    *v
+}
+
+pub fn stamp() -> f64 {
+    // lint:allow(D002): fixture models a telemetry-only wall read
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}
+
+pub fn bytes(v: &[f32]) -> &[u8] {
+    // lint:allow(D003): demonstrating suppression; prefer a real
+    // SAFETY comment in shipping code
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+pub fn spawn_once() {
+    // lint:allow(D005): fixture exercises the suppression path
+    let h = std::thread::spawn(|| ());
+    let _ = h.join();
+}

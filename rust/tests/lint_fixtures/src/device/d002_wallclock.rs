@@ -1,0 +1,12 @@
+//! D002 fixture: a host wall-clock read outside the telemetry
+//! allowlist.  Expected: one D002 finding (the `Instant::now` call;
+//! the type mention in the signature must NOT fire).
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+pub fn span(since: Instant) -> f64 {
+    since.elapsed().as_secs_f64()
+}

@@ -1,0 +1,24 @@
+//! D004 fixture: unwrap / expect / panic in library code, plus the
+//! two shapes that must NOT fire — `.lock().unwrap()` (poison
+//! propagation is the intended panic) and `unwrap_or`.  Expected:
+//! three D004 findings.
+use std::sync::Mutex;
+
+pub fn fallible(v: Option<u32>, m: &Mutex<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("caller promised Some");
+    if a != b {
+        panic!("impossible");
+    }
+    let c = *m.lock().unwrap();
+    a + b + c + v.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

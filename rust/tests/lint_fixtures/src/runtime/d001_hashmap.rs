@@ -1,0 +1,13 @@
+//! D001 fixture: hash-ordered collections in a determinism-critical
+//! tree.  Expected: two D001 findings (the import and the field).
+use std::collections::HashMap;
+
+pub struct Cache {
+    slots: HashMap<String, u64>,
+}
+
+pub fn total(c: &Cache) -> u64 {
+    // iterating a HashMap here is exactly the bug D001 exists for:
+    // the fold order differs per process
+    c.slots.values().sum()
+}

@@ -1,0 +1,25 @@
+//! D003 fixture: one undocumented `unsafe` (a finding) and one whose
+//! safety argument is written in range (clean).  Expected: one D003.
+//!
+//! (The word the rule greps for is deliberately not spelled in this
+//! header — it would land within range of the first block below.)
+
+pub fn undocumented(v: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+pub fn documented(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 is plain-old data; size_of_val gives the exact
+    // byte length and the borrow pins the source slice alive.
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}

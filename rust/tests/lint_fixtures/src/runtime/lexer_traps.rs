@@ -1,0 +1,35 @@
+//! Lexer-trap fixture: every construct that could trick a naive
+//! scanner into a false positive.  Expected: ZERO findings.
+
+pub fn raw_strings() -> Vec<&'static str> {
+    vec![
+        r"a raw string mentioning .unwrap() and HashMap",
+        r#"fence depth one: panic!("boom") and .expect("x")"#,
+        r##"fence depth two: "# still inside: thread::spawn"##,
+    ]
+}
+
+pub fn plain_strings() -> String {
+    let a = "escaped quote \" then .unwrap() still inside";
+    let b = "multi-line string \
+             with Instant::now() inside";
+    format!("{a}{b}")
+}
+
+pub fn byte_strings() -> (&'static [u8], &'static [u8]) {
+    (b"bytes: panic!()", br#"raw bytes: .expect("q")"#)
+}
+
+/* block comment mentioning .unwrap()
+   /* nested block comment: HashMap, SystemTime::now() */
+   still inside the outer comment: thread::spawn */
+pub fn after_comments(c: char) -> bool {
+    // the '"' char literal must not open a string; if it did, the
+    // rest of this file would be swallowed and `lifetime_soup`
+    // below would vanish from the token stream (a test asserts it)
+    c == '"' || c == '\'' || c == 'x'
+}
+
+pub fn lifetime_soup<'a>(x: &'a str) -> &'a str {
+    x
+}

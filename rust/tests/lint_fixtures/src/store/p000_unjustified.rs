@@ -1,0 +1,11 @@
+//! P000 fixture: a pragma with no justification.  Expected: one P000
+//! finding AND the D001 it failed to suppress (the justified pragma
+//! further down suppresses the signature's HashMap cleanly).
+
+// lint:allow(D001)
+use std::collections::HashMap;
+
+// lint:allow(D001): lookup-only table threaded through a signature
+pub fn lookup(m: &HashMap<String, u64>, k: &str) -> u64 {
+    m.get(k).copied().unwrap_or(0)
+}
