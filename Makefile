@@ -30,17 +30,18 @@ artifacts:
 
 # Perf trail: run the perf benches with fixed iteration counts and
 # write BENCH_hotpath.json / BENCH_walltime.json / BENCH_fleet.json /
-# BENCH_quant.json / BENCH_store.json at the repo root
-# (machine-readable; CI archives them, perf PRs diff them).  Override
-# iteration counts for a smoke run: `make bench HOTPATH_ITERS=2
-# TABLE2_ITERS=2 FLEET_ITERS=2 QUANT_ITERS=2 STORE_JOBS=64
-# STORE_ITERS=3`.
+# BENCH_quant.json / BENCH_store.json / BENCH_link.json at the repo
+# root (machine-readable; CI archives them, perf PRs diff them).
+# Override iteration counts for a smoke run: `make bench
+# HOTPATH_ITERS=2 TABLE2_ITERS=2 FLEET_ITERS=2 QUANT_ITERS=2
+# STORE_JOBS=64 STORE_ITERS=3 LINK_ITERS=2`.
 HOTPATH_ITERS ?= 30
 TABLE2_ITERS ?= 8
 FLEET_ITERS ?= 5
 QUANT_ITERS ?= 8
 STORE_JOBS ?= 1000
 STORE_ITERS ?= 25
+LINK_ITERS ?= 8
 
 bench:
 	HOTPATH_ITERS=$(HOTPATH_ITERS) BENCH_JSON=BENCH_hotpath.json \
@@ -54,6 +55,8 @@ bench:
 	STORE_JOBS=$(STORE_JOBS) STORE_ITERS=$(STORE_ITERS) \
 	    BENCH_JSON=BENCH_store.json \
 	    cargo bench --bench store_hibernate
+	LINK_ITERS=$(LINK_ITERS) BENCH_JSON=BENCH_link.json \
+	    cargo bench --bench link_split
 
 # The full bench suite (fig1 curves, memory table, ablations, ...).
 bench-all:

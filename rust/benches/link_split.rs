@@ -1,0 +1,143 @@
+//! Bench: local MeZO vs server-assisted split tuning.
+//!
+//! Races the two ways an admitted window can be spent on the largest
+//! builtin encoder (pocket-roberta) at int8 storage: full MeZO steps
+//! on device vs frozen-backbone split steps with the side module tuned
+//! across the simulated link.  Reports per-step wall-clock for both,
+//! the link traffic one split step generates, what that traffic costs
+//! in seconds/Wh on each real link profile, and the simulated
+//! device-resident footprint per mode — the number the mode policy
+//! trades on.  Asserts the headline inequality the subsystem exists
+//! for: the split-mode resident footprint is strictly below local MeZO
+//! at int8.  Writes `BENCH_link.json` (override with `BENCH_JSON`).
+//!
+//! Knobs: `LINK_ITERS` (timed iterations per mode, default 8),
+//! `LINK_STEPS` (steps per iteration, default 4).
+
+use pocketllm::device::memory::finetune_footprint;
+use pocketllm::device::OptimizerFamily;
+use pocketllm::link::{LinkSpec, LinkTrace, LinkWindow};
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Precision, Runtime};
+use pocketllm::telemetry::bench::{bench, dump_json, env_u64, render};
+use pocketllm::tuner::session::SessionBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("LINK_ITERS", 8) as usize;
+    let steps = env_u64("LINK_STEPS", 4);
+    let rt = Runtime::new(
+        Manifest::load_or_builtin("artifacts/manifest.json")?)?;
+    let config = "pocket-roberta";
+
+    let mut ms = Vec::new();
+    let mut local = SessionBuilder::new(&rt, config)
+        .optimizer(OptimizerKind::MeZo)
+        .seed(5)
+        .precision(Precision::Int8)
+        .build()?;
+    ms.push(bench(
+        &format!("{config} local mezo step x{steps} (int8)"),
+        1,
+        iters,
+        || {
+            local.run_steps(steps).unwrap();
+        },
+    ));
+    let local_loss = local.run_steps(1)?.last_loss;
+    assert!(local_loss.is_finite(), "local mode lost the plot");
+
+    let mut split = SessionBuilder::new(&rt, config)
+        .optimizer(OptimizerKind::MeZo)
+        .seed(5)
+        .precision(Precision::Int8)
+        .build()?;
+    assert!(split.supports_split(),
+            "{config} must expose a split_step artifact");
+    ms.push(bench(
+        &format!("{config} split step x{steps} (int8)"),
+        1,
+        iters,
+        || {
+            split.run_split_steps(steps).unwrap();
+        },
+    ));
+    let split_loss = split.run_split_steps(1)?.last_loss;
+    assert!(split_loss.is_finite(), "split mode lost the plot");
+
+    println!("{}", render("Local MeZO vs split tuning (int8)", &ms));
+    let step_ms = |i: usize| ms[i].stats.mean() * 1e3 / steps as f64;
+
+    // --- link traffic: what one split step ships, and what shipping
+    //     it costs on each real profile's clean window ---
+    let (up, down) = split.split_bytes_per_step();
+    assert!(up > 0 && down > 0);
+    println!("split payload per step: {up} B up, {down} B down");
+    let clean = LinkWindow { up: true, bw_scale: 1.0, drop_at: None };
+    let mut link_rows = Vec::new();
+    for name in pocketllm::link::PROFILE_NAMES {
+        let Some(spec) = LinkSpec::profile(name) else { continue };
+        if spec.up_prob == 0.0 {
+            continue; // offline never carries traffic
+        }
+        let t = LinkTrace::new(spec, 1);
+        let x = t.round_trip(&clean, up, down);
+        println!(
+            "  over {name}: {:.2} ms, {:.3e} Wh per step",
+            x.seconds * 1e3,
+            x.wh
+        );
+        link_rows.push((*name, x.seconds, x.wh));
+    }
+
+    // --- the headline: simulated device-resident footprint per mode
+    //     at int8 (what the coordinator's mode policy weighs) ---
+    let dims = rt
+        .manifest
+        .config(config)?
+        .model_dims_at(Precision::Int8);
+    let fp_local = finetune_footprint(
+        &dims, OptimizerFamily::DerivativeFree, split.batch,
+        split.seq());
+    let fp_split = finetune_footprint(
+        &dims, OptimizerFamily::SplitForward, split.batch,
+        split.seq());
+    println!(
+        "resident footprint (int8): local mezo {} B, split {} B",
+        fp_local.total(),
+        fp_split.total()
+    );
+    assert!(
+        fp_split.total() < fp_local.total(),
+        "split must keep strictly fewer bytes resident than local \
+         MeZO at int8 ({} >= {})",
+        fp_split.total(),
+        fp_local.total()
+    );
+
+    let out = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_link.json".into());
+    let mut extra = vec![
+        ("steps_per_iter", steps as f64),
+        ("local_step_ms_int8", step_ms(0)),
+        ("split_step_ms_int8", step_ms(1)),
+        ("split_bytes_up_per_step", up as f64),
+        ("split_bytes_down_per_step", down as f64),
+        ("resident_bytes_local_int8", fp_local.total() as f64),
+        ("resident_bytes_split_int8", fp_split.total() as f64),
+        ("resident_ratio_split_vs_local",
+         fp_split.total() as f64 / fp_local.total() as f64),
+        ("loss_local", local_loss),
+        ("loss_split", split_loss),
+    ];
+    let mut keys = Vec::new();
+    for (n, s, w) in &link_rows {
+        keys.push((format!("link_s_per_step_{n}"), *s));
+        keys.push((format!("link_wh_per_step_{n}"), *w));
+    }
+    for (k, v) in &keys {
+        extra.push((k.as_str(), *v));
+    }
+    dump_json(&out, "Local MeZO vs split tuning (int8)", &ms, &extra)?;
+    println!("wrote {out}");
+    Ok(())
+}

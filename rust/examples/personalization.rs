@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         trace_step_minutes: 20.0,
         max_windows: 400,
         trace_seed: 11,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(&rt, cfg);
     let job = JobSpec::new("pocket-opt", TaskKind::ChatLm,

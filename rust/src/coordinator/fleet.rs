@@ -79,9 +79,10 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use super::{CoordinatorConfig, Event, JobOutcome, JobRun, JobSpec,
             JobStatus};
 use crate::data::task::TaskKind;
+use crate::link::LinkSpec;
 use crate::optim::OptimizerKind;
 use crate::runtime::{Precision, Runtime};
-use crate::scheduler::Policy;
+use crate::scheduler::{ModePolicy, Policy};
 use crate::store::image::{Reader, RecoveryRecord, RecoveryStatus};
 use crate::store::{crc32, EngineKind, SessionImage, SessionStore};
 use crate::telemetry::MetricLog;
@@ -191,6 +192,20 @@ pub struct FleetTelemetry {
     /// Jobs resumed from a live image by [`FleetScheduler::recover`]
     /// (0 for ordinary runs).
     pub recovered_jobs: usize,
+    /// Admitted windows that ran in split mode (local windows are
+    /// `windows_used - windows_split`).
+    pub windows_split: usize,
+    /// Admitted windows the mode policy spent deferring.
+    pub windows_deferred: usize,
+    /// Mid-flight link drops (each fell back to a local window).
+    pub link_drops: usize,
+    /// Payload bytes that crossed the simulated link, fleet-wide.
+    pub link_bytes: u64,
+    /// Radio energy charged for those bytes (Wh), fleet-wide.
+    pub link_wh: f64,
+    /// Per-job deferred-window histogram (index = job index) — shows
+    /// WHICH jobs a dead or metered link starved, not just how much.
+    pub deferred_by_job: Vec<usize>,
 }
 
 impl FleetTelemetry {
@@ -222,6 +237,12 @@ impl FleetTelemetry {
             resident_high_water_bytes: 0,
             store_bytes_spilled: 0,
             recovered_jobs: 0,
+            windows_split: 0,
+            windows_deferred: 0,
+            link_drops: 0,
+            link_bytes: 0,
+            link_wh: 0.0,
+            deferred_by_job: Vec::with_capacity(outcomes.len()),
         };
         for o in outcomes {
             match o.status {
@@ -233,6 +254,12 @@ impl FleetTelemetry {
             t.windows_denied += o.windows_denied;
             t.sim_step_seconds += o.sim_step_seconds;
             t.deadline_misses += o.deadline_missed as usize;
+            t.windows_split += o.windows_split;
+            t.windows_deferred += o.windows_deferred;
+            t.link_drops += o.link_drops;
+            t.link_bytes += o.link_bytes;
+            t.link_wh += o.link_wh;
+            t.deferred_by_job.push(o.windows_deferred);
         }
         for e in events {
             match e {
@@ -376,9 +403,12 @@ struct DriveCtx<'a> {
 /// The key the fleet manifest lives under in a durable store.
 const MANIFEST_KEY: &str = "fleet-manifest";
 const MANIFEST_MAGIC: &[u8; 4] = b"PLFM";
-/// v2 appends the per-job SPSA query count; v1 manifests (no queries
-/// field) still decode, defaulting every job to 1 query.
-const MANIFEST_VERSION: u32 = 2;
+/// v2 appends the per-job SPSA query count; v3 appends the link
+/// profile code, the mode-policy code, and the per-window energy cap.
+/// Older manifests still decode: v1 jobs default to 1 query, and
+/// pre-v3 envelopes get the pre-split behaviour (wifi link that is
+/// never consulted, ForceLocal, no energy cap).
+const MANIFEST_VERSION: u32 = 3;
 const MANIFEST_MIN_VERSION: u32 = 1;
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -409,6 +439,16 @@ fn encode_manifest(coord: &CoordinatorConfig, jobs: &[JobSpec])
     );
     out.extend_from_slice(&(coord.max_windows as u64).to_le_bytes());
     out.extend_from_slice(&coord.trace_seed.to_le_bytes());
+    // v3 envelope tail: link profile, mode directive, energy cap
+    // (NaN = no cap, the same encoding deadlines use)
+    out.push(coord.link.code());
+    out.push(coord.mode.code());
+    out.extend_from_slice(
+        &p.max_energy_per_window
+            .unwrap_or(f64::NAN)
+            .to_bits()
+            .to_le_bytes(),
+    );
     out.extend_from_slice(&(jobs.len() as u32).to_le_bytes());
     for j in jobs {
         put_str(&mut out, &j.config);
@@ -459,20 +499,43 @@ fn decode_manifest(bytes: &[u8])
             "fleet manifest version {version} (this build reads \
              {MANIFEST_MIN_VERSION}..={MANIFEST_VERSION})");
     let device_preset = r.string()?;
-    let policy = Policy {
+    let mut policy = Policy {
         require_charging: r.u8()? != 0,
         min_battery_pct: f64::from_bits(r.u64()?),
         require_screen_off: r.u8()? != 0,
         max_temp_c: f64::from_bits(r.u64()?),
         min_free_bytes: r.u64()?,
+        max_energy_per_window: None,
+    };
+    let steps_per_window = r.u64()?;
+    let trace_step_minutes = f64::from_bits(r.u64()?);
+    let max_windows = r.u64()? as usize;
+    let trace_seed = r.u64()?;
+    // pre-v3 manifests predate split tuning: a ForceLocal fleet never
+    // consults the link, so these defaults ARE the old behaviour
+    let (link, mode) = if version >= 3 {
+        let link = LinkSpec::from_code(r.u8()?).context(
+            "unknown link profile code in fleet manifest",
+        )?;
+        let mode = ModePolicy::from_code(r.u8()?).context(
+            "unknown mode policy code in fleet manifest",
+        )?;
+        let cap = f64::from_bits(r.u64()?);
+        policy.max_energy_per_window =
+            if cap.is_nan() { None } else { Some(cap) };
+        (link, mode)
+    } else {
+        (LinkSpec::wifi(), ModePolicy::ForceLocal)
     };
     let coord = CoordinatorConfig {
         device_preset,
         policy,
-        steps_per_window: r.u64()?,
-        trace_step_minutes: f64::from_bits(r.u64()?),
-        max_windows: r.u64()? as usize,
-        trace_seed: r.u64()?,
+        steps_per_window,
+        trace_step_minutes,
+        max_windows,
+        trace_seed,
+        link,
+        mode,
     };
     let n_jobs = r.u32()? as usize;
     ensure!(n_jobs <= 1 << 24, "implausible job count {n_jobs}");
@@ -558,6 +621,11 @@ fn outcome_from_terminal(
         windows_denied: rec.windows_denied as usize,
         sim_step_seconds: rec.sim_step_seconds,
         deadline_missed,
+        windows_split: rec.windows_split as usize,
+        windows_deferred: rec.windows_deferred as usize,
+        link_drops: rec.link_drops as usize,
+        link_bytes: rec.link_bytes,
+        link_wh: rec.link_wh,
     }
 }
 
@@ -1146,11 +1214,16 @@ mod tests {
         use crate::data::task::TaskKind;
         let coord = CoordinatorConfig {
             device_preset: "oppo-reno6".into(),
-            policy: Policy::overnight(),
+            policy: Policy {
+                max_energy_per_window: Some(0.125),
+                ..Policy::overnight()
+            },
             steps_per_window: 3,
             trace_step_minutes: 7.5,
             max_windows: 123,
             trace_seed: 99,
+            link: LinkSpec::metered(),
+            mode: ModePolicy::Auto,
         };
         let jobs = vec![
             JobSpec::new("pocket-tiny", TaskKind::Sst2,
@@ -1175,6 +1248,9 @@ mod tests {
                    coord.policy.require_charging);
         assert_eq!(c2.policy.min_free_bytes,
                    coord.policy.min_free_bytes);
+        assert_eq!(c2.policy.max_energy_per_window, Some(0.125));
+        assert_eq!(c2.link, LinkSpec::metered());
+        assert_eq!(c2.mode, ModePolicy::Auto);
         assert_eq!(j2.len(), 2);
         assert_eq!(j2[0].config, "pocket-tiny");
         assert_eq!(j2[0].deadline_minutes, Some(640.0));
@@ -1205,6 +1281,8 @@ mod tests {
             trace_step_minutes: 7.5,
             max_windows: 40,
             trace_seed: 99,
+            link: LinkSpec::wifi(),
+            mode: ModePolicy::ForceLocal,
         };
         let mut out = Vec::new();
         out.extend_from_slice(MANIFEST_MAGIC);
@@ -1245,6 +1323,10 @@ mod tests {
         assert_eq!(jobs[0].queries, 1,
                    "v1 jobs default to one query");
         assert_eq!(jobs[0].deadline_minutes, None);
+        // a pre-v3 envelope decodes to the pre-split behaviour
+        assert_eq!(c2.link, LinkSpec::wifi());
+        assert_eq!(c2.mode, ModePolicy::ForceLocal);
+        assert_eq!(c2.policy.max_energy_per_window, None);
     }
 
     #[test]
@@ -1278,12 +1360,23 @@ mod tests {
             sim_step_seconds: 123.25,
             job_last_loss: 0.5,
             thermal_sustained_s: 0.0,
+            link_pos: 5,
+            windows_split: 2,
+            windows_deferred: 1,
+            link_drops: 1,
+            link_bytes: 4096,
+            link_wh: 0.25,
         };
         let o = outcome_from_terminal(&coord, &image, &rec);
         assert_eq!(o.status, JobStatus::Completed);
         assert_eq!(o.steps_done, 20);
         assert_eq!(o.windows_used, 5);
         assert_eq!(o.windows_denied, 75);
+        assert_eq!(o.windows_split, 2);
+        assert_eq!(o.windows_deferred, 1);
+        assert_eq!(o.link_drops, 1);
+        assert_eq!(o.link_bytes, 4096);
+        assert_eq!(o.link_wh, 0.25);
         assert!(!o.deadline_missed,
                 "80 windows x 10 min = 800 min < 10000 min deadline");
 

@@ -114,6 +114,20 @@ pub struct JobOutcome {
     /// after the deadline's simulated minute, or never completed at
     /// all.  Always `false` for best-effort jobs.
     pub deadline_missed: bool,
+    /// Admitted windows that ran in split mode (side module trained
+    /// across the simulated link, backbone forward-only on device).
+    pub windows_split: usize,
+    /// Admitted windows the mode policy deferred (memory-tight AND
+    /// link down/metered): the window was consumed but no steps ran.
+    pub windows_deferred: usize,
+    /// Split transfers the link dropped mid-flight; each one falls
+    /// back to a local MeZO window deterministically.
+    pub link_drops: usize,
+    /// Payload bytes that crossed the simulated link (both ways,
+    /// including the charged fraction of dropped transfers).
+    pub link_bytes: u64,
+    /// Radio energy charged to the device for those bytes (Wh).
+    pub link_wh: f64,
 }
 
 #[cfg(test)]

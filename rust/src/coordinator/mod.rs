@@ -35,10 +35,11 @@ pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::device::{Device, OomError};
+use crate::device::{Device, OomError, OptimizerFamily};
+use crate::link::{LinkSpec, LinkTrace};
 use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
-use crate::scheduler::{DayTrace, Policy};
+use crate::scheduler::{DayTrace, ModePolicy, Policy, TuningMode};
 use crate::store::image::{RecoveryRecord, RecoveryStatus};
 use crate::store::{SessionImage, SessionStore};
 use crate::telemetry::MetricLog;
@@ -57,6 +58,11 @@ pub struct CoordinatorConfig {
     /// Maximum simulated windows before giving up on a job.
     pub max_windows: usize,
     pub trace_seed: u64,
+    /// The simulated device↔server link every job sees (`--link`).
+    pub link: LinkSpec,
+    /// Per-window tuning-mode directive (`--mode`); the default
+    /// `ForceLocal` reproduces the pre-split coordinator exactly.
+    pub mode: ModePolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -68,6 +74,8 @@ impl Default for CoordinatorConfig {
             trace_step_minutes: 10.0,
             max_windows: 4000,
             trace_seed: 7,
+            link: LinkSpec::wifi(),
+            mode: ModePolicy::ForceLocal,
         }
     }
 }
@@ -78,6 +86,17 @@ pub enum Event {
     Admitted { job: usize, window: usize },
     Denied { job: usize, reason: &'static str },
     StepsDone { job: usize, steps: u64, loss: f64 },
+    /// An admitted window ran in split mode: `steps` is the job's
+    /// cumulative step count, `bytes` what this window's round trip
+    /// moved over the link.
+    SplitDone { job: usize, steps: u64, loss: f64, bytes: u64 },
+    /// The mode policy spent this admitted window waiting (memory
+    /// pressure with no usable link): no steps, no transfer.
+    Deferred { job: usize, window: usize },
+    /// The link tore this window's split transfer mid-flight; the
+    /// partial transfer was billed and the window re-planned as local
+    /// MeZO (the deterministic fallback).
+    LinkDropped { job: usize, window: usize },
     OomFallback { job: usize, from: &'static str, to: &'static str },
     Completed { job: usize, final_loss: f64 },
     Failed { job: usize, error: String },
@@ -121,6 +140,18 @@ pub struct JobRun {
     /// simulated-time axis, matching the old `for w in 0..max_windows`).
     window_idx: usize,
     sim_step_seconds: f64,
+    /// The per-window link weather (stateless; see [`LinkTrace`]).
+    link: LinkTrace,
+    /// Next link-trace window to consume.  Advances once per
+    /// policy-admitted window (the link is consulted even when the
+    /// chosen mode is local), so it is NOT derivable from
+    /// `window_idx` and must ride in the [`RecoveryRecord`].
+    link_pos: u64,
+    windows_split: usize,
+    windows_deferred: usize,
+    link_drops: usize,
+    link_bytes: u64,
+    link_wh: f64,
     done: Option<JobOutcome>,
     pub events: Vec<Event>,
     pub metrics: MetricLog,
@@ -197,6 +228,11 @@ impl JobRun {
                         sim_step_seconds: 0.0,
                         deadline_missed: spec.deadline_minutes
                             .is_some(),
+                        windows_split: 0,
+                        windows_deferred: 0,
+                        link_drops: 0,
+                        link_bytes: 0,
+                        link_wh: 0.0,
                     });
                     break;
                 }
@@ -217,6 +253,13 @@ impl JobRun {
             denied: 0,
             window_idx: 0,
             sim_step_seconds: 0.0,
+            link: LinkTrace::new(cfg.link.clone(), cfg.trace_seed),
+            link_pos: 0,
+            windows_split: 0,
+            windows_deferred: 0,
+            link_drops: 0,
+            link_bytes: 0,
+            link_wh: 0.0,
             done,
             events,
             metrics: MetricLog::new(),
@@ -325,6 +368,13 @@ impl JobRun {
             denied: rec.windows_denied as usize,
             window_idx: rec.window_idx as usize,
             sim_step_seconds: rec.sim_step_seconds,
+            link: LinkTrace::new(cfg.link.clone(), cfg.trace_seed),
+            link_pos: rec.link_pos,
+            windows_split: rec.windows_split as usize,
+            windows_deferred: rec.windows_deferred as usize,
+            link_drops: rec.link_drops as usize,
+            link_bytes: rec.link_bytes,
+            link_wh: rec.link_wh,
             done: None,
             events: vec![Event::Recovered {
                 job: idx,
@@ -467,6 +517,12 @@ impl JobRun {
             sim_step_seconds: self.sim_step_seconds,
             job_last_loss: self.last_loss,
             thermal_sustained_s,
+            link_pos: self.link_pos,
+            windows_split: self.windows_split as u64,
+            windows_deferred: self.windows_deferred as u64,
+            link_drops: self.link_drops as u64,
+            link_bytes: self.link_bytes,
+            link_wh: self.link_wh,
         }
     }
 
@@ -536,6 +592,11 @@ impl JobRun {
             windows_denied: self.denied,
             sim_step_seconds: self.sim_step_seconds,
             deadline_missed,
+            windows_split: self.windows_split,
+            windows_deferred: self.windows_deferred,
+            link_drops: self.link_drops,
+            link_bytes: self.link_bytes,
+            link_wh: self.link_wh,
         }
     }
 
@@ -588,18 +649,122 @@ impl JobRun {
                 }
                 return Ok(true);
             }
-            Ok(()) => {
-                self.windows += 1;
-                self.events.push(Event::Admitted {
-                    job: self.idx,
-                    window: w,
-                });
-            }
+            Ok(()) => {}
         }
+
+        // every policy-admitted window consults the link exactly once
+        // (even when the chosen mode is local) — so link_pos is a
+        // consumption stream, not derivable from window_idx, and must
+        // ride in the RecoveryRecord
+        let link_w = self.link.window(self.link_pos);
+        self.link_pos += 1;
         let n = self
             .cfg
             .steps_per_window
             .min(self.spec.steps - self.steps_done);
+        let mut mode = self.cfg.mode.select(
+            session.supports_split(),
+            &state,
+            &link_w,
+            session.local_footprint_bytes(),
+            self.cfg.link.metered,
+            w as u64,
+        );
+        let (up, down) = session.split_bytes_per_step();
+
+        // energy gate: price the window in its selected mode BEFORE
+        // running any of it (deferred windows cost nothing)
+        let est_wh = match mode {
+            TuningMode::LocalMezo => n as f64
+                * session.step_energy_wh(self.optimizer.family()),
+            TuningMode::Split => {
+                n as f64
+                    * session
+                        .step_energy_wh(OptimizerFamily::SplitForward)
+                    + ((up + down) * n) as f64
+                        * self.cfg.link.wh_per_byte
+            }
+            TuningMode::Defer => 0.0,
+        };
+        if let Err(reason) = self.cfg.policy.admits_energy(est_wh) {
+            self.denied += 1;
+            self.events.push(Event::Denied {
+                job: self.idx,
+                reason: reason.label(),
+            });
+            if let Some(dev) = session.device.as_mut() {
+                dev.compute
+                    .cool_for(self.cfg.trace_step_minutes * 60.0);
+            }
+            return Ok(true);
+        }
+
+        if mode == TuningMode::Defer {
+            self.windows_deferred += 1;
+            self.events.push(Event::Deferred {
+                job: self.idx,
+                window: w,
+            });
+            if let Some(dev) = session.device.as_mut() {
+                dev.compute
+                    .cool_for(self.cfg.trace_step_minutes * 60.0);
+            }
+            return Ok(true);
+        }
+
+        self.windows += 1;
+        self.events.push(Event::Admitted { job: self.idx, window: w });
+
+        if mode == TuningMode::Split && link_w.drop_at.is_some() {
+            // the round trip would tear mid-flight: bill the fraction
+            // the radio actually moved, count the drop, and re-plan
+            // this window as local MeZO — every branch here is a pure
+            // function of the phone and link traces, so the fallback
+            // replays bit-identically
+            let x = self.link.round_trip(&link_w, up * n, down * n);
+            self.link_bytes += x.bytes_moved;
+            self.link_wh += x.wh;
+            self.link_drops += 1;
+            self.sim_step_seconds += x.seconds;
+            if let Some(dev) = session.device.as_mut() {
+                dev.compute.advance(x.seconds);
+            }
+            self.events.push(Event::LinkDropped {
+                job: self.idx,
+                window: w,
+            });
+            mode = TuningMode::LocalMezo;
+        }
+
+        if mode == TuningMode::Split {
+            let stats = session.run_split_steps(n)?;
+            let x = self.link.round_trip(&link_w, up * n, down * n);
+            self.link_bytes += x.bytes_moved;
+            self.link_wh += x.wh;
+            self.windows_split += 1;
+            // the radio keeps the SoC awake: transfer seconds heat
+            // the same thermal clock compute does
+            if let Some(dev) = session.device.as_mut() {
+                dev.compute.advance(x.seconds);
+            }
+            self.steps_done += n;
+            self.last_loss = stats.last_loss;
+            self.sim_step_seconds +=
+                stats.mean_sim_step_s * n as f64 + x.seconds;
+            self.metrics.record(
+                &format!("job{}.loss", self.idx),
+                self.steps_done,
+                stats.last_loss,
+            );
+            self.events.push(Event::SplitDone {
+                job: self.idx,
+                steps: self.steps_done,
+                loss: stats.last_loss,
+                bytes: x.bytes_moved,
+            });
+            return Ok(true);
+        }
+
         let stats = session.run_steps(n)?;
         self.steps_done += n;
         self.last_loss = stats.last_loss;

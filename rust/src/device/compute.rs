@@ -75,6 +75,9 @@ impl ComputeModel {
             OptimizerFamily::DerivativeFree => 2.0 * fwd,
             // forward + backward (~2x forward)
             OptimizerFamily::DerivativeBased => 3.0 * fwd,
+            // one frozen-backbone forward; the side module trains
+            // server-side and its FLOPs are not the device's
+            OptimizerFamily::SplitForward => fwd,
         }
     }
 
@@ -88,7 +91,8 @@ impl ComputeModel {
     ) -> StepTimeBreakdown {
         let flops = self.step_flops(dims, family, batch, seq);
         let peak = match family {
-            OptimizerFamily::DerivativeFree => self.spec.fwd_gflops,
+            OptimizerFamily::DerivativeFree
+            | OptimizerFamily::SplitForward => self.spec.fwd_gflops,
             OptimizerFamily::DerivativeBased => self.spec.bwd_gflops,
         } * 1e9;
         let thermal = self.spec.thermal.factor(self.sustained_s);
@@ -100,6 +104,7 @@ impl ComputeModel {
         let passes = match family {
             OptimizerFamily::DerivativeFree => 2.0,
             OptimizerFamily::DerivativeBased => 6.0, // fwd+bwd+g+m+v+p
+            OptimizerFamily::SplitForward => 1.0,    // single forward
         };
         let bytes = dims.n_params() as f64 * dims.param_bytes as f64 * passes;
         let memory_s = bytes / (self.spec.mem_bw_gbps * 1e9);
@@ -244,6 +249,19 @@ mod tests {
         assert!(warm.total_s() > cold.total_s() * 1.1,
                 "one denied tick fully cooled the device: {} vs {}",
                 warm.total_s(), cold.total_s());
+    }
+
+    #[test]
+    fn split_forward_halves_the_mezo_step() {
+        // one frozen forward vs MeZO's two perturbed forwards, and one
+        // parameter sweep vs two: split device time is half a MeZO step
+        let m = reno6();
+        let split = m.step_time(&ModelDims::roberta_large(),
+                                OptimizerFamily::SplitForward, 8, SST2_SEQ);
+        let mezo = m.step_time(&ModelDims::roberta_large(),
+                               OptimizerFamily::DerivativeFree, 8, SST2_SEQ);
+        assert!((split.total_s() * 2.0 - mezo.total_s()).abs() < 1e-9,
+                "split {} vs mezo {}", split.total_s(), mezo.total_s());
     }
 
     #[test]

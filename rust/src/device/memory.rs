@@ -27,6 +27,13 @@
 //! erases the three parameter-scale tensors, and forward-without-autograd
 //! erases the batch-proportional activation term — which is why Table 1
 //! shows MeZO flat in batch size while Adam OOMs.
+//!
+//! Split tuning (`OptimizerFamily::SplitForward`) goes one step further:
+//! the frozen backbone runs a single forward on the device and only the
+//! pooled activations cross the link, so the trainable side module and
+//! its optimizer state drop off the device entirely — the parameter row
+//! sheds the head bytes ([`split_side_params`]) and everything else
+//! matches MeZO's forward-only live set.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -246,6 +253,15 @@ impl FootprintBreakdown {
     }
 }
 
+/// Parameters of the trainable side module that split tuning keeps
+/// server-side: the classification head `[d_model, n_classes]` plus its
+/// bias.  The paper's personalization tasks are binary classification,
+/// so the analytic model fixes `n_classes = 2`; sessions that know the
+/// real head shape account exact bytes via the runtime state instead.
+pub fn split_side_params(dims: &ModelDims) -> u64 {
+    dims.d_model as u64 * 2 + 2
+}
+
 /// Analytical footprint for fine-tuning `dims` with `family` at
 /// (batch, seq).  `runtime` uses the Termux+PyTorch figure baked into the
 /// Reno 6 preset via [`finetune_footprint_with_runtime`]'s caller; this
@@ -287,6 +303,25 @@ pub fn finetune_footprint_with_runtime(
                 + b * (dims.n_heads as u64) * s * s * 4;
             FootprintBreakdown {
                 parameters,
+                gradients: 0,
+                optimizer_state: 0,
+                activations: live,
+                runtime: runtime_bytes,
+            }
+        }
+        OptimizerFamily::SplitForward => {
+            // Same single-forward live set as MeZO (frozen pass, no
+            // autograd), but the trainable side module and its
+            // optimizer state live server-side: the parameter row
+            // sheds the head bytes.  The link staging buffer (pooled
+            // activations up, refreshed head down) is a sub-slice of
+            // buffers already counted in `live`, so it adds nothing
+            // at peak.
+            let live = b * s * (2 * d + ff) * 4
+                + b * (dims.n_heads as u64) * s * s * 4;
+            let side = split_side_params(dims);
+            FootprintBreakdown {
+                parameters: p.saturating_sub(side) * dims.param_bytes,
                 gradients: 0,
                 optimizer_state: 0,
                 activations: live,
@@ -450,6 +485,26 @@ mod tests {
         let a = finetune_footprint(&rl(), OptimizerFamily::DerivativeBased, 8, 64);
         assert_eq!(a.gradients, rl().n_params() * 4);
         assert_eq!(a.optimizer_state, 2 * rl().n_params() * 4);
+    }
+
+    #[test]
+    fn split_sheds_the_side_module() {
+        let m = finetune_footprint(&rl(), OptimizerFamily::DerivativeFree, 8, 64);
+        let s = finetune_footprint(&rl(), OptimizerFamily::SplitForward, 8, 64);
+        assert_eq!(s.gradients, 0);
+        assert_eq!(s.optimizer_state, 0);
+        assert_eq!(s.activations, m.activations,
+                   "split runs the same single-forward live set");
+        let side = split_side_params(&rl());
+        assert_eq!(m.parameters - s.parameters, side * rl().param_bytes);
+        assert!(s.total() < m.total());
+        // int8 storage keeps the ordering the link bench pins
+        let mut q = rl();
+        q.param_bytes = 1;
+        let mq = finetune_footprint(&q, OptimizerFamily::DerivativeFree, 8, 64);
+        let sq = finetune_footprint(&q, OptimizerFamily::SplitForward, 8, 64);
+        assert!(sq.total() < mq.total());
+        assert_eq!(mq.parameters - sq.parameters, side);
     }
 
     #[test]

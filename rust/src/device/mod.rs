@@ -39,6 +39,11 @@ pub enum OptimizerFamily {
     /// Derivative-based (Adam): grads + 2x optimizer state + full
     /// activation retention for backprop.
     DerivativeBased,
+    /// Split tuning: the frozen backbone runs forward-only on the
+    /// device; the trainable side module (and its optimizer state)
+    /// lives server-side, so the device keeps no grads, no optimizer
+    /// state, and only one forward's live activations.
+    SplitForward,
 }
 
 impl OptimizerFamily {
@@ -46,6 +51,7 @@ impl OptimizerFamily {
         match self {
             OptimizerFamily::DerivativeFree => "MeZo",
             OptimizerFamily::DerivativeBased => "Adam",
+            OptimizerFamily::SplitForward => "Split",
         }
     }
 }

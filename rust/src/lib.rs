@@ -12,9 +12,10 @@
 //!   and tokenizes on-device personal data ([`data`]), enforces a
 //!   simulated smartphone's memory / compute envelope ([`device`]),
 //!   schedules background fine-tuning sessions the way a phone would
-//!   ([`scheduler`], [`coordinator`]), and persists sessions as
-//!   durable single-file images so queued fleet jobs hibernate into
-//!   bounded memory ([`store`]).
+//!   ([`scheduler`], [`coordinator`]), persists sessions as durable
+//!   single-file images so queued fleet jobs hibernate into bounded
+//!   memory ([`store`]), and simulates the device↔server link that
+//!   server-assisted split tuning rides on ([`link`]).
 //!
 //! Python never runs on the request path — and with the default
 //! **native backend** it never needs to run at all.
@@ -56,6 +57,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod device;
+pub mod link;
 pub mod lint;
 pub mod optim;
 pub mod report;

@@ -1,0 +1,346 @@
+//! Simulated device↔server link for server-assisted split tuning.
+//!
+//! MobiLLM-style split tuning (PAPERS.md, 2502.20421 / 2507.01216)
+//! keeps the frozen backbone on-device and tunes a small side module
+//! with server assistance; what crosses the network is per-step side
+//! activations (up) and side-module deltas (down).  This module models
+//! that network as a first-class simulated resource, the same way
+//! [`crate::device`] models memory and compute:
+//!
+//! * [`LinkSpec`] — a named profile (`wifi`, `lte`, `metered`,
+//!   `offline`, plus the test-only `flaky`) with bandwidth, latency,
+//!   radio energy per byte, a metered flag, and per-window
+//!   availability / jitter / drop probabilities.
+//! * [`LinkTrace`] — the per-window link weather.  Sampling is
+//!   **stateless**: window `i` is drawn from a counter-keyed
+//!   [`Rng`](crate::util::rng::Rng) stream derived from `(seed, i)`
+//!   alone, so replaying any window — including after crash recovery
+//!   fast-forwards a job — is bit-identical without storing the trace.
+//! * [`Transfer`] — the outcome of moving bytes through one window:
+//!   seconds occupied, Wh drawn from the battery, bytes actually moved
+//!   (partial on a mid-transfer drop), and whether it dropped.
+//!
+//! Transfer seconds are charged to the device's [`ComputeModel`]
+//! (the radio keeps the SoC awake) and Wh to the energy envelope via
+//! the coordinator; see `coordinator::JobRun`.
+
+use crate::util::rng::Rng;
+
+/// Names accepted by `--link` (the `flaky` test profile parses too but
+/// is deliberately left out of the user-facing list).
+pub const PROFILE_NAMES: &[&str] = &["wifi", "lte", "metered", "offline"];
+
+/// A device↔server link profile: the static half of the simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// Profile name (`wifi`, `lte`, ...).
+    pub name: &'static str,
+    /// Sustained throughput in bytes/second (both directions).
+    pub bw_bytes_per_s: f64,
+    /// One-way latency in seconds, paid once per direction.
+    pub latency_s: f64,
+    /// Radio energy per byte moved (Wh/B), derived from radio watts at
+    /// sustained throughput.
+    pub wh_per_byte: f64,
+    /// Metered links (cellular data caps) suppress auto-selected split
+    /// tuning; only `--mode split` forces traffic onto them.
+    pub metered: bool,
+    /// Per-window probability the link is up at all.
+    pub up_prob: f64,
+    /// Bandwidth jitter amplitude: per-window throughput is scaled by
+    /// `1 ± jitter`.
+    pub jitter: f64,
+    /// Per-window probability an attempted transfer drops mid-flight.
+    pub drop_prob: f64,
+}
+
+impl LinkSpec {
+    /// Home Wi-Fi: fast, cheap per byte, essentially always up.
+    pub fn wifi() -> LinkSpec {
+        LinkSpec {
+            name: "wifi",
+            bw_bytes_per_s: 6.0e6,
+            latency_s: 0.02,
+            // ~1.2 W radio at 6 MB/s
+            wh_per_byte: 1.2 / 6.0e6 / 3600.0,
+            metered: false,
+            up_prob: 0.98,
+            jitter: 0.2,
+            drop_prob: 0.01,
+        }
+    }
+
+    /// Cellular LTE: slower, hungrier radio, occasionally absent.
+    pub fn lte() -> LinkSpec {
+        LinkSpec {
+            name: "lte",
+            bw_bytes_per_s: 1.5e6,
+            latency_s: 0.06,
+            // ~2.5 W radio at 1.5 MB/s
+            wh_per_byte: 2.5 / 1.5e6 / 3600.0,
+            metered: false,
+            up_prob: 0.9,
+            jitter: 0.35,
+            drop_prob: 0.04,
+        }
+    }
+
+    /// LTE with a data cap: same physics, but the mode policy treats
+    /// traffic as costly and never auto-selects split tuning over it.
+    pub fn metered() -> LinkSpec {
+        LinkSpec { name: "metered", metered: true, ..LinkSpec::lte() }
+    }
+
+    /// No connectivity at all (airplane mode): split tuning is never
+    /// possible; the mode policy falls back to local MeZO or deferral.
+    pub fn offline() -> LinkSpec {
+        LinkSpec {
+            name: "offline",
+            bw_bytes_per_s: 1.0, // never consulted (up_prob 0)
+            latency_s: 0.0,
+            wh_per_byte: 0.0,
+            metered: false,
+            up_prob: 0.0,
+            jitter: 0.0,
+            drop_prob: 0.0,
+        }
+    }
+
+    /// Fault-injection profile for tests: Wi-Fi physics with a link
+    /// that is frequently down and drops a third of its transfers
+    /// mid-flight.  Parseable (so crash drills can round-trip it
+    /// through the fleet manifest) but not advertised in `--link`.
+    pub fn flaky() -> LinkSpec {
+        LinkSpec {
+            name: "flaky",
+            up_prob: 0.7,
+            drop_prob: 0.35,
+            ..LinkSpec::wifi()
+        }
+    }
+
+    /// Parse a profile name (the `--link` flag).
+    pub fn profile(name: &str) -> Option<LinkSpec> {
+        match name {
+            "wifi" => Some(LinkSpec::wifi()),
+            "lte" => Some(LinkSpec::lte()),
+            "metered" => Some(LinkSpec::metered()),
+            "offline" => Some(LinkSpec::offline()),
+            "flaky" => Some(LinkSpec::flaky()),
+            _ => None,
+        }
+    }
+
+    /// Stable wire code for the fleet manifest.
+    pub fn code(&self) -> u8 {
+        match self.name {
+            "wifi" => 0,
+            "lte" => 1,
+            "metered" => 2,
+            "offline" => 3,
+            _ => 4, // flaky
+        }
+    }
+
+    /// Inverse of [`code`](LinkSpec::code).
+    pub fn from_code(code: u8) -> Option<LinkSpec> {
+        match code {
+            0 => Some(LinkSpec::wifi()),
+            1 => Some(LinkSpec::lte()),
+            2 => Some(LinkSpec::metered()),
+            3 => Some(LinkSpec::offline()),
+            4 => Some(LinkSpec::flaky()),
+            _ => None,
+        }
+    }
+}
+
+/// The link weather during one scheduling window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    /// Whether the link is reachable at all this window.
+    pub up: bool,
+    /// Throughput multiplier for this window (`1 ± jitter`).
+    pub bw_scale: f64,
+    /// If set, an attempted transfer this window drops after moving
+    /// this fraction of its bytes (0.25..0.75).
+    pub drop_at: Option<f64>,
+}
+
+/// The outcome of one (attempted) round trip through a window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// Bytes actually moved (partial when `dropped`).
+    pub bytes_moved: u64,
+    /// Wall-clock seconds the radio (and thus the SoC) was busy.
+    pub seconds: f64,
+    /// Battery energy drawn by the radio (Wh).
+    pub wh: f64,
+    /// Whether the transfer dropped mid-flight.
+    pub dropped: bool,
+}
+
+/// Deterministic per-window link weather, sampled statelessly.
+///
+/// `window(i)` depends only on `(spec, seed, i)`, never on which
+/// windows were sampled before — the property that lets crash recovery
+/// resume a job at link position `k` by simply *not replaying*
+/// windows `0..k` (there is nothing to replay).
+#[derive(Debug, Clone)]
+pub struct LinkTrace {
+    pub spec: LinkSpec,
+    seed: u64,
+}
+
+/// Counter-stream key spacing (a large odd constant, like the
+/// SplitMix64 increment, so consecutive windows land in unrelated
+/// regions of the generator's state space).
+const WINDOW_KEY: u64 = 0xA076_1D64_78BD_642F;
+
+impl LinkTrace {
+    pub fn new(spec: LinkSpec, seed: u64) -> LinkTrace {
+        LinkTrace { spec, seed }
+    }
+
+    /// Sample window `idx` of the trace (stateless; see type docs).
+    pub fn window(&self, idx: u64) -> LinkWindow {
+        let key = self
+            .seed
+            .wrapping_add(idx.wrapping_add(1).wrapping_mul(WINDOW_KEY));
+        let mut r = Rng::new(key);
+        // draw order is part of the wire format of this trace: up,
+        // jitter, drop, drop fraction — changing it changes every
+        // pinned fleet outcome
+        let up = r.chance(self.spec.up_prob);
+        let bw_scale =
+            1.0 + self.spec.jitter * (2.0 * r.next_f64() - 1.0);
+        let drop_at = if r.chance(self.spec.drop_prob) {
+            Some(0.25 + 0.5 * r.next_f64())
+        } else {
+            None
+        };
+        LinkWindow { up, bw_scale, drop_at }
+    }
+
+    /// Move `bytes_up + bytes_down` through `window` as one round
+    /// trip: two one-way latencies plus the payload at the window's
+    /// jittered throughput.  A mid-transfer drop moves (and bills —
+    /// the radio was on) only the completed fraction.
+    pub fn round_trip(
+        &self,
+        window: &LinkWindow,
+        bytes_up: u64,
+        bytes_down: u64,
+    ) -> Transfer {
+        let total = bytes_up + bytes_down;
+        let frac = window.drop_at.unwrap_or(1.0);
+        let moved = (total as f64 * frac) as u64;
+        let bw = (self.spec.bw_bytes_per_s * window.bw_scale).max(1.0);
+        let seconds =
+            2.0 * self.spec.latency_s + moved as f64 / bw;
+        Transfer {
+            bytes_moved: moved,
+            seconds,
+            wh: moved as f64 * self.spec.wh_per_byte,
+            dropped: window.drop_at.is_some(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_parse_and_roundtrip_codes() {
+        for name in PROFILE_NAMES {
+            let spec = LinkSpec::profile(name).unwrap();
+            assert_eq!(spec.name, *name);
+            assert_eq!(
+                LinkSpec::from_code(spec.code()).unwrap().name,
+                *name
+            );
+        }
+        let flaky = LinkSpec::profile("flaky").unwrap();
+        assert_eq!(LinkSpec::from_code(flaky.code()).unwrap(), flaky);
+        assert!(LinkSpec::profile("carrier-pigeon").is_none());
+        assert!(LinkSpec::from_code(99).is_none());
+        assert!(LinkSpec::metered().metered);
+        assert!(!LinkSpec::wifi().metered);
+    }
+
+    #[test]
+    fn trace_is_stateless_and_replayable() {
+        let t = LinkTrace::new(LinkSpec::lte(), 7);
+        // sampling out of order, twice, or from a clone never changes
+        // a window — the crash-recovery property
+        let w5 = t.window(5);
+        let w0 = t.window(0);
+        assert_eq!(t.window(5), w5);
+        assert_eq!(t.window(0), w0);
+        let t2 = LinkTrace::new(LinkSpec::lte(), 7);
+        for i in (0..64).rev() {
+            assert_eq!(t2.window(i), t.window(i), "window {i}");
+        }
+        // a different seed is a different trace
+        let t3 = LinkTrace::new(LinkSpec::lte(), 8);
+        assert!((0..64).any(|i| t3.window(i) != t.window(i)));
+    }
+
+    #[test]
+    fn offline_is_never_up_and_wifi_mostly_is() {
+        let off = LinkTrace::new(LinkSpec::offline(), 3);
+        assert!((0..200).all(|i| !off.window(i).up));
+        let wifi = LinkTrace::new(LinkSpec::wifi(), 3);
+        let ups = (0..200).filter(|&i| wifi.window(i).up).count();
+        assert!(ups > 150, "wifi was up only {ups}/200 windows");
+    }
+
+    #[test]
+    fn flaky_actually_drops() {
+        let t = LinkTrace::new(LinkSpec::flaky(), 11);
+        let drops = (0..200)
+            .filter(|&i| t.window(i).drop_at.is_some())
+            .count();
+        assert!((30..140).contains(&drops), "{drops} drops in 200");
+    }
+
+    #[test]
+    fn round_trip_charges_time_bytes_and_energy() {
+        let t = LinkTrace::new(LinkSpec::wifi(), 1);
+        let clean =
+            LinkWindow { up: true, bw_scale: 1.0, drop_at: None };
+        let x = t.round_trip(&clean, 4000, 1000);
+        assert_eq!(x.bytes_moved, 5000);
+        assert!(!x.dropped);
+        let expect_s = 2.0 * 0.02 + 5000.0 / 6.0e6;
+        assert!((x.seconds - expect_s).abs() < 1e-12);
+        assert!((x.wh - 5000.0 * t.spec.wh_per_byte).abs() < 1e-15);
+        // a mid-transfer drop bills the completed fraction only
+        let torn = LinkWindow { drop_at: Some(0.5), ..clean };
+        let y = t.round_trip(&torn, 4000, 1000);
+        assert!(y.dropped);
+        assert_eq!(y.bytes_moved, 2500);
+        assert!(y.seconds < x.seconds);
+        assert!(y.wh < x.wh);
+    }
+
+    #[test]
+    fn jitter_scales_throughput_both_ways() {
+        let t = LinkTrace::new(LinkSpec::lte(), 19);
+        let mut saw_slow = false;
+        let mut saw_fast = false;
+        for i in 0..256 {
+            let w = t.window(i);
+            if w.bw_scale < 1.0 {
+                saw_slow = true;
+            }
+            if w.bw_scale > 1.0 {
+                saw_fast = true;
+            }
+            assert!(w.bw_scale >= 1.0 - t.spec.jitter - 1e-9);
+            assert!(w.bw_scale <= 1.0 + t.spec.jitter + 1e-9);
+        }
+        assert!(saw_slow && saw_fast);
+    }
+}

@@ -9,7 +9,7 @@
 //!
 //! | rule | contract |
 //! |------|----------|
-//! | D001 | no `HashMap`/`HashSet` in determinism-critical trees (`src/runtime/`, `src/coordinator/`, `src/store/`, `src/scheduler/`, `src/data/`) — their iteration order varies per process, which breaks bit-identity |
+//! | D001 | no `HashMap`/`HashSet` in determinism-critical trees (`src/runtime/`, `src/coordinator/`, `src/store/`, `src/scheduler/`, `src/data/`, `src/link/`) — their iteration order varies per process, which breaks bit-identity |
 //! | D002 | no wall-clock (`Instant::now` / `SystemTime::now`) outside the telemetry allowlist (`util/timer.rs`, `telemetry/bench.rs`, `main.rs`) — simulated-device code must never leak host time |
 //! | D003 | every `unsafe` requires a `// SAFETY:` comment within the five preceding lines |
 //! | D004 | no `.unwrap()` / `.expect(` / `panic!` in library code (`.lock().unwrap()` exempt: propagating a poisoned lock IS the intended panic path) |
@@ -55,13 +55,14 @@ pub fn rule_summary(rule: &str) -> &'static str {
 
 /// Trees where D001 applies: anything whose iteration order feeds the
 /// bit-identity contracts (step replay, fleet recovery, store layout,
-/// scheduling, tokenizer training).
+/// scheduling, tokenizer training, link-trace replay).
 const D001_TREES: &[&str] = &[
     "src/runtime/",
     "src/coordinator/",
     "src/store/",
     "src/scheduler/",
     "src/data/",
+    "src/link/",
 ];
 
 /// Files allowed to read the host clock: the stopwatch itself, the

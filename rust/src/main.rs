@@ -29,10 +29,11 @@ use pocketllm::coordinator::{Coordinator, CoordinatorConfig, FleetConfig,
                              FleetReport, FleetScheduler, JobSpec};
 use pocketllm::data::task::TaskKind;
 use pocketllm::device::Device;
+use pocketllm::link::LinkSpec;
 use pocketllm::optim::{OptimizerKind, Schedule};
 use pocketllm::report;
 use pocketllm::runtime::{Manifest, Precision, Runtime};
-use pocketllm::scheduler::Policy;
+use pocketllm::scheduler::{ModePolicy, Policy};
 use pocketllm::store::{EngineKind, PagedEngine, PAGED_FILE_NAME};
 use pocketllm::tuner::checkpoint::Checkpoint;
 use pocketllm::tuner::session::SessionBuilder;
@@ -44,7 +45,7 @@ const VALUE_FLAGS: &[&str] = &[
     "report-steps", "trace-seed", "steps-per-window", "queries",
     "batch-window", "jobs", "workers", "policy", "precision",
     "resident-budget", "deadline", "store-dir", "store-engine",
-    "kill-at-window",
+    "kill-at-window", "link", "mode", "max-energy",
 ];
 
 fn usage() -> &'static str {
@@ -94,6 +95,8 @@ FLEET
                   [--resident-budget B] [--deadline M] [--store-dir D]
                   [--store-engine dir|paged] [--recover]
                   [--kill-at-window K]
+                  [--link wifi|lte|metered|offline]
+                  [--mode auto|local|split] [--max-energy WH]
   Runs N independent personalization jobs (seeds 42, 43, ...) over a
   W-worker pool sharing one runtime.  Outcomes are bit-identical for
   any W and any budget (the determinism contract; see README).
@@ -123,6 +126,20 @@ FLEET
   --kill-at-window K    abort the whole process (as a crash would)
                         right after the fleet completes its K-th
                         window — for exercising --recover
+  --link P              simulated device<->server link profile used by
+                        split tuning: wifi | lte | metered | offline
+                        (default wifi).  Transfer time and radio Wh
+                        are charged to the simulated device
+  --mode M              how admitted windows are spent: local (all
+                        MeZO on device; the default and the pre-split
+                        behaviour), split (side-module tuning crosses
+                        the link whenever it is up), or auto (per
+                        window from memory headroom + link state;
+                        metered links are never auto-selected)
+  --max-energy WH       per-window energy ceiling over the estimated
+                        compute + link Wh in the selected mode;
+                        windows over the cap are denied with reason
+                        `energy budget` (default: no cap)
 
 STORE
   pocketllm store inspect PATH
@@ -490,17 +507,34 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let optimizer = OptimizerKind::parse(args.get_or("optimizer", "mezo"))
         .context("bad optimizer")?;
     let policy_name = args.get_or("policy", "overnight");
-    let policy = match policy_name {
+    let mut policy = match policy_name {
         "overnight" => Policy::overnight(),
         "always" => Policy::always(),
         other => bail!("bad --policy '{other}' (overnight|always)"),
     };
+    if let Some(s) = args.flag("max-energy") {
+        policy.max_energy_per_window =
+            Some(s.parse::<f64>().context("bad --max-energy (Wh)")?);
+    }
+    let link_name = args.get_or("link", "wifi");
+    let link = LinkSpec::profile(link_name).with_context(|| {
+        format!(
+            "bad --link '{link_name}' ({})",
+            pocketllm::link::PROFILE_NAMES.join("|")
+        )
+    })?;
+    let mode_name = args.get_or("mode", "local");
+    let mode = ModePolicy::parse(mode_name)
+        .with_context(|| format!("bad --mode '{mode_name}' \
+                                  (auto|local|split)"))?;
     let coord = CoordinatorConfig {
         device_preset: args.get_or("device", "oppo-reno6").into(),
         policy,
         steps_per_window: args.get_u64("steps-per-window", 4)?,
         max_windows: args.get_usize("windows", 2000)?,
         trace_seed: args.get_u64("trace-seed", 7)?,
+        link,
+        mode,
         ..Default::default()
     };
     let base_seed = args.get_u64("seed", 42)?;
@@ -588,6 +622,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
          {policy_name} policy",
         optimizer.label()
     );
+    println!("fleet link: {link_name}  mode: {mode_name}");
     if let Some(b) = resident_budget {
         println!(
             "fleet resident budget: {} (queued jobs hibernate to the \
@@ -642,6 +677,26 @@ fn print_fleet_report(report: &FleetReport, wall: f64, workers: usize) {
         "fleet simulated step-seconds: {:.1}",
         t.sim_step_seconds
     );
+    println!(
+        "fleet split tuning: {} split windows, {} deferred, {} link \
+         drops",
+        t.windows_split, t.windows_deferred, t.link_drops
+    );
+    println!(
+        "fleet link traffic: {} moved, {:.4} Wh radio",
+        pocketllm::util::bytes::fmt_human(t.link_bytes),
+        t.link_wh
+    );
+    if t.windows_deferred > 0 {
+        let hist: Vec<String> = t
+            .deferred_by_job
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| **d > 0)
+            .map(|(i, d)| format!("{i}:{d}"))
+            .collect();
+        println!("fleet deferrals by job: [{}]", hist.join(", "));
+    }
     println!("fleet deadline misses: {}", t.deadline_misses);
     println!("fleet recovered jobs: {}", t.recovered_jobs);
     println!(
@@ -868,6 +923,34 @@ mod tests {
         assert_eq!(s.positional,
                    vec!["inspect".to_string(),
                         "/tmp/x.plsi".to_string()]);
+    }
+
+    #[test]
+    fn value_flags_cover_link_and_mode_knobs() {
+        // same regression class as --queries: a library feature whose
+        // CLI flag must consume its value token
+        let a = Args::parse(
+            &argv(&["fleet", "--link", "metered", "--mode", "auto",
+                    "--max-energy", "0.05", "--jobs", "16"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.get_or("link", "wifi"), "metered");
+        assert!(LinkSpec::profile(a.get_or("link", "wifi")).is_some());
+        assert_eq!(a.get_or("mode", "local"), "auto");
+        assert_eq!(ModePolicy::parse(a.get_or("mode", "local")),
+                   Some(ModePolicy::Auto));
+        assert_eq!(a.flag("max-energy"), Some("0.05"));
+        assert!(a.positional.is_empty(),
+                "values must not leak into positionals");
+        // defaults reproduce the pre-split fleet exactly
+        let d = Args::parse(&argv(&["fleet"]), VALUE_FLAGS).unwrap();
+        assert_eq!(
+            LinkSpec::profile(d.get_or("link", "wifi")).unwrap(),
+            LinkSpec::wifi()
+        );
+        assert_eq!(ModePolicy::parse(d.get_or("mode", "local")),
+                   Some(ModePolicy::ForceLocal));
     }
 
     #[test]

@@ -286,12 +286,16 @@ impl Manifest {
 
         let mut programs = Vec::new();
         let plan: &[(&ConfigInfo, &[&str], &[usize])] = &[
-            (&tiny, &["mezo_step", "eval", "loss_eval"], &[4]),
+            (&tiny, &["mezo_step", "split_step", "eval", "loss_eval"],
+             &[4]),
             (&tiny_fast,
-             &["mezo_step", "adam_step", "eval", "loss_eval"], &[4]),
+             &["mezo_step", "adam_step", "split_step", "eval",
+               "loss_eval"], &[4]),
             (&roberta,
-             &["mezo_step", "adam_step", "eval", "loss_eval"], &[8, 64]),
+             &["mezo_step", "adam_step", "split_step", "eval",
+               "loss_eval"], &[8, 64]),
             (&roberta, &["mezo_step_naive", "mezo_step_q4"], &[8]),
+            // decoders have no pooled split boundary: no split_step
             (&opt, &["mezo_step", "adam_step", "eval", "loss_eval"], &[8]),
         ];
         for (cfg, kinds, batches) in plan {
@@ -441,6 +445,15 @@ fn builtin_program(cfg: &ConfigInfo, kind: &str, batch: usize)
         ins.extend(data_io());
         ins.push(labels_io());
         (ins, vec![t("loss", vec![], Dtype::F32)])
+    } else if kind == "split_step" {
+        // frozen-backbone forward + side-module SGD: no seed, no eps
+        let mut ins = param_io("");
+        ins.extend(data_io());
+        ins.push(labels_io());
+        ins.push(t("lr", vec![1], Dtype::F32));
+        let mut outs = param_io("");
+        outs.push(t("loss", vec![], Dtype::F32));
+        (ins, outs)
     } else {
         // the mezo_step family shares one signature
         let mut ins = param_io("");
@@ -533,6 +546,13 @@ mod tests {
         assert_eq!(a.outputs.len(), 3 * nd + 1);
         // decoder labels are [B, S]
         assert_eq!(a.inputs[3 * nd + 2].shape, vec![8, 64]);
+        // split_step: every encoder config has it, decoders never do
+        let sp = m.find_program("pocket-tiny", "split_step", 4).unwrap();
+        assert_eq!(sp.inputs.len(), n + 4);
+        assert_eq!(sp.outputs.len(), n + 1);
+        assert_eq!(m.batches_for("pocket-roberta", "split_step"),
+                   vec![8, 64]);
+        assert!(m.batches_for("pocket-opt", "split_step").is_empty());
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub enum ProgramKind {
     /// k-query averaged SPSA (`mezo_step_q{k}`).
     MezoMulti(usize),
     Adam,
+    /// Split-tuning step: frozen-backbone forward on device, side-module
+    /// (head) SGD — the update that crosses the simulated link.
+    SplitStep,
     Eval,
     LossEval,
 }
@@ -90,6 +93,7 @@ impl ProgramKind {
             "mezo_step" => Some(ProgramKind::Mezo),
             "mezo_step_naive" => Some(ProgramKind::MezoNaive),
             "adam_step" => Some(ProgramKind::Adam),
+            "split_step" => Some(ProgramKind::SplitStep),
             "eval" => Some(ProgramKind::Eval),
             "loss_eval" => Some(ProgramKind::LossEval),
             other => {
@@ -534,6 +538,20 @@ impl Executable for NativeProgram {
                 outs.push(Literal::from_f32(vec![loss], vec![])?);
                 Ok(outs)
             }
+            ProgramKind::SplitStep => {
+                let (b, s) = self.batch_dims(inputs[n])?;
+                let mut w = take_f32(inputs, 0, n)?;
+                let ids = inputs[n].i32_slice()?;
+                let mask = inputs[n + 1].f32_slice()?;
+                let labels = inputs[n + 2].i32_slice()?;
+                let lr = inputs[n + 3].f32_scalar()?;
+                let loss = model::split_head_step(
+                    cfg, &mut w, ids, mask, labels, lr, b, s,
+                    &mut model::Scratch::new())?;
+                let mut outs = param_literals(cfg, w)?;
+                outs.push(Literal::from_f32(vec![loss], vec![])?);
+                Ok(outs)
+            }
             ProgramKind::Eval => {
                 let (b, s) = self.batch_dims(inputs[n])?;
                 let w = take_f32(inputs, 0, n)?;
@@ -647,6 +665,19 @@ impl NativeProgram {
                 adam_step(cfg, w, m, v, ids, mask, labels, b, s, t, lr,
                           scratch)
             }
+            ProgramKind::SplitStep => {
+                ensure!(inputs.len() == 4,
+                        "split_step run_in_place takes (ids, mask, \
+                         labels, lr); got {} inputs", inputs.len());
+                let (b, s) = self.batch_dims(inputs[0])?;
+                let ids = inputs[0].i32_slice()?;
+                let mask = inputs[1].f32_slice()?;
+                let labels = inputs[2].i32_slice()?;
+                let lr = inputs[3].f32_scalar()?;
+                let (w, _m, _v, scratch, _pool) = state.native_parts();
+                model::split_head_step(cfg, w, ids, mask, labels, lr,
+                                       b, s, scratch)
+            }
             ProgramKind::LossEval => {
                 ensure!(inputs.len() == 3,
                         "loss_eval run_in_place takes (ids, mask, \
@@ -686,6 +717,8 @@ mod tests {
         assert_eq!(ProgramKind::parse("mezo_step_q4"),
                    Some(ProgramKind::MezoMulti(4)));
         assert_eq!(ProgramKind::parse("adam_step"), Some(ProgramKind::Adam));
+        assert_eq!(ProgramKind::parse("split_step"),
+                   Some(ProgramKind::SplitStep));
         assert_eq!(ProgramKind::parse("eval"), Some(ProgramKind::Eval));
         assert_eq!(ProgramKind::parse("loss_eval"),
                    Some(ProgramKind::LossEval));

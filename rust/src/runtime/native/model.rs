@@ -632,6 +632,157 @@ pub fn loss(
     acc / msum.max(1.0)
 }
 
+/// Frozen-backbone forward to the split boundary: the masked mean-pooled
+/// hidden state h [B, D] that crosses the link in split tuning.  Encoder
+/// only — a decoder's per-token LM head has no pooled boundary, so split
+/// jobs never run on decoder configs.  The returned buffer belongs to
+/// the caller (`give` it back).
+pub fn pooled_hidden(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    bsz: usize,
+    s: usize,
+    sc: &mut Scratch,
+) -> Result<Vec<f32>> {
+    if cfg.is_decoder() {
+        bail!("config {}: split tuning requires an encoder (pooled \
+               boundary); decoders have no split point", cfg.name);
+    }
+    let d = cfg.d_model;
+    let (y, _) = encode(cfg, p, ids, mask, bsz, s, false, sc);
+    let denoms = pool_denoms(sc, mask, bsz, s);
+    let mut pooled = sc.take(bsz * d);
+    for b in 0..bsz {
+        let pr = &mut pooled[b * d..(b + 1) * d];
+        for i in 0..s {
+            let m = mask[b * s + i];
+            if m > 0.0 {
+                let yr = &y[(b * s + i) * d..(b * s + i + 1) * d];
+                for j in 0..d {
+                    pr[j] += yr[j] * m;
+                }
+            }
+        }
+        for v in pr.iter_mut() {
+            *v /= denoms[b];
+        }
+    }
+    sc.give(denoms);
+    sc.give(y);
+    Ok(pooled)
+}
+
+/// The server-side half of one split step: side-module (head) forward +
+/// fused softmax-xent + head gradients, given the pooled activations
+/// that crossed the link.  Arithmetic is element-for-element the
+/// encoder branch of [`loss_and_grad`], so the returned loss and the
+/// (dW, db) pair are bit-identical to that oracle's `grads[head_w]` /
+/// `grads[head_w + 1]` — the equivalence `split_head_matches_full_
+/// backward` pins.  Buffers come from `sc`; `give` them back.
+pub fn split_head_backward_from(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    h: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    sc: &mut Scratch,
+) -> (f32, Vec<f32>, Vec<f32>) {
+    let d = cfg.d_model;
+    let nc = cfg.n_classes;
+    let hw = head_w(cfg);
+    let mut lg = sc.take_raw(bsz * nc);
+    matmul_bias_into(h, &p[hw], &p[hw + 1], bsz, d, nc, &mut lg);
+
+    // fused softmax-xent, mirroring loss_and_grad's encoder rows
+    // (weight 1.0 per batch row, msum = bsz)
+    let msum = (bsz as f32).max(1.0);
+    let mut acc = 0f32;
+    let mut dlogits = sc.take(lg.len());
+    for b in 0..bsz {
+        let coeff = 1.0 / msum;
+        let row = &lg[b * nc..(b + 1) * nc];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let drow = &mut dlogits[b * nc..(b + 1) * nc];
+        let mut z = 0f32;
+        for (dv, &v) in drow.iter_mut().zip(row) {
+            let e = (v - mx).exp();
+            *dv = e;
+            z += e;
+        }
+        let label = labels[b].max(0) as usize % nc;
+        acc += z.ln() + mx - row[label];
+        for dv in drow.iter_mut() {
+            *dv = *dv / z * coeff;
+        }
+        drow[label] -= coeff;
+    }
+    let loss = acc / msum;
+    sc.give(lg);
+
+    let mut dw = sc.take(d * nc);
+    matmul_at_into(h, &dlogits, bsz, d, nc, &mut dw);
+    let mut db = sc.take(nc);
+    col_sums_into(&dlogits, nc, &mut db);
+    sc.give(dlogits);
+    (loss, dw, db)
+}
+
+/// Loss + side-module gradients for one split step: device half
+/// ([`pooled_hidden`]) piped into the server half
+/// ([`split_head_backward_from`]).
+pub fn split_head_backward(
+    cfg: &ConfigInfo,
+    p: &[Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    bsz: usize,
+    s: usize,
+    sc: &mut Scratch,
+) -> Result<(f32, Vec<f32>, Vec<f32>)> {
+    let h = pooled_hidden(cfg, p, ids, mask, bsz, s, sc)?;
+    let out = split_head_backward_from(cfg, p, &h, labels, bsz, sc);
+    sc.give(h);
+    Ok(out)
+}
+
+/// One full split step — the `split_step` program body: frozen-backbone
+/// forward, side-module backward, plain-SGD update of the head weight
+/// and bias.  Returns the pre-update loss.
+pub fn split_head_step(
+    cfg: &ConfigInfo,
+    p: &mut [Vec<f32>],
+    ids: &[i32],
+    mask: &[f32],
+    labels: &[i32],
+    lr: f32,
+    bsz: usize,
+    s: usize,
+    sc: &mut Scratch,
+) -> Result<f32> {
+    let (loss, dw, db) =
+        split_head_backward(cfg, &*p, ids, mask, labels, bsz, s, sc)?;
+    let hw = head_w(cfg);
+    for (w, &g) in p[hw].iter_mut().zip(&dw) {
+        *w -= lr * g;
+    }
+    for (w, &g) in p[hw + 1].iter_mut().zip(&db) {
+        *w -= lr * g;
+    }
+    sc.give(dw);
+    sc.give(db);
+    Ok(loss)
+}
+
+/// Tensor index of the split side module's weight within the canonical
+/// layout (the head weight; the bias follows at `+ 1`).  Public so the
+/// session layer can size link transfers exactly.
+pub fn side_module_index(cfg: &ConfigInfo) -> usize {
+    head_w(cfg)
+}
+
 /// Loss + parameter gradients — the hand-derived reverse pass that lets
 /// the native backend run `adam_step` without autodiff.  The gradient
 /// buffers come from `sc`; the caller should `give` them back once
@@ -1077,6 +1228,127 @@ mod tests {
                 (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
                 "tensor {t} elem {e}: fd {fd} vs analytic {an}"
             );
+        }
+    }
+
+    #[test]
+    fn split_head_matches_full_backward() {
+        // the split path recomputes exactly the encoder-branch
+        // arithmetic of loss_and_grad, so loss and head grads must be
+        // bit-identical to the full oracle
+        let cfg = tiny();
+        let params = seeded_params(&cfg, 91);
+        let ids: Vec<i32> = vec![1, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask: Vec<f32> =
+            vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let mut sc = Scratch::new();
+        let (l_full, grads) =
+            loss_and_grad(&cfg, &params, &ids, &mask, &labels, 2, 6,
+                          &mut sc);
+        let (l_split, dw, db) =
+            split_head_backward(&cfg, &params, &ids, &mask, &labels, 2,
+                                6, &mut sc)
+                .unwrap();
+        let hw = head_w(&cfg);
+        assert_eq!(l_split, l_full);
+        assert_eq!(dw, grads[hw]);
+        assert_eq!(db, grads[hw + 1]);
+    }
+
+    #[test]
+    fn split_step_updates_only_the_head() {
+        let cfg = tiny();
+        let before = seeded_params(&cfg, 92);
+        let mut params = before.clone();
+        let ids = vec![1i32, 5, 9, 3, 0, 0, 1, 2, 2, 7, 11, 0];
+        let mask: Vec<f32> =
+            vec![1., 1., 1., 1., 0., 0., 1., 1., 1., 1., 1., 0.];
+        let labels = vec![2i32, 0];
+        let mut sc = Scratch::new();
+        let mut losses = Vec::new();
+        for _ in 0..25 {
+            losses.push(split_head_step(&cfg, &mut params, &ids, &mask,
+                                        &labels, 0.5, 2, 6, &mut sc)
+                .unwrap());
+        }
+        let hw = head_w(&cfg);
+        for (t, (b, a)) in before.iter().zip(&params).enumerate() {
+            if t == hw || t == hw + 1 {
+                assert_ne!(b, a, "head tensor {t} must train");
+            } else {
+                assert_eq!(b, a, "backbone tensor {t} must stay frozen");
+            }
+        }
+        assert!(losses[losses.len() - 1] < losses[0],
+                "head SGD must reduce the loss: {losses:?}");
+    }
+
+    #[test]
+    fn split_rejects_decoder_configs() {
+        let dec = make_config("td", "decoder", 13, 8, 1, 2, 16, 6, 2,
+                              false);
+        let params = seeded_params(&dec, 93);
+        let ids = vec![1i32; 12];
+        let mask = vec![1f32; 12];
+        assert!(pooled_hidden(&dec, &params, &ids, &mask, 2, 6,
+                              &mut Scratch::new())
+            .is_err());
+    }
+
+    #[test]
+    fn split_head_grads_match_finite_differences_ragged() {
+        // golden-value check over a sweep of ragged geometries: every
+        // head element's analytic gradient against central differences,
+        // with masks that leave rows partially (never fully) empty
+        for (case, (bsz, s, d, heads, ff, nc)) in
+            [(1usize, 4usize, 8usize, 2usize, 16usize, 2usize),
+             (2, 6, 8, 1, 12, 3),
+             (3, 5, 12, 4, 24, 2),
+             (4, 3, 4, 2, 8, 5)]
+            .into_iter()
+            .enumerate()
+        {
+            let cfg = make_config("t", "encoder", 17, d, 1, heads, ff,
+                                  s, nc, false);
+            let params = seeded_params(&cfg, 100 + case as u32);
+            let mut ids = Vec::new();
+            let mut mask = Vec::new();
+            let mut labels = Vec::new();
+            for b in 0..bsz {
+                let live = 1 + (b + case) % s; // ragged row lengths
+                for i in 0..s {
+                    ids.push(((b * 7 + i * 3 + case) % 17) as i32);
+                    mask.push(if i < live { 1.0 } else { 0.0 });
+                }
+                labels.push(((b + case) % nc) as i32);
+            }
+            let mut sc = Scratch::new();
+            let (_, dw, db) =
+                split_head_backward(&cfg, &params, &ids, &mask, &labels,
+                                    bsz, s, &mut sc)
+                    .unwrap();
+            let hw = head_w(&cfg);
+            let h = 1e-3f32;
+            for t in [hw, hw + 1] {
+                for e in 0..params[t].len() {
+                    let mut pp = params.clone();
+                    pp[t][e] += h;
+                    let lp = loss(&cfg, &pp, &ids, &mask, &labels, bsz,
+                                  s, &mut sc);
+                    pp[t][e] -= 2.0 * h;
+                    let lm = loss(&cfg, &pp, &ids, &mask, &labels, bsz,
+                                  s, &mut sc);
+                    let fd = (lp - lm) / (2.0 * h);
+                    let an = if t == hw { dw[e] } else { db[e] };
+                    assert!(
+                        (fd - an).abs()
+                            < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                        "case {case} tensor {t} elem {e}: fd {fd} vs \
+                         analytic {an}"
+                    );
+                }
+            }
         }
     }
 

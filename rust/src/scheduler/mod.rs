@@ -12,4 +12,4 @@ pub mod events;
 pub mod policy;
 
 pub use events::{DayTrace, PhoneState};
-pub use policy::{DenyReason, Policy};
+pub use policy::{DenyReason, ModePolicy, Policy, TuningMode};

@@ -1,6 +1,8 @@
-//! The fine-tuning admission policy.
+//! The fine-tuning admission policy and the per-window tuning-mode
+//! selection that runs behind it.
 
 use super::events::PhoneState;
+use crate::link::LinkWindow;
 
 /// Why a step window was denied.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -10,18 +12,22 @@ pub enum DenyReason {
     ScreenOn,
     TooHot,
     MemoryPressure,
+    /// The window's estimated compute + link energy exceeds
+    /// [`Policy::max_energy_per_window`].
+    Energy,
 }
 
 impl DenyReason {
     /// Every deny reason, in gate order — lets telemetry render a
     /// complete denied-window histogram (zero counts included) instead
     /// of only the reasons that happened to fire.
-    pub const ALL: [DenyReason; 5] = [
+    pub const ALL: [DenyReason; 6] = [
         DenyReason::NotCharging,
         DenyReason::BatteryLow,
         DenyReason::ScreenOn,
         DenyReason::TooHot,
         DenyReason::MemoryPressure,
+        DenyReason::Energy,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -31,6 +37,7 @@ impl DenyReason {
             DenyReason::ScreenOn => "user active",
             DenyReason::TooHot => "thermal",
             DenyReason::MemoryPressure => "memory pressure",
+            DenyReason::Energy => "energy budget",
         }
     }
 }
@@ -44,6 +51,10 @@ pub struct Policy {
     pub max_temp_c: f64,
     /// Minimum free device memory (bytes) beyond the job's own budget.
     pub min_free_bytes: u64,
+    /// Optional per-window energy ceiling (Wh) over the window's
+    /// estimated compute *plus* link energy; `None` (the default)
+    /// disables the gate.  Denies with [`DenyReason::Energy`].
+    pub max_energy_per_window: Option<f64>,
 }
 
 impl Policy {
@@ -56,6 +67,7 @@ impl Policy {
             require_screen_off: true,
             max_temp_c: 38.0,
             min_free_bytes: 1_000_000_000,
+            max_energy_per_window: None,
         }
     }
 
@@ -67,6 +79,7 @@ impl Policy {
             require_screen_off: false,
             max_temp_c: f64::INFINITY,
             min_free_bytes: 0,
+            max_energy_per_window: None,
         }
     }
 
@@ -89,11 +102,163 @@ impl Policy {
         }
         Ok(())
     }
+
+    /// Energy gate: called by the coordinator once it knows what the
+    /// window would cost (compute Wh plus, for a split window, the
+    /// round-trip link Wh).  Separate from [`admits`](Policy::admits)
+    /// because the estimate depends on the selected tuning mode.
+    pub fn admits_energy(&self, window_wh: f64)
+        -> Result<(), DenyReason>
+    {
+        match self.max_energy_per_window {
+            Some(cap) if window_wh > cap => Err(DenyReason::Energy),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// How one admitted window is spent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuningMode {
+    /// Run derivative-free MeZO steps entirely on-device.
+    LocalMezo,
+    /// Frozen backbone forward on-device; side-module activations and
+    /// deltas cross the link, the side module is tuned server-side.
+    Split,
+    /// Spend the window waiting (link down under memory pressure, or
+    /// `--mode split` with no connectivity): no steps, no transfer.
+    Defer,
+}
+
+impl TuningMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TuningMode::LocalMezo => "local",
+            TuningMode::Split => "split",
+            TuningMode::Defer => "defer",
+        }
+    }
+}
+
+/// The per-job mode directive (`--mode auto|local|split`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModePolicy {
+    /// Pick per window from memory headroom + link state.
+    Auto,
+    /// Always tune locally (the pre-split behaviour, and the default).
+    ForceLocal,
+    /// Split whenever the link is up; defer when it is not.
+    ForceSplit,
+}
+
+/// In auto mode, a job under memory pressure with the link down defers
+/// — but every DEFER_RETRY_EVERY-th window it tries locally anyway, so
+/// a dead link can delay a job, never starve it.  Stateless (keyed on
+/// the window index), so crash recovery needs no extra bookkeeping.
+const DEFER_RETRY_EVERY: u64 = 4;
+
+impl ModePolicy {
+    pub fn parse(s: &str) -> Option<ModePolicy> {
+        match s {
+            "auto" => Some(ModePolicy::Auto),
+            "local" => Some(ModePolicy::ForceLocal),
+            "split" => Some(ModePolicy::ForceSplit),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModePolicy::Auto => "auto",
+            ModePolicy::ForceLocal => "local",
+            ModePolicy::ForceSplit => "split",
+        }
+    }
+
+    /// Stable wire code for the fleet manifest.
+    pub fn code(&self) -> u8 {
+        match self {
+            ModePolicy::Auto => 0,
+            ModePolicy::ForceLocal => 1,
+            ModePolicy::ForceSplit => 2,
+        }
+    }
+
+    /// Inverse of [`code`](ModePolicy::code).
+    pub fn from_code(code: u8) -> Option<ModePolicy> {
+        match code {
+            0 => Some(ModePolicy::Auto),
+            1 => Some(ModePolicy::ForceLocal),
+            2 => Some(ModePolicy::ForceSplit),
+            _ => None,
+        }
+    }
+
+    /// Pick how to spend one admitted window.  Every input is
+    /// deterministic (phone trace, link trace, static footprints), so
+    /// the choice replays bit-identically in the sequential oracle, in
+    /// any worker pool, and after crash recovery.
+    ///
+    /// * `split_capable` — the job has a `split_step` program (encoder
+    ///   MeZO jobs; Adam and decoder jobs tune locally).
+    /// * `state` / `link` — this window's phone + link weather.
+    /// * `local_need_bytes` — the full local-MeZO footprint; auto mode
+    ///   treats `free < need + margin` as memory pressure and prefers
+    ///   shipping the tuning work off-device.
+    /// * `metered` — auto mode never volunteers traffic onto a
+    ///   metered link (`ForceSplit` overrides).
+    /// * `window_idx` — drives the stateless defer-retry escape hatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select(
+        &self,
+        split_capable: bool,
+        state: &PhoneState,
+        link: &LinkWindow,
+        local_need_bytes: u64,
+        metered: bool,
+        window_idx: u64,
+    ) -> TuningMode {
+        match self {
+            ModePolicy::ForceLocal => TuningMode::LocalMezo,
+            ModePolicy::ForceSplit => {
+                if !split_capable {
+                    TuningMode::LocalMezo
+                } else if link.up {
+                    TuningMode::Split
+                } else {
+                    TuningMode::Defer
+                }
+            }
+            ModePolicy::Auto => {
+                if !split_capable {
+                    return TuningMode::LocalMezo;
+                }
+                let margin = local_need_bytes / 2;
+                let tight = state.free_bytes
+                    < local_need_bytes.saturating_add(margin);
+                if !tight {
+                    return TuningMode::LocalMezo;
+                }
+                if link.up && !metered {
+                    TuningMode::Split
+                } else if window_idx % DEFER_RETRY_EVERY
+                    == DEFER_RETRY_EVERY - 1
+                {
+                    // escape hatch: pressure + no usable link, but
+                    // this window tries locally anyway
+                    TuningMode::LocalMezo
+                } else {
+                    TuningMode::Defer
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::link::LinkWindow;
 
     fn good_state() -> PhoneState {
         PhoneState {
@@ -104,6 +269,14 @@ mod tests {
             temp_c: 28.0,
             free_bytes: 4_000_000_000,
         }
+    }
+
+    fn link_up() -> LinkWindow {
+        LinkWindow { up: true, bw_scale: 1.0, drop_at: None }
+    }
+
+    fn link_down() -> LinkWindow {
+        LinkWindow { up: false, bw_scale: 1.0, drop_at: None }
     }
 
     #[test]
@@ -141,5 +314,80 @@ mod tests {
         s.free_bytes = 0;
         s.battery_pct = 1.0;
         assert_eq!(p.admits(&s), Ok(()));
+    }
+
+    #[test]
+    fn energy_gate_default_off_and_fires_when_set() {
+        let p = Policy::always();
+        assert_eq!(p.admits_energy(1e9), Ok(()));
+        let capped = Policy {
+            max_energy_per_window: Some(0.05),
+            ..Policy::always()
+        };
+        assert_eq!(capped.admits_energy(0.049), Ok(()));
+        assert_eq!(capped.admits_energy(0.051),
+                   Err(DenyReason::Energy));
+        // the histogram enumeration stays complete
+        assert!(DenyReason::ALL.contains(&DenyReason::Energy));
+        assert_eq!(DenyReason::Energy.label(), "energy budget");
+    }
+
+    #[test]
+    fn mode_policy_parses_and_roundtrips_codes() {
+        for (name, m) in [
+            ("auto", ModePolicy::Auto),
+            ("local", ModePolicy::ForceLocal),
+            ("split", ModePolicy::ForceSplit),
+        ] {
+            assert_eq!(ModePolicy::parse(name), Some(m));
+            assert_eq!(m.label(), name);
+            assert_eq!(ModePolicy::from_code(m.code()), Some(m));
+        }
+        assert_eq!(ModePolicy::parse("hybrid"), None);
+        assert_eq!(ModePolicy::from_code(9), None);
+    }
+
+    #[test]
+    fn force_modes_ignore_headroom() {
+        let s = good_state();
+        let pick = |m: ModePolicy, cap, l: &LinkWindow| {
+            m.select(cap, &s, l, u64::MAX / 4, false, 0)
+        };
+        assert_eq!(pick(ModePolicy::ForceLocal, true, &link_up()),
+                   TuningMode::LocalMezo);
+        assert_eq!(pick(ModePolicy::ForceSplit, true, &link_up()),
+                   TuningMode::Split);
+        assert_eq!(pick(ModePolicy::ForceSplit, true, &link_down()),
+                   TuningMode::Defer);
+        assert_eq!(pick(ModePolicy::ForceSplit, false, &link_up()),
+                   TuningMode::LocalMezo);
+    }
+
+    #[test]
+    fn auto_splits_only_under_pressure_on_an_unmetered_up_link() {
+        let s = good_state(); // 4 GB free
+        let roomy = 1_000_000_000u64; // fits with headroom
+        let tight = 3_500_000_000u64; // free < need * 1.5
+        let pick = |need, l: &LinkWindow, metered, idx| {
+            ModePolicy::Auto.select(true, &s, l, need, metered, idx)
+        };
+        assert_eq!(pick(roomy, &link_up(), false, 0),
+                   TuningMode::LocalMezo);
+        assert_eq!(pick(tight, &link_up(), false, 0),
+                   TuningMode::Split);
+        // metered suppresses auto-split
+        assert_eq!(pick(tight, &link_up(), true, 0),
+                   TuningMode::Defer);
+        // pressure + link down defers, except the retry window
+        assert_eq!(pick(tight, &link_down(), false, 0),
+                   TuningMode::Defer);
+        assert_eq!(pick(tight, &link_down(), false, 3),
+                   TuningMode::LocalMezo);
+        // a split-incapable job is always local
+        assert_eq!(
+            ModePolicy::Auto.select(false, &s, &link_up(), tight,
+                                    false, 0),
+            TuningMode::LocalMezo
+        );
     }
 }

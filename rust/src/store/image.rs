@@ -1,10 +1,11 @@
 //! The durable session image: one file, one session.
 //!
-//! ## Format (version 2, little-endian throughout)
+//! ## Format (version 3, little-endian throughout)
 //!
 //! ```text
 //!   magic        4 B   b"PLSI"
-//!   version      u32   2 (v1 files — no recovery record — still load)
+//!   version      u32   3 (v1 files — no recovery record — and v2
+//!                      files — no link/mode fields — still load)
 //!   optimizer    u8    0 = mezo, 1 = adam
 //!   precision    u8    Precision::code (0 f32, 1 f16, 2 int8)
 //!   flags        u8    bit0 = Adam m/v moment payload present
@@ -24,14 +25,19 @@
 //!                tensors are stored AT THEIR RESIDENT PRECISION
 //!                (2 B/elem f16, 1 B/elem + 4 B scale int8); then,
 //!                iff flags bit0, the Adam m and v records (f32)
-//!   recovery     iff flags bit1, 69 B: job_idx u32, status u8
+//!   recovery     iff flags bit1, 117 B: job_idx u32, status u8
 //!                (0 live, 1 completed, 2 stalled, 3 failed), then 8
 //!                u64-width fields — steps_target, deadline_minutes
 //!                (f64 bits, NaN = none), window_idx, windows_used,
 //!                windows_denied, sim_step_seconds (f64 bits),
 //!                job_last_loss (f64 bits), thermal_sustained_s (f64
-//!                bits) — everything `FleetScheduler::recover` needs
-//!                to rebuild the job's scheduler state bit-exactly
+//!                bits) — and (v3) 6 more u64-width fields for split
+//!                tuning: link_pos, windows_split, windows_deferred,
+//!                link_drops, link_bytes, link_wh (f64 bits).  A v2
+//!                record is the same layout truncated after
+//!                thermal_sustained_s (69 B); the link/mode fields
+//!                decode as zero.  Everything `FleetScheduler::recover`
+//!                needs to rebuild the job's scheduler state bit-exactly
 //!   crc32        u32   CRC-32/IEEE over every preceding byte
 //! ```
 //!
@@ -54,14 +60,16 @@ use crate::runtime::precision::Precision;
 use super::crc32;
 
 pub const MAGIC: &[u8; 4] = b"PLSI";
-pub const VERSION: u32 = 2;
-/// Oldest version this build still reads (v1 = no recovery record).
+pub const VERSION: u32 = 3;
+/// Oldest version this build still reads (v1 = no recovery record,
+/// v2 = no link/mode fields in the record).
 pub const MIN_VERSION: u32 = 1;
 
 const FLAG_ADAM: u8 = 1;
 const FLAG_RECOVERY: u8 = 2;
-/// Encoded size of a [`RecoveryRecord`].
-const RECOVERY_BYTES: u64 = 4 + 1 + 8 * 8;
+/// Encoded size of a v3 [`RecoveryRecord`] (a v2 record is 48 bytes
+/// shorter: the same layout truncated after `thermal_sustained_s`).
+const RECOVERY_BYTES: u64 = 4 + 1 + 8 * 14;
 
 /// How the job stood when its image was written.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -121,6 +129,20 @@ pub struct RecoveryRecord {
     /// The device's sustained-thermal clock at hibernation, in
     /// seconds — the ONLY mutable device state that affects outcomes.
     pub thermal_sustained_s: f64,
+    /// Link-trace windows consumed (one per policy-admitted window;
+    /// see `coordinator::JobRun`).  Zero when decoded from v2 images.
+    pub link_pos: u64,
+    /// Admitted windows that ran in split mode.
+    pub windows_split: u64,
+    /// Admitted windows the mode policy spent deferring.
+    pub windows_deferred: u64,
+    /// Mid-flight link drops (each fell back to a local window).
+    pub link_drops: u64,
+    /// Payload bytes moved over the simulated link so far.
+    pub link_bytes: u64,
+    /// Radio energy charged for those bytes (Wh) — an exact f64
+    /// partial sum, like `sim_step_seconds`.
+    pub link_wh: f64,
 }
 
 impl RecoveryRecord {
@@ -136,16 +158,25 @@ impl RecoveryRecord {
             self.sim_step_seconds.to_bits(),
             self.job_last_loss.to_bits(),
             self.thermal_sustained_s.to_bits(),
+            self.link_pos,
+            self.windows_split,
+            self.windows_deferred,
+            self.link_drops,
+            self.link_bytes,
+            self.link_wh.to_bits(),
         ] {
             out.extend_from_slice(&v.to_le_bytes());
         }
     }
 
-    fn decode_from(r: &mut Reader<'_>) -> Result<RecoveryRecord> {
+    fn decode_from(
+        r: &mut Reader<'_>,
+        version: u32,
+    ) -> Result<RecoveryRecord> {
         let job_idx = r.u32()?;
         let status = RecoveryStatus::from_code(r.u8()?)
             .context("unknown recovery status code")?;
-        Ok(RecoveryRecord {
+        let mut rec = RecoveryRecord {
             job_idx,
             status,
             steps_target: r.u64()?,
@@ -156,7 +187,24 @@ impl RecoveryRecord {
             sim_step_seconds: f64::from_bits(r.u64()?),
             job_last_loss: f64::from_bits(r.u64()?),
             thermal_sustained_s: f64::from_bits(r.u64()?),
-        })
+            link_pos: 0,
+            windows_split: 0,
+            windows_deferred: 0,
+            link_drops: 0,
+            link_bytes: 0,
+            link_wh: 0.0,
+        };
+        // v2 records stop here: a pre-split fleet never consulted the
+        // link, so zeroed counters ARE its exact state
+        if version >= 3 {
+            rec.link_pos = r.u64()?;
+            rec.windows_split = r.u64()?;
+            rec.windows_deferred = r.u64()?;
+            rec.link_drops = r.u64()?;
+            rec.link_bytes = r.u64()?;
+            rec.link_wh = f64::from_bits(r.u64()?);
+        }
+        Ok(rec)
     }
 }
 
@@ -460,7 +508,7 @@ impl SessionImage {
             (Vec::new(), Vec::new())
         };
         let recovery = if flags & FLAG_RECOVERY != 0 {
-            Some(RecoveryRecord::decode_from(&mut r)
+            Some(RecoveryRecord::decode_from(&mut r, version)
                 .context("reading recovery record")?)
         } else {
             None
@@ -717,7 +765,7 @@ mod tests {
     #[test]
     fn unknown_version_is_rejected_not_misparsed() {
         let mut bytes = sample(Precision::F32, false).encode();
-        bytes[4] = 3; // version 3: from the future
+        bytes[4] = 4; // version 4: from the future
         let err = SessionImage::decode(&bytes).unwrap_err();
         assert!(format!("{err:#}").contains("version"));
         let mut bytes = sample(Precision::F32, false).encode();
@@ -764,6 +812,12 @@ mod tests {
             sim_step_seconds: 123.456789,
             job_last_loss: 0.03125,
             thermal_sustained_s: 55.25,
+            link_pos: 11,
+            windows_split: 5,
+            windows_deferred: 3,
+            link_drops: 2,
+            link_bytes: 987_654,
+            link_wh: 0.0123456789,
         });
         let bytes = img.encode();
         assert_eq!(bytes.len() as u64,
@@ -786,10 +840,64 @@ mod tests {
             sim_step_seconds: 0.0,
             job_last_loss: f64::NAN,
             thermal_sustained_s: 0.0,
+            link_pos: 0,
+            windows_split: 0,
+            windows_deferred: 0,
+            link_drops: 0,
+            link_bytes: 0,
+            link_wh: 0.0,
         });
         let back = SessionImage::decode(&img.encode()).unwrap();
         let rec = back.recovery.unwrap();
         assert!(rec.deadline_minutes.is_nan());
         assert_eq!(rec.status, RecoveryStatus::Completed);
+    }
+
+    #[test]
+    fn v2_recovery_records_decode_with_zeroed_link_fields() {
+        // a v2 record is the v3 layout truncated after
+        // thermal_sustained_s: emulate one by stripping the trailing
+        // 48 link/mode bytes and rewinding the version word
+        let mut img = sample(Precision::F32, false);
+        img.recovery = Some(RecoveryRecord {
+            job_idx: 3,
+            status: RecoveryStatus::Live,
+            steps_target: 64,
+            deadline_minutes: 45.0,
+            window_idx: 6,
+            windows_used: 4,
+            windows_denied: 2,
+            sim_step_seconds: 77.5,
+            job_last_loss: 1.5,
+            thermal_sustained_s: 10.0,
+            link_pos: 99,
+            windows_split: 9,
+            windows_deferred: 9,
+            link_drops: 9,
+            link_bytes: 9,
+            link_wh: 9.0,
+        });
+        let mut bytes = img.encode();
+        bytes[4] = 2;
+        let cut = bytes.len() - 4 - 48;
+        bytes.truncate(cut);
+        let crc = crate::store::crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        let back = SessionImage::decode(&bytes).unwrap();
+        let rec = back.recovery.expect("v2 record must still load");
+        // the pre-split fields survive verbatim...
+        assert_eq!(rec.job_idx, 3);
+        assert_eq!(rec.status, RecoveryStatus::Live);
+        assert_eq!(rec.window_idx, 6);
+        assert_eq!(rec.sim_step_seconds, 77.5);
+        assert_eq!(rec.thermal_sustained_s, 10.0);
+        // ...and the link/mode fields decode as zero (a pre-split
+        // fleet never touched the link, so zero IS its exact state)
+        assert_eq!(rec.link_pos, 0);
+        assert_eq!(rec.windows_split, 0);
+        assert_eq!(rec.windows_deferred, 0);
+        assert_eq!(rec.link_drops, 0);
+        assert_eq!(rec.link_bytes, 0);
+        assert_eq!(rec.link_wh, 0.0);
     }
 }

@@ -29,11 +29,11 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::data::batcher::{Batch, Batcher, BatcherState};
 use crate::data::task::TaskKind;
 use crate::data::{shared_artifacts, SessionArtifacts};
-use crate::device::Device;
+use crate::device::{Device, EnergyModel, OptimizerFamily};
 use crate::optim::{AdamDriver, MezoDriver, OptimizerKind, Schedule};
 use crate::optim::adam::AdamConfig;
 use crate::optim::mezo::MezoConfig;
-use crate::runtime::literal::{f32_tensor, i32_tensor, Literal};
+use crate::runtime::literal::{f32_1, f32_tensor, i32_tensor, Literal};
 use crate::runtime::state::{ExecState, ModelState};
 use crate::runtime::{Precision, Program, Runtime};
 use crate::store::SessionImage;
@@ -257,6 +257,14 @@ impl<'rt> SessionBuilder<'rt> {
             .program(&self.config, "loss_eval", batch)
             .ok();
         let eval_prog = self.rt.program(&self.config, "eval", batch).ok();
+        // split tuning needs the pooled encoder boundary; decoders (and
+        // manifests without a split artifact) simply report
+        // supports_split() == false and the coordinator stays local
+        let split_prog = if cfg.is_decoder() {
+            None
+        } else {
+            self.rt.program(&self.config, "split_step", batch).ok()
+        };
 
         // 4. resident execution state + optimizer driver.  The raw init
         //    tensors move straight into the ExecState — the session
@@ -293,6 +301,7 @@ impl<'rt> SessionBuilder<'rt> {
             step_prog,
             loss_prog,
             eval_prog,
+            split_prog,
             state,
             driver,
             device,
@@ -324,6 +333,7 @@ pub struct Session {
     step_prog: std::sync::Arc<Program>,
     loss_prog: Option<std::sync::Arc<Program>>,
     eval_prog: Option<std::sync::Arc<Program>>,
+    split_prog: Option<std::sync::Arc<Program>>,
     /// Resident parameters (+ Adam m/v) + scratch arena — the donated
     /// state `run_in_place` mutates across steps.
     pub state: ExecState,
@@ -485,6 +495,143 @@ impl Session {
         self.metrics.record("sim_step_s", self.step, sim_time_s);
         self.step += 1;
         Ok(r)
+    }
+
+    /// Whether this session can run split steps: an encoder config
+    /// with a `split_step` program at this batch, driven by a MeZO
+    /// schedule (Adam jobs keep full state locally and never split).
+    pub fn supports_split(&self) -> bool {
+        self.split_prog.is_some()
+            && matches!(self.driver, Driver::MeZo(_))
+    }
+
+    /// Bytes one split step moves over the link: pooled activations
+    /// `[B, D]` plus labels up, the refreshed side module (head weight
+    /// + bias, f32) down.  Zero for sessions that cannot split.
+    pub fn split_bytes_per_step(&self) -> (u64, u64) {
+        if !self.supports_split() {
+            return (0, 0);
+        }
+        let up = (self.batch * (self.cfg.d_model + 1) * 4) as u64;
+        let hw = crate::runtime::native::model::side_module_index(
+            &self.cfg);
+        let side: usize = self.cfg.params[hw..hw + 2]
+            .iter()
+            .map(|p| p.elements())
+            .sum();
+        (up, (side * 4) as u64)
+    }
+
+    /// The simulated-ledger footprint this session was admitted with
+    /// (0 for device-less sessions) — what the mode policy treats as
+    /// the job's local memory need when weighing split tuning.
+    pub fn local_footprint_bytes(&self) -> u64 {
+        self.footprint.as_ref().map(|f| f.total()).unwrap_or(0)
+    }
+
+    /// Estimated device energy (Wh) for ONE step in the given
+    /// optimizer family at the device's current thermal state; 0
+    /// without a simulated device.  The coordinator's per-window
+    /// energy gate sums this over the window's steps before running
+    /// any of them.
+    pub fn step_energy_wh(&self, family: OptimizerFamily) -> f64 {
+        let Some(dev) = self.device.as_ref() else {
+            return 0.0;
+        };
+        let dims = self.cfg.model_dims_at(self.precision);
+        let t = dev
+            .step_time(&dims, family, self.batch, self.seq)
+            .total_s();
+        EnergyModel::for_spec(&dev.spec).active_wh(t)
+    }
+
+    /// Execute one split-tuning step on a prepared batch: the frozen
+    /// backbone runs forward-only "on device" and the side module
+    /// trains across the link.  Advances the SAME optimizer clock as
+    /// local steps, so the lr/seed schedules stay aligned whichever
+    /// mode each scheduler window picks.
+    pub fn split_step_on(&mut self, b: &Batch) -> Result<StepResult> {
+        let prog = self
+            .split_prog
+            .clone()
+            .context("no split_step artifact for this config/batch")?;
+        let [ids, mask, labels] = self.batch_literals(b)?;
+        // lint:allow(D002): telemetry-only host wall-clock, mirroring
+        // step_on; deterministic outputs derive from the simulated
+        // clock below
+        let started = Instant::now();
+        let compat = self.compat_exec;
+        let loss = match &mut self.driver {
+            Driver::MeZo(d) => {
+                let lr = f32_1(d.current_lr() as f32)?;
+                let inputs: [&Literal; 4] = [&ids, &mask, &labels, &lr];
+                let loss = if compat {
+                    prog.execute_in_place_via_run(&mut self.state,
+                                                  &inputs)?
+                } else {
+                    prog.execute_in_place(&mut self.state, &inputs)?
+                };
+                d.advance();
+                loss as f64
+            }
+            Driver::Adam(_) => {
+                bail!("split steps require a MeZO-driven session")
+            }
+        };
+        let host_time_s = started.elapsed().as_secs_f64();
+
+        let sim_time_s = if let Some(dev) = self.device.as_mut() {
+            let dims = self.cfg.model_dims_at(self.precision);
+            let t = dev
+                .step_time(&dims, OptimizerFamily::SplitForward,
+                           self.batch, self.seq)
+                .total_s();
+            dev.compute.advance(t);
+            t
+        } else {
+            host_time_s
+        };
+
+        let r = StepResult {
+            step: self.step,
+            loss,
+            host_time_s,
+            sim_time_s,
+        };
+        self.metrics.record("loss", self.step, loss);
+        self.metrics.record("host_step_s", self.step, host_time_s);
+        self.metrics.record("sim_step_s", self.step, sim_time_s);
+        self.step += 1;
+        Ok(r)
+    }
+
+    /// Run `n` split steps from the deterministic batch stream.
+    pub fn run_split_steps(&mut self, n: u64) -> Result<SessionStats> {
+        let mut first = None;
+        let mut last = 0.0;
+        let mut host = 0.0;
+        let mut sim = 0.0;
+        for _ in 0..n {
+            let idx = self.step as usize;
+            let batch = self.batch_at(idx);
+            let r = self.split_step_on(&batch)?;
+            first.get_or_insert(r.loss);
+            last = r.loss;
+            host += r.host_time_s;
+            sim += r.sim_time_s;
+        }
+        Ok(SessionStats {
+            steps: n,
+            first_loss: first.unwrap_or(f64::NAN),
+            last_loss: last,
+            mean_host_step_s: host / n.max(1) as f64,
+            mean_sim_step_s: sim / n.max(1) as f64,
+            sim_peak_bytes: self
+                .device
+                .as_ref()
+                .map(|d| d.ledger.peak())
+                .unwrap_or(0),
+        })
     }
 
     /// The batch for step `idx`, from the ring window; on a miss the
@@ -799,6 +946,7 @@ impl Session {
             step_prog: self.step_prog.clone(),
             loss_prog: self.loss_prog.clone(),
             eval_prog: self.eval_prog.clone(),
+            split_prog: self.split_prog.clone(),
             driver,
             device,
             footprint,
@@ -840,6 +988,7 @@ pub struct HibernatedSession {
     step_prog: Arc<Program>,
     loss_prog: Option<Arc<Program>>,
     eval_prog: Option<Arc<Program>>,
+    split_prog: Option<Arc<Program>>,
     driver: Driver,
     device: Option<Device>,
     footprint: Option<crate::device::FootprintBreakdown>,
@@ -934,6 +1083,7 @@ impl HibernatedSession {
             step_prog: self.step_prog,
             loss_prog: self.loss_prog,
             eval_prog: self.eval_prog,
+            split_prog: self.split_prog,
             state,
             driver: self.driver,
             device: self.device,

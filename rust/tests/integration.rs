@@ -342,6 +342,7 @@ fn overnight_policy_gates_execution() {
         trace_step_minutes: 30.0,
         max_windows: 500,
         trace_seed: 3,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(&rt, cfg);
     let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,

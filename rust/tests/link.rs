@@ -1,0 +1,372 @@
+//! Server-assisted split tuning over the simulated link: the
+//! subsystem's acceptance pins.
+//!
+//! The determinism contract extends to every link profile and mode
+//! directive: fleet outcomes in `--mode auto` must be bit-identical to
+//! the sequential oracle for workers {1, 2, 4} across {wifi, metered,
+//! offline} — including a run that is killed mid-flight and resumed
+//! with `FleetScheduler::recover` (the `RecoveryRecord` carries the
+//! link-trace position and per-mode counters, so a recovered job picks
+//! up the exact link weather it would have seen).  The `flaky` profile
+//! is the fault-injection drill: mid-transfer drops must re-plan the
+//! window as local MeZO deterministically.
+
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, Event,
+                             FleetConfig, FleetScheduler, JobOutcome,
+                             JobSpec};
+use pocketllm::data::task::TaskKind;
+use pocketllm::link::LinkSpec;
+use pocketllm::optim::OptimizerKind;
+use pocketllm::runtime::{Manifest, Runtime};
+use pocketllm::scheduler::{ModePolicy, Policy};
+use pocketllm::store::EngineKind;
+
+fn runtime() -> Runtime {
+    let m = Manifest::load_or_builtin("artifacts/manifest.json")
+        .expect("manifest");
+    Runtime::new(m).expect("native runtime")
+}
+
+fn outcome_fingerprint(outcomes: &[JobOutcome]) -> String {
+    format!("{outcomes:?}")
+}
+
+fn coord_cfg(link: LinkSpec, mode: ModePolicy) -> CoordinatorConfig {
+    CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 300,
+        link,
+        mode,
+        ..Default::default()
+    }
+}
+
+/// Multi-window MeZO jobs on split-capable encoder configs, so every
+/// mode the policy can pick actually gets exercised.
+fn jobs() -> Vec<JobSpec> {
+    vec![
+        JobSpec::new("pocket-tiny", TaskKind::Sst2, OptimizerKind::MeZo)
+            .steps(8)
+            .seed(21),
+        JobSpec::new("pocket-tiny", TaskKind::Rte, OptimizerKind::MeZo)
+            .steps(6)
+            .seed(22),
+        JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                     OptimizerKind::MeZo)
+            .steps(8)
+            .seed(23),
+    ]
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pocketllm_link_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn auto_mode_fleet_matches_oracle_across_links_and_workers() {
+    // THE acceptance pin of the split-tuning subsystem: for each link
+    // profile, the auto-mode fleet must reproduce the sequential
+    // oracle bit-for-bit at every worker count, and a killed +
+    // recovered run must land on the same outcomes again.
+    let rt = runtime();
+    let jobs = jobs();
+    for (li, link) in [
+        LinkSpec::wifi(),
+        LinkSpec::metered(),
+        LinkSpec::offline(),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let cfg = coord_cfg(link.clone(), ModePolicy::Auto);
+        let mut oracle = Coordinator::new(&rt, cfg.clone());
+        let outcomes = oracle.run_queue(&jobs).unwrap();
+        let want = outcome_fingerprint(&outcomes);
+        assert!(
+            outcomes.iter().all(|o| o.steps_done > 0),
+            "{}: oracle jobs must make progress",
+            link.name
+        );
+        if link.name == "offline" {
+            // no link, no traffic — in any mode
+            assert!(outcomes
+                .iter()
+                .all(|o| o.windows_split == 0 && o.link_bytes == 0));
+        }
+
+        for (wi, workers) in [1usize, 2, 4].into_iter().enumerate() {
+            let fleet = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    coord: cfg.clone(),
+                    workers,
+                    ..FleetConfig::default()
+                },
+            );
+            let report = fleet.run(&jobs).unwrap();
+            assert_eq!(
+                outcome_fingerprint(&report.outcomes),
+                want,
+                "{} link, {workers} workers: fleet diverged from the \
+                 sequential oracle",
+                link.name
+            );
+
+            // kill-and-recover: same matrix, crash after window 3,
+            // resume from the durable store, same outcomes again
+            let engine = if (li + wi) % 2 == 0 {
+                EngineKind::Dir
+            } else {
+                EngineKind::Paged
+            };
+            let dir = tmp(&format!("auto_{}_{workers}", link.name));
+            let crashing = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    coord: cfg.clone(),
+                    workers,
+                    resident_budget_bytes: Some(0),
+                    store_dir: Some(dir.clone()),
+                    store_engine: engine,
+                    halt_at_window: Some(3),
+                    ..FleetConfig::default()
+                },
+            );
+            let err = crashing.run(&jobs).expect_err(
+                "halt_at_window must abort the run with an error",
+            );
+            assert!(format!("{err:#}").contains("halted"), "{err:#}");
+            let recovering = FleetScheduler::new(
+                &rt,
+                FleetConfig {
+                    workers,
+                    resident_budget_bytes: Some(0),
+                    ..FleetConfig::default()
+                },
+            );
+            let report = recovering.recover(&dir).unwrap();
+            assert_eq!(
+                outcome_fingerprint(&report.outcomes),
+                want,
+                "{} link, {workers} workers: recovered outcomes \
+                 diverged from the uninterrupted oracle",
+                link.name
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn force_split_ships_bytes_and_completes() {
+    // ForceSplit on home wifi: essentially every admitted window runs
+    // split, so the outcome must carry split counters, link traffic,
+    // and radio energy — and the event stream must say so.
+    let rt = runtime();
+    let cfg = coord_cfg(LinkSpec::wifi(), ModePolicy::ForceSplit);
+    let mut coord = Coordinator::new(&rt, cfg);
+    let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                           OptimizerKind::MeZo)
+        .steps(8)
+        .seed(31);
+    let o = coord.run_job(0, &job).unwrap();
+    assert_eq!(o.steps_done, 8);
+    assert!(o.windows_split > 0, "ForceSplit never split: {o:?}");
+    assert!(o.link_bytes > 0 && o.link_wh > 0.0,
+            "split windows must bill the link: {o:?}");
+    assert!(o.final_loss.is_finite());
+    let split_events = coord
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::SplitDone { .. }))
+        .count();
+    assert_eq!(split_events, o.windows_split,
+               "one SplitDone event per split window");
+
+    // an Adam job has no split program: ForceSplit degrades to local
+    // and ships nothing
+    let adam = JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                            OptimizerKind::Adam)
+        .steps(4)
+        .seed(32);
+    let oa = coord.run_job(1, &adam).unwrap();
+    assert_eq!(oa.steps_done, 4);
+    assert_eq!(oa.windows_split, 0);
+    assert_eq!(oa.link_bytes, 0);
+}
+
+#[test]
+fn offline_force_split_defers_and_stalls_deterministically() {
+    // ForceSplit with no connectivity: every admitted window defers —
+    // the window is consumed, no steps run, and the job stalls at
+    // max_windows.  Entirely trace-free (offline is never up), so
+    // every assertion here is exact, not probabilistic.
+    let rt = runtime();
+    let mut cfg = coord_cfg(LinkSpec::offline(), ModePolicy::ForceSplit);
+    cfg.max_windows = 12;
+    let mut coord = Coordinator::new(&rt, cfg.clone());
+    let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                           OptimizerKind::MeZo)
+        .steps(8)
+        .seed(41);
+    let o = coord.run_job(0, &job).unwrap();
+    assert_eq!(o.steps_done, 0);
+    assert_eq!(o.windows_used, 0);
+    assert_eq!(o.windows_deferred, 12,
+               "every window must defer on a dead link: {o:?}");
+    assert!(coord
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::Deferred { .. })));
+
+    // the fleet's deferral histogram attributes the starvation per job
+    let fleet = FleetScheduler::new(
+        &rt,
+        FleetConfig { coord: cfg, workers: 2,
+                      ..FleetConfig::default() },
+    );
+    let report = fleet.run(&jobs()).unwrap();
+    assert_eq!(report.telemetry.deferred_by_job.len(), 3);
+    assert!(report
+        .telemetry
+        .deferred_by_job
+        .iter()
+        .all(|&d| d > 0),
+        "offline ForceSplit must starve every job: {:?}",
+        report.telemetry.deferred_by_job);
+    assert_eq!(
+        report.telemetry.windows_deferred,
+        report.telemetry.deferred_by_job.iter().sum::<usize>()
+    );
+}
+
+#[test]
+fn flaky_link_drops_replan_as_local_and_stay_deterministic() {
+    // Satellite fault-injection drill: the flaky profile tears ~35% of
+    // transfers mid-flight.  Every drop must (a) bill the partial
+    // transfer, (b) emit LinkDropped, (c) fall back to a local MeZO
+    // window — and the whole dance must replay bit-identically in the
+    // fleet at workers {1, 2} and through a kill + recover.
+    // every job consumes the SAME link-weather stream (one trace_seed
+    // per coordinator), so drop coverage comes from the longest job's
+    // window stream, not from the job count: 30 up-windows at
+    // drop_prob 0.35 make a zero-drop run astronomically unlikely —
+    // and once a seed pins drops, they are pinned forever
+    let flaky_jobs = || {
+        vec![
+            JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                         OptimizerKind::MeZo)
+                .steps(60)
+                .seed(61),
+            JobSpec::new("pocket-tiny", TaskKind::Rte,
+                         OptimizerKind::MeZo)
+                .steps(40)
+                .seed(62),
+        ]
+    };
+    let rt = runtime();
+    let cfg = coord_cfg(LinkSpec::flaky(), ModePolicy::ForceSplit);
+    let mut oracle = Coordinator::new(&rt, cfg.clone());
+    let outcomes = oracle.run_queue(&flaky_jobs()).unwrap();
+    let want = outcome_fingerprint(&outcomes);
+    let drops: usize = outcomes.iter().map(|o| o.link_drops).sum();
+    assert!(drops > 0,
+            "flaky link produced no drops — the drill is vacuous");
+    let dropped_events = oracle
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::LinkDropped { .. }))
+        .count();
+    assert_eq!(dropped_events, drops,
+               "one LinkDropped event per counted drop");
+    // a dropped window still makes progress (local fallback ran), so
+    // every job completes despite the weather
+    assert!(outcomes.iter().all(|o| o.steps_done > 0));
+
+    for workers in [1usize, 2] {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig {
+                coord: cfg.clone(),
+                workers,
+                ..FleetConfig::default()
+            },
+        );
+        let report = fleet.run(&flaky_jobs()).unwrap();
+        assert_eq!(
+            outcome_fingerprint(&report.outcomes),
+            want,
+            "flaky link, {workers} workers: fleet diverged"
+        );
+        assert_eq!(
+            report.telemetry.link_drops, drops,
+            "drop count must not depend on the worker count"
+        );
+
+        let dir = tmp(&format!("flaky_{workers}"));
+        let crashing = FleetScheduler::new(
+            &rt,
+            FleetConfig {
+                coord: cfg.clone(),
+                workers,
+                resident_budget_bytes: Some(0),
+                store_dir: Some(dir.clone()),
+                store_engine: EngineKind::Paged,
+                halt_at_window: Some(3),
+                ..FleetConfig::default()
+            },
+        );
+        let err = crashing.run(&flaky_jobs()).expect_err(
+            "halt_at_window must abort the run with an error",
+        );
+        assert!(format!("{err:#}").contains("halted"), "{err:#}");
+        let recovered = FleetScheduler::new(
+            &rt,
+            FleetConfig {
+                workers,
+                resident_budget_bytes: Some(0),
+                ..FleetConfig::default()
+            },
+        )
+        .recover(&dir)
+        .unwrap();
+        assert_eq!(
+            outcome_fingerprint(&recovered.outcomes),
+            want,
+            "flaky link, {workers} workers: recovery diverged"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn energy_cap_denies_windows_with_the_energy_reason() {
+    // Satellite: Policy::max_energy_per_window end-to-end.  A cap
+    // below one step's Wh denies every window with the Energy reason;
+    // the job stalls without running a single step.
+    let rt = runtime();
+    let mut cfg = coord_cfg(LinkSpec::wifi(), ModePolicy::ForceLocal);
+    cfg.policy.max_energy_per_window = Some(1e-12);
+    cfg.max_windows = 10;
+    let mut coord = Coordinator::new(&rt, cfg);
+    let job = JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                           OptimizerKind::MeZo)
+        .steps(4)
+        .seed(51);
+    let o = coord.run_job(0, &job).unwrap();
+    assert_eq!(o.steps_done, 0);
+    assert_eq!(o.windows_used, 0);
+    assert_eq!(o.windows_denied, 10, "{o:?}");
+    assert!(coord.events.iter().all(|e| !matches!(
+        e,
+        Event::StepsDone { .. } | Event::SplitDone { .. }
+    )));
+    assert!(coord
+        .events
+        .iter()
+        .any(|e| matches!(e, Event::Denied { reason, .. }
+                          if *reason == "energy budget")));
+}

@@ -549,3 +549,77 @@ fn prop_edf_queue_pops_by_deadline_then_fifo() {
         }
     });
 }
+
+// ---------------------------------------------------------------------
+// split tuning invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_split_footprint_never_exceeds_local_mezo() {
+    // The inequality the mode policy (and BENCH_link.json's headline)
+    // trades on: at ANY geometry and storage precision, split tuning
+    // keeps no more bytes resident than local MeZO — same single-
+    // forward live set, minus the server-side side module.
+    for_cases(300, |rng| {
+        let d = 8 * (1 + rng.below(64));
+        let dims = ModelDims {
+            name: "prop".into(),
+            vocab: 64 + rng.below(5000),
+            d_model: d,
+            n_layers: 1 + rng.below(12),
+            n_heads: 1 + rng.below(8),
+            d_ff: d * (1 + rng.below(4)),
+            max_seq: 16 + rng.below(240),
+            decoder: false,
+            param_bytes: *rng.choose(&[1u64, 2, 4]),
+        };
+        let batch = 1 + rng.below(64);
+        let seq = 8 + rng.below(120);
+        let local = finetune_footprint(
+            &dims, OptimizerFamily::DerivativeFree, batch, seq);
+        let split = finetune_footprint(
+            &dims, OptimizerFamily::SplitForward, batch, seq);
+        assert!(split.total() <= local.total(),
+                "split resident {} > local {} at {dims:?}",
+                split.total(), local.total());
+        // identical single-forward live set; the saving is exactly the
+        // shipped side module's parameter bytes
+        assert_eq!(split.activations, local.activations);
+        assert_eq!(split.gradients, 0);
+        assert_eq!(split.optimizer_state, 0);
+        assert!(split.parameters <= local.parameters);
+    });
+}
+
+#[test]
+fn prop_link_trace_is_stateless_and_round_trips_conserve() {
+    use pocketllm::link::{LinkSpec, LinkTrace};
+    for_cases(200, |rng| {
+        let code = *rng.choose(&[0u8, 1, 2, 3, 4]);
+        let spec = LinkSpec::from_code(code).unwrap();
+        let seed = rng.below(1 << 30) as u64;
+        let t = LinkTrace::new(spec.clone(), seed);
+        // stateless: sampling any window twice, in any order, from a
+        // clone, is bit-identical
+        let i = rng.below(500) as u64;
+        let j = rng.below(500) as u64;
+        let (wi, wj) = (t.window(i), t.window(j));
+        assert_eq!(t.window(j), wj);
+        assert_eq!(t.window(i), wi);
+        assert_eq!(LinkTrace::new(spec.clone(), seed).window(i), wi);
+        // conservation: a round trip never moves more than requested,
+        // never takes less than two latencies, and bills energy
+        // proportional to bytes actually moved
+        let up = rng.below(1 << 20) as u64;
+        let down = rng.below(1 << 16) as u64;
+        let x = t.round_trip(&wi, up, down);
+        assert!(x.bytes_moved <= up + down);
+        assert!(x.seconds >= 2.0 * spec.latency_s - 1e-12);
+        assert!((x.wh - x.bytes_moved as f64 * spec.wh_per_byte).abs()
+                < 1e-12);
+        assert_eq!(x.dropped, wi.drop_at.is_some());
+        if !x.dropped {
+            assert_eq!(x.bytes_moved, up + down);
+        }
+    });
+}
