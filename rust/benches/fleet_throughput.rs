@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut ms = Vec::new();
     let mut fingerprints = Vec::new();
+    let mut latency = None;
     for workers in [1usize, 2, 4] {
         let fleet = FleetScheduler::new(
             &rt,
@@ -56,6 +57,13 @@ fn main() -> anyhow::Result<()> {
         let report = fleet.run(&jobs)?;
         assert_eq!(report.telemetry.failed, 0, "bench fleet failed");
         fingerprints.push(format!("{:?}", report.outcomes));
+        // simulated-clock latency histograms are part of the
+        // determinism contract, so any worker count reports the same
+        // percentiles — keep the last run's
+        latency = Some((
+            report.telemetry.dispatch_latency_us.clone(),
+            report.telemetry.window_latency_us.clone(),
+        ));
         ms.push(bench(
             &format!("fleet {n_jobs} jobs x {steps} steps, \
                       {workers} workers"),
@@ -102,6 +110,15 @@ fn main() -> anyhow::Result<()> {
          {per_worker_2w}, W=4: {per_worker_4w}"
     );
 
+    let (dispatch_us, window_us) =
+        latency.expect("canary runs populate the histograms");
+    println!(
+        "dispatch latency p50/p90/p99 us (simulated): {}/{}/{}",
+        dispatch_us.percentile(0.50),
+        dispatch_us.percentile(0.90),
+        dispatch_us.percentile(0.99)
+    );
+
     let out = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_fleet.json".into());
     dump_json(
@@ -111,6 +128,30 @@ fn main() -> anyhow::Result<()> {
         &[
             ("jobs", n_jobs as f64),
             ("steps_per_job", steps as f64),
+            (
+                "dispatch_latency_p50_us",
+                dispatch_us.percentile(0.50) as f64,
+            ),
+            (
+                "dispatch_latency_p90_us",
+                dispatch_us.percentile(0.90) as f64,
+            ),
+            (
+                "dispatch_latency_p99_us",
+                dispatch_us.percentile(0.99) as f64,
+            ),
+            (
+                "window_latency_p50_us",
+                window_us.percentile(0.50) as f64,
+            ),
+            (
+                "window_latency_p90_us",
+                window_us.percentile(0.90) as f64,
+            ),
+            (
+                "window_latency_p99_us",
+                window_us.percentile(0.99) as f64,
+            ),
             ("fleet_1w_ms", mean(0) * 1e3),
             ("fleet_2w_ms", mean(1) * 1e3),
             ("fleet_4w_ms", mean(2) * 1e3),

@@ -155,8 +155,11 @@ fn main() -> anyhow::Result<()> {
         // one transformer block's worth of tokens: bs8 x seq64 rows
         // through a d_model=256 projection (the pocket-roberta shape)
         let (m, k, n) = (512usize, 256usize, 256usize);
-        mm_flops = (2 * m * k * n) as f64;
-        mm_bytes = (4 * (m * k + k * n + m * n)) as f64;
+        // cost formulas shared with telemetry::trace's per-step
+        // kernel profile — one source of truth for GFLOP/s math
+        let mm = math::matmul_cost(m, k, n);
+        mm_flops = mm.flops as f64;
+        mm_bytes = mm.bytes as f64;
         at_bytes = mm_bytes;
         bt_bytes = mm_bytes;
         let mut rng = Rng::new(9);
@@ -199,7 +202,7 @@ fn main() -> anyhow::Result<()> {
         }));
         // bias-gradient shape: bs8 x seq64 rows of d_ff=1024
         let (rows, cn) = (512usize, 1024usize);
-        cs_bytes = (4 * (rows * cn + cn)) as f64;
+        cs_bytes = math::col_sums_cost(rows, cn).bytes as f64;
         let ca: Vec<f32> =
             (0..rows * cn).map(|_| rng.next_f32() - 0.5).collect();
         let mut out_cs = vec![0f32; cn];

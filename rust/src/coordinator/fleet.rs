@@ -59,10 +59,13 @@
 //!   never observable results;
 //! * hibernation moves a job's state between RAM and disk verbatim.
 //!
-//! A *recovered* fleet keeps the outcome half of the contract (the
-//! terminal [`JobOutcome`]s are bit-identical); the pre-crash event
-//! and metric streams died with the crashed process and are not
-//! replayed.
+//! A *recovered* fleet keeps the whole contract: terminal
+//! [`JobOutcome`]s are bit-identical, and the pre-crash event,
+//! metric, and trace-span streams are replayed from the durable
+//! per-window journal ([`crate::store::journal`]) each durable job
+//! appends alongside its session image — so a recovered run's
+//! streams are the uninterrupted run's prefix plus a
+//! [`Event::Recovered`] marker per resumed job.
 //!
 //! What the worker count *does* change is wall-clock — measured by
 //! `benches/fleet_throughput.rs` (`BENCH_fleet.json`) — and which
@@ -84,8 +87,10 @@ use crate::optim::OptimizerKind;
 use crate::runtime::{Precision, Runtime};
 use crate::scheduler::{ModePolicy, Policy};
 use crate::store::image::{Reader, RecoveryRecord, RecoveryStatus};
-use crate::store::{crc32, EngineKind, SessionImage, SessionStore};
-use crate::telemetry::MetricLog;
+use crate::store::{crc32, journal, EngineKind, SessionImage,
+                   SessionStore};
+use crate::telemetry::trace::{self, Span, SpanKind};
+use crate::telemetry::{LogHistogram, MetricLog};
 
 /// Fleet configuration: the per-job coordinator envelope plus the
 /// worker pool width and the memory discipline.
@@ -206,6 +211,22 @@ pub struct FleetTelemetry {
     /// Per-job deferred-window histogram (index = job index) — shows
     /// WHICH jobs a dead or metered link starved, not just how much.
     pub deferred_by_job: Vec<usize>,
+    /// Sim-clock queue-to-first-admission latency per job (from
+    /// Dispatch spans) — deterministic; p50/p90/p99 feed
+    /// `BENCH_fleet.json`.
+    pub dispatch_latency_us: LogHistogram,
+    /// Sim-clock busy time of admitted windows (from Window spans
+    /// labelled local/split) — deterministic.
+    pub window_latency_us: LogHistogram,
+    /// Link payload sizes (bytes per traced transfer, from Link
+    /// spans) — deterministic.
+    pub link_transfer_bytes: LogHistogram,
+    /// Wall-clock hibernate latencies (microseconds).  Timing- and
+    /// eviction-dependent like `hibernations` — telemetry, NOT part
+    /// of the deterministic result.
+    pub hibernate_wall_us: LogHistogram,
+    /// Wall-clock rehydrate latencies (microseconds) — same caveat.
+    pub rehydrate_wall_us: LogHistogram,
 }
 
 impl FleetTelemetry {
@@ -243,6 +264,11 @@ impl FleetTelemetry {
             link_bytes: 0,
             link_wh: 0.0,
             deferred_by_job: Vec::with_capacity(outcomes.len()),
+            dispatch_latency_us: LogHistogram::new(),
+            window_latency_us: LogHistogram::new(),
+            link_transfer_bytes: LogHistogram::new(),
+            hibernate_wall_us: LogHistogram::new(),
+            rehydrate_wall_us: LogHistogram::new(),
         };
         for o in outcomes {
             match o.status {
@@ -276,6 +302,30 @@ impl FleetTelemetry {
         }
         t
     }
+
+    /// Fold the deterministic latency/size histograms from the
+    /// job-order span stream.  Element-wise histogram merges are
+    /// order-invariant, so recording from the folded stream equals
+    /// any per-worker merge tree (pinned in
+    /// `rust/tests/proptests.rs`).
+    fn record_spans(&mut self, spans: &[Span]) {
+        for s in spans {
+            match s.kind {
+                SpanKind::Dispatch => {
+                    self.dispatch_latency_us.record(s.dur_us);
+                }
+                SpanKind::Window => {
+                    if s.label == "local" || s.label == "split" {
+                        self.window_latency_us.record(s.dur_us);
+                    }
+                }
+                SpanKind::Link => {
+                    self.link_transfer_bytes.record(s.bytes);
+                }
+                _ => {}
+            }
+        }
+    }
 }
 
 /// Everything a fleet run produces.
@@ -287,6 +337,11 @@ pub struct FleetReport {
     pub events: Vec<Event>,
     /// Per-job metric series (`job{i}.loss`) merged in job order.
     pub metrics: MetricLog,
+    /// Trace spans, grouped per job in job order — deterministic
+    /// content identical to the sequential oracle's
+    /// ([`Coordinator::spans`](super::Coordinator)); only the
+    /// segregated `host_us` sidecars vary run to run.
+    pub spans: Vec<Span>,
     pub telemetry: FleetTelemetry,
     /// Job indices in first-dispatch order.  With one worker this is
     /// exactly the EDF admission order (earliest deadline first);
@@ -362,6 +417,10 @@ struct FleetState {
     hibernations: u64,
     rehydrations: u64,
     first_dispatch: Vec<usize>,
+    /// Wall-clock store-latency histograms (timing-dependent
+    /// telemetry, folded into [`FleetTelemetry`] after the drive).
+    hibernate_wall_us: LogHistogram,
+    rehydrate_wall_us: LogHistogram,
 }
 
 impl FleetState {
@@ -380,11 +439,13 @@ impl FleetState {
             hibernations: 0,
             rehydrations: 0,
             first_dispatch: Vec::with_capacity(n),
+            hibernate_wall_us: LogHistogram::new(),
+            rehydrate_wall_us: LogHistogram::new(),
         }
     }
 }
 
-type Finished = (JobOutcome, Vec<Event>, MetricLog);
+type Finished = (JobOutcome, Vec<Event>, MetricLog, Vec<Span>);
 
 /// Borrow bundle a worker thread drives against.
 struct DriveCtx<'a> {
@@ -776,11 +837,20 @@ impl<'rt> FleetScheduler<'rt> {
             if rec.status == RecoveryStatus::Live {
                 queue.insert(edf, Task::Stored(i, spec.clone()));
             } else {
+                // a terminal job is never re-run, but its full
+                // event/metric/span streams replay from its journal
+                // (no window limit: every record predates the
+                // terminal image)
+                let rep = journal::replay(&store, i as u32, None)
+                    .with_context(|| {
+                        format!("replaying journal of finished job {i}")
+                    })?;
                 finished[i] = Some((
                     outcome_from_terminal(&sched.cfg.coord, &image,
                                           &rec),
-                    Vec::new(),
-                    MetricLog::new(),
+                    rep.events,
+                    rep.metrics,
+                    rep.spans,
                 ));
             }
         }
@@ -849,17 +919,20 @@ impl<'rt> FleetScheduler<'rt> {
         let mut outcomes = Vec::with_capacity(n);
         let mut events = Vec::new();
         let mut metrics = MetricLog::new();
+        let mut spans = Vec::new();
         let slots = std::mem::take(&mut *finished.lock().unwrap());
         for (i, slot) in slots.into_iter().enumerate() {
-            let (outcome, ev, m) = slot.ok_or_else(|| {
+            let (outcome, ev, m, sp) = slot.ok_or_else(|| {
                 anyhow!("job {i} never reached a terminal state")
             })?;
             outcomes.push(outcome);
             events.extend(ev);
             metrics.merge(m);
+            spans.extend(sp);
         }
         let mut telemetry =
             FleetTelemetry::from_results(&outcomes, &events);
+        telemetry.record_spans(&spans);
         let (hits1, builds1) = crate::data::artifact_cache_stats();
         telemetry.tokenizer_cache_hits = hits1.saturating_sub(hits0);
         telemetry.tokenizer_cache_builds =
@@ -869,6 +942,10 @@ impl<'rt> FleetScheduler<'rt> {
             telemetry.hibernations = st.hibernations;
             telemetry.rehydrations = st.rehydrations;
             telemetry.resident_high_water_bytes = st.high_water;
+            telemetry.hibernate_wall_us =
+                st.hibernate_wall_us.clone();
+            telemetry.rehydrate_wall_us =
+                st.rehydrate_wall_us.clone();
         }
         if let Some(store) = store {
             telemetry.store_bytes_spilled = store.stats().bytes_spilled;
@@ -879,6 +956,7 @@ impl<'rt> FleetScheduler<'rt> {
             outcomes,
             events,
             metrics,
+            spans,
             telemetry,
             first_dispatch,
         })
@@ -954,11 +1032,32 @@ impl<'rt> FleetScheduler<'rt> {
                                 return;
                             }
                         };
+                    // the journal may be one window ahead of the
+                    // image (crash between journal append and image
+                    // put): replay only up to the image's window —
+                    // the rest re-runs live, bit-identically
+                    let rec_window = image
+                        .recovery
+                        .as_ref()
+                        .map(|r| r.window_idx)
+                        .unwrap_or(0);
                     match JobRun::recover(self.rt, &self.cfg.coord,
                                           &spec, image)
                     {
                         Ok(r) => {
-                            let r = Box::new(r);
+                            let mut r = Box::new(r);
+                            match journal::replay(
+                                store, idx as u32, Some(rec_window),
+                            ) {
+                                Ok(rep) => r.restore_journal(rep),
+                                Err(e) => {
+                                    fail(e.context(format!(
+                                        "replaying journal of \
+                                         recovered job {idx}"
+                                    )));
+                                    return;
+                                }
+                            }
                             let sz = r.resident_bytes();
                             ctx.state.lock().unwrap().note_live(sz);
                             r
@@ -979,20 +1078,42 @@ impl<'rt> FleetScheduler<'rt> {
                     ));
                     return;
                 };
+                let wall0 = trace::host_now_us();
                 if let Err(e) = run.rehydrate_from(store) {
                     fail(e.context(format!(
                         "rehydrating job {}", run.idx
                     )));
                     return;
                 }
+                let wall =
+                    trace::host_now_us().saturating_sub(wall0);
                 let sz = run.resident_bytes();
                 let mut st = ctx.state.lock().unwrap();
                 st.rehydrations += 1;
+                st.rehydrate_wall_us.record(wall);
                 st.note_live(sz);
             }
             let before = run.resident_bytes();
             match run.advance() {
                 Ok(true) => {
+                    // journal this window's event/metric/span delta
+                    // FIRST — before the requeue, the crash-drill
+                    // clock, and any image write — so a kill after
+                    // window k leaves k windows of streams durable
+                    if ctx.durable {
+                        if let Some(store) = ctx.store {
+                            if let Some((seq, rec)) =
+                                run.journal_delta()
+                            {
+                                if let Err(e) = journal::append(
+                                    store, seq, &rec,
+                                ) {
+                                    fail(e);
+                                    return;
+                                }
+                            }
+                        }
+                    }
                     // one window done; requeue under the job's EDF
                     // key (fresh seq keeps FIFO within the class),
                     // then hibernate whatever no longer fits
@@ -1073,11 +1194,15 @@ impl<'rt> FleetScheduler<'rt> {
                             ));
                             return;
                         };
+                        let wall0 = trace::host_now_us();
                         match vr.hibernate_to(store) {
                             Ok(_) => {
+                                let wall = trace::host_now_us()
+                                    .saturating_sub(wall0);
                                 let mut st =
                                     ctx.state.lock().unwrap();
                                 st.hibernations += 1;
+                                st.hibernate_wall_us.record(wall);
                                 st.resident_live = st
                                     .resident_live
                                     .saturating_sub(vsz);
@@ -1125,6 +1250,22 @@ impl<'rt> FleetScheduler<'rt> {
                             ));
                             return;
                         };
+                        // final journal delta (the terminal event)
+                        // BEFORE the terminal image: once the image
+                        // marks the job finished, recovery trusts
+                        // the journal to hold the complete stream
+                        if let Some((seq, rec)) = run.journal_delta()
+                        {
+                            if let Err(e) =
+                                journal::append(store, seq, &rec)
+                            {
+                                fail(e.context(format!(
+                                    "journaling final delta for \
+                                     job {idx}"
+                                )));
+                                return;
+                            }
+                        }
                         let image = match run.terminal_image() {
                             Ok(i) => i,
                             Err(e) => {

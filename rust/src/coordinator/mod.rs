@@ -33,6 +33,8 @@ pub mod jobs;
 pub use fleet::{FleetConfig, FleetReport, FleetScheduler, FleetTelemetry};
 pub use jobs::{JobOutcome, JobSpec, JobStatus};
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::device::{Device, OomError, OptimizerFamily};
@@ -41,7 +43,9 @@ use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::scheduler::{DayTrace, ModePolicy, Policy, TuningMode};
 use crate::store::image::{RecoveryRecord, RecoveryStatus};
+use crate::store::journal::{JournalRecord, Replay};
 use crate::store::{SessionImage, SessionStore};
+use crate::telemetry::trace::{self, Span, SpanKind};
 use crate::telemetry::MetricLog;
 use crate::tuner::session::{HibernatedSession, Session,
                             SessionBuilder};
@@ -102,9 +106,10 @@ pub enum Event {
     Failed { job: usize, error: String },
     /// A crash-recovered job resumed from its durable image at the
     /// given simulated window index (the fleet `--recover` path).
-    /// Pre-crash events died with the crashed process — only the
-    /// counters in the image's [`RecoveryRecord`] survive — so a
-    /// recovered job's event stream starts here.
+    /// The pre-crash event/metric/span streams are replayed from the
+    /// durable journal ([`crate::store::journal`]) and prepended, so
+    /// a recovered job's stream is the uninterrupted prefix followed
+    /// by this marker.
     Recovered { job: usize, window: usize },
 }
 
@@ -155,6 +160,87 @@ pub struct JobRun {
     done: Option<JobOutcome>,
     pub events: Vec<Event>,
     pub metrics: MetricLog,
+    /// Sim-clocked trace spans (deterministic content; see
+    /// [`crate::telemetry::trace`]).
+    pub spans: Vec<Span>,
+    /// Journal cursors: the next record's per-job sequence number and
+    /// how much of each stream the durable journal already holds
+    /// (see [`JobRun::journal_delta`]).
+    journal_seq: u64,
+    journaled_events: usize,
+    journaled_spans: usize,
+    journaled_points: BTreeMap<String, usize>,
+}
+
+/// A Window-kind span closing at wall time `host0`-to-now.  The only
+/// trace constructor that carries the wall-clock sidecar (the
+/// per-window host duration); everything else in it is sim-clocked
+/// and deterministic.
+fn window_span(
+    job: usize,
+    w: usize,
+    label: &str,
+    detail: String,
+    t_us: u64,
+    dur_us: u64,
+    host0: u64,
+) -> Span {
+    Span {
+        job: job as u32,
+        window: w as u32,
+        kind: SpanKind::Window,
+        label: label.into(),
+        detail,
+        t_us,
+        dur_us,
+        bytes: 0,
+        uwh: 0,
+        flops: 0,
+        host_us: Some(trace::host_now_us().saturating_sub(host0)),
+    }
+}
+
+/// Kernel-kind spans for one admitted compute window: the analytic
+/// per-step profile scaled to the window's forward count, with the
+/// window's simulated step time distributed across kernels
+/// proportionally to their flop share (pure integer arithmetic —
+/// deterministic).
+fn kernel_spans(
+    job: usize,
+    w: usize,
+    t_us: u64,
+    step_dur_us: u64,
+    cfg: &crate::runtime::manifest::ConfigInfo,
+    batch: usize,
+    seq: usize,
+    forwards: u64,
+) -> Vec<Span> {
+    let profile = trace::step_kernel_profile(cfg, batch, seq, forwards);
+    let total: u128 = profile.iter().map(|p| p.flops as u128).sum();
+    let mut out = Vec::with_capacity(profile.len());
+    let mut off = 0u64;
+    for p in profile {
+        let dur = if total == 0 {
+            0
+        } else {
+            (step_dur_us as u128 * p.flops as u128 / total) as u64
+        };
+        out.push(Span {
+            job: job as u32,
+            window: w as u32,
+            kind: SpanKind::Kernel,
+            label: p.name.into(),
+            detail: format!("calls={}", p.calls),
+            t_us: t_us + off,
+            dur_us: dur,
+            bytes: p.bytes,
+            uwh: 0,
+            flops: p.flops,
+            host_us: None,
+        });
+        off += dur;
+    }
+    out
 }
 
 impl JobRun {
@@ -263,6 +349,11 @@ impl JobRun {
             done,
             events,
             metrics: MetricLog::new(),
+            spans: Vec::new(),
+            journal_seq: 0,
+            journaled_events: 0,
+            journaled_spans: 0,
+            journaled_points: BTreeMap::new(),
         })
     }
 
@@ -381,7 +472,80 @@ impl JobRun {
                 window: rec.window_idx as usize,
             }],
             metrics: MetricLog::new(),
+            spans: Vec::new(),
+            journal_seq: 0,
+            journaled_events: 0,
+            journaled_spans: 0,
+            journaled_points: BTreeMap::new(),
         })
+    }
+
+    /// Prepend the pre-crash streams replayed from the durable
+    /// journal.  The `Recovered` marker [`JobRun::recover`] seeded
+    /// (and anything else accumulated since) stays AFTER the replayed
+    /// prefix, and the journal cursors cover exactly that prefix —
+    /// so the marker itself lands in the next
+    /// [`journal_delta`](JobRun::journal_delta), while the replayed
+    /// records are never re-appended.  The restored sequence counter
+    /// makes a re-run window overwrite its own record (with identical
+    /// bytes, by determinism) instead of duplicating it.
+    pub fn restore_journal(&mut self, replay: Replay) {
+        let Replay { events, metrics, spans, records } = replay;
+        self.journaled_events = events.len();
+        self.journaled_spans = spans.len();
+        self.journaled_points = metrics
+            .series
+            .iter()
+            .map(|(name, s)| (name.clone(), s.points.len()))
+            .collect();
+        self.journal_seq = records;
+
+        let fresh = std::mem::replace(&mut self.events, events);
+        self.events.extend(fresh);
+        let fresh = std::mem::replace(&mut self.metrics, metrics);
+        self.metrics.merge(fresh);
+        let fresh = std::mem::replace(&mut self.spans, spans);
+        self.spans.extend(fresh);
+    }
+
+    /// The event/metric/span delta since the last journaled record,
+    /// paired with the sequence number to append it under — `None`
+    /// when nothing new accumulated (so sequence numbers stay a pure
+    /// function of the job's deterministic history, not of how often
+    /// the driver polls).  Advances the cursors: the caller MUST
+    /// durably append the returned record.
+    pub fn journal_delta(&mut self) -> Option<(u64, JournalRecord)> {
+        let mut rec = JournalRecord {
+            job: self.idx as u32,
+            window: self.window_idx as u64,
+            events: self.events[self.journaled_events..].to_vec(),
+            metrics: MetricLog::new(),
+            spans: self.spans[self.journaled_spans..].to_vec(),
+        };
+        for (name, s) in &self.metrics.series {
+            let seen =
+                self.journaled_points.get(name).copied().unwrap_or(0);
+            if s.points.len() > seen {
+                rec.metrics
+                    .series
+                    .entry(name.clone())
+                    .or_default()
+                    .points
+                    .extend_from_slice(&s.points[seen..]);
+            }
+        }
+        if rec.is_empty() {
+            return None;
+        }
+        self.journaled_events = self.events.len();
+        self.journaled_spans = self.spans.len();
+        for (name, s) in &self.metrics.series {
+            self.journaled_points
+                .insert(name.clone(), s.points.len());
+        }
+        let seq = self.journal_seq;
+        self.journal_seq += 1;
+        Some((seq, rec))
     }
 
     /// Whether the job has reached a terminal state.  (The in-crate
@@ -624,6 +788,13 @@ impl JobRun {
         let w = self.window_idx;
         self.window_idx += 1;
 
+        // sim-clock frame for this window's spans (quantized once,
+        // then pure integer math) + the wall-clock bracket for the
+        // segregated host_us sidecar
+        let window_us = trace::sim_us(self.cfg.trace_step_minutes * 60.0);
+        let t_us = w as u64 * window_us;
+        let host0 = trace::host_now_us();
+
         let state = self
             .trace
             .next()
@@ -647,6 +818,10 @@ impl JobRun {
                     dev.compute
                         .cool_for(self.cfg.trace_step_minutes * 60.0);
                 }
+                self.spans.push(window_span(
+                    self.idx, w, reason.label(), "denied".into(),
+                    t_us, window_us, host0,
+                ));
                 return Ok(true);
             }
             Ok(()) => {}
@@ -696,8 +871,21 @@ impl JobRun {
                 dev.compute
                     .cool_for(self.cfg.trace_step_minutes * 60.0);
             }
+            self.spans.push(window_span(
+                self.idx, w, reason.label(), "denied".into(),
+                t_us, window_us, host0,
+            ));
             return Ok(true);
         }
+
+        // the link weather this window's mode decision saw —
+        // deterministic payload for the Mode span
+        let link_detail = format!(
+            "bw={:.3},{}{}",
+            link_w.bw_scale,
+            if link_w.up { "up" } else { "down" },
+            if link_w.drop_at.is_some() { ",drop" } else { "" },
+        );
 
         if mode == TuningMode::Defer {
             self.windows_deferred += 1;
@@ -709,12 +897,64 @@ impl JobRun {
                 dev.compute
                     .cool_for(self.cfg.trace_step_minutes * 60.0);
             }
+            self.spans.push(Span {
+                job: self.idx as u32,
+                window: w as u32,
+                kind: SpanKind::Mode,
+                label: mode.label().into(),
+                detail: link_detail,
+                t_us,
+                dur_us: 0,
+                bytes: 0,
+                uwh: 0,
+                flops: 0,
+                host_us: None,
+            });
+            self.spans.push(window_span(
+                self.idx, w, "defer", "deferred".into(),
+                t_us, window_us, host0,
+            ));
             return Ok(true);
         }
 
         self.windows += 1;
         self.events.push(Event::Admitted { job: self.idx, window: w });
+        if self.windows == 1 {
+            // queue-to-first-admission: the dispatch latency the
+            // fleet histograms aggregate
+            self.spans.push(Span {
+                job: self.idx as u32,
+                window: w as u32,
+                kind: SpanKind::Dispatch,
+                label: session.precision().label().into(),
+                detail: format!(
+                    "optimizer={}", self.optimizer.label()
+                ),
+                t_us: 0,
+                dur_us: t_us,
+                bytes: 0,
+                uwh: 0,
+                flops: 0,
+                host_us: None,
+            });
+        }
+        self.spans.push(Span {
+            job: self.idx as u32,
+            window: w as u32,
+            kind: SpanKind::Mode,
+            label: mode.label().into(),
+            detail: link_detail.clone(),
+            t_us,
+            dur_us: 0,
+            bytes: 0,
+            uwh: 0,
+            flops: 0,
+            host_us: None,
+        });
 
+        // sim time this window spent before its step batch (a torn
+        // split transfer billed ahead of the local fallback)
+        let mut pre_us = 0u64;
         if mode == TuningMode::Split && link_w.drop_at.is_some() {
             // the round trip would tear mid-flight: bill the fraction
             // the radio actually moved, count the drop, and re-plan
@@ -733,6 +973,21 @@ impl JobRun {
                 job: self.idx,
                 window: w,
             });
+            let drop_us = trace::sim_us(x.seconds);
+            self.spans.push(Span {
+                job: self.idx as u32,
+                window: w as u32,
+                kind: SpanKind::Link,
+                label: "drop".into(),
+                detail: link_detail.clone(),
+                t_us,
+                dur_us: drop_us,
+                bytes: x.bytes_moved,
+                uwh: trace::sim_uwh(x.wh),
+                flops: 0,
+                host_us: None,
+            });
+            pre_us = drop_us;
             mode = TuningMode::LocalMezo;
         }
 
@@ -762,6 +1017,43 @@ impl JobRun {
                 loss: stats.last_loss,
                 bytes: x.bytes_moved,
             });
+            let step_dur_us =
+                trace::sim_us(stats.mean_sim_step_s * n as f64);
+            let rtt_us = trace::sim_us(x.seconds);
+            self.spans.push(Span {
+                job: self.idx as u32,
+                window: w as u32,
+                kind: SpanKind::Step,
+                label: "split".into(),
+                detail: format!("steps={n}"),
+                t_us,
+                dur_us: step_dur_us,
+                bytes: 0,
+                uwh: trace::sim_uwh(est_wh),
+                flops: 0,
+                host_us: None,
+            });
+            self.spans.extend(kernel_spans(
+                self.idx, w, t_us, step_dur_us,
+                &session.cfg, session.batch, session.seq(), n,
+            ));
+            self.spans.push(Span {
+                job: self.idx as u32,
+                window: w as u32,
+                kind: SpanKind::Link,
+                label: "rtt".into(),
+                detail: link_detail,
+                t_us: t_us + step_dur_us,
+                dur_us: rtt_us,
+                bytes: x.bytes_moved,
+                uwh: trace::sim_uwh(x.wh),
+                flops: 0,
+                host_us: None,
+            });
+            self.spans.push(window_span(
+                self.idx, w, "split", format!("steps={n}"),
+                t_us, step_dur_us + rtt_us, host0,
+            ));
             return Ok(true);
         }
 
@@ -779,12 +1071,44 @@ impl JobRun {
             steps: self.steps_done,
             loss: stats.last_loss,
         });
+        let step_dur_us =
+            trace::sim_us(stats.mean_sim_step_s * n as f64);
+        self.spans.push(Span {
+            job: self.idx as u32,
+            window: w as u32,
+            kind: SpanKind::Step,
+            label: self.optimizer.label().into(),
+            detail: format!("steps={n}"),
+            t_us: t_us + pre_us,
+            dur_us: step_dur_us,
+            bytes: 0,
+            uwh: trace::sim_uwh(est_wh),
+            flops: 0,
+            host_us: None,
+        });
+        // forward-equivalents per window: MeZO's two-point probe per
+        // SPSA query, Adam's fwd+bwd (~3 forwards of work)
+        let forwards = match self.optimizer {
+            OptimizerKind::MeZo => 2 * self.spec.queries as u64 * n,
+            OptimizerKind::Adam => 3 * n,
+        };
+        self.spans.extend(kernel_spans(
+            self.idx, w, t_us + pre_us, step_dur_us,
+            &session.cfg, session.batch, session.seq(), forwards,
+        ));
+        self.spans.push(window_span(
+            self.idx, w, "local", format!("steps={n}"),
+            t_us, pre_us + step_dur_us, host0,
+        ));
         Ok(true)
     }
 
-    /// Tear down and yield the outcome plus the job-local event and
-    /// metric streams (the unit fleet aggregation folds in job order).
-    pub fn finish(mut self) -> (JobOutcome, Vec<Event>, MetricLog) {
+    /// Tear down and yield the outcome plus the job-local event,
+    /// metric, and span streams (the unit fleet aggregation folds in
+    /// job order).
+    pub fn finish(
+        mut self,
+    ) -> (JobOutcome, Vec<Event>, MetricLog, Vec<Span>) {
         let outcome = self
             .done
             .take()
@@ -792,7 +1116,7 @@ impl JobRun {
             // terminal state before finish(); an infallible contract
             .expect("finish() called before the job reached a terminal \
                      state");
-        (outcome, self.events, self.metrics)
+        (outcome, self.events, self.metrics, self.spans)
     }
 }
 
@@ -802,11 +1126,18 @@ pub struct Coordinator<'rt> {
     pub cfg: CoordinatorConfig,
     pub events: Vec<Event>,
     pub metrics: MetricLog,
+    pub spans: Vec<Span>,
 }
 
 impl<'rt> Coordinator<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: CoordinatorConfig) -> Self {
-        Coordinator { rt, cfg, events: Vec::new(), metrics: MetricLog::new() }
+        Coordinator {
+            rt,
+            cfg,
+            events: Vec::new(),
+            metrics: MetricLog::new(),
+            spans: Vec::new(),
+        }
     }
 
     /// Run one job to completion under the phone policy.  Returns the
@@ -825,10 +1156,11 @@ impl<'rt> Coordinator<'rt> {
         // history) are exactly what a failed run needs for diagnosis
         self.events.extend(std::mem::take(&mut run.events));
         self.metrics.merge(std::mem::take(&mut run.metrics));
+        self.spans.extend(std::mem::take(&mut run.spans));
         if let Some(e) = err {
             return Err(e);
         }
-        let (outcome, _, _) = run.finish();
+        let (outcome, _, _, _) = run.finish();
         Ok(outcome)
     }
 
@@ -972,11 +1304,16 @@ mod tests {
 
         let mut run = JobRun::new(&rt, &cfg, 0, &job).unwrap();
         while run.advance().unwrap() {}
-        let (o2, events, metrics) = run.finish();
+        let (o2, events, metrics, spans) = run.finish();
 
         assert_eq!(coord.events, events);
         assert_eq!(format!("{outcome:?}"), format!("{o2:?}"));
         assert_eq!(coord.metrics.to_csv(), metrics.to_csv());
+        assert_eq!(
+            crate::telemetry::trace::fingerprint(&coord.spans),
+            crate::telemetry::trace::fingerprint(&spans),
+        );
+        assert!(!spans.is_empty(), "a run must emit spans");
         assert_eq!(outcome.status, JobStatus::Completed);
         assert_eq!(outcome.steps_done, 6);
     }

@@ -10,7 +10,7 @@
 //! | rule | contract |
 //! |------|----------|
 //! | D001 | no `HashMap`/`HashSet` in determinism-critical trees (`src/runtime/`, `src/coordinator/`, `src/store/`, `src/scheduler/`, `src/data/`, `src/link/`) — their iteration order varies per process, which breaks bit-identity |
-//! | D002 | no wall-clock (`Instant::now` / `SystemTime::now`) outside the telemetry allowlist (`util/timer.rs`, `telemetry/bench.rs`, `main.rs`) — simulated-device code must never leak host time |
+//! | D002 | no wall-clock (`Instant::now` / `SystemTime::now`) outside the telemetry allowlist (`util/timer.rs`, `telemetry/bench.rs`, `telemetry/trace.rs`, `main.rs`) — simulated-device code must never leak host time |
 //! | D003 | every `unsafe` requires a `// SAFETY:` comment within the five preceding lines |
 //! | D004 | no `.unwrap()` / `.expect(` / `panic!` in library code (`.lock().unwrap()` exempt: propagating a poisoned lock IS the intended panic path) |
 //! | D005 | no raw `thread::spawn` in `src/` — parallelism routes through scoped pools under the registered worker budget |
@@ -66,9 +66,15 @@ const D001_TREES: &[&str] = &[
 ];
 
 /// Files allowed to read the host clock: the stopwatch itself, the
-/// bench harness, and the CLI's host-wall reporting.
-const D002_ALLOW: &[&str] =
-    &["src/util/timer.rs", "src/telemetry/bench.rs", "src/main.rs"];
+/// bench harness, the tracer's single segregated wall-clock capture
+/// point (`trace::host_now_us`, the only host time the span model
+/// ever sees), and the CLI's host-wall reporting.
+const D002_ALLOW: &[&str] = &[
+    "src/util/timer.rs",
+    "src/telemetry/bench.rs",
+    "src/telemetry/trace.rs",
+    "src/main.rs",
+];
 
 /// A confirmed contract violation.
 #[derive(Debug, Clone)]
@@ -676,6 +682,12 @@ mod tests {
                    ["D002"]);
         assert!(lint_source("src/util/timer.rs", call).clean());
         assert!(lint_source("src/main.rs", call).clean());
+        // the tracer's segregated wall-clock capture point
+        assert!(lint_source("src/telemetry/trace.rs", call).clean());
+        // ...but the rest of telemetry must stay on simulated time
+        assert_eq!(rules_of(&lint_source("src/telemetry/hist.rs",
+                                         call)),
+                   ["D002"]);
         // a bare type mention is not a clock read
         let ty = "fn f(t: Instant) {}\n";
         assert!(lint_source("src/device/x.rs", ty).clean());

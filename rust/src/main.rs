@@ -12,6 +12,8 @@
 //!              sharing one runtime (deterministic for any -W), with
 //!              EDF deadlines and bounded-memory hibernation
 //!   store      inspect durable session images / legacy checkpoints
+//!   trace      replay a durable fleet's event journal: per-job
+//!              timelines, kernel breakdowns, latency percentiles
 //!   devices    list device presets
 //!   artifacts  list AOT programs in the manifest
 //! ```
@@ -45,14 +47,14 @@ const VALUE_FLAGS: &[&str] = &[
     "report-steps", "trace-seed", "steps-per-window", "queries",
     "batch-window", "jobs", "workers", "policy", "precision",
     "resident-budget", "deadline", "store-dir", "store-engine",
-    "kill-at-window", "link", "mode", "max-energy",
+    "kill-at-window", "link", "mode", "max-energy", "trace-out",
 ];
 
 fn usage() -> &'static str {
     "pocketllm — on-device LLM fine-tuning via derivative-free optimization
 
-USAGE: pocketllm <finetune|eval|report|daemon|fleet|store|devices|
-                 artifacts> [flags]
+USAGE: pocketllm <finetune|eval|report|daemon|fleet|store|trace|
+                 devices|artifacts> [flags]
 
 COMMON FLAGS
   --artifacts DIR    artifact directory (default: artifacts)
@@ -140,6 +142,20 @@ FLEET
                         compute + link Wh in the selected mode;
                         windows over the cap are denied with reason
                         `energy budget` (default: no cap)
+  --trace-out FILE      write the run's deterministic span trace as
+                        Chrome trace-event JSON (load in Perfetto or
+                        chrome://tracing).  Every field except the
+                        optional `host_dur_us` wall-clock annotation
+                        is bit-identical for any --workers
+
+TRACE
+  pocketllm trace STORE_DIR [--trace-out FILE]
+  Replay the event journal of a durable fleet run (one started with
+  --store-dir): per-job window timelines, an aggregate kernel
+  breakdown with simulated GFLOP/s, and latency percentiles — all
+  reconstructed from the CRC-protected journal records, so it works
+  on crashed runs too.  --trace-out re-exports the replayed spans as
+  Chrome trace JSON
 
 STORE
   pocketllm store inspect PATH
@@ -198,6 +214,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("daemon") => cmd_daemon(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("store") => cmd_store(&args),
+        Some("trace") => cmd_trace(&args),
         Some("devices") => {
             println!("{}", report::devices().render());
             Ok(())
@@ -594,6 +611,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         let fleet = FleetScheduler::new(&rt, fleet_cfg);
         let t0 = std::time::Instant::now();
         let report = fleet.recover(&dir)?;
+        write_trace_out(args, &report)?;
         print_fleet_report(&report, t0.elapsed().as_secs_f64(), workers);
         return Ok(());
     }
@@ -633,7 +651,27 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let fleet = FleetScheduler::new(&rt, fleet_cfg);
     let t0 = std::time::Instant::now();
     let report = fleet.run(&jobs)?;
+    write_trace_out(args, &report)?;
     print_fleet_report(&report, t0.elapsed().as_secs_f64(), workers);
+    Ok(())
+}
+
+/// `--trace-out FILE`: dump the run's span stream as Chrome
+/// trace-event JSON.  The confirmation goes to stderr so stdout stays
+/// byte-diffable across worker counts even when the two runs write to
+/// different files.
+fn write_trace_out(args: &Args, report: &FleetReport) -> Result<()> {
+    if let Some(file) = args.flag("trace-out") {
+        let json = pocketllm::telemetry::trace::chrome_trace_json(
+            &report.spans,
+        );
+        std::fs::write(file, json)
+            .with_context(|| format!("writing trace to {file}"))?;
+        eprintln!(
+            "fleet trace: {} spans -> {file}",
+            report.spans.len()
+        );
+    }
     Ok(())
 }
 
@@ -698,6 +736,29 @@ fn print_fleet_report(report: &FleetReport, wall: f64, workers: usize) {
         println!("fleet deferrals by job: [{}]", hist.join(", "));
     }
     println!("fleet deadline misses: {}", t.deadline_misses);
+    // simulated-clock histograms: deterministic for any worker count
+    println!(
+        "fleet trace: {} spans",
+        report.spans.len()
+    );
+    println!(
+        "fleet dispatch latency p50/p90/p99 us: {}/{}/{}",
+        t.dispatch_latency_us.percentile(0.50),
+        t.dispatch_latency_us.percentile(0.90),
+        t.dispatch_latency_us.percentile(0.99)
+    );
+    println!(
+        "fleet window latency p50/p90/p99 us: {}/{}/{}",
+        t.window_latency_us.percentile(0.50),
+        t.window_latency_us.percentile(0.90),
+        t.window_latency_us.percentile(0.99)
+    );
+    println!(
+        "fleet link transfer p50/p90/p99 bytes: {}/{}/{}",
+        t.link_transfer_bytes.percentile(0.50),
+        t.link_transfer_bytes.percentile(0.90),
+        t.link_transfer_bytes.percentile(0.99)
+    );
     println!("fleet recovered jobs: {}", t.recovered_jobs);
     println!(
         "fleet tokenizer cache: {} builds, {} hits",
@@ -811,6 +872,143 @@ fn cmd_store(args: &Args) -> Result<()> {
             println!("master seed: {}", ck.master_seed);
             println!("size: {} total", human(ck.size_bytes()?));
         }
+    }
+    Ok(())
+}
+
+/// `trace STORE_DIR` — replay a durable fleet's journal into per-job
+/// window timelines, an aggregate kernel breakdown (with simulated
+/// GFLOP/s), and latency percentiles.  Reads only the CRC-protected
+/// journal records, so it works on crashed runs and never touches the
+/// session images.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use pocketllm::store::{journal, SessionStore};
+    use pocketllm::telemetry::trace::SpanKind;
+    use pocketllm::telemetry::LogHistogram;
+
+    let path = args.positional.first().context(
+        "usage: pocketllm trace STORE_DIR [--trace-out FILE]",
+    )?;
+    let store = SessionStore::open_auto(path, 0)
+        .with_context(|| format!("opening store at {path}"))?;
+    // durable journal keys are `jrn{job}-{seq:08}`; the key scan is
+    // the job discovery, so a crashed run with no terminal images
+    // still traces
+    let mut jobs: Vec<u32> = store
+        .iter_keys()
+        .iter()
+        .filter_map(|k| k.strip_prefix("jrn"))
+        .filter_map(|k| k.split_once('-'))
+        .filter_map(|(job, _)| job.parse().ok())
+        .collect();
+    jobs.sort_unstable();
+    jobs.dedup();
+    if jobs.is_empty() {
+        bail!(
+            "no journal records under {path} — only fleets started \
+             with --store-dir keep a durable journal"
+        );
+    }
+    println!("trace: {} journaled job(s) in {path}", jobs.len());
+
+    let mut all_spans = Vec::new();
+    let mut dispatch_us = LogHistogram::new();
+    let mut window_us = LogHistogram::new();
+    let mut link_bytes = LogHistogram::new();
+    // kernel label -> (span count, flops, bytes, simulated us)
+    let mut kernels: std::collections::BTreeMap<
+        String,
+        (u64, u64, u64, u64),
+    > = std::collections::BTreeMap::new();
+    for &job in &jobs {
+        let rep = journal::replay(&store, job, None).with_context(
+            || format!("replaying journal for job {job}"),
+        )?;
+        let points: usize = rep
+            .metrics
+            .series
+            .values()
+            .map(|s| s.points.len())
+            .sum();
+        println!(
+            "job {job:>3}: {} record(s), {} event(s), {} span(s), \
+             {} metric point(s)",
+            rep.records,
+            rep.events.len(),
+            rep.spans.len(),
+            points
+        );
+        for s in &rep.spans {
+            match s.kind {
+                SpanKind::Dispatch => dispatch_us.record(s.dur_us),
+                SpanKind::Window => {
+                    println!(
+                        "  w{:<3} {:<8} {:<12} t={}us dur={}us",
+                        s.window, s.label, s.detail, s.t_us, s.dur_us
+                    );
+                    if s.label == "local" || s.label == "split" {
+                        window_us.record(s.dur_us);
+                    }
+                }
+                SpanKind::Link => link_bytes.record(s.bytes),
+                SpanKind::Kernel => {
+                    let k = kernels
+                        .entry(s.label.clone())
+                        .or_insert((0, 0, 0, 0));
+                    k.0 += 1;
+                    k.1 = k.1.saturating_add(s.flops);
+                    k.2 = k.2.saturating_add(s.bytes);
+                    k.3 = k.3.saturating_add(s.dur_us);
+                }
+                SpanKind::Mode | SpanKind::Step => {}
+            }
+        }
+        all_spans.extend(rep.spans);
+    }
+
+    if !kernels.is_empty() {
+        println!("kernel breakdown (simulated clock):");
+        for (label, (n, flops, bytes, us)) in &kernels {
+            let gflops = if *us > 0 {
+                *flops as f64 / (*us as f64 / 1e6) / 1e9
+            } else {
+                0.0
+            };
+            println!(
+                "  {label:<22} {n:>6} span(s)  {:>14} flops  \
+                 {:>10} B  {gflops:>8.1} GFLOP/s",
+                flops, bytes
+            );
+        }
+    }
+    println!(
+        "dispatch latency p50/p90/p99 us: {}/{}/{}",
+        dispatch_us.percentile(0.50),
+        dispatch_us.percentile(0.90),
+        dispatch_us.percentile(0.99)
+    );
+    println!(
+        "window latency p50/p90/p99 us: {}/{}/{}",
+        window_us.percentile(0.50),
+        window_us.percentile(0.90),
+        window_us.percentile(0.99)
+    );
+    println!(
+        "link transfer p50/p90/p99 bytes: {}/{}/{}",
+        link_bytes.percentile(0.50),
+        link_bytes.percentile(0.90),
+        link_bytes.percentile(0.99)
+    );
+    if let Some(file) = args.flag("trace-out") {
+        let json = pocketllm::telemetry::trace::chrome_trace_json(
+            &all_spans,
+        );
+        std::fs::write(file, json)
+            .with_context(|| format!("writing trace to {file}"))?;
+        eprintln!(
+            "trace: {} spans -> {file}",
+            all_spans.len()
+        );
     }
     Ok(())
 }
@@ -979,5 +1177,29 @@ mod tests {
                    vec!["fsck".to_string(), "/tmp/s".to_string()]);
         assert_eq!(paged_file_path("/nonexistent/x.plpg"),
                    std::path::PathBuf::from("/nonexistent/x.plpg"));
+    }
+
+    #[test]
+    fn value_flags_cover_trace_out() {
+        // same regression class: --trace-out must consume its file
+        // argument on both `fleet` and `trace`
+        let a = Args::parse(
+            &argv(&["fleet", "--trace-out", "/tmp/t.json", "--jobs",
+                    "2"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(a.flag("trace-out"), Some("/tmp/t.json"));
+        assert!(a.positional.is_empty(),
+                "values must not leak into positionals");
+        // `trace` takes the store dir as a positional, like `store`
+        let t = Args::parse(
+            &argv(&["trace", "/tmp/s", "--trace-out", "/tmp/t.json"]),
+            VALUE_FLAGS,
+        )
+        .unwrap();
+        assert_eq!(t.subcommand.as_deref(), Some("trace"));
+        assert_eq!(t.positional, vec!["/tmp/s".to_string()]);
+        assert_eq!(t.flag("trace-out"), Some("/tmp/t.json"));
     }
 }

@@ -496,6 +496,48 @@ pub fn col_sums_into(a: &[f32], n: usize, out: &mut [f32]) {
     }
 }
 
+/// Analytic cost of one dense-kernel call — the single source of the
+/// flop/byte formulas shared by `benches/hotpath.rs` (measured
+/// GFLOP/s) and the trace layer's per-step kernel profile
+/// (`telemetry::trace::step_kernel_profile`), so the bench harness
+/// and `pocketllm trace` can never disagree about what a call costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCost {
+    /// Floating-point operations (multiply-adds counted as 2).
+    pub flops: u64,
+    /// Minimum f32 bytes moved: every operand read once, every
+    /// output written once.
+    pub bytes: u64,
+}
+
+/// Cost of one `[m,k] @ [k,n]` matmul call — also the model for the
+/// `_bias`, `_at`, and `_bt` variants, whose flop counts and minimum
+/// traffic match on their own (m, k, n).
+pub fn matmul_cost(m: usize, k: usize, n: usize) -> KernelCost {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    KernelCost {
+        flops: 2u64.saturating_mul(m).saturating_mul(k)
+            .saturating_mul(n),
+        bytes: 4u64.saturating_mul(
+            m.saturating_mul(k)
+                .saturating_add(k.saturating_mul(n))
+                .saturating_add(m.saturating_mul(n)),
+        ),
+    }
+}
+
+/// Cost of one `[rows,n]` column-sum call (bias-gradient kernel): one
+/// add per element, matrix read once plus output written once.
+pub fn col_sums_cost(rows: usize, n: usize) -> KernelCost {
+    let (rows, n) = (rows as u64, n as u64);
+    KernelCost {
+        flops: rows.saturating_mul(n),
+        bytes: 4u64.saturating_mul(
+            rows.saturating_mul(n).saturating_add(n),
+        ),
+    }
+}
+
 /// tanh-approximation GELU (matches the kernels exactly).
 #[inline]
 pub fn gelu(x: f32) -> f32 {

@@ -29,6 +29,7 @@
 
 pub mod engine;
 pub mod image;
+pub mod journal;
 pub mod paged;
 pub mod session_store;
 
@@ -36,6 +37,7 @@ pub use engine::{
     DirEngine, EngineKind, EngineStats, StoreEngine, PAGED_FILE_NAME,
 };
 pub use image::SessionImage;
+pub use journal::JournalRecord;
 pub use paged::{FsckReport, PagedEngine};
 pub use session_store::{SessionStore, StoreStats};
 

@@ -1,0 +1,226 @@
+//! Deterministic fixed-bucket log2 histograms for fleet latency and
+//! size distributions.
+//!
+//! A [`LogHistogram`] has one bucket per power of two over the full
+//! `u64` range (bucket 0 holds the value 0; bucket `1 + floor(log2 v)`
+//! holds `v >= 1`), so recording is a pure function of the value —
+//! no dynamic rebucketing, no configuration, nothing that could make
+//! two runs disagree about shape.  Merging is element-wise addition,
+//! which is commutative and associative, so folding per-worker
+//! histograms is **merge-order-invariant** and bit-identical to the
+//! sequential oracle for any worker count (pinned in
+//! `rust/tests/proptests.rs`).
+//!
+//! Percentiles walk the fixed buckets and return the bucket's lower
+//! bound — deterministic and conservative (never over-reports a
+//! latency), exact for zeros and powers of two.  `BENCH_fleet.json`
+//! exports p50/p90/p99 dispatch latency through this path, and
+//! `pocketllm trace` renders the same rows from a replayed journal.
+
+/// Bucket 0 for the value 0, buckets 1..=64 for `1 + floor(log2 v)`.
+pub const BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram over `u64` values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// The fixed bucket a value lands in: 0 for 0, else
+    /// `1 + floor(log2 v)` (so 1 -> 1, 2..3 -> 2, 4..7 -> 3, ...,
+    /// `u64::MAX` -> 64).
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// The smallest value that lands in bucket `i` — what percentiles
+    /// report (conservative: never over-reports).
+    pub fn bucket_floor(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            _ => 1u64 << (i - 1),
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise fold of `other` into `self`.  Addition commutes
+    /// and associates, so ANY merge tree over the same per-item
+    /// records yields the same histogram — the property that lets
+    /// per-worker histograms be folded in job order (or any order)
+    /// and still match the sequential oracle bit-for-bit.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of every recorded value (u128: 2^64 values of 2^64
+    /// cannot overflow it).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn min(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The value at quantile `p` in [0, 1]: the floor of the bucket
+    /// holding the `ceil(p * count)`-th smallest recorded value
+    /// (clamped to rank 1).  0 on an empty histogram.  Exact for the
+    /// min (p=0 region), exact when every value in the target bucket
+    /// is its floor (zeros, powers of two), otherwise a <=2x
+    /// underestimate — the log2 resolution this format trades for
+    /// determinism.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // the histogram's true min/max tighten the two
+                // terminal buckets for free
+                return Self::bucket_floor(i)
+                    .max(self.min)
+                    .min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Per-bucket counts (index = [`bucket_index`]) — for renderers
+    /// and the proptest oracle.
+    pub fn counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(LogHistogram::bucket_index(0), 0);
+        assert_eq!(LogHistogram::bucket_index(1), 1);
+        assert_eq!(LogHistogram::bucket_index(2), 2);
+        assert_eq!(LogHistogram::bucket_index(3), 2);
+        assert_eq!(LogHistogram::bucket_index(4), 3);
+        assert_eq!(LogHistogram::bucket_index(7), 3);
+        assert_eq!(LogHistogram::bucket_index(8), 4);
+        assert_eq!(LogHistogram::bucket_index(u64::MAX), 64);
+        assert_eq!(LogHistogram::bucket_floor(0), 0);
+        assert_eq!(LogHistogram::bucket_floor(1), 1);
+        assert_eq!(LogHistogram::bucket_floor(64), 1u64 << 63);
+        for v in [0u64, 1, 2, 4, 1 << 20, 1 << 63, u64::MAX] {
+            let i = LogHistogram::bucket_index(v);
+            assert!(LogHistogram::bucket_floor(i) <= v,
+                    "floor of bucket {i} must not exceed {v}");
+        }
+    }
+
+    #[test]
+    fn record_and_percentiles() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.5), 0);
+        assert!(h.mean().is_nan());
+        for v in [0u64, 1, 2, 3, 4, 8, 8, 8, 1024, 1 << 40] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.min(), Some(0));
+        assert_eq!(h.max(), Some(1 << 40));
+        assert_eq!(h.sum(), (2 + 3 + 4 + 8 + 8 + 8 + 1024) as u128
+                   + (1u128 << 40) + 1);
+        // rank 5 of 10 at p50 -> the value 4's bucket floor
+        assert_eq!(h.percentile(0.5), 4);
+        // p99 -> rank 10 -> the 2^40 bucket
+        assert_eq!(h.percentile(0.99), 1 << 40);
+        // p0 clamps to rank 1 -> the zero bucket
+        assert_eq!(h.percentile(0.0), 0);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_commutative() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in [1u64, 5, 9] {
+            a.record(v);
+        }
+        for v in [0u64, 1 << 30] {
+            b.record(v);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count(), 5);
+        assert_eq!(ab.min(), Some(0));
+        assert_eq!(ab.max(), Some(1 << 30));
+        // merging an empty histogram is the identity
+        let mut id = ab.clone();
+        id.merge(&LogHistogram::new());
+        assert_eq!(id, ab);
+    }
+}

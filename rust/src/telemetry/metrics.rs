@@ -32,13 +32,23 @@ impl Series {
     }
 
     /// Mean of the first / last `k` points — used for "did the loss go
-    /// down" assertions in tests and benches.
+    /// down" assertions in tests and benches.  Like [`Series::mean`],
+    /// `NaN` on an empty series (they used to return `0.0`, silently
+    /// passing "loss improved" assertions on a series that never
+    /// recorded anything).
     pub fn head_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
         let k = k.min(self.points.len());
-        self.points[..k].iter().map(|&(_, v)| v).sum::<f64>() / k.max(1) as f64
+        self.points[..k].iter().map(|&(_, v)| v).sum::<f64>()
+            / k.max(1) as f64
     }
 
     pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
         let n = self.points.len();
         let k = k.min(n);
         self.points[n - k..].iter().map(|&(_, v)| v).sum::<f64>()
@@ -195,6 +205,25 @@ mod tests {
         }
         assert_eq!(s.head_mean(2), 0.5);
         assert_eq!(s.tail_mean(2), 8.5);
+        // k larger than the series degrades to the whole-series mean
+        assert_eq!(s.head_mean(100), s.mean());
+        assert_eq!(s.tail_mean(100), s.mean());
+    }
+
+    #[test]
+    fn empty_series_means_are_nan() {
+        // all three means agree on empty: NaN, never a fake 0.0 that
+        // could satisfy a "loss improved" assertion vacuously
+        let s = Series::default();
+        assert!(s.mean().is_nan());
+        assert!(s.head_mean(3).is_nan());
+        assert!(s.tail_mean(3).is_nan());
+        // and k=0 on a non-empty series stays finite (0-point mean is
+        // 0/max(1) — unchanged behaviour, only the empty case moved)
+        let mut ne = Series::default();
+        ne.push(0, 2.0);
+        assert_eq!(ne.head_mean(0), 0.0);
+        assert_eq!(ne.tail_mean(0), 0.0);
     }
 
     #[test]

@@ -1,9 +1,14 @@
-//! Telemetry: metric recording, CSV export, and the fixed-width table
-//! renderer used by `pocketllm report` and the bench harness.
+//! Telemetry: metric recording, CSV export, deterministic tracing and
+//! latency histograms, and the fixed-width table renderer used by
+//! `pocketllm report` and the bench harness.
 
 pub mod bench;
+pub mod hist;
 pub mod metrics;
 pub mod table;
+pub mod trace;
 
+pub use hist::LogHistogram;
 pub use metrics::{MetricLog, Series};
 pub use table::Table;
+pub use trace::{Span, SpanKind};

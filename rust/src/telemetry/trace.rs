@@ -1,0 +1,381 @@
+//! Span-based structured tracing, simulation-clocked.
+//!
+//! Every layer of a fleet run emits [`Span`]s — dispatch, window,
+//! mode selection, step batch, per-kernel work, link round trips —
+//! timestamped on the **simulated clock** (microseconds since the
+//! fleet epoch; window `w` starts at `w * trace_step_minutes * 60e6`)
+//! and carrying only deterministic payloads (bytes moved, energy
+//! billed, deny reason, precision, link weather).  Trace content is
+//! therefore **bit-identical for any worker count**, exactly like
+//! events and metrics, and is journaled/replayed with them
+//! ([`crate::store::journal`]).
+//!
+//! ## The wall-clock segregation rule
+//!
+//! Host time is allowed into a trace through exactly ONE door:
+//! [`host_now_us`], the only wall-clock read in this module (and the
+//! only `src/` file outside `util/timer.rs`/`telemetry/bench.rs`/
+//! `main.rs` on pallas-lint D002's allowlist).  Its readings ride in
+//! [`Span::host_us`] — an `Option` that is **excluded** from
+//! [`Span::det_line`] fingerprints, from the journal wire format, and
+//! stripped from `--trace-out` JSON by the CI diff — so wall time can
+//! inform a human without ever perturbing a deterministic output.
+//!
+//! Which [`Span`] fields are deterministic:
+//!
+//! | field | deterministic? |
+//! |----------------------------------------|------------------|
+//! | `job`, `window`, `kind`, `label`       | yes |
+//! | `detail`, `t_us`, `dur_us`             | yes |
+//! | `bytes`, `uwh`, `flops`                | yes |
+//! | `host_us`                              | **no** — wall clock |
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::runtime::manifest::ConfigInfo;
+use crate::runtime::native::math;
+use crate::util::json::Json;
+
+/// What a span measures.  Codes are the journal wire encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Job enqueue -> first policy-admitted window.
+    Dispatch,
+    /// One simulated policy window (admitted, denied, or deferred).
+    Window,
+    /// The tuning-mode decision for an admitted window.
+    Mode,
+    /// A link round trip (split payload or mid-flight drop).
+    Link,
+    /// The window's step batch (local or split).
+    Step,
+    /// One dense kernel's share of a step batch (analytic profile).
+    Kernel,
+}
+
+impl SpanKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Window => "window",
+            SpanKind::Mode => "mode",
+            SpanKind::Link => "link",
+            SpanKind::Step => "step",
+            SpanKind::Kernel => "kernel",
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            SpanKind::Dispatch => 0,
+            SpanKind::Window => 1,
+            SpanKind::Mode => 2,
+            SpanKind::Link => 3,
+            SpanKind::Step => 4,
+            SpanKind::Kernel => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<SpanKind> {
+        Some(match c {
+            0 => SpanKind::Dispatch,
+            1 => SpanKind::Window,
+            2 => SpanKind::Mode,
+            3 => SpanKind::Link,
+            4 => SpanKind::Step,
+            5 => SpanKind::Kernel,
+            _ => return None,
+        })
+    }
+}
+
+/// One traced interval.  All fields except `host_us` are
+/// deterministic (see the module table); `host_us` is the segregated
+/// wall-clock sidecar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub job: u32,
+    /// Simulated window index this span belongs to.
+    pub window: u32,
+    pub kind: SpanKind,
+    /// Deterministic identity: mode / deny reason / kernel name /
+    /// precision.
+    pub label: String,
+    /// Deterministic payload rendered as `k=v` pairs (link weather,
+    /// step count, kernel call count).
+    pub detail: String,
+    /// Sim-clock start, microseconds since the fleet epoch.
+    pub t_us: u64,
+    /// Sim-clock duration, microseconds.
+    pub dur_us: u64,
+    /// Payload bytes moved over the link (0 when not a transfer).
+    pub bytes: u64,
+    /// Energy billed, micro-watt-hours (quantized, deterministic).
+    pub uwh: u64,
+    /// Analytic floating-point operations (kernel spans).
+    pub flops: u64,
+    /// Wall-clock duration in microseconds — telemetry only, never
+    /// journaled, never fingerprinted, stripped by the CI trace diff.
+    pub host_us: Option<u64>,
+}
+
+impl Span {
+    /// The deterministic rendering of this span: every field except
+    /// `host_us`, one line.  Equal `det_line`s mean bit-equal
+    /// deterministic content — the unit the worker-count and
+    /// crash-replay identity tests compare.
+    pub fn det_line(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            self.job,
+            self.window,
+            self.kind.label(),
+            self.label,
+            self.detail,
+            self.t_us,
+            self.dur_us,
+            self.bytes,
+            self.uwh,
+            self.flops
+        )
+    }
+}
+
+/// Joined [`Span::det_line`]s — the whole-trace deterministic
+/// fingerprint.
+pub fn fingerprint(spans: &[Span]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&s.det_line());
+        out.push('\n');
+    }
+    out
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds of host wall clock since this process first asked.
+///
+/// THE one sanctioned wall-clock capture point for trace data: every
+/// `host_us` in the tree is a difference of two readings of this
+/// function.  pallas-lint D002 allowlists exactly this file; any
+/// other simulated-device code reaching for `Instant::now` stays a
+/// lint error (fixture-pinned in `rust/tests/lint.rs`).
+pub fn host_now_us() -> u64 {
+    let epoch = EPOCH.get_or_init(Instant::now);
+    epoch.elapsed().as_micros() as u64
+}
+
+/// Quantize simulated seconds to whole microseconds — the trace time
+/// base.  Deterministic: one f64 multiply and one round, no
+/// accumulation.
+pub fn sim_us(seconds: f64) -> u64 {
+    let us = (seconds * 1e6).round();
+    if us.is_finite() && us > 0.0 { us as u64 } else { 0 }
+}
+
+/// Quantize watt-hours to whole micro-watt-hours.
+pub fn sim_uwh(wh: f64) -> u64 {
+    sim_us(wh)
+}
+
+/// Render spans as Chrome trace-event JSON (one complete event per
+/// line), loadable in Perfetto / `chrome://tracing`.  `pid` is always
+/// 0, `tid` is the job index, `ts`/`dur` are sim-clock microseconds.
+/// The wall-clock sidecar is emitted as a top-level `host_dur_us`
+/// key so CI can strip it with one `sed` before diffing worker
+/// counts.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, s) in spans.iter().enumerate() {
+        let args = Json::obj(vec![
+            ("bytes", Json::num(s.bytes as f64)),
+            ("detail", Json::str(&s.detail)),
+            ("flops", Json::num(s.flops as f64)),
+            ("uwh", Json::num(s.uwh as f64)),
+        ]);
+        let mut ev = vec![
+            ("args", args),
+            ("cat", Json::str(s.kind.label())),
+            ("dur", Json::num(s.dur_us as f64)),
+            ("name", Json::str(&s.label)),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(s.job as f64)),
+            ("ts", Json::num(s.t_us as f64)),
+        ];
+        if let Some(h) = s.host_us {
+            ev.push(("host_dur_us", Json::num(h as f64)));
+        }
+        out.push_str(&Json::obj(ev).dump());
+        if i + 1 < spans.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// One kernel's analytic totals for a single training step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelProfile {
+    pub name: &'static str,
+    pub calls: u64,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+/// The analytic per-step kernel profile of a model: which dense
+/// kernels one step calls, how often, and their flop/byte totals —
+/// computed from the manifest dims with the same cost formulas
+/// `benches/hotpath.rs` reports measured GFLOP/s against
+/// ([`math::matmul_cost`] / [`math::col_sums_cost`]), so `pocketllm
+/// trace` can show a per-step kernel breakdown without running the
+/// bench harness.  `forwards` is the forward-equivalent count per
+/// step (MeZO two-point = `2 * queries`, Adam fwd+bwd ~ 3, split
+/// forward-only = 1).
+pub fn step_kernel_profile(
+    cfg: &ConfigInfo,
+    batch: usize,
+    seq: usize,
+    forwards: u64,
+) -> Vec<KernelProfile> {
+    let bs = batch * seq;
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let heads = cfg.n_heads.max(1);
+    let dh = (d / heads).max(1);
+    let layers = cfg.n_layers as u64;
+    let scaled = |name, calls_per_fwd: u64, c: math::KernelCost| {
+        let calls = calls_per_fwd * forwards;
+        KernelProfile {
+            name,
+            calls,
+            flops: c.flops.saturating_mul(calls),
+            bytes: c.bytes.saturating_mul(calls),
+        }
+    };
+    let attn_calls = (batch * heads) as u64 * layers;
+    let mut out = vec![
+        scaled("matmul_bias(qkv+o)", 4 * layers,
+               math::matmul_cost(bs, d, d)),
+        scaled("matmul_bt(scores)", attn_calls,
+               math::matmul_cost(seq, dh, seq)),
+        scaled("matmul(attn_v)", attn_calls,
+               math::matmul_cost(seq, seq, dh)),
+        scaled("matmul_bias(ffn)", 2 * layers,
+               math::matmul_cost(bs, d, ff)),
+    ];
+    if cfg.kind == "decoder" {
+        out.push(scaled("matmul_bt(lm_head)", 1,
+                        math::matmul_cost(bs, d, cfg.vocab)));
+    } else {
+        out.push(scaled("matmul_bias(head)", 1,
+                        math::matmul_cost(batch, d,
+                                          cfg.n_classes.max(1))));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(job: u32, host: Option<u64>) -> Span {
+        Span {
+            job,
+            window: 3,
+            kind: SpanKind::Window,
+            label: "local".into(),
+            detail: "steps=4".into(),
+            t_us: 1_800_000_000,
+            dur_us: 2_500_000,
+            bytes: 0,
+            uwh: 1200,
+            flops: 0,
+            host_us: host,
+        }
+    }
+
+    #[test]
+    fn det_line_ignores_host_wall_clock() {
+        let a = span(1, None);
+        let b = span(1, Some(987_654));
+        assert_ne!(a, b);
+        assert_eq!(a.det_line(), b.det_line(),
+                   "host_us must never reach the fingerprint");
+        assert_eq!(fingerprint(&[a.clone()]), fingerprint(&[b]));
+        assert_ne!(a.det_line(), span(2, None).det_line());
+    }
+
+    #[test]
+    fn sim_us_quantizes_deterministically() {
+        assert_eq!(sim_us(0.0), 0);
+        assert_eq!(sim_us(-1.0), 0);
+        assert_eq!(sim_us(1.0), 1_000_000);
+        assert_eq!(sim_us(2.5e-6), 3); // round half away from zero
+        assert_eq!(sim_us(f64::NAN), 0);
+    }
+
+    #[test]
+    fn host_clock_is_monotone() {
+        let a = host_now_us();
+        let b = host_now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn chrome_json_one_event_per_line_and_strippable() {
+        let spans = vec![span(0, Some(42)), span(1, None)];
+        let j = chrome_trace_json(&spans);
+        assert!(j.starts_with("{\"traceEvents\":[\n"));
+        assert!(j.trim_end().ends_with("],\"displayTimeUnit\":\"ms\"}"));
+        let events: Vec<&str> = j
+            .lines()
+            .filter(|l| l.starts_with('{') && l.contains("\"ph\""))
+            .collect();
+        assert_eq!(events.len(), 2);
+        assert!(events[0].contains(",\"host_dur_us\":42"),
+                "{}", events[0]);
+        assert!(!events[1].contains("host_dur_us"));
+        // the CI strip discipline: removing the host key makes the
+        // two runs' lines comparable
+        let stripped = events[0].replace(",\"host_dur_us\":42", "");
+        assert!(!stripped.contains("host"));
+        // and it parses as JSON
+        assert!(crate::util::json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn kernel_profile_scales_with_forwards() {
+        let cfg = ConfigInfo {
+            name: "t".into(),
+            kind: "encoder".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            max_seq: 32,
+            n_classes: 2,
+            use_pallas: false,
+            n_params: 0,
+            params: Vec::new(),
+        };
+        let one = step_kernel_profile(&cfg, 4, 32, 1);
+        let two = step_kernel_profile(&cfg, 4, 32, 2);
+        assert_eq!(one.len(), 5);
+        for (a, b) in one.iter().zip(&two) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.calls * 2, b.calls);
+            assert_eq!(a.flops * 2, b.flops);
+        }
+        // qkv+o per forward: 4 calls/layer x 2 layers
+        assert_eq!(one[0].calls, 8);
+        // flops formula shared with the bench harness
+        let c = math::matmul_cost(4 * 32, 64, 64);
+        assert_eq!(one[0].flops, c.flops * 8);
+    }
+}

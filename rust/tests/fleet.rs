@@ -411,3 +411,70 @@ fn fleet_stalled_jobs_are_counted_not_dropped() {
     assert_eq!(report.outcomes[0].windows_denied, 2,
                "both 09:00 daytime windows must be denied");
 }
+
+#[test]
+fn trace_spans_are_bit_identical_for_any_worker_count() {
+    // the tentpole pin of the tracing subsystem: a 16-job fleet's
+    // span stream (and the histograms derived from it) must be
+    // bit-identical for any worker count and identical to the
+    // sequential oracle's — only the segregated `host_us` sidecars
+    // (excluded from the fingerprint) may vary
+    use pocketllm::telemetry::trace;
+    let rt = runtime();
+    let cfg = CoordinatorConfig {
+        policy: Policy::always(),
+        steps_per_window: 2,
+        max_windows: 50,
+        ..Default::default()
+    };
+    let jobs: Vec<JobSpec> = (0..16)
+        .map(|i| {
+            if i % 4 == 3 {
+                JobSpec::new("pocket-tiny-fast", TaskKind::Sst2,
+                             OptimizerKind::Adam)
+                    .steps(2)
+                    .seed(42 + i as u64)
+            } else {
+                JobSpec::new("pocket-tiny", TaskKind::Sst2,
+                             OptimizerKind::MeZo)
+                    .steps(2)
+                    .seed(42 + i as u64)
+            }
+        })
+        .collect();
+
+    let mut oracle = Coordinator::new(&rt, cfg.clone());
+    oracle.run_queue(&jobs).unwrap();
+    let want = trace::fingerprint(&oracle.spans);
+    assert!(!want.is_empty(), "oracle must emit spans");
+
+    let mut first_hists = None;
+    for workers in [1usize, 2, 4] {
+        let fleet = FleetScheduler::new(
+            &rt,
+            FleetConfig { coord: cfg.clone(), workers,
+                          ..FleetConfig::default() },
+        );
+        let report = fleet.run(&jobs).unwrap();
+        assert_eq!(trace::fingerprint(&report.spans), want,
+                   "{workers} workers: span stream diverged from \
+                    the oracle");
+        let t = &report.telemetry;
+        assert_eq!(t.dispatch_latency_us.count(), 16,
+                   "one dispatch span per job");
+        assert!(!t.window_latency_us.is_empty(),
+                "admitted windows must record latency");
+        let hists = (
+            t.dispatch_latency_us.clone(),
+            t.window_latency_us.clone(),
+            t.link_transfer_bytes.clone(),
+        );
+        match &first_hists {
+            None => first_hists = Some(hists),
+            Some(h) => assert_eq!(
+                h, &hists,
+                "{workers} workers: histograms diverged"
+            ),
+        }
+    }
+}

@@ -17,6 +17,9 @@ const D001: &str =
     include_str!("lint_fixtures/src/runtime/d001_hashmap.rs");
 const D002: &str =
     include_str!("lint_fixtures/src/device/d002_wallclock.rs");
+const D002_TELEMETRY: &str = include_str!(
+    "lint_fixtures/src/telemetry/d002_not_the_capture_point.rs"
+);
 const D003: &str =
     include_str!("lint_fixtures/src/runtime/d003_unsafe.rs");
 const D004: &str =
@@ -36,6 +39,14 @@ fn every_rule_fires_on_its_fixture() {
     assert_eq!(rules_of(&r.findings), ["D001", "D001"], "{:?}", r.findings);
 
     let r = lint_source("src/device/d002_wallclock.rs", D002);
+    assert_eq!(rules_of(&r.findings), ["D002"], "{:?}", r.findings);
+
+    // the D002 allowlist names trace.rs, not all of telemetry — a
+    // clock read elsewhere in the tree still fires
+    let r = lint_source(
+        "src/telemetry/d002_not_the_capture_point.rs",
+        D002_TELEMETRY,
+    );
     assert_eq!(rules_of(&r.findings), ["D002"], "{:?}", r.findings);
 
     let r = lint_source("src/runtime/d003_unsafe.rs", D003);

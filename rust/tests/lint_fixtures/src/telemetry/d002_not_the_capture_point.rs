@@ -1,0 +1,9 @@
+//! D002 fixture: a wall-clock read inside `src/telemetry/` but NOT in
+//! `trace.rs` — the allowlist names the tracer's single capture point
+//! (`trace::host_now_us`), not the whole telemetry tree.  Expected:
+//! one D002 finding.
+use std::time::SystemTime;
+
+pub fn sneaky_timestamp() -> SystemTime {
+    SystemTime::now()
+}

@@ -623,3 +623,114 @@ fn prop_link_trace_is_stateless_and_round_trips_conserve() {
         }
     });
 }
+
+// ---------------------------------------------------------------------
+// log2 latency histograms (telemetry::hist)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_histogram_merge_is_order_invariant() {
+    use pocketllm::telemetry::LogHistogram;
+    // the fleet folds per-worker histograms in job order, but the
+    // determinism contract wants the fold to be a free monoid: any
+    // partition of the value stream into any number of shards, merged
+    // in any order, must equal recording sequentially into one
+    for_cases(150, |rng| {
+        let n = rng.below(400);
+        let values: Vec<u64> = (0..n)
+            .map(|_| match rng.below(4) {
+                0 => rng.below(1000) as u64,
+                1 => rng.next_u64() >> rng.below(64),
+                2 => 1u64 << rng.below(64),
+                _ => rng.next_u64(),
+            })
+            .collect();
+        let mut oracle = LogHistogram::new();
+        for &v in &values {
+            oracle.record(v);
+        }
+        for &shards in &[1usize, 2, 4, 7] {
+            let mut parts = vec![LogHistogram::new(); shards];
+            for &v in &values {
+                parts[rng.below(shards)].record(v);
+            }
+            rng.shuffle(&mut parts);
+            let mut merged = LogHistogram::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged, oracle,
+                       "merge of {shards} shards diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_summary_stats_hold() {
+    use pocketllm::telemetry::LogHistogram;
+    for_cases(150, |rng| {
+        let n = 1 + rng.below(200);
+        let values: Vec<u64> = (0..n)
+            .map(|_| rng.next_u64() >> rng.below(64))
+            .collect();
+        let mut h = LogHistogram::new();
+        for &v in &values {
+            h.record(v);
+        }
+        let lo = *values.iter().min().unwrap();
+        let hi = *values.iter().max().unwrap();
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.min(), Some(lo));
+        assert_eq!(h.max(), Some(hi));
+        assert_eq!(h.sum(),
+                   values.iter().map(|&v| v as u128).sum::<u128>());
+        // percentiles are bucket-floor approximations clamped into
+        // [min, max]; p0+ and p100 still pin the exact extremes'
+        // buckets, and every percentile is monotone in p
+        let mut prev = 0u64;
+        for i in 0..=20 {
+            let p = i as f64 / 20.0;
+            let q = h.percentile(p);
+            assert!(q >= lo && q <= hi,
+                    "percentile({p}) = {q} outside [{lo}, {hi}]");
+            assert!(q >= prev, "percentile not monotone at p={p}");
+            prev = q;
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_bucket_edges() {
+    use pocketllm::telemetry::hist::{LogHistogram, BUCKETS};
+    // the edge cases that break naive log2 bucketing: 0 (no leading
+    // zero math), u64::MAX (top bucket), and exact powers of two
+    // (must land in the bucket whose floor IS the value)
+    let mut h = LogHistogram::new();
+    h.record(0);
+    h.record(u64::MAX);
+    for k in 0..64 {
+        h.record(1u64 << k);
+    }
+    assert_eq!(h.count(), 66);
+    assert_eq!(h.min(), Some(0));
+    assert_eq!(h.max(), Some(u64::MAX));
+    assert_eq!(h.counts()[0], 1, "0 gets the dedicated first bucket");
+    assert_eq!(h.counts()[BUCKETS - 1], 2,
+               "2^63 and u64::MAX share the top bucket");
+    for k in 0..64usize {
+        assert!(h.counts()[k + 1] >= 1,
+                "2^{k} missing from bucket {}", k + 1);
+    }
+    for_cases(200, |rng| {
+        let k = rng.below(64);
+        let v = 1u64 << k;
+        let mut h = LogHistogram::new();
+        h.record(v);
+        let idx =
+            h.counts().iter().position(|&c| c > 0).unwrap();
+        // bucket floor of an exact power of two is the value itself
+        assert_eq!(idx, k + 1);
+        assert_eq!(h.percentile(0.5), v,
+                   "single power-of-two value must be exact");
+    });
+}

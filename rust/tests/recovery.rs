@@ -3,13 +3,15 @@
 //! bit-identical to the uninterrupted sequential oracle — for every
 //! worker count, every parameter precision, and both store engines.
 //!
-//! Only the outcome half of the determinism contract survives a
-//! crash: the pre-crash event and metric streams died with the
-//! process and are not replayed, so these tests fingerprint
-//! `FleetReport::outcomes` alone (Debug-formatted f64 is
-//! shortest-roundtrip, so equal strings mean bit-equal floats).
+//! The whole contract survives the crash: outcomes come from the
+//! session images, and the pre-crash event/metric/span streams are
+//! replayed from the durable journal (`store::journal`) — a recovered
+//! job's stream is the uninterrupted prefix followed by a `Recovered`
+//! marker.  Outcomes are fingerprinted via Debug formatting
+//! (shortest-roundtrip f64, so equal strings mean bit-equal floats);
+//! streams are diffed against the sequential oracle directly.
 
-use pocketllm::coordinator::{Coordinator, CoordinatorConfig,
+use pocketllm::coordinator::{Coordinator, CoordinatorConfig, Event,
                              FleetConfig, FleetScheduler, JobOutcome,
                              JobSpec};
 use pocketllm::data::task::TaskKind;
@@ -87,6 +89,8 @@ fn killed_fleet_recovers_bit_identically_to_the_oracle() {
         let mut oracle = Coordinator::new(&rt, cfg.clone());
         let want =
             outcome_fingerprint(&oracle.run_queue(&jobs).unwrap());
+        let want_events = oracle.events.clone();
+        let want_csv = oracle.metrics.to_csv();
 
         for (wi, workers) in [1usize, 2, 4].into_iter().enumerate() {
             // alternate backends across the matrix so both engines
@@ -155,6 +159,27 @@ fn killed_fleet_recovers_bit_identically_to_the_oracle() {
                 engine.label()
             );
             assert_eq!(report.telemetry.jobs, jobs.len());
+            // the journal retires the old event gap: minus the
+            // Recovered markers, the recovered stream IS the oracle's
+            // (replayed prefix + post-crash re-run, per job in order)
+            let replayed: Vec<Event> = report
+                .events
+                .iter()
+                .filter(|e| !matches!(e, Event::Recovered { .. }))
+                .cloned()
+                .collect();
+            assert_eq!(
+                replayed, want_events,
+                "{precision}, {workers} workers, {} engine: \
+                 recovered event stream diverged from the oracle",
+                engine.label()
+            );
+            assert_eq!(
+                report.metrics.to_csv(), want_csv,
+                "{precision}, {workers} workers, {} engine: \
+                 recovered metrics diverged from the oracle",
+                engine.label()
+            );
             if workers == 1 {
                 // the window that ticked the halt clock hibernated
                 // its job (budget 0) before the tick, and a single
@@ -199,8 +224,17 @@ fn completed_run_recovers_from_terminal_images_without_rerunning() {
                "terminal images short-circuit, they do not resume");
     assert!(report.first_dispatch.is_empty(),
             "nothing should have been dispatched");
-    assert!(report.events.is_empty(),
-            "pre-crash events are not replayed");
+    // terminal jobs replay their full streams from the journal —
+    // byte-for-byte what the uninterrupted run reported
+    assert_eq!(report.events, first.events,
+               "journal replay must reproduce the finished run's \
+                event stream");
+    assert_eq!(report.metrics.to_csv(), first.metrics.to_csv());
+    assert_eq!(
+        pocketllm::telemetry::trace::fingerprint(&report.spans),
+        pocketllm::telemetry::trace::fingerprint(&first.spans),
+        "journal replay must reproduce the finished run's spans"
+    );
 
     // compaction preserves every byte that matters: fsck stays clean
     // and a post-compaction recovery still reconstructs the run
